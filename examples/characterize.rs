@@ -1,0 +1,59 @@
+//! Full single-workload characterization, mirroring the paper's Section
+//! III methodology: top-down bounds, branch behaviour, cache/DRAM
+//! behaviour, and the same workload under the mlpack profile.
+//!
+//! ```bash
+//! cargo run --release --example characterize -- --workload dbscan --scale 0.3
+//! ```
+
+use mlperf::analysis::{pct, r2, r3, Table};
+use mlperf::coordinator::{characterize, ExperimentConfig};
+use mlperf::util::Args;
+use mlperf::workloads::{by_name, LibraryProfile};
+
+fn main() {
+    let args = Args::from_env();
+    let name = args.get_or("workload", "dbscan");
+    let w = by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown workload {name}");
+        std::process::exit(2);
+    });
+    let mut cfg = ExperimentConfig {
+        scale: args.get_parsed_or("scale", 0.3),
+        iterations: args.get_parsed_or("iterations", 2),
+        ..Default::default()
+    };
+
+    let mut t = Table::new(
+        "characterize_example",
+        &format!("{} — single-core characterization", w.name()),
+        &["metric", "sklearn", "mlpack"],
+    );
+    cfg.profile = LibraryProfile::Sklearn;
+    let sk = characterize(w.as_ref(), &cfg).metrics;
+    let ml = if w.in_mlpack() {
+        cfg.profile = LibraryProfile::Mlpack;
+        Some(characterize(w.as_ref(), &cfg).metrics)
+    } else {
+        None
+    };
+    let cell = |f: &dyn Fn(&mlperf::sim::Metrics) -> String, m: &Option<mlperf::sim::Metrics>| {
+        m.as_ref().map(|m| f(m)).unwrap_or_else(|| "-".into())
+    };
+    let rows: Vec<(&str, Box<dyn Fn(&mlperf::sim::Metrics) -> String>)> = vec![
+        ("CPI", Box::new(|m: &mlperf::sim::Metrics| r2(m.cpi))),
+        ("retiring %", Box::new(|m: &mlperf::sim::Metrics| pct(m.retiring_pct))),
+        ("bad speculation %", Box::new(|m: &mlperf::sim::Metrics| pct(m.bad_spec_pct))),
+        ("DRAM bound %", Box::new(|m: &mlperf::sim::Metrics| pct(m.dram_bound_pct))),
+        ("core bound %", Box::new(|m: &mlperf::sim::Metrics| pct(m.core_bound_pct))),
+        ("branch fraction", Box::new(|m: &mlperf::sim::Metrics| r3(m.branch_fraction))),
+        ("mispredict ratio", Box::new(|m: &mlperf::sim::Metrics| r3(m.branch_mispredict_ratio))),
+        ("LLC miss ratio", Box::new(|m: &mlperf::sim::Metrics| r3(m.llc_miss_ratio))),
+        ("row-buffer hit ratio", Box::new(|m: &mlperf::sim::Metrics| r3(m.dram.row_hit_ratio()))),
+        ("bandwidth util %", Box::new(|m: &mlperf::sim::Metrics| pct(m.bandwidth_utilization_pct()))),
+    ];
+    for (label, f) in rows {
+        t.row(vec![label.into(), f(&sk), cell(&|m| f(m), &ml)]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,155 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! Layer 1 (Pallas pairwise/SYRK kernels) + Layer 2 (JAX kmeans_step /
+//! gram_xty graphs) were AOT-compiled by `make artifacts`; this Rust
+//! binary (Layer 3) loads them through PJRT and — with Python nowhere on
+//! the path — trains:
+//!
+//!   1. KMeans on a 64k x 20 synthetic blob dataset by streaming row
+//!      batches through the `kmeans_step` executable (mini-batch Lloyd
+//!      with per-batch centroid averaging), logging the inertia curve;
+//!   2. Ridge regression on 64k x 20 synthetic linear data by
+//!      accumulating `gram_xty` over batches and Cholesky-solving the
+//!      normal equations in Rust, reporting R².
+//!
+//! Reports wall-clock latency/throughput per executable call. Recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use mlperf::data::{make_blobs, make_regression};
+use mlperf::runtime::{default_artifacts_dir, Runtime, BATCH, FEATURES, K};
+use mlperf::util::{solve_spd, Matrix, Pcg64};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifacts_dir();
+    let t0 = Instant::now();
+    let rt = Runtime::load(&dir)?;
+    println!(
+        "loaded artifacts from {} on {} in {:.2}s",
+        dir.display(),
+        rt.platform(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    kmeans_e2e(&rt)?;
+    ridge_e2e(&rt)?;
+    Ok(())
+}
+
+fn kmeans_e2e(rt: &Runtime) -> anyhow::Result<()> {
+    const ROWS: usize = 65_536; // 16 batches of 4096
+    let ds = make_blobs(ROWS, FEATURES, K, 1.0, 42);
+    println!("\n== KMeans end-to-end: {} rows x {} features, k={} ==", ROWS, FEATURES, K);
+
+    // init centroids from random rows
+    let mut rng = Pcg64::new(7);
+    let mut c: Vec<f32> = (0..K)
+        .flat_map(|_| {
+            let r = rng.index(ROWS);
+            ds.x.row(r).iter().map(|&v| v as f32).collect::<Vec<f32>>()
+        })
+        .collect();
+
+    // pre-batch the data as f32
+    let batches: Vec<Vec<f32>> = (0..ROWS / BATCH)
+        .map(|b| {
+            (0..BATCH * FEATURES)
+                .map(|i| ds.x.as_slice()[b * BATCH * FEATURES + i] as f32)
+                .collect()
+        })
+        .collect();
+
+    let mut calls = 0u64;
+    let mut call_time = 0.0f64;
+    let t_train = Instant::now();
+    for epoch in 0..8 {
+        let mut inertia_sum = 0.0f64;
+        // average the per-batch centroid updates (mini-batch Lloyd)
+        let mut acc = vec![0.0f64; K * FEATURES];
+        for x in &batches {
+            let t = Instant::now();
+            let (new_c, inertia) = rt.kmeans_step(x, &c)?;
+            call_time += t.elapsed().as_secs_f64();
+            calls += 1;
+            inertia_sum += inertia as f64;
+            for (a, v) in acc.iter_mut().zip(&new_c) {
+                *a += *v as f64;
+            }
+        }
+        let nb = batches.len() as f64;
+        for (ci, a) in c.iter_mut().zip(&acc) {
+            *ci = (*a / nb) as f32;
+        }
+        println!("  epoch {epoch}: total inertia {:.0}", inertia_sum);
+    }
+    let wall = t_train.elapsed().as_secs_f64();
+    println!(
+        "  trained in {:.2}s wall | {} executable calls | {:.2} ms/call | {:.1} Mrows/s",
+        wall,
+        calls,
+        1000.0 * call_time / calls as f64,
+        (calls as f64 * BATCH as f64) / wall / 1e6
+    );
+    Ok(())
+}
+
+fn ridge_e2e(rt: &Runtime) -> anyhow::Result<()> {
+    const ROWS: usize = 65_536;
+    let (ds, w_true) = make_regression(ROWS, FEATURES, FEATURES, 0.5, 43);
+    println!("\n== Ridge end-to-end: {} rows x {} features ==", ROWS, FEATURES);
+
+    let mut gram = vec![0.0f64; FEATURES * FEATURES];
+    let mut xty = vec![0.0f64; FEATURES];
+    let t0 = Instant::now();
+    let mut calls = 0;
+    for b in 0..ROWS / BATCH {
+        let x: Vec<f32> = (0..BATCH * FEATURES)
+            .map(|i| ds.x.as_slice()[b * BATCH * FEATURES + i] as f32)
+            .collect();
+        let y: Vec<f32> = (0..BATCH).map(|i| ds.y[b * BATCH + i] as f32).collect();
+        let (g, xy) = rt.gram_xty(&x, &y)?;
+        calls += 1;
+        for (acc, v) in gram.iter_mut().zip(&g) {
+            *acc += *v as f64;
+        }
+        for (acc, v) in xty.iter_mut().zip(&xy) {
+            *acc += *v as f64;
+        }
+    }
+    // solve (G + aI) w = X^T y in Rust
+    let mut a = Matrix::zeros(FEATURES, FEATURES);
+    for i in 0..FEATURES {
+        for j in 0..FEATURES {
+            a[(i, j)] = gram[i * FEATURES + j];
+        }
+        a[(i, i)] += 1.0;
+    }
+    let w = solve_spd(&a, &xty).expect("SPD");
+    let max_err = w
+        .iter()
+        .zip(&w_true)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    // R^2 on the training data
+    let mean_y: f64 = ds.y.iter().sum::<f64>() / ROWS as f64;
+    let (mut ss_res, mut ss_tot) = (0.0, 0.0);
+    for i in 0..ROWS {
+        let pred: f64 = (0..FEATURES).map(|f| ds.x[(i, f)] * w[f]).sum();
+        ss_res += (ds.y[i] - pred) * (ds.y[i] - pred);
+        ss_tot += (ds.y[i] - mean_y) * (ds.y[i] - mean_y);
+    }
+    println!(
+        "  R² = {:.6} | max |w - w_true| = {:.4} | {} calls in {:.2}s",
+        1.0 - ss_res / ss_tot,
+        max_err,
+        calls,
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(1.0 - ss_res / ss_tot > 0.99, "ridge failed to fit");
+    println!("  end_to_end OK");
+    Ok(())
+}

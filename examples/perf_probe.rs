@@ -1,0 +1,15 @@
+//! Profiling probe used by the §Perf pass (EXPERIMENTS.md): times one
+//! KNN characterization with and without software prefetching under
+//! `perf record`.
+use mlperf::coordinator::*;
+use mlperf::workloads::by_name;
+fn main() {
+    let cfg = ExperimentConfig { scale: 0.15, iterations: 2, ..Default::default() };
+    let w = by_name("knn").unwrap();
+    for (label, pf) in [("base", false), ("sw-prefetch", true)] {
+        let t0 = std::time::Instant::now();
+        let c = characterize_with(w.as_ref(), &cfg, pf, None, None, |_| {});
+        println!("{label}: {:.2}s, {} instr, {} sw-pf", t0.elapsed().as_secs_f64(),
+                 c.metrics.instructions, c.metrics.mix.sw_prefetches);
+    }
+}

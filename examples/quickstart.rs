@@ -1,0 +1,29 @@
+//! Quickstart: characterize one workload in ~5 seconds.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Runs KMeans on a small synthetic blob dataset, streams its trace
+//! through the cache/DRAM/pipeline simulators, and prints the paper's
+//! headline metrics.
+
+use mlperf::coordinator::{characterize, ExperimentConfig};
+use mlperf::workloads::by_name;
+
+fn main() {
+    let cfg = ExperimentConfig { scale: 0.2, iterations: 2, ..Default::default() };
+    for name in ["KMeans", "KNN", "Decision Tree"] {
+        let w = by_name(name).unwrap();
+        let c = characterize(w.as_ref(), &cfg);
+        let m = &c.metrics;
+        println!(
+            "{:>14}: CPI {:.2} | retiring {:>4.1}% | bad-spec {:>4.1}% | DRAM-bound {:>4.1}% | \
+             LLC miss {:.3} | quality {}",
+            name, m.cpi, m.retiring_pct, m.bad_spec_pct, m.dram_bound_pct, m.llc_miss_ratio,
+            c.result.detail
+        );
+    }
+    println!("\nNext: `cargo run --release -- report` for the full figure suite,");
+    println!("or `cargo bench` to regenerate every paper table/figure.");
+}

@@ -1,0 +1,56 @@
+//! Mini reordering study: one workload under all six reordering
+//! algorithms (paper Section VI), printing row-buffer hit ratio, latency
+//! and speedups with/without overhead — Figs. 20-24 for a single
+//! workload.
+//!
+//! ```bash
+//! cargo run --release --example reorder_study -- --workload knn --scale 0.2
+//! ```
+
+use mlperf::analysis::{r2, r3, Table};
+use mlperf::coordinator::{reorder_study, ExperimentConfig};
+use mlperf::reorder::ReorderKind;
+use mlperf::util::Args;
+use mlperf::workloads::by_name;
+
+fn main() {
+    let args = Args::from_env();
+    let name = args.get_or("workload", "knn");
+    let w = by_name(&name).unwrap_or_else(|| {
+        eprintln!("unknown workload {name}");
+        std::process::exit(2);
+    });
+    let cfg = ExperimentConfig {
+        scale: args.get_parsed_or("scale", 0.2),
+        iterations: args.get_parsed_or("iterations", 2),
+        ..Default::default()
+    };
+    let mut t = Table::new(
+        "reorder_example",
+        &format!("{} — all reordering algorithms", w.name()),
+        &["method", "hit-ratio base→reord", "latency ns base→reord", "speedup", "w/ overhead"],
+    );
+    for kind in ReorderKind::ALL {
+        if !kind.applicable_to(w.as_ref()) {
+            t.row(vec![kind.name().into(), "n/a".into(), "n/a".into(), "-".into(), "-".into()]);
+            continue;
+        }
+        let s = reorder_study(w.as_ref(), kind, &cfg);
+        t.row(vec![
+            kind.name().into(),
+            format!(
+                "{} → {}",
+                r3(s.baseline.dram.row_hit_ratio()),
+                r3(s.reordered.dram.row_hit_ratio())
+            ),
+            format!(
+                "{} → {}",
+                r2(s.baseline.dram.avg_latency_ns()),
+                r2(s.reordered.dram.avg_latency_ns())
+            ),
+            format!("{:.3}x", s.speedup_no_overhead()),
+            format!("{:.3}x", s.speedup_with_overhead()),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,81 @@
+"""AOT-lower the Layer-2 graphs to HLO *text* artifacts for the Rust
+PJRT runtime.
+
+HLO text, NOT ``lowered.compile()`` / ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+Writes one ``<name>.hlo.txt`` per exported graph plus a manifest.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed AOT batch shapes: the Rust coordinator streams row batches of
+# BATCH x FEATURES through the executables.
+BATCH = 4096
+FEATURES = 20
+K = 8
+
+SPEC_X = jax.ShapeDtypeStruct((BATCH, FEATURES), jnp.float32)
+SPEC_C = jax.ShapeDtypeStruct((K, FEATURES), jnp.float32)
+SPEC_Y = jax.ShapeDtypeStruct((BATCH,), jnp.float32)
+
+EXPORTS = {
+    "pairwise": (model.pairwise, (SPEC_X, SPEC_C)),
+    "kmeans_step": (model.kmeans_step, (SPEC_X, SPEC_C)),
+    "gram_xty": (model.gram_xty, (SPEC_X, SPEC_Y)),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--out", default=None, help="legacy single-file alias")
+    args = p.parse_args()
+    out_dir = args.out_dir
+    if args.out:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"batch": BATCH, "features": FEATURES, "k": K, "artifacts": {}}
+    for name, (fn, specs) in EXPORTS.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "n_outputs": len(jax.tree_util.tree_leaves(jax.eval_shape(fn, *specs))),
+            "chars": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+    # legacy alias expected by the original Makefile rule
+    legacy = os.path.join(out_dir, "model.hlo.txt")
+    with open(os.path.join(out_dir, "kmeans_step.hlo.txt")) as f:
+        open(legacy, "w").write(f.read())
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {legacy} and manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Layer-1 Pallas kernels: the numeric hot-spots of the traditional-ML
+workloads.
+
+Two kernels cover the suite's compute cores:
+
+- ``pairwise_sq_dists`` — blocked ||x_i - c_j||² distance matrix, the
+  inner loop of KMeans / KNN / DBSCAN / GMM / t-SNE.
+- ``gram`` — blocked Xᵀ X accumulation (SYRK), the inner loop of
+  Ridge / Lasso / PCA / linear SVM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+optimizations block for cache lines and DRAM row buffers on x86; here
+the same blocking idea is expressed as an HBM↔VMEM schedule via
+``BlockSpec``: each grid step stages one (block_n × M) row panel in
+VMEM and contracts it on the MXU (`dot_general` over the feature
+axis), with the rank-1 ||·||² corrections fused in-register.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the AOT artifacts
+execute on the Rust CPU runtime. Real-TPU performance is *estimated*
+structurally in DESIGN.md §Perf-estimates.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pairwise_kernel(x_ref, c_ref, o_ref):
+    """One grid step: distances of a row panel against all centroids."""
+    xb = x_ref[...]  # (block_n, m) panel staged in VMEM
+    cb = c_ref[...]  # (k, m) — small, revisited every step
+    x2 = jnp.sum(xb * xb, axis=1, keepdims=True)  # (block_n, 1)
+    c2 = jnp.sum(cb * cb, axis=1)[None, :]  # (1, k)
+    # MXU contraction over the feature axis: (block_n, m) x (k, m)^T
+    xc = jax.lax.dot_general(
+        xb, cb, dimension_numbers=(((1,), (1,)), ((), ()))
+    )  # (block_n, k)
+    o_ref[...] = x2 + c2 - 2.0 * xc
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def pairwise_sq_dists(x, c, block_n: int = 128):
+    """Squared Euclidean distance matrix D[i, j] = ||x_i - c_j||².
+
+    ``x``: (n, m) float32, ``c``: (k, m) float32, n divisible by block_n.
+    """
+    n, m = x.shape
+    k = c.shape[0]
+    assert n % block_n == 0, f"n={n} must be divisible by block_n={block_n}"
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (i, 0)),
+            pl.BlockSpec((k, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), x.dtype),
+        interpret=True,
+    )(x, c)
+
+
+def _gram_kernel(x_ref, o_ref):
+    """Accumulate one row panel's Xᵀ X contribution into the output."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xb = x_ref[...]  # (block_n, m)
+    o_ref[...] += jax.lax.dot_general(
+        xb, xb, dimension_numbers=(((0,), (0,)), ((), ()))
+    )  # (m, m)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def gram(x, block_n: int = 128):
+    """Gram matrix G = Xᵀ X, accumulated panel by panel (SYRK)."""
+    n, m = x.shape
+    assert n % block_n == 0, f"n={n} must be divisible by block_n={block_n}"
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=(n // block_n,),
+        in_specs=[pl.BlockSpec((block_n, m), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((m, m), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, m), x.dtype),
+        interpret=True,
+    )(x)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels (the build-time correctness
+signal: pytest checks kernel == ref to float tolerance before anything
+is exported for the Rust runtime)."""
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_dists_ref(x, c):
+    """||x_i - c_j||^2 by explicit broadcasting."""
+    diff = x[:, None, :] - c[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def gram_ref(x):
+    """X^T X directly."""
+    return x.T @ x
+
+
+def kmeans_step_ref(x, c):
+    """One Lloyd iteration: returns (new_centroids, inertia)."""
+    d = pairwise_sq_dists_ref(x, c)
+    assign = jnp.argmin(d, axis=1)
+    k = c.shape[0]
+    onehot = jnp.eye(k, dtype=x.dtype)[assign]  # (n, k)
+    counts = onehot.sum(axis=0)
+    sums = onehot.T @ x
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], c)
+    inertia = jnp.sum(jnp.min(d, axis=1))
+    return new_c, inertia

@@ -1,0 +1,46 @@
+"""Layer-2 JAX compute graphs: the workloads' numeric cores, built on the
+Layer-1 Pallas kernels. These are the functions `aot.py` lowers to HLO
+text for the Rust runtime — Python never runs on the request path.
+
+Exported graphs (shapes fixed at AOT time, f32):
+
+- ``kmeans_step(x, c)``       -> (new_centroids, inertia)   [Lloyd E+M]
+- ``gram_xty(x, y)``          -> (X^T X, X^T y)             [normal eqs]
+- ``pairwise(x, c)``          -> distance matrix            [kernel direct]
+
+The Rust coordinator composes them: e.g. streaming `gram_xty` over row
+batches, summing, and Cholesky-solving in Rust gives exact Ridge; looping
+`kmeans_step` over batches with centroid averaging gives minibatch KMeans.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pairwise as k
+
+
+def pairwise(x, c):
+    """Distance matrix via the Pallas kernel (direct L1 exposure)."""
+    return (k.pairwise_sq_dists(x, c),)
+
+
+def kmeans_step(x, c):
+    """One Lloyd iteration over a batch: assignment via the Pallas
+    distance kernel, centroid update via a one-hot contraction."""
+    d = k.pairwise_sq_dists(x, c)
+    assign = jnp.argmin(d, axis=1)
+    kk = c.shape[0]
+    onehot = jnp.eye(kk, dtype=x.dtype)[assign]  # (n, k)
+    counts = onehot.sum(axis=0)
+    sums = onehot.T @ x
+    new_c = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None], c)
+    inertia = jnp.sum(jnp.min(d, axis=1))
+    return new_c, inertia
+
+
+def gram_xty(x, y):
+    """Normal-equation building blocks for a row batch: (X^T X, X^T y).
+    The Gram half runs on the Pallas SYRK kernel."""
+    g = k.gram(x)
+    xty = x.T @ y
+    return g, xty

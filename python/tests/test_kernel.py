@@ -1,0 +1,127 @@
+"""Kernel-vs-reference correctness: the CORE build-time signal.
+
+The Pallas kernels (interpret mode) must match the pure-jnp oracles to
+float32 tolerance across a hypothesis-driven sweep of shapes and data
+distributions before `make artifacts` output is trusted.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pairwise as k
+from compile.kernels import ref
+
+
+def rand(shape, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=shape, scale=scale), dtype=jnp.float32)
+
+
+class TestPairwise:
+    def test_small_exact(self):
+        x = jnp.array([[0.0, 0.0], [3.0, 4.0]] * 64, dtype=jnp.float32)
+        c = jnp.array([[0.0, 0.0], [3.0, 4.0]], dtype=jnp.float32)
+        d = k.pairwise_sq_dists(x, c, block_n=64)
+        np.testing.assert_allclose(d[0], [0.0, 25.0], rtol=1e-5)
+        np.testing.assert_allclose(d[1], [25.0, 0.0], rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        block_n=st.sampled_from([32, 64, 128]),
+        m=st.integers(1, 40),
+        kk=st.integers(1, 16),
+        seed=st.integers(0, 2**31),
+        scale=st.sampled_from([0.1, 1.0, 100.0]),
+    )
+    def test_matches_ref_swept(self, n_blocks, block_n, m, kk, seed, scale):
+        x = rand((n_blocks * block_n, m), seed, scale)
+        c = rand((kk, m), seed + 1, scale)
+        got = k.pairwise_sq_dists(x, c, block_n=block_n)
+        want = ref.pairwise_sq_dists_ref(x, c)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3 * scale * scale)
+
+    def test_distances_nonnegative(self):
+        x = rand((256, 20), 7)
+        c = rand((8, 20), 8)
+        d = k.pairwise_sq_dists(x, c)
+        assert float(jnp.min(d)) > -1e-3
+
+    def test_rejects_misaligned_batch(self):
+        with pytest.raises(AssertionError):
+            k.pairwise_sq_dists(rand((100, 4), 0), rand((2, 4), 1), block_n=64)
+
+
+class TestGram:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n_blocks=st.integers(1, 4),
+        block_n=st.sampled_from([32, 128]),
+        m=st.integers(1, 32),
+        seed=st.integers(0, 2**31),
+    )
+    def test_matches_ref_swept(self, n_blocks, block_n, m, seed):
+        x = rand((n_blocks * block_n, m), seed)
+        got = k.gram(x, block_n=block_n)
+        want = ref.gram_ref(x)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-2)
+
+    def test_gram_symmetric_psd(self):
+        x = rand((256, 10), 3)
+        g = np.asarray(k.gram(x))
+        np.testing.assert_allclose(g, g.T, rtol=1e-5)
+        eig = np.linalg.eigvalsh(g)
+        assert eig.min() > -1e-2
+
+
+class TestKMeansStep:
+    def test_matches_ref(self):
+        from compile import model
+
+        x = rand((512, 20), 11)
+        c = rand((8, 20), 12)
+        got_c, got_i = model.kmeans_step(x, c)
+        want_c, want_i = ref.kmeans_step_ref(x, c)
+        np.testing.assert_allclose(got_c, want_c, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got_i, want_i, rtol=1e-4)
+
+    def test_inertia_decreases_over_steps(self):
+        from compile import model
+
+        rng = np.random.default_rng(0)
+        centers = rng.normal(size=(8, 20), scale=5.0)
+        x = jnp.asarray(
+            centers[rng.integers(0, 8, 4096)] + rng.normal(size=(4096, 20)),
+            dtype=jnp.float32,
+        )
+        c = jnp.asarray(rng.normal(size=(8, 20)), dtype=jnp.float32)
+        inertias = []
+        for _ in range(6):
+            c, inertia = model.kmeans_step(x, c)
+            inertias.append(float(inertia))
+        assert inertias[-1] < inertias[0] * 0.8, inertias
+
+    def test_empty_cluster_keeps_centroid(self):
+        from compile import model
+
+        x = jnp.zeros((128, 4), dtype=jnp.float32)
+        c = jnp.asarray([[0.0] * 4, [100.0] * 4], dtype=jnp.float32)
+        new_c, _ = model.kmeans_step(x, c)
+        np.testing.assert_allclose(new_c[1], c[1])
+
+
+class TestGramXty:
+    def test_normal_equations_recover_weights(self):
+        from compile import model
+
+        rng = np.random.default_rng(5)
+        w_true = rng.normal(size=20)
+        x = rng.normal(size=(4096, 20))
+        y = x @ w_true + rng.normal(size=4096) * 0.01
+        g, xty = model.gram_xty(
+            jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32)
+        )
+        w = np.linalg.solve(np.asarray(g) + 1e-3 * np.eye(20), np.asarray(xty))
+        np.testing.assert_allclose(w, w_true, atol=0.05)

@@ -1,0 +1,65 @@
+//! Shared bench-harness plumbing. Every bench target regenerates one
+//! paper table/figure; they all accept
+//! `cargo bench --bench <name> -- --scale 0.5 --iterations 3` and honour
+//! the `MLPERF_SCALE` environment variable (default 0.15 keeps the full
+//! `cargo bench` suite in CI-friendly time; EXPERIMENTS.md records the
+//! scale each committed result used).
+
+use mlperf::coordinator::ExperimentConfig;
+use mlperf::util::Args;
+
+pub fn args() -> Args {
+    Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"))
+}
+
+pub fn config() -> ExperimentConfig {
+    let a = args();
+    let env_scale = std::env::var("MLPERF_SCALE").ok().and_then(|s| s.parse().ok());
+    ExperimentConfig {
+        scale: a.get_parsed_or("scale", env_scale.unwrap_or(0.15)),
+        iterations: a.get_parsed_or("iterations", 2),
+        seed: a.get_parsed_or("seed", 0xDA7Au64),
+        ..Default::default()
+    }
+}
+
+/// The eight workloads of Table VII / Figs. 20–24 (the paper's
+/// reordering study set).
+pub fn reorder_workloads() -> [&'static str; 8] {
+    [
+        "Adaboost",
+        "DBSCAN",
+        "Decision Tree",
+        "GMM",
+        "KMeans",
+        "KNN",
+        "Random Forests",
+        "t-SNE",
+    ]
+}
+
+/// The neighbour+tree set used by the software-prefetch study
+/// (Section V-C limits it to these; matrix workloads already saturate
+/// bandwidth).
+pub fn prefetch_workloads() -> [&'static str; 8] {
+    [
+        "KMeans", "GMM", "KNN", "DBSCAN", "t-SNE", "Decision Tree", "Random Forests", "Adaboost",
+    ]
+}
+
+pub fn banner(what: &str) {
+    let cfg = config();
+    println!(
+        "# {what} | scale={} iterations={} seed={:#x}",
+        cfg.scale, cfg.iterations, cfg.seed
+    );
+}
+
+/// Wall-clock a closure, printing the duration (benches report their own
+/// harness cost so regressions in the simulator itself are visible).
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = std::time::Instant::now();
+    let out = f();
+    println!("[{label}: {:.1}s]", t0.elapsed().as_secs_f64());
+    out
+}

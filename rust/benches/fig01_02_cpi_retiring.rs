@@ -1,0 +1,45 @@
+//! Figures 1 & 2: CPI and retiring ratio for all workloads, in both the
+//! scikit-learn and mlpack implementation profiles.
+//!
+//! Paper shape to reproduce: CPI between ~0.4 and ~1.75 everywhere;
+//! retiring 15-40% for all workloads except GMM/KMeans (higher under
+//! mlpack); sklearn bars worse than mlpack bars.
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{pct, r2, Table};
+use mlperf::coordinator::characterize;
+use mlperf::workloads::{registry, LibraryProfile};
+
+fn main() {
+    common::banner("Figs 1-2: CPI + retiring ratio");
+    let mut cfg = common::config();
+    let mut t = Table::new(
+        "fig01_02",
+        "CPI and retiring ratio (sklearn vs mlpack)",
+        &["workload", "CPI sk", "CPI ml", "retiring% sk", "retiring% ml"],
+    );
+    for w in registry() {
+        let (cpi_sk, ret_sk) = common::timed(w.name(), || {
+            cfg.profile = LibraryProfile::Sklearn;
+            let m = characterize(w.as_ref(), &cfg).metrics;
+            (m.cpi, m.retiring_pct)
+        });
+        let (cpi_ml, ret_ml) = if w.in_mlpack() {
+            cfg.profile = LibraryProfile::Mlpack;
+            let m = characterize(w.as_ref(), &cfg).metrics;
+            (Some(m.cpi), Some(m.retiring_pct))
+        } else {
+            (None, None)
+        };
+        t.row(vec![
+            w.name().into(),
+            r2(cpi_sk),
+            cpi_ml.map(r2).unwrap_or_else(|| "-".into()),
+            pct(ret_sk),
+            ret_ml.map(pct).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.emit();
+}

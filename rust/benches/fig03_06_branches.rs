@@ -1,0 +1,35 @@
+//! Figures 3-6: bad-speculation bound, branch misprediction ratio,
+//! branch-instruction fraction, conditional-branch percentage.
+//!
+//! Paper shape: tree-based workloads dominate bad-speculation (17-28%)
+//! with high mispredict ratios; neighbour+tree workloads have ~20-25%
+//! branch instructions; 80-95% of branches are conditional everywhere.
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{pct, r3, Table};
+use mlperf::coordinator::characterize;
+use mlperf::workloads::registry;
+
+fn main() {
+    common::banner("Figs 3-6: branch behaviour");
+    let cfg = common::config();
+    let mut t = Table::new(
+        "fig03_06",
+        "bad-speculation & branch statistics (sklearn profile)",
+        &["workload", "category", "bad spec %", "mispredict", "branch frac", "cond %"],
+    );
+    for w in registry() {
+        let m = common::timed(w.name(), || characterize(w.as_ref(), &cfg).metrics);
+        t.row(vec![
+            w.name().into(),
+            w.category().to_string(),
+            pct(m.bad_spec_pct),
+            r3(m.branch_mispredict_ratio),
+            r3(m.branch_fraction),
+            pct(m.cond_branch_fraction * 100.0),
+        ]);
+    }
+    t.emit();
+}

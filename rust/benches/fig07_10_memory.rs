@@ -1,0 +1,39 @@
+//! Figures 7-10: DRAM-bound stalls, LLC miss ratio, memory-bandwidth
+//! utilization, and core-bound (port) stalls.
+//!
+//! Paper shape: ~31-37% of cycles DRAM-bound across categories; matrix
+//! workloads at ~80% bandwidth utilization vs ~40% for the rest; 15-38%
+//! core-bound stalls.
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{pct, r3, Table};
+use mlperf::coordinator::characterize;
+use mlperf::workloads::registry;
+
+fn main() {
+    common::banner("Figs 7-10: memory behaviour");
+    let cfg = common::config();
+    let mut t = Table::new(
+        "fig07_10",
+        "DRAM bound, LLC miss, bandwidth utilization, core bound",
+        &["workload", "category", "dram bound %", "LLC miss", "bw util %", "core bound %", "p0/p1/p2/p3+"],
+    );
+    for w in registry() {
+        let m = common::timed(w.name(), || characterize(w.as_ref(), &cfg).metrics);
+        t.row(vec![
+            w.name().into(),
+            w.category().to_string(),
+            pct(m.dram_bound_pct),
+            r3(m.llc_miss_ratio),
+            pct(m.bandwidth_utilization_pct()),
+            pct(m.core_bound_pct),
+            format!(
+                "{:.2}/{:.2}/{:.2}/{:.2}",
+                m.port_dist[0], m.port_dist[1], m.port_dist[2], m.port_dist[3]
+            ),
+        ]);
+    }
+    t.emit();
+}

@@ -1,0 +1,51 @@
+//! Figure 12: IPC improvement with a perfect L2 and a perfect LLC
+//! (the Sniper-style idealization study that motivates prefetching).
+//!
+//! Paper shape: perfect LLC buys ~25-36% IPC on average per category;
+//! perfect L2 buys more (~31-41%); neighbour workloads gain the most
+//! from perfect LLC.
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{pct, Table};
+use mlperf::coordinator::perfect_cache_study;
+use mlperf::util::stats::geomean;
+use mlperf::workloads::{registry, Category};
+
+fn main() {
+    common::banner("Fig 12: perfect-cache IPC improvements");
+    let cfg = common::config();
+    let mut t = Table::new(
+        "fig12",
+        "IPC improvement with perfect L2 / perfect LLC",
+        &["workload", "category", "perfect LLC %", "perfect L2 %"],
+    );
+    let mut per_cat: std::collections::BTreeMap<String, (Vec<f64>, Vec<f64>)> = Default::default();
+    for w in registry() {
+        let s = common::timed(w.name(), || perfect_cache_study(w.as_ref(), &cfg));
+        let llc_gain = (s.perfect_llc.ipc / s.base.ipc - 1.0) * 100.0;
+        let l2_gain = (s.perfect_l2.ipc / s.base.ipc - 1.0) * 100.0;
+        let e = per_cat.entry(w.category().to_string()).or_default();
+        e.0.push(1.0 + llc_gain / 100.0);
+        e.1.push(1.0 + l2_gain / 100.0);
+        t.row(vec![w.name().into(), w.category().to_string(), pct(llc_gain), pct(l2_gain)]);
+    }
+    for (cat, (llc, l2)) in &per_cat {
+        t.row(vec![
+            format!("[{cat} mean]"),
+            cat.clone(),
+            pct((geomean(llc) - 1.0) * 100.0),
+            pct((geomean(l2) - 1.0) * 100.0),
+        ]);
+    }
+    t.emit();
+
+    let mut ord_ok = true;
+    for (_, (llc, l2)) in per_cat {
+        if geomean(&l2) + 1e-9 < geomean(&llc) {
+            ord_ok = false;
+        }
+    }
+    println!("perfect-L2 >= perfect-LLC per category: {}", if ord_ok { "YES (matches paper)" } else { "NO" });
+}

@@ -1,0 +1,45 @@
+//! Figure 13: fraction of useless hardware prefetches per workload.
+//!
+//! Paper shape: ~42% of HW prefetches useless for the neighbour- and
+//! tree-based workloads (irregular A[B[i]] streams); far lower for the
+//! streaming matrix workloads.
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{r3, Table};
+use mlperf::coordinator::characterize;
+use mlperf::util::stats::mean;
+use mlperf::workloads::{registry, Category};
+
+fn main() {
+    common::banner("Fig 13: useless hardware prefetch fraction");
+    let cfg = common::config();
+    let mut t = Table::new(
+        "fig13",
+        "useless HW prefetch fraction",
+        &["workload", "category", "hw issued", "useless frac"],
+    );
+    let mut irregular = Vec::new();
+    let mut regular = Vec::new();
+    for w in registry() {
+        let m = common::timed(w.name(), || characterize(w.as_ref(), &cfg).metrics);
+        let f = m.prefetch.hw_useless_fraction();
+        match w.category() {
+            Category::MatrixBased => regular.push(f),
+            _ => irregular.push(f),
+        }
+        t.row(vec![
+            w.name().into(),
+            w.category().to_string(),
+            format!("{}", m.prefetch.hw_issued),
+            r3(f),
+        ]);
+    }
+    t.emit();
+    println!(
+        "mean useless fraction: matrix {:.3} vs neighbour+tree {:.3} (paper: latter ~0.42)",
+        mean(&regular),
+        mean(&irregular)
+    );
+}

@@ -1,0 +1,49 @@
+//! Figures 14-18: the software-prefetching study on the neighbour- and
+//! tree-based workloads — L2 miss ratio, DRAM bound, bad-speculation
+//! bound, 2+ uops/cycle fraction, and speedup, before vs after.
+//!
+//! Paper shape: L2 miss down 10-35% (except KMeans/SVM), DRAM bound down
+//! 5-26%, bad-spec down 8-10% on tree workloads, 2+f uops up ~12.8%,
+//! speedup 5.2-27.1% (except SVM-RBF and KMeans).
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{pct, r3, Table};
+use mlperf::coordinator::prefetch_study;
+use mlperf::workloads::by_name;
+
+fn main() {
+    common::banner("Figs 14-18: software prefetching");
+    let cfg = common::config();
+    let mut t = Table::new(
+        "fig14_18",
+        "software prefetching before/after (neighbour + tree workloads)",
+        &[
+            "workload", "L2miss pre", "L2miss post", "dram% pre", "dram% post",
+            "bspec% pre", "bspec% post", "2+uops pre", "2+uops post", "speedup",
+        ],
+    );
+    let mut speedups = Vec::new();
+    for name in common::prefetch_workloads() {
+        let w = by_name(name).unwrap();
+        let s = common::timed(name, || prefetch_study(w.as_ref(), &cfg));
+        let sp = s.prefetched.speedup_vs(&s.base);
+        speedups.push((name, sp));
+        t.row(vec![
+            name.into(),
+            r3(s.base.l2_miss_ratio),
+            r3(s.prefetched.l2_miss_ratio),
+            pct(s.base.dram_bound_pct),
+            pct(s.prefetched.dram_bound_pct),
+            pct(s.base.bad_spec_pct),
+            pct(s.prefetched.bad_spec_pct),
+            r3(s.base.two_plus_uops_fraction()),
+            r3(s.prefetched.two_plus_uops_fraction()),
+            format!("{:.3}x", sp),
+        ]);
+    }
+    t.emit();
+    let wins = speedups.iter().filter(|(_, s)| *s > 1.0).count();
+    println!("{wins}/{} workloads sped up (paper: all but SVM-RBF & KMeans, 5.2-27.1%)", speedups.len());
+}

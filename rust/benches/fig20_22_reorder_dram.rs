@@ -1,0 +1,48 @@
+//! Figures 20-22: row-buffer hit ratio, average access latency and
+//! bad-speculation bound for every reordering algorithm on every
+//! reorder-study workload.
+//!
+//! Paper shape: every reordering improves hit ratio (up to 3-4x on
+//! DBSCAN/kNN); avg latency falls 4.4-25.1% (GMM can regress); SFC
+//! reorderings cut tree-workload bad-spec by 8-12%.
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{pct, r2, r3, Table};
+use mlperf::coordinator::reorder_study;
+use mlperf::reorder::ReorderKind;
+use mlperf::workloads::by_name;
+
+fn main() {
+    common::banner("Figs 20-22: reordering vs DRAM behaviour");
+    let mut cfg = common::config();
+    cfg.scale *= 0.5; // 8 workloads x up-to-6 reorderings
+    let mut t = Table::new(
+        "fig20_22",
+        "row-buffer hit ratio / avg latency / bad-spec per reordering",
+        &["workload", "method", "hit base", "hit reord", "lat base", "lat reord", "bspec% base", "bspec% reord"],
+    );
+    for name in common::reorder_workloads() {
+        let w = by_name(name).unwrap();
+        for kind in ReorderKind::ALL {
+            if !kind.applicable_to(w.as_ref()) {
+                continue;
+            }
+            let s = common::timed(&format!("{name}/{kind}"), || {
+                reorder_study(w.as_ref(), kind, &cfg)
+            });
+            t.row(vec![
+                name.into(),
+                kind.name().into(),
+                r3(s.baseline.dram.row_hit_ratio()),
+                r3(s.reordered.dram.row_hit_ratio()),
+                r2(s.baseline.dram.avg_latency_ns()),
+                r2(s.reordered.dram.avg_latency_ns()),
+                pct(s.baseline.bad_spec_pct),
+                pct(s.reordered.bad_spec_pct),
+            ]);
+        }
+    }
+    t.emit();
+}

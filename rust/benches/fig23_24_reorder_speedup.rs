@@ -1,0 +1,70 @@
+//! Figures 23 & 24 (+ Table IX): end-to-end speedup of every reordering
+//! algorithm, without (Fig. 23) and with (Fig. 24) the reordering
+//! overhead, plus the qualitative overhead/gain summary.
+//!
+//! Paper shape: 4-60% speedups ignoring overhead; up to ~35% including
+//! it, with Hilbert on Adaboost/DBSCAN turning into slowdowns;
+//! computation reordering wins on neighbour workloads, data-layout
+//! reordering on tree workloads.
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{r3, Table};
+use mlperf::coordinator::reorder_study;
+use mlperf::reorder::ReorderKind;
+use mlperf::workloads::{by_name, Category};
+
+fn main() {
+    common::banner("Figs 23-24: reordering speedups");
+    let mut cfg = common::config();
+    cfg.scale *= 0.5;
+    let mut t = Table::new(
+        "fig23_24",
+        "speedup without (Fig 23) and with (Fig 24) reorder overhead",
+        &["workload", "method", "speedup no-ovh", "speedup with-ovh", "overhead Mcycles"],
+    );
+    let mut best: std::collections::BTreeMap<&str, (String, f64)> = Default::default();
+    for name in common::reorder_workloads() {
+        let w = by_name(name).unwrap();
+        for kind in ReorderKind::ALL {
+            if !kind.applicable_to(w.as_ref()) {
+                continue;
+            }
+            let s = common::timed(&format!("{name}/{kind}"), || {
+                reorder_study(w.as_ref(), kind, &cfg)
+            });
+            let no = s.speedup_no_overhead();
+            let with = s.speedup_with_overhead();
+            t.row(vec![
+                name.into(),
+                kind.name().into(),
+                r3(no),
+                r3(with),
+                format!("{:.1}", s.overhead_cycles / 1e6),
+            ]);
+            let e = best.entry(name).or_insert((kind.name().into(), with));
+            if with > e.1 {
+                *e = (kind.name().into(), with);
+            }
+        }
+    }
+    t.emit();
+
+    // Table IX-style qualitative summary
+    let mut t9 = Table::new("tab09", "best method per workload (with overhead)", &[
+        "workload", "category", "best method", "speedup",
+    ]);
+    for name in common::reorder_workloads() {
+        let w = by_name(name).unwrap();
+        let cat = match w.category() {
+            Category::NeighbourBased => "neighbour",
+            Category::TreeBased => "tree",
+            Category::MatrixBased => "matrix",
+        };
+        if let Some((m, s)) = best.get(name) {
+            t9.row(vec![name.into(), cat.into(), m.clone(), r3(*s)]);
+        }
+    }
+    t9.emit();
+}

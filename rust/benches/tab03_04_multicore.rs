@@ -1,0 +1,47 @@
+//! Tables III & IV: 1/4/8-core top-down characterization for the
+//! workloads with parallel implementations, in both library profiles.
+//!
+//! Paper shape: single-core bottleneck structure persists at 4 and 8
+//! cores — CPI stays >=0.7-ish, bad speculation and DRAM bound comparable.
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{pct, r2, Table};
+use mlperf::coordinator::multicore_characterize;
+use mlperf::workloads::{by_name, multicore_names, LibraryProfile};
+
+fn main() {
+    common::banner("Tables III-IV: multicore top-down");
+    let mut cfg = common::config();
+    // multicore triples the simulation count: trim scale further
+    cfg.scale *= 0.5;
+    for (profile, id, label) in [
+        (LibraryProfile::Sklearn, "tab03", "Table III (scikit-learn)"),
+        (LibraryProfile::Mlpack, "tab04", "Table IV (mlpack)"),
+    ] {
+        cfg.profile = profile;
+        let mut t = Table::new(id, label, &[
+            "workload", "CPI 1c", "CPI 4c", "CPI 8c", "ret% 1c", "ret% 4c", "ret% 8c",
+            "bspec% 1c", "bspec% 4c", "bspec% 8c", "dram% 1c", "dram% 4c", "dram% 8c",
+        ]);
+        for name in multicore_names(profile) {
+            let w = by_name(name).unwrap();
+            let ms: Vec<_> = [1usize, 4, 8]
+                .iter()
+                .map(|&n| {
+                    common::timed(&format!("{name}@{n}c"), || {
+                        multicore_characterize(w.as_ref(), &cfg, n)
+                    })
+                })
+                .collect();
+            let mut row = vec![name.to_string()];
+            row.extend(ms.iter().map(|m| r2(m.cpi)));
+            row.extend(ms.iter().map(|m| pct(m.retiring_pct)));
+            row.extend(ms.iter().map(|m| pct(m.bad_spec_pct)));
+            row.extend(ms.iter().map(|m| pct(m.dram_bound_pct)));
+            t.row(row);
+        }
+        t.emit();
+    }
+}

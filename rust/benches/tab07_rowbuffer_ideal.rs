@@ -1,0 +1,41 @@
+//! Table VII: DRAM row-buffer hit ratio, average access latency, and the
+//! latency under an ideal (always-hit) row buffer, per workload.
+//!
+//! Paper shape: KNN/t-SNE/DBSCAN have very poor hit ratios (<0.25);
+//! Adaboost best (~0.64); ideal-hit latency sits at ~68-73 ns giving
+//! 11.8-25.6% improvement headroom.
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{pct, r2, r3, Table};
+use mlperf::coordinator::dram_study;
+use mlperf::workloads::by_name;
+
+fn main() {
+    common::banner("Table VII: row-buffer headroom");
+    let cfg = common::config();
+    let mut t = Table::new(
+        "tab07",
+        "original vs ideal row-buffer hit latencies",
+        &["benchmark", "hit ratio", "avg latency ns", "ideal latency ns", "improvement %"],
+    );
+    for name in common::reorder_workloads() {
+        let w = by_name(name).unwrap();
+        let (real, ideal) = common::timed(name, || {
+            (
+                dram_study(w.as_ref(), &cfg, false),
+                dram_study(w.as_ref(), &cfg, true),
+            )
+        });
+        let improv = (1.0 - ideal.avg_latency_ns() / real.avg_latency_ns()) * 100.0;
+        t.row(vec![
+            name.into(),
+            r3(real.row_hit_ratio()),
+            r2(real.avg_latency_ns()),
+            r2(ideal.avg_latency_ns()),
+            pct(improv),
+        ]);
+    }
+    t.emit();
+}

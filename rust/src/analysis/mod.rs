@@ -1,0 +1,152 @@
+//! Result aggregation and table/figure formatting.
+//!
+//! Every bench target renders its results through [`Table`] — an ASCII
+//! table for the terminal plus CSV for plotting — so the output rows can
+//! be compared one-to-one with the paper's figures.
+
+use crate::sim::Metrics;
+
+/// A named results table (one per paper figure/table).
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
+        Self {
+            id: id.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render as an aligned ASCII table.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        let line = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (for plotting / EXPERIMENTS.md extraction).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout and persist CSV under `results/`.
+    pub fn emit(&self) {
+        println!("{}", self.render());
+        let dir = std::path::Path::new("results");
+        if std::fs::create_dir_all(dir).is_ok() {
+            let _ = std::fs::write(dir.join(format!("{}.csv", self.id)), self.to_csv());
+        }
+    }
+}
+
+/// Percent with one decimal.
+pub fn pct(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+/// Ratio with two decimals.
+pub fn r2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+/// Ratio with three decimals.
+pub fn r3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+/// The standard top-down row used by Tables III/IV and several figures.
+pub fn topdown_cells(m: &Metrics) -> Vec<String> {
+    vec![
+        r2(m.cpi),
+        pct(m.retiring_pct),
+        pct(m.bad_spec_pct),
+        pct(m.dram_bound_pct),
+        pct(m.core_bound_pct),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_aligns_columns() {
+        let mut t = Table::new("t1", "demo", &["name", "v"]);
+        t.row(vec!["a".into(), "1.0".into()]);
+        t.row(vec!["longname".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert_eq!(lines[3].len(), lines[4].len());
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("t2", "x", &["a,b", "c"]);
+        t.row(vec!["v\"q".into(), "2".into()]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("\"a,b\",c\n"));
+        assert!(csv.contains("\"v\"\"q\""));
+    }
+
+    #[test]
+    #[should_panic(expected = "column count")]
+    fn row_width_checked() {
+        let mut t = Table::new("t3", "x", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn topdown_cells_shape() {
+        let m = Metrics::default();
+        assert_eq!(topdown_cells(&m).len(), 5);
+    }
+}

@@ -1,0 +1,134 @@
+//! Binary dataset I/O.
+//!
+//! The paper converts generated datasets to binary (`.npy` for
+//! scikit-learn, `.bin` for mlpack) "to avoid the overhead incurred due to
+//! reading input text files". We implement the same idea with a minimal
+//! self-describing container: magic, version, rows, cols, n_classes,
+//! little-endian f64 X payload followed by f64 y payload.
+
+use super::synth::Dataset;
+use crate::util::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"MLPERF01";
+
+/// Write a dataset to `path` in the binary container format.
+pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    f.write_all(MAGIC)?;
+    f.write_all(&(ds.n_samples() as u64).to_le_bytes())?;
+    f.write_all(&(ds.n_features() as u64).to_le_bytes())?;
+    f.write_all(&(ds.n_classes as u64).to_le_bytes())?;
+    for v in ds.x.as_slice() {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    for v in &ds.y {
+        f.write_all(&v.to_le_bytes())?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// Read a dataset previously written by [`save`].
+pub fn load(path: &Path) -> Result<Dataset> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{}: bad magic (not an mlperf dataset)", path.display());
+    }
+    let rows = read_u64(&mut f)? as usize;
+    let cols = read_u64(&mut f)? as usize;
+    let n_classes = read_u64(&mut f)? as usize;
+    // Guard absurd headers before allocating.
+    let cells = (rows as u128) * (cols as u128);
+    if cells > (1u128 << 34) {
+        bail!("{}: header implies {} cells — refusing", path.display(), cells);
+    }
+    let mut xdata = vec![0.0f64; rows * cols];
+    read_f64s(&mut f, &mut xdata)?;
+    let mut y = vec![0.0f64; rows];
+    read_f64s(&mut f, &mut y)?;
+    Ok(Dataset { x: Matrix::from_vec(rows, cols, xdata), y, n_classes })
+}
+
+fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_f64s<R: Read>(r: &mut R, out: &mut [f64]) -> Result<()> {
+    let mut buf = vec![0u8; out.len() * 8];
+    r.read_exact(&mut buf).context("truncated dataset payload")?;
+    for (i, chunk) in buf.chunks_exact(8).enumerate() {
+        out[i] = f64::from_le_bytes(chunk.try_into().unwrap());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::make_blobs;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("mlperf-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let ds = make_blobs(120, 7, 3, 1.0, 11);
+        let p = tmpfile("roundtrip.bin");
+        save(&ds, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.x, ds.x);
+        assert_eq!(back.y, ds.y);
+        assert_eq!(back.n_classes, 3);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let p = tmpfile("badmagic.bin");
+        std::fs::write(&p, b"NOTMAGIC________________").unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let ds = make_blobs(50, 4, 2, 1.0, 12);
+        let p = tmpfile("trunc.bin");
+        save(&ds, &p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_absurd_header() {
+        let p = tmpfile("absurd.bin");
+        let mut v = Vec::new();
+        v.extend_from_slice(MAGIC);
+        v.extend_from_slice(&u64::MAX.to_le_bytes());
+        v.extend_from_slice(&u64::MAX.to_le_bytes());
+        v.extend_from_slice(&0u64.to_le_bytes());
+        std::fs::write(&p, v).unwrap();
+        let err = load(&p).unwrap_err().to_string();
+        assert!(err.contains("refusing"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_is_contextful_error() {
+        let err = load(Path::new("/nonexistent/x.bin")).unwrap_err().to_string();
+        assert!(err.contains("open"), "{err}");
+    }
+}

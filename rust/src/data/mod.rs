@@ -1,0 +1,7 @@
+//! Dataset substrate: synthetic generators (ports of `sklearn.datasets`)
+//! and the binary container format the experiments load from.
+
+pub mod io;
+pub mod synth;
+
+pub use synth::{make_blobs, make_classification, make_documents, make_regression, Dataset};

@@ -1,0 +1,290 @@
+//! Synthetic dataset generators, ports of the `sklearn.datasets` functions
+//! the paper uses ("dummy datasets of size 10 million rows and 20
+//! features ... generated using the datasets module in the scikit-learn
+//! library").
+
+use crate::util::{Matrix, Pcg64};
+
+/// A generated dataset: row-major features plus per-row targets.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// n_samples x n_features feature matrix.
+    pub x: Matrix,
+    /// Regression target or class label (as f64) per sample.
+    pub y: Vec<f64>,
+    /// Number of distinct classes (0 for regression data).
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn n_samples(&self) -> usize {
+        self.x.rows()
+    }
+    pub fn n_features(&self) -> usize {
+        self.x.cols()
+    }
+
+    /// Working-set footprint of the feature matrix in bytes.
+    pub fn bytes(&self) -> u64 {
+        (self.n_samples() * self.n_features() * 8) as u64
+    }
+
+    /// Apply a row permutation to both features and targets
+    /// (data-layout reordering keeps X/y consistent).
+    pub fn permuted(&self, perm: &[usize]) -> Dataset {
+        Dataset {
+            x: self.x.permute_rows(perm),
+            y: perm.iter().map(|&i| self.y[i]).collect(),
+            n_classes: self.n_classes,
+        }
+    }
+}
+
+/// `make_blobs`: isotropic Gaussian clusters, the standard input for the
+/// clustering / neighbour workloads (KMeans, GMM, DBSCAN, KNN, t-SNE).
+pub fn make_blobs(
+    n_samples: usize,
+    n_features: usize,
+    centers: usize,
+    cluster_std: f64,
+    seed: u64,
+) -> Dataset {
+    assert!(centers > 0);
+    let mut rng = Pcg64::new(seed);
+    // Centers uniform in [-10, 10]^d, as sklearn's default box.
+    let mut ctr = Matrix::zeros(centers, n_features);
+    for c in 0..centers {
+        for f in 0..n_features {
+            ctr[(c, f)] = rng.uniform(-10.0, 10.0);
+        }
+    }
+    let mut x = Matrix::zeros(n_samples, n_features);
+    let mut y = vec![0.0; n_samples];
+    for i in 0..n_samples {
+        let c = rng.index(centers);
+        y[i] = c as f64;
+        for f in 0..n_features {
+            x[(i, f)] = rng.normal_ms(ctr[(c, f)], cluster_std);
+        }
+    }
+    Dataset { x, y, n_classes: centers }
+}
+
+/// `make_classification`-style data: class-dependent Gaussian informative
+/// features plus pure-noise features (used by the tree-based workloads;
+/// a fraction `flip_y` of labels is flipped to create the label noise that
+/// makes boosting rounds non-trivial).
+pub fn make_classification(
+    n_samples: usize,
+    n_features: usize,
+    n_informative: usize,
+    n_classes: usize,
+    flip_y: f64,
+    seed: u64,
+) -> Dataset {
+    assert!(n_informative <= n_features);
+    assert!(n_classes >= 2);
+    let mut rng = Pcg64::new(seed);
+    // One Gaussian center per class over informative dims.
+    let mut ctr = Matrix::zeros(n_classes, n_informative);
+    for c in 0..n_classes {
+        for f in 0..n_informative {
+            ctr[(c, f)] = rng.uniform(-4.0, 4.0);
+        }
+    }
+    let mut x = Matrix::zeros(n_samples, n_features);
+    let mut y = vec![0.0; n_samples];
+    for i in 0..n_samples {
+        let c = rng.index(n_classes);
+        let label = if rng.next_f64() < flip_y {
+            rng.index(n_classes)
+        } else {
+            c
+        };
+        y[i] = label as f64;
+        for f in 0..n_informative {
+            x[(i, f)] = rng.normal_ms(ctr[(c, f)], 1.0);
+        }
+        for f in n_informative..n_features {
+            x[(i, f)] = rng.normal(); // noise features
+        }
+    }
+    Dataset { x, y, n_classes }
+}
+
+/// `make_regression`: linear model y = X w + noise over standard-normal X
+/// (Lasso/Ridge input). A fraction of true coefficients is zero so that
+/// Lasso's sparsity mechanism is exercised.
+pub fn make_regression(
+    n_samples: usize,
+    n_features: usize,
+    n_informative: usize,
+    noise: f64,
+    seed: u64,
+) -> (Dataset, Vec<f64>) {
+    assert!(n_informative <= n_features);
+    let mut rng = Pcg64::new(seed);
+    let mut w = vec![0.0; n_features];
+    for wi in w.iter_mut().take(n_informative) {
+        *wi = rng.uniform(-100.0, 100.0);
+    }
+    let mut x = Matrix::zeros(n_samples, n_features);
+    let mut y = vec![0.0; n_samples];
+    for i in 0..n_samples {
+        let mut dot = 0.0;
+        for f in 0..n_features {
+            let v = rng.normal();
+            x[(i, f)] = v;
+            dot += v * w[f];
+        }
+        y[i] = dot + rng.normal_ms(0.0, noise);
+    }
+    (Dataset { x, y, n_classes: 0 }, w)
+}
+
+/// Document-term count matrix for LDA: `n_topics` latent topics with
+/// Dirichlet word distributions; each "document" row holds word counts.
+pub fn make_documents(
+    n_docs: usize,
+    vocab: usize,
+    n_topics: usize,
+    words_per_doc: usize,
+    seed: u64,
+) -> Dataset {
+    let mut rng = Pcg64::new(seed);
+    // Topic-word distributions.
+    let topics: Vec<Vec<f64>> = (0..n_topics).map(|_| rng.dirichlet(0.1, vocab)).collect();
+    let mut x = Matrix::zeros(n_docs, vocab);
+    let mut y = vec![0.0; n_docs];
+    for d in 0..n_docs {
+        let theta = rng.dirichlet(0.5, n_topics);
+        // record dominant topic as "label" for sanity checks
+        y[d] = crate::util::stats::argmax(&theta).unwrap_or(0) as f64;
+        for _ in 0..words_per_doc {
+            // sample topic, then word
+            let t = sample_categorical(&mut rng, &theta);
+            let w = sample_categorical(&mut rng, &topics[t]);
+            x[(d, w)] += 1.0;
+        }
+    }
+    Dataset { x, y, n_classes: n_topics }
+}
+
+fn sample_categorical(rng: &mut Pcg64, p: &[f64]) -> usize {
+    let u = rng.next_f64();
+    let mut acc = 0.0;
+    for (i, &pi) in p.iter().enumerate() {
+        acc += pi;
+        if u < acc {
+            return i;
+        }
+    }
+    p.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn blobs_shapes_and_labels() {
+        let d = make_blobs(500, 20, 4, 1.0, 1);
+        assert_eq!(d.n_samples(), 500);
+        assert_eq!(d.n_features(), 20);
+        assert_eq!(d.n_classes, 4);
+        assert!(d.y.iter().all(|&l| l >= 0.0 && l < 4.0));
+        // every class represented
+        for c in 0..4 {
+            assert!(d.y.iter().any(|&l| l as usize == c));
+        }
+    }
+
+    #[test]
+    fn blobs_are_clustered() {
+        // points of the same blob must on average be far closer than points
+        // of different blobs (cluster_std 0.5 vs centers in [-10,10]).
+        let d = make_blobs(300, 5, 3, 0.5, 2);
+        let mut intra = Vec::new();
+        let mut inter = Vec::new();
+        for i in 0..100 {
+            for j in (i + 1)..100 {
+                let dist = stats::sqdist(d.x.row(i), d.x.row(j));
+                if d.y[i] == d.y[j] {
+                    intra.push(dist);
+                } else {
+                    inter.push(dist);
+                }
+            }
+        }
+        assert!(stats::mean(&intra) * 4.0 < stats::mean(&inter));
+    }
+
+    #[test]
+    fn blobs_deterministic_per_seed() {
+        let a = make_blobs(50, 3, 2, 1.0, 7);
+        let b = make_blobs(50, 3, 2, 1.0, 7);
+        assert_eq!(a.x, b.x);
+        let c = make_blobs(50, 3, 2, 1.0, 8);
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn classification_flip_y_adds_noise() {
+        let clean = make_classification(2000, 10, 5, 2, 0.0, 3);
+        let noisy = make_classification(2000, 10, 5, 2, 0.3, 3);
+        assert_eq!(clean.n_classes, 2);
+        // both have both labels present
+        assert!(noisy.y.iter().any(|&l| l == 0.0));
+        assert!(noisy.y.iter().any(|&l| l == 1.0));
+    }
+
+    #[test]
+    fn regression_recoverable_by_least_squares() {
+        let (d, w) = make_regression(2000, 5, 5, 0.1, 4);
+        // Solve normal equations X^T X w = X^T y and compare to true w.
+        let xt = d.x.transpose();
+        let xtx = xt.matmul(&d.x);
+        let xty: Vec<f64> = (0..5)
+            .map(|f| (0..2000).map(|i| d.x[(i, f)] * d.y[i]).sum())
+            .collect();
+        let west = crate::util::solve_spd(&xtx, &xty).unwrap();
+        for (a, b) in west.iter().zip(w.iter()) {
+            assert!((a - b).abs() < 0.05, "est {a} true {b}");
+        }
+    }
+
+    #[test]
+    fn regression_sparse_truth() {
+        let (_, w) = make_regression(10, 8, 3, 0.0, 5);
+        assert!(w[3..].iter().all(|&x| x == 0.0));
+        assert!(w[..3].iter().all(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn documents_counts_sum() {
+        let d = make_documents(20, 50, 3, 100, 6);
+        for i in 0..20 {
+            let total: f64 = d.x.row(i).iter().sum();
+            assert_eq!(total, 100.0);
+            assert!(d.x.row(i).iter().all(|&c| c >= 0.0));
+        }
+    }
+
+    #[test]
+    fn permuted_keeps_xy_aligned() {
+        let d = make_blobs(10, 2, 2, 1.0, 9);
+        let perm: Vec<usize> = (0..10).rev().collect();
+        let p = d.permuted(&perm);
+        for i in 0..10 {
+            assert_eq!(p.x.row(i), d.x.row(9 - i));
+            assert_eq!(p.y[i], d.y[9 - i]);
+        }
+    }
+
+    #[test]
+    fn bytes_footprint() {
+        let d = make_blobs(100, 20, 2, 1.0, 1);
+        assert_eq!(d.bytes(), 100 * 20 * 8);
+    }
+}

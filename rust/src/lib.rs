@@ -1,0 +1,32 @@
+//! # mlperf-repro
+//!
+//! Reproduction of Kumar & Govindarajan, *Performance Characterization
+//! and Optimizations of Traditional ML Applications* (cs.PF 2024).
+//!
+//! The crate provides, as a library:
+//!
+//! - [`workloads`] — the paper's 13 traditional-ML workloads (Table I),
+//!   instrumented to emit micro-architectural event traces, in two
+//!   library profiles (scikit-learn-like and mlpack-like).
+//! - [`sim`] — the measurement substrate: cache hierarchy, hardware
+//!   prefetchers, DDR4 row-buffer model, gshare branch predictor, and a
+//!   top-down pipeline model (substitutes for perf/VTune, Sniper and
+//!   Ramulator; see DESIGN.md for the substitution table).
+//! - [`reorder`] — the paper's five data-layout / computation reordering
+//!   optimizations (Table VIII) with overhead accounting.
+//! - [`coordinator`] — the experiment registry mapping every figure and
+//!   table of the paper to a runnable experiment.
+//! - [`runtime`] — PJRT executor that loads the AOT-compiled JAX/Pallas
+//!   numeric kernels (`artifacts/*.hlo.txt`) and runs them from Rust.
+//!
+//! See `examples/quickstart.rs` for the five-minute tour.
+
+pub mod analysis;
+pub mod coordinator;
+pub mod data;
+pub mod runtime;
+pub mod reorder;
+pub mod workloads;
+pub mod sim;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,286 @@
+//! `mlperf` — command-line launcher for the characterization /
+//! optimization experiments.
+//!
+//! ```text
+//! mlperf list
+//! mlperf characterize --workload kmeans [--scale 0.5] [--profile mlpack]
+//! mlperf prefetch    --workload knn
+//! mlperf reorder     --workload dbscan --method hilbert
+//! mlperf multicore   --workload gmm --cores 4
+//! mlperf gen-data    --rows 100000 --features 20 --out data.bin
+//! mlperf runtime     [--artifacts artifacts/]
+//! mlperf report      [--scale 0.2]     # every figure/table, slow
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use mlperf::analysis::{pct, r2, r3, Table};
+use mlperf::coordinator::*;
+use mlperf::reorder::ReorderKind;
+use mlperf::util::Args;
+use mlperf::workloads::{by_name, registry, LibraryProfile, Workload};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig {
+        scale: args.get_parsed_or("scale", 1.0),
+        iterations: args.get_parsed_or("iterations", 2),
+        seed: args.get_parsed_or("seed", 0xDA7Au64),
+        ..Default::default()
+    };
+    cfg.profile = match args.get_or("profile", "sklearn").as_str() {
+        "sklearn" => LibraryProfile::Sklearn,
+        "mlpack" => LibraryProfile::Mlpack,
+        other => bail!("unknown profile {other:?} (sklearn|mlpack)"),
+    };
+    if args.has("no-hw-prefetch") {
+        cfg.cpu.cache.hw_prefetch = false;
+    }
+    Ok(cfg)
+}
+
+fn workload_from(args: &Args) -> Result<Box<dyn Workload>> {
+    let name = args
+        .get("workload")
+        .ok_or_else(|| anyhow!("--workload <name> required (see `mlperf list`)"))?;
+    by_name(name).ok_or_else(|| anyhow!("unknown workload {name:?} (see `mlperf list`)"))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("list") => cmd_list(),
+        Some("characterize") => cmd_characterize(args),
+        Some("prefetch") => cmd_prefetch(args),
+        Some("reorder") => cmd_reorder(args),
+        Some("multicore") => cmd_multicore(args),
+        Some("gen-data") => cmd_gen_data(args),
+        Some("runtime") => cmd_runtime(args),
+        Some("report") => cmd_report(args),
+        Some(other) => bail!("unknown subcommand {other:?}"),
+        None => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "mlperf — Performance Characterization of Traditional ML (repro)
+subcommands: list, characterize, prefetch, reorder, multicore, gen-data, runtime, report
+common flags: --workload <name> --scale <f> --iterations <n> --profile sklearn|mlpack --seed <n>";
+
+fn cmd_list() -> Result<()> {
+    let mut t = Table::new("workloads", "Table I — workloads and categories", &[
+        "workload", "category", "in mlpack", "comp-reorderable",
+    ]);
+    for w in registry() {
+        t.row(vec![
+            w.name().into(),
+            w.category().to_string(),
+            if w.in_mlpack() { "yes" } else { "no" }.into(),
+            if w.supports_visit_order() { "yes" } else { "no" }.into(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_characterize(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let w = workload_from(args)?;
+    let c = characterize(w.as_ref(), &cfg);
+    let m = &c.metrics;
+    let mut t = Table::new(
+        "characterize",
+        &format!("{} ({:?}, rows={})", w.name(), cfg.profile, cfg.rows_for(w.as_ref())),
+        &["metric", "value"],
+    );
+    for (k, v) in [
+        ("instructions", format!("{}", m.instructions)),
+        ("cycles", format!("{:.0}", m.cycles)),
+        ("CPI", r2(m.cpi)),
+        ("IPC", r2(m.ipc)),
+        ("retiring %", pct(m.retiring_pct)),
+        ("bad speculation %", pct(m.bad_spec_pct)),
+        ("DRAM bound %", pct(m.dram_bound_pct)),
+        ("core bound %", pct(m.core_bound_pct)),
+        ("branch fraction", r3(m.branch_fraction)),
+        ("cond branch fraction", r3(m.cond_branch_fraction)),
+        ("branch mispredict ratio", r3(m.branch_mispredict_ratio)),
+        ("L2 miss ratio", r3(m.l2_miss_ratio)),
+        ("LLC miss ratio", r3(m.llc_miss_ratio)),
+        ("DRAM row-hit ratio", r3(m.dram.row_hit_ratio())),
+        ("DRAM avg latency (ns)", r2(m.dram.avg_latency_ns())),
+        ("bandwidth utilization %", pct(m.bandwidth_utilization_pct())),
+        ("HW prefetch useless frac", r3(m.prefetch.hw_useless_fraction())),
+        ("quality", format!("{:.4}", c.result.quality)),
+        ("model", c.result.detail.clone()),
+    ] {
+        t.row(vec![k.into(), v]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_prefetch(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let w = workload_from(args)?;
+    let s = prefetch_study(w.as_ref(), &cfg);
+    let mut t = Table::new(
+        "prefetch",
+        &format!("software prefetching on {} (Figs. 14-18)", w.name()),
+        &["metric", "baseline", "prefetched"],
+    );
+    t.row(vec!["L2 miss ratio".into(), r3(s.base.l2_miss_ratio), r3(s.prefetched.l2_miss_ratio)]);
+    t.row(vec!["DRAM bound %".into(), pct(s.base.dram_bound_pct), pct(s.prefetched.dram_bound_pct)]);
+    t.row(vec!["bad spec %".into(), pct(s.base.bad_spec_pct), pct(s.prefetched.bad_spec_pct)]);
+    t.row(vec![
+        "2+ uops/cycle frac".into(),
+        r3(s.base.two_plus_uops_fraction()),
+        r3(s.prefetched.two_plus_uops_fraction()),
+    ]);
+    t.row(vec!["CPI".into(), r2(s.base.cpi), r2(s.prefetched.cpi)]);
+    t.row(vec![
+        "speedup".into(),
+        "1.00".into(),
+        r3(s.prefetched.speedup_vs(&s.base)),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_reorder(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let w = workload_from(args)?;
+    let method = args.get_or("method", "zorder");
+    let kind = parse_kind(&method)?;
+    if !kind.applicable_to(w.as_ref()) {
+        bail!("{} is not applicable to {}", kind, w.name());
+    }
+    let s = reorder_study(w.as_ref(), kind, &cfg);
+    let mut t = Table::new(
+        "reorder",
+        &format!("{} on {} (Figs. 20-24)", kind, w.name()),
+        &["metric", "baseline", "reordered"],
+    );
+    t.row(vec![
+        "row-buffer hit ratio".into(),
+        r3(s.baseline.dram.row_hit_ratio()),
+        r3(s.reordered.dram.row_hit_ratio()),
+    ]);
+    t.row(vec![
+        "avg DRAM latency (ns)".into(),
+        r2(s.baseline.dram.avg_latency_ns()),
+        r2(s.reordered.dram.avg_latency_ns()),
+    ]);
+    t.row(vec![
+        "bad spec %".into(),
+        pct(s.baseline.bad_spec_pct),
+        pct(s.reordered.bad_spec_pct),
+    ]);
+    t.row(vec!["CPI".into(), r2(s.baseline.cpi), r2(s.reordered.cpi)]);
+    t.row(vec![
+        "speedup (no overhead)".into(),
+        "1.00".into(),
+        r3(s.speedup_no_overhead()),
+    ]);
+    t.row(vec![
+        "speedup (with overhead)".into(),
+        "1.00".into(),
+        r3(s.speedup_with_overhead()),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+pub fn parse_kind(s: &str) -> Result<ReorderKind> {
+    Ok(match s.to_lowercase().replace(['-', '_'], "").as_str() {
+        "firsttouch" | "ft" => ReorderKind::FirstTouch,
+        "rcb" => ReorderKind::Rcb,
+        "hilbert" => ReorderKind::Hilbert,
+        "zorder" | "morton" => ReorderKind::ZOrder,
+        "blocking" | "localityblocking" => ReorderKind::LocalityBlocking,
+        "zordercomp" | "zorderc" => ReorderKind::ZOrderComp,
+        other => bail!("unknown reorder method {other:?}"),
+    })
+}
+
+fn cmd_multicore(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let w = workload_from(args)?;
+    let cores: usize = args.get_parsed_or("cores", 4);
+    let m = multicore_characterize(w.as_ref(), &cfg, cores);
+    let mut t = Table::new(
+        "multicore",
+        &format!("{} on {} cores (Tables III/IV)", w.name(), cores),
+        &["CPI", "retiring %", "bad spec %", "DRAM bound %", "core bound %"],
+    );
+    t.row(mlperf::analysis::topdown_cells(&m));
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_gen_data(args: &Args) -> Result<()> {
+    let rows: usize = args.get_parsed_or("rows", 100_000);
+    let features: usize = args.get_parsed_or("features", 20);
+    let seed: u64 = args.get_parsed_or("seed", 1u64);
+    let out = args.get_or("out", "data.bin");
+    let ds = mlperf::data::make_blobs(rows, features, 8, 1.0, seed);
+    mlperf::data::io::save(&ds, std::path::Path::new(&out))?;
+    println!("wrote {rows}x{features} dataset ({} MB) to {out}", ds.bytes() / 1_000_000);
+    Ok(())
+}
+
+fn cmd_runtime(args: &Args) -> Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(mlperf::runtime::default_artifacts_dir);
+    let rt = mlperf::runtime::Runtime::load(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut rng = mlperf::util::Pcg64::new(1);
+    let x: Vec<f32> = (0..mlperf::runtime::BATCH * mlperf::runtime::FEATURES)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let c: Vec<f32> = (0..mlperf::runtime::K * mlperf::runtime::FEATURES)
+        .map(|_| rng.normal() as f32)
+        .collect();
+    let (_, inertia) = rt.kmeans_step(&x, &c)?;
+    println!("kmeans_step OK (batch inertia {inertia:.1})");
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    println!("running the full figure/table suite at scale {} …", cfg.scale);
+    let mut t = Table::new(
+        "fig01_10",
+        "single-core characterization (Figs. 1-10)",
+        &["workload", "CPI", "ret%", "bspec%", "dram%", "core%", "br-frac", "LLC-miss"],
+    );
+    for w in registry() {
+        let c = characterize(w.as_ref(), &cfg);
+        let m = &c.metrics;
+        t.row(vec![
+            w.name().into(),
+            r2(m.cpi),
+            pct(m.retiring_pct),
+            pct(m.bad_spec_pct),
+            pct(m.dram_bound_pct),
+            pct(m.core_bound_pct),
+            r3(m.branch_fraction),
+            r3(m.llc_miss_ratio),
+        ]);
+    }
+    t.emit();
+    Ok(())
+}

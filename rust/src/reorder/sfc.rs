@@ -1,0 +1,232 @@
+//! Space-filling-curve keys: Morton (Z-order) and Hilbert [Sag12].
+//!
+//! Both curves map an M-dimensional quantized point to a 1-D key such
+//! that key-adjacent points are space-adjacent. Sorting dataset rows by
+//! the key is the paper's SFC data-layout reordering (Table VIII);
+//! sorting the *visit order* by it is Z-order computation reordering.
+//!
+//! The Hilbert index uses Skilling's transpose algorithm ("Programming
+//! the Hilbert curve", AIP 2004), which works for any dimensionality.
+
+use crate::util::Matrix;
+
+/// Quantize each feature of each row to `bits` unsigned levels using the
+/// per-feature min/max over the dataset.
+pub fn quantize(x: &Matrix, bits: u32) -> Vec<Vec<u32>> {
+    let (n, m) = (x.rows(), x.cols());
+    assert!(bits >= 1 && bits <= 16);
+    let mut mins = vec![f64::INFINITY; m];
+    let mut maxs = vec![f64::NEG_INFINITY; m];
+    for i in 0..n {
+        for j in 0..m {
+            let v = x[(i, j)];
+            mins[j] = mins[j].min(v);
+            maxs[j] = maxs[j].max(v);
+        }
+    }
+    let levels = ((1u64 << bits) - 1) as f64;
+    (0..n)
+        .map(|i| {
+            (0..m)
+                .map(|j| {
+                    let span = maxs[j] - mins[j];
+                    if span <= 0.0 {
+                        0
+                    } else {
+                        (((x[(i, j)] - mins[j]) / span) * levels).round() as u32
+                    }
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// Morton (Z-order) key: bit-interleave the quantized coordinates,
+/// most-significant bit first. Key width = bits*m ≤ 128.
+pub fn morton_key(coords: &[u32], bits: u32) -> u128 {
+    debug_assert!(bits as usize * coords.len() <= 128);
+    let mut key: u128 = 0;
+    for b in (0..bits).rev() {
+        for &c in coords {
+            key = (key << 1) | (((c >> b) & 1) as u128);
+        }
+    }
+    key
+}
+
+/// Hilbert key via Skilling's transpose algorithm: Gray-code-corrected
+/// coordinates, then Morton-interleaved.
+pub fn hilbert_key(coords: &[u32], bits: u32) -> u128 {
+    let n = coords.len();
+    let mut x: Vec<u32> = coords.to_vec();
+    if n == 0 {
+        return 0;
+    }
+    // Inverse undo excess work (Skilling's AxestoTranspose)
+    let m = 1u32 << (bits - 1);
+    let mut q = m;
+    while q > 1 {
+        let p = q - 1;
+        for i in 0..n {
+            if x[i] & q != 0 {
+                x[0] ^= p; // invert
+            } else {
+                let t = (x[0] ^ x[i]) & p;
+                x[0] ^= t;
+                x[i] ^= t;
+            }
+        }
+        q >>= 1;
+    }
+    // Gray encode
+    for i in 1..n {
+        x[i] ^= x[i - 1];
+    }
+    let mut t = 0u32;
+    q = m;
+    while q > 1 {
+        if x[n - 1] & q != 0 {
+            t ^= q - 1;
+        }
+        q >>= 1;
+    }
+    for xi in x.iter_mut() {
+        *xi ^= t;
+    }
+    morton_key(&x, bits)
+}
+
+/// Row order sorted by a SFC key (stable, so equal keys keep dataset
+/// order). `hilbert=false` gives the Z-order permutation.
+pub fn sfc_order(x: &Matrix, bits: u32, hilbert: bool) -> Vec<usize> {
+    let qs = quantize(x, bits);
+    let mut keyed: Vec<(u128, usize)> = qs
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            let k = if hilbert { hilbert_key(c, bits) } else { morton_key(c, bits) };
+            (k, i)
+        })
+        .collect();
+    keyed.sort();
+    keyed.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Largest per-dimension bit width whose interleaved key fits in 128 bits.
+pub fn max_bits_for_dims(m: usize) -> u32 {
+    ((128 / m.max(1)) as u32).clamp(1, 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn morton_interleaves() {
+        // 2-D, 2 bits: (x=0b10, y=0b01) -> bits x1 y1 x0 y0 = 1 0 0 1
+        assert_eq!(morton_key(&[0b10, 0b01], 2), 0b1001);
+        assert_eq!(morton_key(&[0, 0], 4), 0);
+        assert_eq!(morton_key(&[0b11, 0b11], 2), 0b1111);
+    }
+
+    #[test]
+    fn hilbert_2d_4x4_is_a_hamiltonian_path() {
+        // every consecutive pair of cells along the curve must be
+        // neighbours at L1 distance exactly 1 — the defining property
+        let bits = 2;
+        let mut cells: Vec<(u128, (i32, i32))> = Vec::new();
+        for x in 0..4u32 {
+            for y in 0..4u32 {
+                cells.push((hilbert_key(&[x, y], bits), (x as i32, y as i32)));
+            }
+        }
+        cells.sort();
+        // keys must be a permutation of 0..16
+        let keys: Vec<u128> = cells.iter().map(|c| c.0).collect();
+        assert_eq!(keys, (0..16).collect::<Vec<u128>>());
+        for w in cells.windows(2) {
+            let (ax, ay) = w[0].1;
+            let (bx, by) = w[1].1;
+            assert_eq!((ax - bx).abs() + (ay - by).abs(), 1, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn hilbert_3d_keys_are_a_permutation() {
+        let bits = 2;
+        let mut keys: Vec<u128> = Vec::new();
+        for x in 0..4u32 {
+            for y in 0..4u32 {
+                for z in 0..4u32 {
+                    keys.push(hilbert_key(&[x, y, z], bits));
+                }
+            }
+        }
+        keys.sort_unstable();
+        assert_eq!(keys, (0..64).collect::<Vec<u128>>());
+    }
+
+    #[test]
+    fn quantize_maps_extremes() {
+        let x = Matrix::from_vec(3, 2, vec![0.0, -5.0, 10.0, 5.0, 5.0, 0.0]);
+        let q = quantize(&x, 4);
+        assert_eq!(q[0][0], 0);
+        assert_eq!(q[1][0], 15);
+        assert_eq!(q[1][1], 15);
+        assert_eq!(q[0][1], 0);
+    }
+
+    #[test]
+    fn quantize_constant_feature_is_zero() {
+        let x = Matrix::from_vec(2, 1, vec![3.3, 3.3]);
+        let q = quantize(&x, 8);
+        assert_eq!(q[0][0], 0);
+        assert_eq!(q[1][0], 0);
+    }
+
+    #[test]
+    fn sfc_order_is_permutation_and_groups_neighbours() {
+        let ds = crate::data::make_blobs(400, 4, 3, 0.5, 50);
+        for hilbert in [false, true] {
+            let ord = sfc_order(&ds.x, 8, hilbert);
+            let mut sorted = ord.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..400).collect::<Vec<_>>());
+            // consecutive rows along the curve should usually be same-blob
+            let same = ord
+                .windows(2)
+                .filter(|w| ds.y[w[0]] == ds.y[w[1]])
+                .count();
+            assert!(
+                same as f64 / 399.0 > 0.9,
+                "curve (hilbert={hilbert}) mixes blobs: {same}/399"
+            );
+        }
+    }
+
+    #[test]
+    fn zorder_locality_beats_random_order() {
+        // mean consecutive distance along the curve must be far below a
+        // random order's
+        let ds = crate::data::make_blobs(300, 3, 1, 2.0, 51);
+        let ord = sfc_order(&ds.x, 8, false);
+        let curve: f64 = ord
+            .windows(2)
+            .map(|w| crate::util::stats::sqdist(ds.x.row(w[0]), ds.x.row(w[1])))
+            .sum::<f64>()
+            / 299.0;
+        let random: f64 = (0..299)
+            .map(|i| crate::util::stats::sqdist(ds.x.row(i), ds.x.row(i + 1)))
+            .sum::<f64>()
+            / 299.0;
+        assert!(curve * 2.0 < random, "curve {curve} vs random {random}");
+    }
+
+    #[test]
+    fn max_bits_respects_key_width() {
+        assert_eq!(max_bits_for_dims(2), 16);
+        assert_eq!(max_bits_for_dims(20), 6);
+        assert_eq!(max_bits_for_dims(128), 1);
+        assert!(max_bits_for_dims(20) as usize * 20 <= 128);
+    }
+}

@@ -1,0 +1,645 @@
+//! Set-associative, write-back, write-allocate cache hierarchy with LRU
+//! replacement — the Sniper-equivalent substrate for the paper's cache
+//! studies (Table V configuration, Fig. 12 perfect-cache experiments,
+//! Figs. 13–15 prefetching experiments).
+
+use super::prefetch::{AdjacentLinePrefetcher, PrefetchStats, StreamPrefetcher};
+use crate::trace::{line_of, LINE_SIZE};
+
+/// Which level served a demand access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    L1,
+    L2,
+    L3,
+    Dram,
+}
+
+impl Level {
+    /// Load-to-use latency in CPU cycles (typical client-core values).
+    pub fn latency_cycles(self) -> f64 {
+        match self {
+            Level::L1 => 4.0,
+            Level::L2 => 14.0,
+            Level::L3 => 42.0,
+            Level::Dram => 220.0,
+        }
+    }
+}
+
+// Per-line metadata bits.
+const VALID: u8 = 1;
+const DIRTY: u8 = 2;
+/// Filled by hardware prefetch, not yet demanded.
+const HW_PF: u8 = 4;
+/// Filled by software prefetch, not yet demanded.
+const SW_PF: u8 = 8;
+
+/// Per-cache counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct CacheStats {
+    /// Demand accesses (loads + stores), excluding prefetch fills.
+    pub accesses: u64,
+    /// Demand misses.
+    pub misses: u64,
+    /// Lines written back dirty on eviction.
+    pub writebacks: u64,
+}
+
+impl CacheStats {
+    /// Demand miss ratio.
+    pub fn miss_ratio(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// One set-associative cache level.
+pub struct Cache {
+    sets: usize,
+    ways: usize,
+    tags: Vec<u64>,
+    meta: Vec<u8>,
+    lru: Vec<u64>,
+    stamp: u64,
+    /// Perfect mode: every demand access hits (Fig. 12 idealization).
+    pub perfect: bool,
+    pub stats: CacheStats,
+}
+
+/// Result of an eviction.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Evicted {
+    pub line: u64,
+    pub dirty: bool,
+    /// Evicted while still carrying an untouched HW/SW prefetch bit.
+    pub untouched_hw_pf: bool,
+    pub untouched_sw_pf: bool,
+}
+
+impl Cache {
+    /// Cache of `size_bytes` with `ways`-way associativity, 64-byte lines.
+    pub fn new(size_bytes: u64, ways: usize) -> Self {
+        let lines = (size_bytes / LINE_SIZE) as usize;
+        assert!(lines % ways == 0, "size/ways mismatch");
+        let sets = lines / ways;
+        assert!(sets.is_power_of_two(), "sets must be a power of two");
+        Self {
+            sets,
+            ways,
+            tags: vec![0; lines],
+            meta: vec![0; lines],
+            lru: vec![0; lines],
+            stamp: 0,
+            perfect: false,
+            stats: CacheStats::default(),
+        }
+    }
+
+    #[inline]
+    fn set_of(&self, line: u64) -> usize {
+        (line as usize) & (self.sets - 1)
+    }
+
+    #[inline]
+    fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
+        set * self.ways..(set + 1) * self.ways
+    }
+
+    /// Probe for a line on behalf of a demand access. On hit, updates LRU,
+    /// clears prefetch bits (the prefetch proved useful) and returns which
+    /// prefetch kind (if any) had filled it.
+    /// Returns `(hit, was_hw_pf, was_sw_pf)`.
+    pub fn demand_probe(&mut self, line: u64, store: bool) -> (bool, bool, bool) {
+        self.stats.accesses += 1;
+        self.stamp += 1;
+        if self.perfect {
+            return (true, false, false);
+        }
+        let set = self.set_of(line);
+        for i in self.slot_range(set) {
+            if self.meta[i] & VALID != 0 && self.tags[i] == line {
+                self.lru[i] = self.stamp;
+                let was_hw = self.meta[i] & HW_PF != 0;
+                let was_sw = self.meta[i] & SW_PF != 0;
+                self.meta[i] &= !(HW_PF | SW_PF);
+                if store {
+                    self.meta[i] |= DIRTY;
+                }
+                return (true, was_hw, was_sw);
+            }
+        }
+        self.stats.misses += 1;
+        (false, false, false)
+    }
+
+    /// Probe without demand-access accounting (used by prefetch filtering:
+    /// don't re-fetch a line that's already resident). Does not touch LRU.
+    pub fn contains(&self, line: u64) -> bool {
+        if self.perfect {
+            return true;
+        }
+        let set = self.set_of(line);
+        self.slot_range(set)
+            .any(|i| self.meta[i] & VALID != 0 && self.tags[i] == line)
+    }
+
+    /// Insert a line (demand fill or prefetch fill), evicting LRU if
+    /// needed. `pf` bits mark prefetch fills for usefulness accounting.
+    pub fn fill(&mut self, line: u64, store: bool, hw_pf: bool, sw_pf: bool) -> Option<Evicted> {
+        if self.perfect {
+            return None;
+        }
+        self.stamp += 1;
+        let set = self.set_of(line);
+        // single pass: find an existing copy (a demand fill can race a
+        // prefetch) while simultaneously tracking the victim slot
+        // (§Perf: fill was 30% of simulator time when it scanned twice)
+        let mut victim = set * self.ways;
+        let mut best = u64::MAX;
+        for i in self.slot_range(set) {
+            if self.meta[i] & VALID == 0 {
+                if best != 0 {
+                    victim = i;
+                    best = 0;
+                }
+                continue;
+            }
+            if self.tags[i] == line {
+                self.lru[i] = self.stamp;
+                if store {
+                    self.meta[i] |= DIRTY;
+                }
+                return None;
+            }
+            if self.lru[i] < best {
+                best = self.lru[i];
+                victim = i;
+            }
+        }
+        let evicted = if self.meta[victim] & VALID != 0 {
+            let dirty = self.meta[victim] & DIRTY != 0;
+            if dirty {
+                self.stats.writebacks += 1;
+            }
+            Some(Evicted {
+                line: self.tags[victim],
+                dirty,
+                untouched_hw_pf: self.meta[victim] & HW_PF != 0,
+                untouched_sw_pf: self.meta[victim] & SW_PF != 0,
+            })
+        } else {
+            None
+        };
+        self.tags[victim] = line;
+        self.lru[victim] = self.stamp;
+        self.meta[victim] = VALID
+            | if store { DIRTY } else { 0 }
+            | if hw_pf { HW_PF } else { 0 }
+            | if sw_pf { SW_PF } else { 0 };
+        evicted
+    }
+
+    /// Invalidate a line if present (back-invalidation for inclusivity).
+    pub fn invalidate(&mut self, line: u64) {
+        let set = self.set_of(line);
+        for i in self.slot_range(set) {
+            if self.meta[i] & VALID != 0 && self.tags[i] == line {
+                self.meta[i] = 0;
+            }
+        }
+    }
+}
+
+/// Configuration of the three-level hierarchy (defaults = paper Table V).
+#[derive(Debug, Clone, Copy)]
+pub struct HierarchyConfig {
+    pub l1_bytes: u64,
+    pub l1_ways: usize,
+    pub l2_bytes: u64,
+    pub l2_ways: usize,
+    pub l3_bytes: u64,
+    pub l3_ways: usize,
+    /// Hardware prefetchers enabled (paper: on by default).
+    pub hw_prefetch: bool,
+    /// Idealizations for Fig. 12.
+    pub perfect_l2: bool,
+    pub perfect_llc: bool,
+}
+
+impl Default for HierarchyConfig {
+    fn default() -> Self {
+        Self {
+            l1_bytes: 32 * 1024,
+            l1_ways: 8,
+            l2_bytes: 256 * 1024,
+            l2_ways: 8,
+            l3_bytes: 8 * 1024 * 1024,
+            l3_ways: 16,
+            hw_prefetch: true,
+            perfect_l2: false,
+            perfect_llc: false,
+        }
+    }
+}
+
+/// A DRAM-bound request produced by the hierarchy (demand miss fill,
+/// prefetch fill, or dirty writeback).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DramRequest {
+    pub line_addr: u64,
+    pub is_write: bool,
+    pub is_prefetch: bool,
+}
+
+/// Three-level inclusive hierarchy with integrated prefetchers.
+pub struct Hierarchy {
+    pub l1: Cache,
+    pub l2: Cache,
+    pub l3: Cache,
+    streamer: StreamPrefetcher,
+    hw_prefetch: bool,
+    pf_scratch: Vec<u64>,
+    pub pf_stats: PrefetchStats,
+}
+
+impl Hierarchy {
+    pub fn new(cfg: &HierarchyConfig) -> Self {
+        let mut l2 = Cache::new(cfg.l2_bytes, cfg.l2_ways);
+        l2.perfect = cfg.perfect_l2;
+        let mut l3 = Cache::new(cfg.l3_bytes, cfg.l3_ways);
+        l3.perfect = cfg.perfect_llc;
+        Self {
+            l1: Cache::new(cfg.l1_bytes, cfg.l1_ways),
+            l2,
+            l3,
+            streamer: StreamPrefetcher::default_config(),
+            hw_prefetch: cfg.hw_prefetch,
+            pf_scratch: Vec::with_capacity(8),
+            pf_stats: PrefetchStats::default(),
+        }
+    }
+
+    /// Process a demand access of `size` bytes at `addr`. Each touched
+    /// cache line is looked up through the hierarchy; DRAM-reaching
+    /// traffic is appended to `dram`. Returns the *slowest* level that
+    /// served any of the lines (that is what a dependent consumer waits
+    /// for) and the number of lines that reached DRAM.
+    pub fn access(
+        &mut self,
+        addr: u64,
+        size: u32,
+        store: bool,
+        dram: &mut Vec<DramRequest>,
+    ) -> (Level, u32) {
+        let first = line_of(addr);
+        let last = line_of(addr + size.max(1) as u64 - 1);
+        let mut worst = Level::L1;
+        let mut dram_lines = 0;
+        for line in first..=last {
+            let lvl = self.access_line(line, store, dram);
+            if lvl > worst {
+                worst = lvl;
+            }
+            if lvl == Level::Dram {
+                dram_lines += 1;
+            }
+        }
+        (worst, dram_lines)
+    }
+
+    fn access_line(&mut self, line: u64, store: bool, dram: &mut Vec<DramRequest>) -> Level {
+        // L1
+        let (hit1, _, _) = self.l1.demand_probe(line, store);
+        if hit1 {
+            return Level::L1;
+        }
+        // L2
+        let (hit2, was_hw, was_sw) = self.l2.demand_probe(line, store);
+        if was_hw {
+            self.pf_stats.hw_useful += 1;
+        }
+        if was_sw {
+            self.pf_stats.sw_useful += 1;
+        }
+        if hit2 {
+            self.fill_l1(line, store, dram);
+            self.train_streamer(line, dram);
+            return Level::L2;
+        }
+        // L3
+        let (hit3, was_hw3, was_sw3) = self.l3.demand_probe(line, store);
+        if was_hw3 {
+            self.pf_stats.hw_useful += 1;
+        }
+        if was_sw3 {
+            self.pf_stats.sw_useful += 1;
+        }
+        let served = if hit3 {
+            Level::L3
+        } else {
+            dram.push(DramRequest { line_addr: line * LINE_SIZE, is_write: false, is_prefetch: false });
+            Level::Dram
+        };
+        // Fill path (inclusive): L3 (if missed), L2, L1.
+        if !hit3 {
+            self.fill_l3(line, dram);
+        }
+        self.fill_l2(line, store, false, false, dram);
+        self.fill_l1(line, store, dram);
+        // Prefetchers train on L2 misses.
+        if self.hw_prefetch {
+            // adjacent-line
+            let buddy = line_of(AdjacentLinePrefetcher::buddy(line * LINE_SIZE));
+            self.issue_hw_prefetch(buddy, dram);
+            self.train_streamer(line, dram);
+        }
+        served
+    }
+
+    fn train_streamer(&mut self, line: u64, dram: &mut Vec<DramRequest>) {
+        if !self.hw_prefetch {
+            return;
+        }
+        self.pf_scratch.clear();
+        let mut scratch = std::mem::take(&mut self.pf_scratch);
+        self.streamer.observe(line * LINE_SIZE, &mut scratch);
+        for i in 0..scratch.len() {
+            self.issue_hw_prefetch(line_of(scratch[i]), dram);
+        }
+        scratch.clear();
+        self.pf_scratch = scratch;
+    }
+
+    fn issue_hw_prefetch(&mut self, line: u64, dram: &mut Vec<DramRequest>) {
+        if self.l2.contains(line) || self.l1.contains(line) {
+            return; // already resident — filtered, not "issued"
+        }
+        self.pf_stats.hw_issued += 1;
+        // data comes from L3 or DRAM
+        if !self.l3.contains(line) {
+            dram.push(DramRequest { line_addr: line * LINE_SIZE, is_write: false, is_prefetch: true });
+            self.fill_l3(line, dram);
+        }
+        self.fill_l2(line, false, true, false, dram);
+    }
+
+    /// Software prefetch into L2 (the paper targets L2; Section V-C).
+    pub fn sw_prefetch(&mut self, addr: u64, dram: &mut Vec<DramRequest>) {
+        let line = line_of(addr);
+        if self.l1.contains(line) || self.l2.contains(line) {
+            return;
+        }
+        self.pf_stats.sw_issued += 1;
+        if !self.l3.contains(line) {
+            dram.push(DramRequest { line_addr: line * LINE_SIZE, is_write: false, is_prefetch: true });
+            self.fill_l3(line, dram);
+        }
+        self.fill_l2(line, false, false, true, dram);
+    }
+
+    fn fill_l1(&mut self, line: u64, store: bool, dram: &mut Vec<DramRequest>) {
+        if let Some(ev) = self.l1.fill(line, store, false, false) {
+            if ev.dirty {
+                // write back into L2
+                self.l2.fill(ev.line, true, false, false).map(|e2| self.handle_l2_evict(e2, dram));
+            }
+        }
+    }
+
+    fn fill_l2(&mut self, line: u64, store: bool, hw: bool, sw: bool, dram: &mut Vec<DramRequest>) {
+        if let Some(ev) = self.l2.fill(line, store, hw, sw) {
+            self.handle_l2_evict(ev, dram);
+        }
+    }
+
+    fn handle_l2_evict(&mut self, ev: Evicted, dram: &mut Vec<DramRequest>) {
+        if ev.untouched_hw_pf {
+            self.pf_stats.hw_useless += 1;
+        }
+        if ev.untouched_sw_pf {
+            self.pf_stats.sw_useless += 1;
+        }
+        if ev.dirty {
+            // write back into L3 (already inclusive, so it's present)
+            self.l3.fill(ev.line, true, false, false).map(|e3| {
+                if e3.dirty {
+                    dram.push(DramRequest {
+                        line_addr: e3.line * LINE_SIZE,
+                        is_write: true,
+                        is_prefetch: false,
+                    });
+                }
+                self.back_invalidate(e3.line);
+            });
+        }
+    }
+
+    fn fill_l3(&mut self, line: u64, dram: &mut Vec<DramRequest>) {
+        if let Some(ev) = self.l3.fill(line, false, false, false) {
+            if ev.dirty {
+                dram.push(DramRequest {
+                    line_addr: ev.line * LINE_SIZE,
+                    is_write: true,
+                    is_prefetch: false,
+                });
+            }
+            // inclusive hierarchy: evicting from L3 invalidates below
+            self.back_invalidate(ev.line);
+        }
+    }
+
+    fn back_invalidate(&mut self, line: u64) {
+        self.l1.invalidate(line);
+        self.l2.invalidate(line);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_hierarchy() -> Hierarchy {
+        Hierarchy::new(&HierarchyConfig {
+            l1_bytes: 1024,
+            l1_ways: 2,
+            l2_bytes: 4096,
+            l2_ways: 4,
+            l3_bytes: 16384,
+            l3_ways: 4,
+            hw_prefetch: false,
+            perfect_l2: false,
+            perfect_llc: false,
+        })
+    }
+
+    #[test]
+    fn first_touch_misses_everywhere_then_hits_l1() {
+        let mut h = small_hierarchy();
+        let mut dram = Vec::new();
+        let (lvl, n) = h.access(0x10000, 8, false, &mut dram);
+        assert_eq!(lvl, Level::Dram);
+        assert_eq!(n, 1);
+        assert_eq!(dram.len(), 1);
+        let (lvl2, _) = h.access(0x10000, 8, false, &mut dram);
+        assert_eq!(lvl2, Level::L1);
+        assert_eq!(dram.len(), 1, "no extra dram traffic on a hit");
+    }
+
+    #[test]
+    fn multi_line_access_touches_each_line() {
+        let mut h = small_hierarchy();
+        let mut dram = Vec::new();
+        // 160-byte row starting at a line boundary spans 3 lines
+        let (lvl, n) = h.access(0x20000, 160, false, &mut dram);
+        assert_eq!(lvl, Level::Dram);
+        assert_eq!(n, 3);
+        assert_eq!(h.l1.stats.accesses, 3);
+    }
+
+    #[test]
+    fn lru_eviction_in_l1_still_hits_l2() {
+        let mut h = small_hierarchy();
+        let mut dram = Vec::new();
+        // L1 = 1KB/2-way/64B = 8 sets; fill one set (2 ways) then a third
+        // conflicting line evicts the first.
+        let set_stride = 8 * 64; // lines mapping to same set
+        for k in 0..3u64 {
+            h.access(0x40000 + k * set_stride, 8, false, &mut dram);
+        }
+        // line 0 evicted from L1, but resident in L2
+        let (lvl, _) = h.access(0x40000, 8, false, &mut dram);
+        assert_eq!(lvl, Level::L2);
+    }
+
+    #[test]
+    fn perfect_llc_never_reaches_dram() {
+        let mut cfg = HierarchyConfig { hw_prefetch: false, ..Default::default() };
+        cfg.perfect_llc = true;
+        let mut h = Hierarchy::new(&cfg);
+        let mut dram = Vec::new();
+        let mut rng = crate::util::Pcg64::new(4);
+        for _ in 0..10_000 {
+            let addr = rng.below(1 << 30);
+            let (lvl, _) = h.access(addr, 8, false, &mut dram);
+            assert!(lvl <= Level::L3);
+        }
+        assert!(dram.is_empty());
+    }
+
+    #[test]
+    fn perfect_l2_hits_at_l2() {
+        let cfg = HierarchyConfig {
+            hw_prefetch: false,
+            perfect_l2: true,
+            ..Default::default()
+        };
+        let mut h = Hierarchy::new(&cfg);
+        let mut dram = Vec::new();
+        let (lvl, _) = h.access(0x123456, 8, false, &mut dram);
+        assert_eq!(lvl, Level::L2);
+    }
+
+    #[test]
+    fn dirty_eviction_writes_back() {
+        let mut h = small_hierarchy();
+        let mut dram = Vec::new();
+        // store to many distinct lines to force L3 evictions of dirty data
+        for k in 0..2000u64 {
+            h.access(k * 64, 8, true, &mut dram);
+        }
+        assert!(
+            dram.iter().any(|r| r.is_write),
+            "expected dirty writebacks to DRAM"
+        );
+    }
+
+    #[test]
+    fn sw_prefetch_turns_miss_into_l2_hit() {
+        let mut h = small_hierarchy();
+        let mut dram = Vec::new();
+        h.sw_prefetch(0x80000, &mut dram);
+        assert_eq!(h.pf_stats.sw_issued, 1);
+        let (lvl, _) = h.access(0x80000, 8, false, &mut dram);
+        assert_eq!(lvl, Level::L2);
+        assert_eq!(h.pf_stats.sw_useful, 1);
+    }
+
+    #[test]
+    fn sw_prefetch_of_resident_line_is_filtered() {
+        let mut h = small_hierarchy();
+        let mut dram = Vec::new();
+        h.access(0x90000, 8, false, &mut dram);
+        h.sw_prefetch(0x90000, &mut dram);
+        assert_eq!(h.pf_stats.sw_issued, 0);
+    }
+
+    #[test]
+    fn hw_prefetch_useful_on_streaming() {
+        let cfg = HierarchyConfig::default();
+        let mut h = Hierarchy::new(&cfg);
+        let mut dram = Vec::new();
+        for line in 0..4000u64 {
+            h.access(line * 64, 8, false, &mut dram);
+        }
+        assert!(h.pf_stats.hw_issued > 100);
+        let f = h.pf_stats.hw_useless_fraction();
+        assert!(f < 0.2, "streaming should make prefetches useful: {f}");
+        // and the L2 miss ratio should be well below 1.0
+        assert!(h.l2.stats.miss_ratio() < 0.7);
+    }
+
+    #[test]
+    fn hw_prefetch_useless_on_random() {
+        let cfg = HierarchyConfig::default();
+        let mut h = Hierarchy::new(&cfg);
+        let mut dram = Vec::new();
+        let mut rng = crate::util::Pcg64::new(5);
+        for _ in 0..200_000 {
+            // random 8-byte reads over 1 GiB
+            let addr = rng.below(1 << 30) & !7;
+            h.access(addr, 8, false, &mut dram);
+        }
+        let f = h.pf_stats.hw_useless_fraction();
+        assert!(f > 0.3, "random stream should waste prefetches: {f}");
+    }
+
+    #[test]
+    fn inclusive_l3_eviction_invalidates_l1() {
+        let mut h = small_hierarchy();
+        let mut dram = Vec::new();
+        h.access(0x0, 8, false, &mut dram);
+        // thrash L3 (16KB/4-way/64B = 64 sets): fill set 0's ways
+        for k in 1..=4u64 {
+            h.access(k * 64 * 64 * 4, 8, false, &mut dram); // wait: map to set 0 of l3
+        }
+        // construct lines that alias L3 set of 0x0: set = line % 64
+        let mut victims = 0;
+        for k in 1..=8u64 {
+            let addr = k * 64 * 64; // line multiple of 64 -> set 0
+            h.access(addr, 8, false, &mut dram);
+            victims += 1;
+        }
+        assert!(victims > 4);
+        // 0x0 must have been back-invalidated from L1 at some point;
+        // accessing it again must not be an L1 hit-after-L3-eviction bug.
+        let before_misses = h.l1.stats.misses;
+        h.access(0x0, 8, false, &mut dram);
+        assert!(h.l1.stats.misses > before_misses, "stale L1 line survived L3 eviction");
+    }
+
+    #[test]
+    fn cache_stats_miss_ratio() {
+        let mut c = Cache::new(1024, 2);
+        assert_eq!(c.stats.miss_ratio(), 0.0);
+        c.demand_probe(1, false);
+        c.fill(1, false, false, false);
+        c.demand_probe(1, false);
+        assert_eq!(c.stats.accesses, 2);
+        assert_eq!(c.stats.misses, 1);
+        assert_eq!(c.stats.miss_ratio(), 0.5);
+    }
+}

@@ -1,0 +1,594 @@
+//! Top-down pipeline-slot model.
+//!
+//! Substitutes for VTune/perf top-down analysis on real silicon: consumes
+//! a workload's event trace and produces the metrics the paper reports —
+//! CPI, retiring ratio, bad-speculation bound, DRAM/cache bound, core
+//! bound, port-utilization distribution (Figs. 1–10, Tables III/IV).
+//!
+//! The model is an *interval* model in the spirit of Sniper [CHE11]: the
+//! core issues `width` uops per cycle until a miss event opens an
+//! interval. Long-latency loads overlap within a ROB/MSHR window
+//! (memory-level parallelism); mispredicted branches flush the pipeline,
+//! and branches fed by in-flight loads resolve only when the load returns
+//! — reproducing the paper's observation that prefetching also shrinks
+//! the bad-speculation bound (Figs. 16/22).
+
+use super::branch::{BranchStats, Gshare};
+use super::cache::{DramRequest, Hierarchy, HierarchyConfig, Level};
+use super::dram::{Dram, DramConfig, DramStats};
+use super::prefetch::PrefetchStats;
+use crate::trace::{Event, InstructionMix, Sink};
+
+/// Core configuration (defaults model the paper's "aggressive 5-way
+/// superscalar" client core at 2.9 GHz).
+#[derive(Debug, Clone)]
+pub struct CpuConfig {
+    pub width: f64,
+    pub freq_ghz: f64,
+    /// Pipeline-refill penalty of a mispredicted branch, cycles.
+    pub mispredict_penalty: f64,
+    pub rob_uops: f64,
+    pub mshrs: usize,
+    pub fp_ports: f64,
+    pub int_ports: f64,
+    pub mem_ports: f64,
+    pub cache: HierarchyConfig,
+    pub dram: DramConfig,
+}
+
+impl Default for CpuConfig {
+    fn default() -> Self {
+        Self {
+            width: 5.0,
+            freq_ghz: 2.9,
+            mispredict_penalty: 15.0,
+            rob_uops: 256.0,
+            mshrs: 10,
+            fp_ports: 2.0,
+            int_ports: 4.0,
+            mem_ports: 2.0,
+            cache: HierarchyConfig::default(),
+            dram: DramConfig::default(),
+        }
+    }
+}
+
+/// Outstanding long-latency load.
+#[derive(Debug, Clone, Copy)]
+struct Outstanding {
+    completion_cycle: f64,
+    issue_uop: f64,
+    level: Level,
+}
+
+/// Full metric set for one characterized run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub instructions: u64,
+    pub cycles: f64,
+    pub cpi: f64,
+    pub ipc: f64,
+    /// Top-down pipeline-slot fractions, percent.
+    pub retiring_pct: f64,
+    pub bad_spec_pct: f64,
+    pub core_bound_pct: f64,
+    pub mem_bound_pct: f64,
+    pub dram_bound_pct: f64,
+    pub l2_bound_pct: f64,
+    pub l3_bound_pct: f64,
+    /// Branch behaviour (Figs. 3–6).
+    pub branch_mispredict_ratio: f64,
+    pub branch_fraction: f64,
+    pub cond_branch_fraction: f64,
+    /// Cache behaviour (Figs. 8, 14).
+    pub l1_miss_ratio: f64,
+    pub l2_miss_ratio: f64,
+    pub llc_miss_ratio: f64,
+    /// Port-utilization distribution: fraction of cycles executing
+    /// 0 / 1 / 2 / 3+ uops (Figs. 10, 17).
+    pub port_dist: [f64; 4],
+    pub mix: InstructionMix,
+    pub branch: BranchStats,
+    pub dram: DramStats,
+    pub prefetch: PrefetchStats,
+    /// Simulated wall time of the region, ns.
+    pub sim_time_ns: f64,
+}
+
+impl Metrics {
+    /// Fraction of cycles executing 2+ uops (Fig. 17's headline number).
+    pub fn two_plus_uops_fraction(&self) -> f64 {
+        self.port_dist[2] + self.port_dist[3]
+    }
+
+    /// Speedup of `self` relative to `baseline` (>1 means faster).
+    pub fn speedup_vs(&self, baseline: &Metrics) -> f64 {
+        if self.cycles == 0.0 {
+            return 1.0;
+        }
+        baseline.cycles / self.cycles
+    }
+
+    /// DRAM bandwidth utilization percent (Fig. 9).
+    pub fn bandwidth_utilization_pct(&self) -> f64 {
+        self.dram.bandwidth_utilization() * 100.0
+    }
+}
+
+/// The trace-driven pipeline simulator. Implements [`Sink`]; feed it a
+/// workload trace, call `finish()`, then read [`PipelineSim::metrics`].
+pub struct PipelineSim {
+    cfg: CpuConfig,
+    pub hierarchy: Hierarchy,
+    pub dram: Dram,
+    predictor: Gshare,
+    mix: InstructionMix,
+    branch_stats: BranchStats,
+    // timeline state
+    uops: f64,
+    cycle: f64,
+    outstanding: Vec<Outstanding>,
+    dram_scratch: Vec<DramRequest>,
+    // stall accumulators (cycles)
+    bad_spec_cycles: f64,
+    l2_stall: f64,
+    l3_stall: f64,
+    dram_stall: f64,
+    // last load that feeds a branch: its completion cycle
+    feeding_load_completion: f64,
+    feeding_load_level: Level,
+    finished: bool,
+}
+
+impl PipelineSim {
+    pub fn new(cfg: CpuConfig) -> Self {
+        Self {
+            hierarchy: Hierarchy::new(&cfg.cache),
+            dram: Dram::new(cfg.dram.clone()),
+            predictor: Gshare::default_config(),
+            mix: InstructionMix::default(),
+            branch_stats: BranchStats::default(),
+            uops: 0.0,
+            cycle: 0.0,
+            outstanding: Vec::with_capacity(cfg.mshrs + 1),
+            dram_scratch: Vec::with_capacity(16),
+            bad_spec_cycles: 0.0,
+            l2_stall: 0.0,
+            l3_stall: 0.0,
+            dram_stall: 0.0,
+            feeding_load_completion: 0.0,
+            feeding_load_level: Level::L1,
+            cfg,
+            finished: false,
+        }
+    }
+
+    #[inline]
+    fn issue(&mut self, n: f64) {
+        self.uops += n;
+        self.cycle += n / self.cfg.width;
+    }
+
+    /// Retire outstanding loads whose completion has passed; enforce the
+    /// ROB and MSHR limits, attributing stall cycles to the blocking
+    /// load's serving level.
+    fn drain_window(&mut self, need_mshr: bool) {
+        // §Perf: called once per event — skip all bookkeeping when no
+        // loads are in flight (the common cache-resident case)
+        if self.outstanding.is_empty() {
+            return;
+        }
+        self.outstanding.retain(|o| o.completion_cycle > self.cycle);
+        let rob_limit = |o: &Outstanding, uops: f64, rob: f64| uops - o.issue_uop > rob;
+        loop {
+            // find oldest outstanding
+            let oldest = self
+                .outstanding
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.completion_cycle.partial_cmp(&b.1.completion_cycle).unwrap())
+                .map(|(i, o)| (i, *o));
+            let Some((idx, o)) = oldest else { return };
+            let mshr_block = need_mshr && self.outstanding.len() >= self.cfg.mshrs;
+            let rob_block = rob_limit(&o, self.uops, self.cfg.rob_uops);
+            if !mshr_block && !rob_block {
+                return;
+            }
+            // stall until the oldest load completes
+            let stall = (o.completion_cycle - self.cycle).max(0.0);
+            match o.level {
+                Level::L2 => self.l2_stall += stall,
+                Level::L3 => self.l3_stall += stall,
+                Level::Dram => self.dram_stall += stall,
+                Level::L1 => {}
+            }
+            self.cycle += stall;
+            self.outstanding.swap_remove(idx);
+            self.outstanding.retain(|q| q.completion_cycle > self.cycle);
+        }
+    }
+
+    /// Route DRAM-reaching cache traffic through the DRAM timing model,
+    /// returning the latency (cycles) of the *demand* request if present.
+    fn run_dram_traffic(&mut self) -> Option<f64> {
+        let mut demand_cycles = None;
+        let now_ns = self.cycle / self.cfg.freq_ghz;
+        // take ownership to satisfy the borrow checker
+        let mut reqs = std::mem::take(&mut self.dram_scratch);
+        for r in reqs.drain(..) {
+            let lat_ns = self.dram.request(now_ns, r.line_addr, r.is_write, r.is_prefetch);
+            if !r.is_prefetch && !r.is_write {
+                demand_cycles = Some(lat_ns * self.cfg.freq_ghz);
+            }
+        }
+        self.dram_scratch = reqs;
+        demand_cycles
+    }
+
+    fn memory_access(&mut self, addr: u64, size: u32, store: bool, feeds_branch: bool) {
+        let lines = crate::trace::line_of(addr + size.max(1) as u64 - 1)
+            - crate::trace::line_of(addr)
+            + 1;
+        // one mem uop per touched line (vectorized row reads decompose
+        // into per-line accesses in hardware too)
+        self.issue(lines as f64);
+        let (level, _) = self
+            .hierarchy
+            .access(addr, size, store, &mut self.dram_scratch);
+        let dram_lat = self.run_dram_traffic();
+        if store {
+            // stores retire through the store buffer; no consumer stalls
+            return;
+        }
+        let latency = match level {
+            Level::Dram => dram_lat.unwrap_or(Level::Dram.latency_cycles()),
+            l => l.latency_cycles(),
+        };
+        if level != Level::L1 {
+            self.drain_window(true);
+            let completion = self.cycle + latency;
+            self.outstanding.push(Outstanding {
+                completion_cycle: completion,
+                issue_uop: self.uops,
+                level,
+            });
+            if feeds_branch {
+                self.feeding_load_completion = completion;
+                self.feeding_load_level = level;
+            }
+        } else if feeds_branch {
+            self.feeding_load_completion = self.cycle + Level::L1.latency_cycles();
+            self.feeding_load_level = Level::L1;
+        }
+        // ROB pressure from earlier loads
+        self.drain_window(false);
+    }
+
+    fn branch_event(&mut self, site: u32, taken: bool, conditional: bool) {
+        self.issue(1.0);
+        if !conditional {
+            self.branch_stats.unconditional += 1;
+            return;
+        }
+        self.branch_stats.conditional += 1;
+        let correct = self.predictor.predict_update(site, taken);
+        if !correct {
+            self.branch_stats.mispredicts += 1;
+            // The flush cannot happen before the branch *resolves*; if the
+            // branch consumed an in-flight load, resolution waits for it.
+            // Only part of that wait is wrong-path waste: the load was
+            // issued ahead of the branch and overlaps older useful work,
+            // so charge a capped, overlap-discounted share (the remainder
+            // is already accounted as memory stall by the load itself).
+            let resolve_at = self.feeding_load_completion.max(self.cycle);
+            let wait = (resolve_at - self.cycle).min(80.0) * 0.35;
+            let penalty = wait + self.cfg.mispredict_penalty;
+            self.bad_spec_cycles += penalty;
+            self.cycle += penalty;
+        }
+        // consumed
+        self.feeding_load_completion = 0.0;
+    }
+
+    /// Produce the metric set. Idempotent after `finish()`.
+    pub fn metrics(&self) -> Metrics {
+        assert!(self.finished, "call finish() before metrics()");
+        let base_cycles = self.uops / self.cfg.width;
+        // port-pressure core-bound component
+        let fp_cycles = self.mix.fp_ops as f64 / self.cfg.fp_ports;
+        let int_cycles = self.mix.int_ops as f64 / self.cfg.int_ports;
+        let mem_uops = (self.mix.loads + self.mix.stores) as f64;
+        let mem_cycles = mem_uops / self.cfg.mem_ports;
+        let port_limit = fp_cycles.max(int_cycles).max(mem_cycles);
+        let core_bound = (port_limit - base_cycles).max(0.0);
+        let total = self.cycle + core_bound;
+
+        let mem_stall = self.l2_stall + self.l3_stall + self.dram_stall;
+        let instructions = self.mix.instructions();
+        let pct = |x: f64| 100.0 * x / total.max(1e-9);
+
+        // Port-utilization distribution: stall cycles execute 0 uops;
+        // core-bound cycles trickle 1 uop; the remaining busy cycles
+        // split 2 vs 3+ by how far average busy-IPC exceeds 2.
+        let stall = (self.bad_spec_cycles + mem_stall).min(total);
+        let busy = (total - stall - core_bound).max(0.0);
+        let busy_ipc = if busy > 0.0 { self.uops / busy } else { 0.0 };
+        let (p2, p3) = if busy_ipc >= 3.0 {
+            (0.25, 0.75)
+        } else if busy_ipc >= 2.0 {
+            let t = busy_ipc - 2.0;
+            (1.0 - t * 0.75, t * 0.75)
+        } else {
+            (busy_ipc / 2.0, 0.0)
+        };
+        let port_dist = [
+            stall / total,
+            core_bound / total + busy / total * (1.0 - p2 - p3).max(0.0),
+            busy / total * p2,
+            busy / total * p3,
+        ];
+
+        Metrics {
+            instructions,
+            cycles: total,
+            cpi: total / instructions.max(1) as f64,
+            ipc: instructions as f64 / total.max(1e-9),
+            retiring_pct: pct(base_cycles),
+            bad_spec_pct: pct(self.bad_spec_cycles),
+            core_bound_pct: pct(core_bound),
+            mem_bound_pct: pct(mem_stall),
+            dram_bound_pct: pct(self.dram_stall),
+            l2_bound_pct: pct(self.l2_stall),
+            l3_bound_pct: pct(self.l3_stall),
+            branch_mispredict_ratio: self.branch_stats.mispredict_ratio(),
+            branch_fraction: self.mix.branch_fraction(),
+            cond_branch_fraction: self.mix.conditional_branch_fraction(),
+            l1_miss_ratio: self.hierarchy.l1.stats.miss_ratio(),
+            l2_miss_ratio: self.hierarchy.l2.stats.miss_ratio(),
+            llc_miss_ratio: self.hierarchy.l3.stats.miss_ratio(),
+            port_dist,
+            mix: self.mix.clone(),
+            branch: self.branch_stats,
+            dram: self.dram.stats.clone(),
+            prefetch: self.hierarchy.pf_stats,
+            sim_time_ns: total / self.cfg.freq_ghz,
+        }
+    }
+}
+
+impl Sink for PipelineSim {
+    fn event(&mut self, ev: Event) {
+        self.mix.event(ev);
+        match ev {
+            Event::Compute { int_ops, fp_ops } => {
+                self.issue((int_ops + fp_ops) as f64);
+                self.drain_window(false);
+            }
+            Event::Serial { ops } => {
+                // dependency chain: 1 uop issued, ALU latency exposed
+                self.uops += ops as f64;
+                self.cycle += ops as f64 * 1.5;
+                self.drain_window(false);
+            }
+            Event::Load { addr, size, feeds_branch } => {
+                self.memory_access(addr, size, false, feeds_branch);
+            }
+            Event::Store { addr, size } => {
+                self.memory_access(addr, size, true, false);
+            }
+            Event::Branch { site, taken, conditional } => {
+                self.branch_event(site, taken, conditional);
+            }
+            Event::LoopBranch { count, .. } => {
+                // count-1 taken back-edges + 1 fall-through. A gshare
+                // predictor learns the exit only when the whole trip fits
+                // in its history register; longer trips mispredict the
+                // exit once per loop instance.
+                self.issue(count as f64);
+                self.branch_stats.conditional += count as u64;
+                if count as u64 > 14 {
+                    self.branch_stats.mispredicts += 1;
+                    self.bad_spec_cycles += self.cfg.mispredict_penalty;
+                    self.cycle += self.cfg.mispredict_penalty;
+                }
+            }
+            Event::SwPrefetch { addr } => {
+                // a prefetch instruction occupies one issue slot but never
+                // blocks retirement
+                self.issue(1.0);
+                self.hierarchy.sw_prefetch(addr, &mut self.dram_scratch);
+                self.run_dram_traffic();
+            }
+        }
+    }
+
+    fn finish(&mut self) {
+        // drain every outstanding load
+        let remaining: Vec<Outstanding> = self.outstanding.drain(..).collect();
+        for o in remaining {
+            let stall = (o.completion_cycle - self.cycle).max(0.0);
+            // tail stalls attributed the same way
+            match o.level {
+                Level::L2 => self.l2_stall += stall * 0.0, // tail overlap: free
+                Level::L3 => self.l3_stall += stall * 0.0,
+                Level::Dram => self.dram_stall += stall * 0.0,
+                Level::L1 => {}
+            }
+        }
+        self.finished = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::Recorder;
+
+    fn sim() -> PipelineSim {
+        PipelineSim::new(CpuConfig::default())
+    }
+
+    /// Pure compute: retiring should dominate, CPI near 1/width.
+    #[test]
+    fn compute_only_is_retiring_bound() {
+        let mut s = sim();
+        // balanced int/fp mix that stays inside port limits at width 5
+        for _ in 0..10_000 {
+            s.event(Event::Compute { int_ops: 2, fp_ops: 1 });
+        }
+        s.finish();
+        let m = s.metrics();
+        assert!(m.retiring_pct > 90.0, "retiring {}", m.retiring_pct);
+        assert!(m.cpi < 0.3, "cpi {}", m.cpi);
+        assert!(m.bad_spec_pct < 1.0);
+    }
+
+    /// FP-saturating compute: core bound appears.
+    #[test]
+    fn fp_pressure_is_core_bound() {
+        let mut s = sim();
+        for _ in 0..10_000 {
+            s.event(Event::Compute { int_ops: 0, fp_ops: 5 });
+        }
+        s.finish();
+        let m = s.metrics();
+        assert!(m.core_bound_pct > 20.0, "core {}", m.core_bound_pct);
+    }
+
+    /// Random far-apart loads: DRAM bound dominates, CPI high.
+    #[test]
+    fn pointer_chase_is_dram_bound() {
+        let mut s = sim();
+        let mut rng = crate::util::Pcg64::new(9);
+        for _ in 0..30_000 {
+            let addr = rng.below(1 << 31) & !7;
+            s.event(Event::Load { addr, size: 8, feeds_branch: false });
+            s.event(Event::Compute { int_ops: 2, fp_ops: 1 });
+        }
+        s.finish();
+        let m = s.metrics();
+        assert!(m.dram_bound_pct > 20.0, "dram {}", m.dram_bound_pct);
+        assert!(m.cpi > 0.5, "cpi {}", m.cpi);
+        assert!(m.llc_miss_ratio > 0.5, "llc {}", m.llc_miss_ratio);
+    }
+
+    /// Sequential streaming: HW prefetcher keeps DRAM-bound modest and CPI low.
+    #[test]
+    fn streaming_benefits_from_hw_prefetch() {
+        let mut on = sim();
+        let mut cfg_off = CpuConfig::default();
+        cfg_off.cache.hw_prefetch = false;
+        let mut off = PipelineSim::new(cfg_off);
+        for k in 0..50_000u64 {
+            let ev = Event::Load { addr: k * 8, size: 8, feeds_branch: false };
+            on.event(ev);
+            on.event(Event::Compute { int_ops: 1, fp_ops: 2 });
+            off.event(ev);
+            off.event(Event::Compute { int_ops: 1, fp_ops: 2 });
+        }
+        on.finish();
+        off.finish();
+        let m_on = on.metrics();
+        let m_off = off.metrics();
+        assert!(
+            m_on.cycles < m_off.cycles,
+            "prefetcher must help streaming: {} vs {}",
+            m_on.cycles,
+            m_off.cycles
+        );
+    }
+
+    /// Random branches inflate bad speculation; biased ones do not.
+    #[test]
+    fn random_branches_bad_spec() {
+        let mut s = sim();
+        let mut rng = crate::util::Pcg64::new(10);
+        for _ in 0..20_000 {
+            s.event(Event::Compute { int_ops: 3, fp_ops: 0 });
+            s.event(Event::Branch { site: 5, taken: rng.next_f64() < 0.5, conditional: true });
+        }
+        s.finish();
+        let m = s.metrics();
+        assert!(m.bad_spec_pct > 15.0, "bad spec {}", m.bad_spec_pct);
+        assert!(m.branch_mispredict_ratio > 0.35);
+    }
+
+    /// A branch fed by a DRAM-missing load costs more than one fed from L1,
+    /// and software prefetching that load reduces bad-spec — the Fig. 16/22
+    /// mechanism.
+    #[test]
+    fn load_fed_branches_resolve_faster_with_prefetch() {
+        let mut rng = crate::util::Pcg64::new(11);
+        let addrs: Vec<u64> = (0..20_000).map(|_| rng.below(1 << 31) & !63).collect();
+        let outcomes: Vec<bool> = (0..20_000).map(|_| rng.next_f64() < 0.5).collect();
+
+        let run = |prefetch: bool| {
+            let mut s = sim();
+            for i in 0..addrs.len() {
+                if prefetch && i + 8 < addrs.len() {
+                    s.event(Event::SwPrefetch { addr: addrs[i + 8] });
+                }
+                s.event(Event::Load { addr: addrs[i], size: 8, feeds_branch: true });
+                s.event(Event::Branch { site: 3, taken: outcomes[i], conditional: true });
+                s.event(Event::Compute { int_ops: 4, fp_ops: 2 });
+            }
+            s.finish();
+            s.metrics()
+        };
+        let base = run(false);
+        let pf = run(true);
+        // absolute wrong-path cycles shrink (branches resolve from L2
+        // instead of DRAM); the *fraction* can move either way because
+        // the total also shrinks
+        let base_bs = base.bad_spec_pct / 100.0 * base.cycles;
+        let pf_bs = pf.bad_spec_pct / 100.0 * pf.cycles;
+        assert!(
+            pf_bs < base_bs,
+            "prefetch should shrink bad-spec cycles: {base_bs:.0} -> {pf_bs:.0}"
+        );
+        assert!(pf.cycles < base.cycles, "and run faster overall");
+    }
+
+    #[test]
+    fn topdown_fractions_sum_below_100() {
+        let mut s = sim();
+        let mut rng = crate::util::Pcg64::new(12);
+        for _ in 0..5000 {
+            s.event(Event::Load { addr: rng.below(1 << 28), size: 8, feeds_branch: false });
+            s.event(Event::Branch { site: 1, taken: rng.next_f64() < 0.3, conditional: true });
+            s.event(Event::Compute { int_ops: 2, fp_ops: 1 });
+        }
+        s.finish();
+        let m = s.metrics();
+        let sum = m.retiring_pct + m.bad_spec_pct + m.core_bound_pct + m.mem_bound_pct;
+        assert!(sum <= 101.0, "top-down sum {sum}");
+        assert!(sum >= 60.0, "unaccounted slots: {sum}");
+        let pd_sum: f64 = m.port_dist.iter().sum();
+        assert!((pd_sum - 1.0).abs() < 1e-6, "port dist sums to {pd_sum}");
+    }
+
+    #[test]
+    fn recorder_integration_smoke() {
+        let mut s = sim();
+        {
+            let mut r = Recorder::new(&mut s, 1);
+            for i in 0..1000usize {
+                r.load(i as u64 * 8, 8);
+                r.compute(1, 2);
+                r.cmp_branch(1, i % 7 == 0);
+            }
+            r.finish();
+        }
+        let m = s.metrics();
+        assert_eq!(m.mix.loads, 1000);
+        assert!(m.cycles > 0.0);
+        assert!(m.cpi > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finish")]
+    fn metrics_before_finish_panics() {
+        let s = sim();
+        let _ = s.metrics();
+    }
+}

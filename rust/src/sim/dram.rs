@@ -1,0 +1,473 @@
+//! DDR4 DRAM timing model — the Ramulator substitute for the paper's
+//! row-buffer studies (Table VI configuration; Table VII and Figs. 20–21
+//! experiments).
+//!
+//! Modelled: per-bank row buffers (open-page policy), activate/precharge/
+//! CAS timing, data-bus serialization, two address-mapping schemes
+//! (RoBaRaCoCh and ChRaBaRoCo), row hit/miss/conflict classification, and
+//! an ideal-row-hit mode for the Table VII upper-bound column.
+//!
+//! Scheduling: requests are serviced in arrival order with per-bank timing
+//! (an in-order approximation of FR-FCFS-Cap — with a single in-order core
+//! stream the reorder window of FR-FCFS is rarely exercised, and the CAP
+//! fairness rule only binds under multi-stream interference; the knob is
+//! retained in the config and honoured by capping consecutive same-row
+//! service bursts). DESIGN.md documents this substitution.
+
+/// DRAM address mapping scheme (paper Section VI-A evaluates both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AddrMap {
+    /// Row–Bank–Rank–Column–Channel (paper's reported scheme): column bits
+    /// low → streaming accesses stay in an open row; adjacent rows map to
+    /// different banks.
+    RoBaRaCoCh,
+    /// Channel–Rank–Bank–Row–Column: row bits below bank bits → crossing a
+    /// row boundary stays in the same bank (precharge on stream).
+    ChRaBaRoCo,
+}
+
+/// DDR4 configuration (defaults = paper Table VI).
+#[derive(Debug, Clone)]
+pub struct DramConfig {
+    pub channels: u64,
+    pub ranks: u64,
+    pub banks: u64,
+    pub rows_per_bank: u64,
+    /// Row-buffer (DRAM page) size in bytes per bank.
+    pub row_bytes: u64,
+    pub addr_map: AddrMap,
+    /// FR-FCFS-Cap: max consecutive same-row bursts before forcing a turn.
+    pub cap: u32,
+    /// Treat every access as a row hit (Table VII "Ideal Hit-Ratio").
+    pub ideal_row_hits: bool,
+    // --- timing (ns); defaults model DDR4-2400 CL17 ---
+    pub t_rcd: f64,
+    pub t_cl: f64,
+    pub t_rp: f64,
+    pub t_bl: f64,
+    /// Constant controller + on-chip interconnect overhead added to every
+    /// request's latency (calibrated so absolute latencies land in the
+    /// paper's reported 68–94 ns band).
+    pub t_overhead: f64,
+}
+
+impl Default for DramConfig {
+    fn default() -> Self {
+        Self {
+            channels: 1,
+            ranks: 1,
+            banks: 16,
+            rows_per_bank: 32 * 1024,
+            row_bytes: 8 * 1024,
+            addr_map: AddrMap::RoBaRaCoCh,
+            cap: 4,
+            ideal_row_hits: false,
+            t_rcd: 14.16,
+            t_cl: 14.16,
+            t_rp: 14.16,
+            t_bl: 3.33,
+            t_overhead: 48.0,
+        }
+    }
+}
+
+/// Row-buffer outcome of one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RowOutcome {
+    /// Open row matches: CAS only.
+    Hit,
+    /// Bank idle (no open row): activate + CAS.
+    Miss,
+    /// Different row open: precharge + activate + CAS.
+    Conflict,
+}
+
+/// Aggregate DRAM statistics.
+#[derive(Debug, Default, Clone)]
+pub struct DramStats {
+    pub requests: u64,
+    pub reads: u64,
+    pub writes: u64,
+    pub prefetch_reads: u64,
+    pub row_hits: u64,
+    pub row_misses: u64,
+    pub row_conflicts: u64,
+    /// Row hits among demand (non-prefetch, non-write) reads only — what
+    /// the paper's `perf mem`-derived Ramulator traces measure.
+    pub demand_row_hits: u64,
+    pub total_latency_ns: f64,
+    pub demand_requests: u64,
+    pub demand_latency_ns: f64,
+    pub bus_busy_ns: f64,
+    pub last_completion_ns: f64,
+    pub first_arrival_ns: f64,
+}
+
+impl DramStats {
+    /// Row-buffer hit ratio of **demand reads** (Table VII col 2,
+    /// Fig. 20). The paper's Ramulator study replays `perf mem` traces,
+    /// which contain only demand misses; prefetcher fill traffic would
+    /// otherwise mask the irregular-access behaviour under study.
+    pub fn row_hit_ratio(&self) -> f64 {
+        if self.demand_requests == 0 {
+            0.0
+        } else {
+            self.demand_row_hits as f64 / self.demand_requests as f64
+        }
+    }
+
+    /// Hit ratio over all traffic (incl. prefetch + writeback).
+    pub fn row_hit_ratio_all(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.row_hits as f64 / self.requests as f64
+        }
+    }
+
+    /// Average access latency over all requests, ns (Table VII col 3,
+    /// Fig. 21).
+    pub fn avg_latency_ns(&self) -> f64 {
+        if self.requests == 0 {
+            0.0
+        } else {
+            self.total_latency_ns / self.requests as f64
+        }
+    }
+
+    /// Average latency of demand (non-prefetch) reads, ns.
+    pub fn avg_demand_latency_ns(&self) -> f64 {
+        if self.demand_requests == 0 {
+            0.0
+        } else {
+            self.demand_latency_ns / self.demand_requests as f64
+        }
+    }
+
+    /// Data-bus utilization over the span of the trace (Fig. 9).
+    pub fn bandwidth_utilization(&self) -> f64 {
+        let span = self.last_completion_ns - self.first_arrival_ns;
+        if span <= 0.0 {
+            0.0
+        } else {
+            (self.bus_busy_ns / span).min(1.0)
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Bank {
+    open_row: Option<u64>,
+    busy_until: f64,
+    consecutive_hits: u32,
+}
+
+/// The DRAM device + controller model.
+pub struct Dram {
+    cfg: DramConfig,
+    banks: Vec<Bank>,
+    bus_free_at: f64,
+    pub stats: DramStats,
+    col_bits: u32,
+    bank_bits: u32,
+    rank_bits: u32,
+    chan_bits: u32,
+}
+
+/// Decomposed DRAM coordinates of a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DramCoord {
+    pub channel: u64,
+    pub rank: u64,
+    pub bank: u64,
+    pub row: u64,
+}
+
+impl Dram {
+    pub fn new(cfg: DramConfig) -> Self {
+        let nbanks = (cfg.channels * cfg.ranks * cfg.banks) as usize;
+        let col_bits = ilog2(cfg.row_bytes / crate::trace::LINE_SIZE);
+        let bank_bits = ilog2(cfg.banks);
+        let rank_bits = ilog2(cfg.ranks);
+        let chan_bits = ilog2(cfg.channels);
+        Self {
+            banks: vec![
+                Bank { open_row: None, busy_until: 0.0, consecutive_hits: 0 };
+                nbanks
+            ],
+            bus_free_at: 0.0,
+            stats: DramStats::default(),
+            cfg,
+            col_bits,
+            bank_bits,
+            rank_bits,
+            chan_bits,
+        }
+    }
+
+    /// Map a byte address to DRAM coordinates under the configured scheme.
+    pub fn map(&self, addr: u64) -> DramCoord {
+        // operate at cache-line granularity
+        let mut a = addr / crate::trace::LINE_SIZE;
+        match self.cfg.addr_map {
+            AddrMap::RoBaRaCoCh => {
+                // LSB→MSB: channel, column, rank, bank, row
+                let channel = take(&mut a, self.chan_bits);
+                let _col = take(&mut a, self.col_bits);
+                let rank = take(&mut a, self.rank_bits);
+                let bank = take(&mut a, self.bank_bits);
+                let row = a % self.cfg.rows_per_bank;
+                DramCoord { channel, rank, bank, row }
+            }
+            AddrMap::ChRaBaRoCo => {
+                // LSB→MSB: column, row, bank, rank, channel
+                let _col = take(&mut a, self.col_bits);
+                let row = take(&mut a, ilog2(self.cfg.rows_per_bank));
+                let bank = take(&mut a, self.bank_bits);
+                let rank = take(&mut a, self.rank_bits);
+                let channel = take(&mut a, self.chan_bits);
+                DramCoord { channel, rank, bank, row }
+            }
+        }
+    }
+
+    #[inline]
+    fn bank_index(&self, c: &DramCoord) -> usize {
+        ((c.channel * self.cfg.ranks + c.rank) * self.cfg.banks + c.bank) as usize
+    }
+
+    /// Service one request arriving at `arrival_ns`. Returns the request's
+    /// total latency in ns (queueing + row op + transfer + overhead).
+    pub fn request(&mut self, arrival_ns: f64, addr: u64, is_write: bool, is_prefetch: bool) -> f64 {
+        let coord = self.map(addr);
+        let bi = self.bank_index(&coord);
+
+        if self.stats.requests == 0 {
+            self.stats.first_arrival_ns = arrival_ns;
+        }
+        self.stats.requests += 1;
+        if is_write {
+            self.stats.writes += 1;
+        } else if is_prefetch {
+            self.stats.prefetch_reads += 1;
+        } else {
+            self.stats.reads += 1;
+        }
+
+        let bank = &mut self.banks[bi];
+        let outcome = if self.cfg.ideal_row_hits {
+            RowOutcome::Hit
+        } else {
+            match bank.open_row {
+                Some(r) if r == coord.row => RowOutcome::Hit,
+                Some(_) => RowOutcome::Conflict,
+                None => RowOutcome::Miss,
+            }
+        };
+
+        // FR-FCFS-Cap: after `cap` consecutive same-row hits the scheduler
+        // forces a round-robin turn; under our in-order stream this shows
+        // up as a one-burst bus delay.
+        let cap_penalty = if outcome == RowOutcome::Hit {
+            bank.consecutive_hits += 1;
+            if bank.consecutive_hits > self.cfg.cap {
+                bank.consecutive_hits = 0;
+                self.cfg.t_bl
+            } else {
+                0.0
+            }
+        } else {
+            bank.consecutive_hits = 0;
+            0.0
+        };
+
+        let demand = !is_write && !is_prefetch;
+        let op_ns = match outcome {
+            RowOutcome::Hit => {
+                self.stats.row_hits += 1;
+                if demand {
+                    self.stats.demand_row_hits += 1;
+                }
+                self.cfg.t_cl
+            }
+            RowOutcome::Miss => {
+                self.stats.row_misses += 1;
+                self.cfg.t_rcd + self.cfg.t_cl
+            }
+            RowOutcome::Conflict => {
+                self.stats.row_conflicts += 1;
+                self.cfg.t_rp + self.cfg.t_rcd + self.cfg.t_cl
+            }
+        };
+        if !self.cfg.ideal_row_hits {
+            bank.open_row = Some(coord.row);
+        }
+
+        // bank availability then data-bus slot
+        let start = arrival_ns.max(bank.busy_until) + cap_penalty;
+        let cas_done = start + op_ns;
+        let xfer_start = cas_done.max(self.bus_free_at);
+        let done = xfer_start + self.cfg.t_bl;
+        bank.busy_until = cas_done;
+        self.bus_free_at = done;
+
+        let latency = done - arrival_ns + self.cfg.t_overhead;
+        self.stats.total_latency_ns += latency;
+        if !is_prefetch && !is_write {
+            self.stats.demand_requests += 1;
+            self.stats.demand_latency_ns += latency;
+        }
+        self.stats.bus_busy_ns += self.cfg.t_bl;
+        self.stats.last_completion_ns = self.stats.last_completion_ns.max(done);
+        latency
+    }
+}
+
+#[inline]
+fn take(a: &mut u64, bits: u32) -> u64 {
+    let v = *a & ((1u64 << bits) - 1).max(0);
+    *a >>= bits;
+    if bits == 0 {
+        0
+    } else {
+        v
+    }
+}
+
+#[inline]
+fn ilog2(x: u64) -> u32 {
+    debug_assert!(x.is_power_of_two(), "{x} must be a power of two");
+    x.trailing_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dram() -> Dram {
+        Dram::new(DramConfig::default())
+    }
+
+    #[test]
+    fn sequential_same_row_hits_after_first() {
+        let mut d = dram();
+        let mut t = 0.0;
+        // 64 consecutive lines: same row under RoBaRaCoCh (col bits low)
+        for i in 0..64u64 {
+            d.request(t, i * 64, false, false);
+            t += 100.0;
+        }
+        assert_eq!(d.stats.row_misses, 1);
+        assert_eq!(d.stats.row_hits, 63);
+        assert!(d.stats.row_hit_ratio() > 0.98);
+    }
+
+    #[test]
+    fn row_crossing_switches_banks_under_robaracoch() {
+        let d = dram();
+        let c0 = d.map(0);
+        let c1 = d.map(8 * 1024); // next row-sized chunk
+        assert_ne!(c0.bank, c1.bank, "RoBaRaCoCh spreads rows over banks");
+    }
+
+    #[test]
+    fn row_crossing_same_bank_under_chrabaroco() {
+        let d = Dram::new(DramConfig { addr_map: AddrMap::ChRaBaRoCo, ..Default::default() });
+        let c0 = d.map(0);
+        let c1 = d.map(8 * 1024);
+        assert_eq!(c0.bank, c1.bank, "ChRaBaRoCo keeps adjacent rows in one bank");
+        assert_ne!(c0.row, c1.row);
+    }
+
+    #[test]
+    fn random_rows_mostly_conflict() {
+        let mut d = dram();
+        let mut rng = crate::util::Pcg64::new(6);
+        let mut t = 0.0;
+        for _ in 0..50_000 {
+            let addr = rng.below(1 << 33) & !63;
+            d.request(t, addr, false, false);
+            t += 60.0;
+        }
+        let hr = d.stats.row_hit_ratio();
+        assert!(hr < 0.15, "random stream must thrash rows: {hr}");
+        let avg = d.stats.avg_latency_ns();
+        assert!(avg > 80.0, "conflict-heavy latency should exceed hit latency: {avg}");
+    }
+
+    #[test]
+    fn ideal_mode_all_hits_and_lower_latency() {
+        let mut rng = crate::util::Pcg64::new(7);
+        let addrs: Vec<u64> = (0..20_000).map(|_| rng.below(1 << 33) & !63).collect();
+        let mut real = dram();
+        let mut ideal = Dram::new(DramConfig { ideal_row_hits: true, ..Default::default() });
+        let mut t = 0.0;
+        for &a in &addrs {
+            real.request(t, a, false, false);
+            ideal.request(t, a, false, false);
+            t += 70.0;
+        }
+        assert_eq!(ideal.stats.row_hit_ratio(), 1.0);
+        assert!(ideal.stats.avg_latency_ns() < real.stats.avg_latency_ns());
+        // the paper's ideal latencies sit in the ~65-75ns band
+        let il = ideal.stats.avg_latency_ns();
+        assert!((55.0..85.0).contains(&il), "ideal latency {il}");
+    }
+
+    #[test]
+    fn bandwidth_utilization_scales_with_intensity() {
+        // dense arrivals → high utilization; sparse → low
+        let mut dense = dram();
+        let mut sparse = dram();
+        for i in 0..10_000u64 {
+            dense.request(i as f64 * 4.0, i * 64, false, false);
+            sparse.request(i as f64 * 400.0, i * 64, false, false);
+        }
+        assert!(dense.stats.bandwidth_utilization() > 0.5);
+        assert!(sparse.stats.bandwidth_utilization() < 0.05);
+    }
+
+    #[test]
+    fn queueing_adds_latency_under_bursts() {
+        let mut d = dram();
+        // all requests arrive at t=0 to different banks → bus serializes
+        let mut lats = Vec::new();
+        for i in 0..16u64 {
+            lats.push(d.request(0.0, i * 8 * 1024, false, false));
+        }
+        assert!(lats[15] > lats[0], "later requests should queue on the bus");
+    }
+
+    #[test]
+    fn stats_demand_vs_prefetch_partition() {
+        let mut d = dram();
+        d.request(0.0, 0, false, false);
+        d.request(10.0, 64 * 1024, false, true);
+        d.request(20.0, 128 * 1024, true, false);
+        assert_eq!(d.stats.reads, 1);
+        assert_eq!(d.stats.prefetch_reads, 1);
+        assert_eq!(d.stats.writes, 1);
+        assert_eq!(d.stats.demand_requests, 1);
+    }
+
+    #[test]
+    fn map_is_total_and_in_range() {
+        let d = dram();
+        let mut rng = crate::util::Pcg64::new(8);
+        for _ in 0..10_000 {
+            let c = d.map(rng.below(1 << 35));
+            assert!(c.bank < 16);
+            assert!(c.row < 32 * 1024);
+            assert_eq!(c.channel, 0);
+            assert_eq!(c.rank, 0);
+        }
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let d = dram();
+        assert_eq!(d.stats.row_hit_ratio(), 0.0);
+        assert_eq!(d.stats.avg_latency_ns(), 0.0);
+        assert_eq!(d.stats.bandwidth_utilization(), 0.0);
+    }
+}

@@ -1,0 +1,27 @@
+//! Micro-architectural simulators: the substitutes for the paper's
+//! measurement substrate (perf/VTune on an i7-10700, Sniper, Ramulator).
+//!
+//! - [`branch`] — gshare branch predictor (Figs. 3–4).
+//! - [`cache`] — 3-level set-associative hierarchy + perfect modes
+//!   (Figs. 8, 12, 14).
+//! - [`prefetch`] — hardware stream/adjacent-line prefetchers and the
+//!   useless-prefetch accounting (Fig. 13); software prefetch plumbing.
+//! - [`dram`] — DDR4 row-buffer/bank timing model, FR-FCFS-Cap
+//!   approximation, address-mapping schemes (Table VII, Figs. 20–21).
+//! - [`cpu`] — interval-style top-down pipeline model producing the
+//!   paper's metric set (Figs. 1–10).
+//! - [`multicore`] — shared-LLC/-bandwidth composition (Tables III/IV).
+
+pub mod branch;
+pub mod cache;
+pub mod cpu;
+pub mod dram;
+pub mod multicore;
+pub mod prefetch;
+
+pub use branch::{BranchStats, Gshare};
+pub use cache::{Cache, CacheStats, DramRequest, Hierarchy, HierarchyConfig, Level};
+pub use cpu::{CpuConfig, Metrics, PipelineSim};
+pub use dram::{AddrMap, Dram, DramConfig, DramStats, RowOutcome};
+pub use multicore::{aggregate, percore_config, run_multicore};
+pub use prefetch::{AdjacentLinePrefetcher, PrefetchStats, StreamPrefetcher};

@@ -1,0 +1,147 @@
+//! Multi-core composition (Tables III and IV).
+//!
+//! The paper's multicore runs (`n_jobs = 4/8`) shard the work across
+//! cores that share the LLC and the memory system. We model each core
+//! with its own pipeline/L1/L2/branch state and account for the two
+//! first-order shared-resource effects:
+//!
+//! 1. **LLC capacity sharing** — each core sees `L3/N` of effective
+//!    capacity (capacity partitioning is the standard first-order model
+//!    for homogeneous co-runners).
+//! 2. **Memory bandwidth/queueing sharing** — each core sees a data bus
+//!    whose effective burst occupancy is `N ×` longer (N co-runners
+//!    interleave on one channel), which both raises queueing latency and
+//!    caps per-core bandwidth.
+//!
+//! This reproduces the paper's Tables III/IV conclusion: the single-core
+//! bottleneck structure (high CPI, bad-spec for tree workloads, large
+//! DRAM bound) persists at 4 and 8 cores. DESIGN.md documents the
+//! substitution (the paper used real hardware).
+
+use super::cpu::{CpuConfig, Metrics, PipelineSim};
+use crate::util::stats;
+
+/// Derive the per-core effective configuration for an `n`-core run.
+pub fn percore_config(base: &CpuConfig, n_cores: usize) -> CpuConfig {
+    assert!(n_cores >= 1);
+    let mut cfg = base.clone();
+    let n = n_cores as u64;
+    // shared LLC: equal capacity partition, same associativity
+    cfg.cache.l3_bytes = (base.cache.l3_bytes / n).max(cfg.cache.l2_bytes * 2);
+    // shared channel: burst slots interleave N ways
+    cfg.dram.t_bl = base.dram.t_bl * n_cores as f64;
+    cfg
+}
+
+/// Aggregate per-core metrics into the per-workload row the paper's
+/// tables report (arithmetic mean of ratios across homogeneous cores;
+/// instruction/cycle totals summed).
+pub fn aggregate(per_core: &[Metrics]) -> Metrics {
+    assert!(!per_core.is_empty());
+    let mut out = per_core[0].clone();
+    let n = per_core.len() as f64;
+    let m = |f: fn(&Metrics) -> f64| stats::mean(&per_core.iter().map(f).collect::<Vec<_>>());
+    out.instructions = per_core.iter().map(|c| c.instructions).sum();
+    out.cycles = per_core.iter().map(|c| c.cycles).fold(0.0, f64::max);
+    out.cpi = m(|c| c.cpi);
+    out.ipc = m(|c| c.ipc);
+    out.retiring_pct = m(|c| c.retiring_pct);
+    out.bad_spec_pct = m(|c| c.bad_spec_pct);
+    out.core_bound_pct = m(|c| c.core_bound_pct);
+    out.mem_bound_pct = m(|c| c.mem_bound_pct);
+    out.dram_bound_pct = m(|c| c.dram_bound_pct);
+    out.l2_bound_pct = m(|c| c.l2_bound_pct);
+    out.l3_bound_pct = m(|c| c.l3_bound_pct);
+    out.branch_mispredict_ratio = m(|c| c.branch_mispredict_ratio);
+    out.branch_fraction = m(|c| c.branch_fraction);
+    out.cond_branch_fraction = m(|c| c.cond_branch_fraction);
+    out.l1_miss_ratio = m(|c| c.l1_miss_ratio);
+    out.l2_miss_ratio = m(|c| c.l2_miss_ratio);
+    out.llc_miss_ratio = m(|c| c.llc_miss_ratio);
+    for i in 0..4 {
+        out.port_dist[i] =
+            per_core.iter().map(|c| c.port_dist[i]).sum::<f64>() / n;
+    }
+    out.sim_time_ns = per_core.iter().map(|c| c.sim_time_ns).fold(0.0, f64::max);
+    out
+}
+
+/// Run an `n_cores`-way simulation: `run_core(core_id, sim)` drives core
+/// `core_id`'s shard of the workload into its pipeline simulator.
+pub fn run_multicore<F>(base: &CpuConfig, n_cores: usize, mut run_core: F) -> Metrics
+where
+    F: FnMut(usize, &mut PipelineSim),
+{
+    let cfg = percore_config(base, n_cores);
+    let mut per_core = Vec::with_capacity(n_cores);
+    for core in 0..n_cores {
+        let mut sim = PipelineSim::new(cfg.clone());
+        run_core(core, &mut sim);
+        crate::trace::Sink::finish(&mut sim);
+        per_core.push(sim.metrics());
+    }
+    aggregate(&per_core)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Event, Sink};
+
+    #[test]
+    fn percore_config_partitions_llc_and_bus() {
+        let base = CpuConfig::default();
+        let c4 = percore_config(&base, 4);
+        assert_eq!(c4.cache.l3_bytes, base.cache.l3_bytes / 4);
+        assert!((c4.dram.t_bl - base.dram.t_bl * 4.0).abs() < 1e-12);
+        let c1 = percore_config(&base, 1);
+        assert_eq!(c1.cache.l3_bytes, base.cache.l3_bytes);
+    }
+
+    #[test]
+    fn llc_partition_never_below_l2() {
+        let base = CpuConfig::default();
+        let c = percore_config(&base, 64);
+        assert!(c.cache.l3_bytes >= 2 * c.cache.l2_bytes);
+    }
+
+    #[test]
+    fn aggregate_means_ratios_sums_instructions() {
+        let mut a = Metrics::default();
+        a.cpi = 1.0;
+        a.instructions = 100;
+        a.cycles = 100.0;
+        let mut b = Metrics::default();
+        b.cpi = 2.0;
+        b.instructions = 300;
+        b.cycles = 600.0;
+        let g = aggregate(&[a, b]);
+        assert_eq!(g.cpi, 1.5);
+        assert_eq!(g.instructions, 400);
+        assert_eq!(g.cycles, 600.0, "wall time = slowest core");
+    }
+
+    #[test]
+    fn contention_raises_dram_pressure() {
+        // same per-core random-access shard on 1 vs 8 cores
+        let mut rng = crate::util::Pcg64::new(13);
+        let addrs: Vec<u64> = (0..20_000).map(|_| rng.below(1 << 31) & !63).collect();
+        let drive = |_c: usize, sim: &mut crate::sim::cpu::PipelineSim| {
+            for &a in &addrs {
+                sim.event(Event::Load { addr: a, size: 8, feeds_branch: false });
+                sim.event(Event::Compute { int_ops: 2, fp_ops: 1 });
+            }
+        };
+        let base = CpuConfig::default();
+        let m1 = run_multicore(&base, 1, drive);
+        let m8 = run_multicore(&base, 8, drive);
+        assert!(
+            m8.cpi >= m1.cpi * 0.9,
+            "8-core contention should not make cores faster: {} vs {}",
+            m8.cpi,
+            m1.cpi
+        );
+        // headline property the paper reports: DRAM remains a bottleneck
+        assert!(m8.dram_bound_pct > 10.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Virtual address space modelling.
+//!
+//! Workloads don't trace the *host* addresses of their Rust vectors (those
+//! would be polluted by allocator layout and by the tracing machinery
+//! itself). Instead each logical array is allocated a region in a modelled
+//! virtual address space, and element accesses are translated to modelled
+//! addresses. This is what makes layout reordering experiments clean: a
+//! data-layout reorder changes the row→address map and nothing else.
+
+/// 4 KiB OS pages, matching the paper's locality-blocking discussion
+/// (row-buffer locality is exploited *within* an OS page because
+/// virtual→physical mapping beyond a page is unknown to userspace).
+pub const PAGE_SIZE: u64 = 4096;
+/// 64-byte cache lines (Table V).
+pub const LINE_SIZE: u64 = 64;
+
+/// A contiguous allocation in the modelled address space.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Region {
+    base: u64,
+    bytes: u64,
+}
+
+impl Region {
+    /// Base address of the region.
+    #[inline]
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    /// Size in bytes.
+    #[inline]
+    pub fn len(&self) -> u64 {
+        self.bytes
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.bytes == 0
+    }
+
+    /// Address of byte offset `off` (debug-checked against the bound).
+    #[inline]
+    pub fn at(&self, off: u64) -> u64 {
+        debug_assert!(off < self.bytes.max(1), "offset {off} out of region");
+        self.base + off
+    }
+
+    /// Address of element `idx` of an array of `elem` -byte elements.
+    #[inline]
+    pub fn elem(&self, idx: usize, elem: u64) -> u64 {
+        self.at(idx as u64 * elem)
+    }
+
+    /// Address of f64 element `idx`.
+    #[inline]
+    pub fn f64(&self, idx: usize) -> u64 {
+        self.elem(idx, 8)
+    }
+}
+
+/// Bump allocator over the modelled virtual address space. Regions are
+/// page-aligned so that distinct arrays never share an OS page or DRAM row
+/// by accident (matching how large `malloc`/numpy allocations behave).
+#[derive(Debug)]
+pub struct AddressSpace {
+    next: u64,
+    allocations: Vec<(String, Region)>,
+}
+
+impl Default for AddressSpace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AddressSpace {
+    /// Fresh address space; base offset keeps address 0 unused.
+    pub fn new() -> Self {
+        Self { next: PAGE_SIZE, allocations: Vec::new() }
+    }
+
+    /// Allocate `bytes` bytes, page-aligned. `name` is kept for reports.
+    pub fn alloc(&mut self, name: &str, bytes: u64) -> Region {
+        let base = self.next;
+        let region = Region { base, bytes };
+        let padded = bytes.max(1).div_ceil(PAGE_SIZE) * PAGE_SIZE;
+        self.next += padded;
+        self.allocations.push((name.to_string(), region));
+        region
+    }
+
+    /// Allocate an array of `n` f64 elements.
+    pub fn alloc_f64(&mut self, name: &str, n: usize) -> Region {
+        self.alloc(name, n as u64 * 8)
+    }
+
+    /// Allocate an `rows x cols` f64 matrix (row-major, rows padded to no
+    /// particular boundary — same as numpy / Armadillo dense storage).
+    pub fn alloc_matrix(&mut self, name: &str, rows: usize, cols: usize) -> Region {
+        self.alloc(name, rows as u64 * cols as u64 * 8)
+    }
+
+    /// Total modelled bytes allocated (the working-set size; DESIGN.md's
+    /// scale-stability argument checks this is ≥ several × LLC).
+    pub fn allocated_bytes(&self) -> u64 {
+        self.allocations.iter().map(|(_, r)| r.bytes).sum()
+    }
+
+    /// Named allocations, in allocation order.
+    pub fn allocations(&self) -> &[(String, Region)] {
+        &self.allocations
+    }
+}
+
+/// Cache-line index of an address.
+#[inline]
+pub fn line_of(addr: u64) -> u64 {
+    addr / LINE_SIZE
+}
+
+/// OS-page index of an address.
+#[inline]
+pub fn page_of(addr: u64) -> u64 {
+    addr / PAGE_SIZE
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_are_page_aligned_and_disjoint() {
+        let mut a = AddressSpace::new();
+        let r1 = a.alloc("x", 100);
+        let r2 = a.alloc("y", PAGE_SIZE + 1);
+        let r3 = a.alloc("z", 1);
+        assert_eq!(r1.base() % PAGE_SIZE, 0);
+        assert_eq!(r2.base() % PAGE_SIZE, 0);
+        assert!(r1.base() + PAGE_SIZE <= r2.base());
+        assert!(r2.base() + 2 * PAGE_SIZE <= r3.base());
+        assert_ne!(r1.base(), 0, "address 0 must stay unused");
+    }
+
+    #[test]
+    fn elem_addressing() {
+        let mut a = AddressSpace::new();
+        let r = a.alloc_f64("v", 10);
+        assert_eq!(r.f64(0), r.base());
+        assert_eq!(r.f64(3), r.base() + 24);
+    }
+
+    #[test]
+    fn matrix_row_addressing() {
+        let mut a = AddressSpace::new();
+        let m = a.alloc_matrix("m", 100, 20);
+        // row 5, col 2 => (5*20+2)*8
+        assert_eq!(m.f64(5 * 20 + 2), m.base() + (5 * 20 + 2) as u64 * 8);
+        assert_eq!(m.len(), 100 * 20 * 8);
+    }
+
+    #[test]
+    fn working_set_accounting() {
+        let mut a = AddressSpace::new();
+        a.alloc("x", 1000);
+        a.alloc("y", 24);
+        assert_eq!(a.allocated_bytes(), 1024);
+        assert_eq!(a.allocations().len(), 2);
+    }
+
+    #[test]
+    fn line_and_page_helpers() {
+        assert_eq!(line_of(0), 0);
+        assert_eq!(line_of(63), 0);
+        assert_eq!(line_of(64), 1);
+        assert_eq!(page_of(4095), 0);
+        assert_eq!(page_of(4096), 1);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "out of region")]
+    fn out_of_bounds_access_is_caught() {
+        let mut a = AddressSpace::new();
+        let r = a.alloc("x", 8);
+        let _ = r.at(8);
+    }
+}

@@ -1,0 +1,132 @@
+//! Instruction-mix accounting (Figs. 5 and 6 of the paper).
+//!
+//! Counts dynamic instructions by class. An `Event::Compute` contributes
+//! `int_ops + fp_ops` instructions; each memory access and each branch is
+//! one instruction (a reasonable x86 uop-to-instruction mapping for the
+//! compiled loops the paper studies).
+
+use super::event::{Event, Sink};
+
+/// Dynamic instruction mix counters.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct InstructionMix {
+    pub int_ops: u64,
+    pub fp_ops: u64,
+    pub loads: u64,
+    pub stores: u64,
+    pub branches: u64,
+    pub cond_branches: u64,
+    pub sw_prefetches: u64,
+    pub bytes_loaded: u64,
+    pub bytes_stored: u64,
+}
+
+impl InstructionMix {
+    /// Total dynamic instructions.
+    pub fn instructions(&self) -> u64 {
+        self.int_ops + self.fp_ops + self.loads + self.stores + self.branches
+            + self.sw_prefetches
+    }
+
+    /// Fraction of instructions that are branches (Fig. 5).
+    pub fn branch_fraction(&self) -> f64 {
+        let n = self.instructions();
+        if n == 0 {
+            0.0
+        } else {
+            self.branches as f64 / n as f64
+        }
+    }
+
+    /// Fraction of branches that are conditional (Fig. 6).
+    pub fn conditional_branch_fraction(&self) -> f64 {
+        if self.branches == 0 {
+            0.0
+        } else {
+            self.cond_branches as f64 / self.branches as f64
+        }
+    }
+
+    /// Fraction of instructions that touch memory.
+    pub fn memory_fraction(&self) -> f64 {
+        let n = self.instructions();
+        if n == 0 {
+            0.0
+        } else {
+            (self.loads + self.stores) as f64 / n as f64
+        }
+    }
+}
+
+impl Sink for InstructionMix {
+    fn event(&mut self, ev: Event) {
+        match ev {
+            Event::Compute { int_ops, fp_ops } => {
+                self.int_ops += int_ops as u64;
+                self.fp_ops += fp_ops as u64;
+            }
+            Event::Serial { ops } => self.int_ops += ops as u64,
+            Event::Load { size, .. } => {
+                self.loads += 1;
+                self.bytes_loaded += size as u64;
+            }
+            Event::Store { size, .. } => {
+                self.stores += 1;
+                self.bytes_stored += size as u64;
+            }
+            Event::Branch { conditional, .. } => {
+                self.branches += 1;
+                if conditional {
+                    self.cond_branches += 1;
+                }
+            }
+            Event::LoopBranch { count, .. } => {
+                self.branches += count as u64;
+                self.cond_branches += count as u64;
+            }
+            Event::SwPrefetch { .. } => self.sw_prefetches += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_each_class() {
+        let mut m = InstructionMix::default();
+        m.event(Event::Compute { int_ops: 3, fp_ops: 2 });
+        m.event(Event::Load { addr: 0, size: 8, feeds_branch: false });
+        m.event(Event::Load { addr: 8, size: 16, feeds_branch: true });
+        m.event(Event::Store { addr: 0, size: 8 });
+        m.event(Event::Branch { site: 1, taken: true, conditional: true });
+        m.event(Event::Branch { site: 2, taken: true, conditional: false });
+        m.event(Event::SwPrefetch { addr: 0 });
+        assert_eq!(m.instructions(), 3 + 2 + 2 + 1 + 2 + 1);
+        assert_eq!(m.bytes_loaded, 24);
+        assert_eq!(m.bytes_stored, 8);
+        assert_eq!(m.cond_branches, 1);
+    }
+
+    #[test]
+    fn fractions() {
+        let mut m = InstructionMix::default();
+        for _ in 0..2 {
+            m.event(Event::Branch { site: 1, taken: false, conditional: true });
+        }
+        m.event(Event::Branch { site: 2, taken: true, conditional: false });
+        m.event(Event::Compute { int_ops: 7, fp_ops: 0 });
+        assert!((m.branch_fraction() - 0.3).abs() < 1e-12);
+        assert!((m.conditional_branch_fraction() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_mix_is_zero() {
+        let m = InstructionMix::default();
+        assert_eq!(m.instructions(), 0);
+        assert_eq!(m.branch_fraction(), 0.0);
+        assert_eq!(m.conditional_branch_fraction(), 0.0);
+        assert_eq!(m.memory_fraction(), 0.0);
+    }
+}

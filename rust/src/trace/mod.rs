@@ -1,0 +1,13 @@
+//! Trace substrate: the event model connecting instrumented workloads to
+//! the micro-architectural simulators. Equivalent role to the paper's
+//! `perf` / `perf mem` / VTune collection layer.
+
+pub mod addr;
+pub mod event;
+pub mod mix;
+pub mod recorder;
+
+pub use addr::{line_of, page_of, AddressSpace, Region, LINE_SIZE, PAGE_SIZE};
+pub use event::{Event, NullSink, Sink, Tee, VecSink};
+pub use mix::InstructionMix;
+pub use recorder::Recorder;

@@ -1,0 +1,292 @@
+//! Ergonomic instrumentation facade used inside workload inner loops.
+//!
+//! `Recorder` wraps a `Sink` and provides the idioms the workloads need:
+//! row reads, compare-and-branch, indirect `A[B[i]]` loads, and optional
+//! software prefetching that can be toggled per run (the paper's before /
+//! after comparison runs the *same* code with prefetching on or off).
+
+use super::event::{Event, Sink};
+use super::addr::{Region, LINE_SIZE};
+
+/// Instrumentation handle passed to a workload for one traced run.
+pub struct Recorder<'a> {
+    sink: &'a mut dyn Sink,
+    /// Workload-unique namespace for branch site ids.
+    ns: u32,
+    /// Whether `prefetch*` calls emit events (Section V-C on/off switch).
+    pub sw_prefetch_enabled: bool,
+    /// Per-inner-loop-element bookkeeping uops of the library profile
+    /// (Cython-generated C carries more per-element overhead than lean
+    /// templated C++ — the sklearn-vs-mlpack CPI gap of Fig. 1). Shared
+    /// substrates (spatial trees, CART) read this instead of taking a
+    /// profile parameter.
+    pub profile_overhead: u32,
+    events: u64,
+}
+
+impl<'a> Recorder<'a> {
+    /// New recorder with branch-site namespace `ns` (one per workload).
+    pub fn new(sink: &'a mut dyn Sink, ns: u32) -> Self {
+        Self { sink, ns, sw_prefetch_enabled: false, profile_overhead: 2, events: 0 }
+    }
+
+    #[inline]
+    fn emit(&mut self, ev: Event) {
+        self.events += 1;
+        self.sink.event(ev);
+    }
+
+    /// Number of events emitted so far.
+    pub fn events_emitted(&self) -> u64 {
+        self.events
+    }
+
+    /// Aggregated compute uops.
+    #[inline]
+    pub fn compute(&mut self, int_ops: u32, fp_ops: u32) {
+        self.emit(Event::Compute { int_ops, fp_ops });
+    }
+
+    /// The library profile's per-element serialized bookkeeping chain
+    /// (see [`Event::Serial`]); call once per instrumented inner-loop
+    /// element.
+    #[inline]
+    pub fn profile_tick(&mut self) {
+        let ops = self.profile_overhead;
+        if ops > 0 {
+            self.emit(Event::Serial { ops });
+        }
+    }
+
+    /// A plain load of `size` bytes.
+    #[inline]
+    pub fn load(&mut self, addr: u64, size: u32) {
+        self.emit(Event::Load { addr, size, feeds_branch: false });
+    }
+
+    /// A load whose result immediately feeds a conditional branch.
+    #[inline]
+    pub fn load_for_branch(&mut self, addr: u64, size: u32) {
+        self.emit(Event::Load { addr, size, feeds_branch: true });
+    }
+
+    /// A store of `size` bytes.
+    #[inline]
+    pub fn store(&mut self, addr: u64, size: u32) {
+        self.emit(Event::Store { addr, size });
+    }
+
+    /// Read one f64 element.
+    #[inline]
+    pub fn load_f64(&mut self, region: Region, idx: usize) {
+        self.load(region.f64(idx), 8);
+    }
+
+    /// Write one f64 element.
+    #[inline]
+    pub fn store_f64(&mut self, region: Region, idx: usize) {
+        self.store(region.f64(idx), 8);
+    }
+
+    /// Read a full feature row (`cols` f64s) of the row-major matrix that
+    /// `region` models, accounting `2*cols` fp uops of follow-on arithmetic
+    /// by default at the call sites that need it (callers add their own).
+    #[inline]
+    pub fn load_row(&mut self, region: Region, row: usize, cols: usize) {
+        self.load(region.f64(row * cols), (cols * 8) as u32);
+    }
+
+    /// Write a full feature row.
+    #[inline]
+    pub fn store_row(&mut self, region: Region, row: usize, cols: usize) {
+        self.store(region.f64(row * cols), (cols * 8) as u32);
+    }
+
+    /// Indirect load `A[B[i]]`: reads the index element (4-byte i32, the
+    /// paper's index arrays) then the target row. The *index* load feeds
+    /// address generation, not a branch.
+    #[inline]
+    pub fn load_indirect_row(
+        &mut self,
+        index_arr: Region,
+        i: usize,
+        data: Region,
+        target_row: usize,
+        cols: usize,
+    ) {
+        self.load(index_arr.elem(i, 4), 4);
+        self.compute(1, 0); // address generation
+        self.load_row(data, target_row, cols);
+    }
+
+    /// Conditional branch at site `site` with outcome `cond`; returns
+    /// `cond` so call sites read naturally:
+    /// `if r.branch(SITE_X, a < b) { ... }`.
+    #[inline]
+    pub fn branch(&mut self, site: u32, cond: bool) -> bool {
+        self.emit(Event::Branch {
+            site: self.ns << 16 | site,
+            taken: cond,
+            conditional: true,
+        });
+        cond
+    }
+
+    /// Compare-then-branch: one int uop for the compare plus the branch.
+    #[inline]
+    pub fn cmp_branch(&mut self, site: u32, cond: bool) -> bool {
+        self.compute(1, 0);
+        self.branch(site, cond)
+    }
+
+    /// fp compare-then-branch (tree splits, distance threshold tests).
+    #[inline]
+    pub fn fcmp_branch(&mut self, site: u32, cond: bool) -> bool {
+        self.compute(0, 1);
+        self.branch(site, cond)
+    }
+
+    /// Load a value that is immediately compared and branched on — the
+    /// `A[B[i]] <= θ` pattern of tree traversal and neighbour pruning.
+    #[inline]
+    pub fn load_cmp_branch(&mut self, site: u32, addr: u64, size: u32, cond: bool) -> bool {
+        self.load_for_branch(addr, size);
+        self.fcmp_branch(site, cond)
+    }
+
+    /// Unconditional branch (loop back-edges, calls).
+    #[inline]
+    pub fn jump(&mut self, site: u32) {
+        self.emit(Event::Branch { site: self.ns << 16 | site, taken: true, conditional: false });
+    }
+
+    /// A counted inner loop executing `count` back-edge branches (e.g. a
+    /// compiled distance loop over the feature dimension).
+    #[inline]
+    pub fn loop_branch(&mut self, site: u32, count: u32) {
+        if count > 0 {
+            self.emit(Event::LoopBranch { site: self.ns << 16 | site, count });
+        }
+    }
+
+    /// Software prefetch of the line(s) covering `[addr, addr+size)`; no-op
+    /// unless `sw_prefetch_enabled`.
+    #[inline]
+    pub fn prefetch(&mut self, addr: u64, size: u32) {
+        if self.sw_prefetch_enabled {
+            let first = addr / LINE_SIZE;
+            let last = (addr + size.max(1) as u64 - 1) / LINE_SIZE;
+            for line in first..=last {
+                self.emit(Event::SwPrefetch { addr: line * LINE_SIZE });
+            }
+        }
+    }
+
+    /// Prefetch a whole matrix row.
+    #[inline]
+    pub fn prefetch_row(&mut self, region: Region, row: usize, cols: usize) {
+        if self.sw_prefetch_enabled {
+            self.prefetch(region.f64(row * cols), (cols * 8) as u32);
+        }
+    }
+
+    /// End-of-trace marker; drains the sink.
+    pub fn finish(&mut self) {
+        self.sink.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::addr::AddressSpace;
+    use crate::trace::event::VecSink;
+
+    #[test]
+    fn branch_returns_condition_and_namespaces_site() {
+        let mut v = VecSink::default();
+        {
+            let mut r = Recorder::new(&mut v, 7);
+            assert!(r.branch(3, true));
+            assert!(!r.branch(3, false));
+        }
+        match v.events[0] {
+            Event::Branch { site, taken, conditional } => {
+                assert_eq!(site, 7 << 16 | 3);
+                assert!(taken && conditional);
+            }
+            _ => panic!("expected branch"),
+        }
+    }
+
+    #[test]
+    fn prefetch_disabled_by_default() {
+        let mut v = VecSink::default();
+        {
+            let mut r = Recorder::new(&mut v, 0);
+            r.prefetch(0x1000, 64);
+        }
+        assert!(v.events.is_empty());
+    }
+
+    #[test]
+    fn prefetch_expands_to_lines() {
+        let mut v = VecSink::default();
+        {
+            let mut r = Recorder::new(&mut v, 0);
+            r.sw_prefetch_enabled = true;
+            r.prefetch(0x1000 + 32, 64); // straddles two lines
+        }
+        assert_eq!(
+            v.events,
+            vec![
+                Event::SwPrefetch { addr: 0x1000 },
+                Event::SwPrefetch { addr: 0x1040 },
+            ]
+        );
+    }
+
+    #[test]
+    fn indirect_load_emits_index_then_row() {
+        let mut space = AddressSpace::new();
+        let idx = space.alloc("idx", 400);
+        let data = space.alloc_matrix("x", 10, 4);
+        let mut v = VecSink::default();
+        {
+            let mut r = Recorder::new(&mut v, 1);
+            r.load_indirect_row(idx, 5, data, 3, 4);
+        }
+        assert_eq!(v.events.len(), 3);
+        assert_eq!(
+            v.events[0],
+            Event::Load { addr: idx.elem(5, 4), size: 4, feeds_branch: false }
+        );
+        assert_eq!(
+            v.events[2],
+            Event::Load { addr: data.f64(12), size: 32, feeds_branch: false }
+        );
+    }
+
+    #[test]
+    fn load_cmp_branch_marks_feeding_load() {
+        let mut v = VecSink::default();
+        {
+            let mut r = Recorder::new(&mut v, 1);
+            r.load_cmp_branch(9, 0x2000, 8, true);
+        }
+        assert!(matches!(
+            v.events[0],
+            Event::Load { feeds_branch: true, .. }
+        ));
+        assert!(matches!(v.events[2], Event::Branch { conditional: true, .. }));
+    }
+
+    #[test]
+    fn event_count_tracks() {
+        let mut v = VecSink::default();
+        let mut r = Recorder::new(&mut v, 1);
+        r.compute(1, 1);
+        r.load(0x40, 8);
+        assert_eq!(r.events_emitted(), 2);
+    }
+}

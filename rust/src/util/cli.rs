@@ -1,0 +1,141 @@
+//! Minimal command-line argument parser (no external crates available in
+//! the offline build, so `clap` is replaced by this ~100-line equivalent).
+//!
+//! Grammar: `prog [subcommand] [--flag value | --switch] ...`.
+//! Every `--name` either consumes the next token as its value or, if the
+//! next token is absent/another flag, is recorded as a boolean switch.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: optional subcommand, flags, positional args.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Self {
+        let mut out = Args::default();
+        let toks: Vec<String> = tokens.into_iter().collect();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                // `--name=value` form
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < toks.len() && !toks[i + 1].starts_with("--") {
+                    out.flags.insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() && out.flags.is_empty()
+            {
+                out.subcommand = Some(t.clone());
+            } else {
+                out.positional.push(t.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Parse the process's own command line.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String flag value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// String flag with default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Typed flag value with default; panics with a clear message on a
+    /// malformed value (user error should fail loudly, not silently).
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.get(name) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name}: cannot parse {s:?}")),
+        }
+    }
+
+    /// Whether a boolean switch was given (`--verbose`).
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse("characterize --rows 5000 --workload kmeans --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("characterize"));
+        assert_eq!(a.get("rows"), Some("5000"));
+        assert_eq!(a.get_or("workload", "x"), "kmeans");
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --rows=123 --name=abc");
+        assert_eq!(a.get_parsed_or("rows", 0usize), 123);
+        assert_eq!(a.get("name"), Some("abc"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("run");
+        assert_eq!(a.get_parsed_or("rows", 42usize), 42);
+        assert_eq!(a.get_parsed_or("scale", 1.5f64), 1.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn typed_malformed_panics() {
+        let a = parse("run --rows abc");
+        let _: usize = a.get_parsed_or("rows", 0);
+    }
+
+    #[test]
+    fn trailing_switch() {
+        let a = parse("bench --fast");
+        assert_eq!(a.subcommand.as_deref(), Some("bench"));
+        assert!(a.has("fast"));
+    }
+
+    #[test]
+    fn positional_after_subcommand_flag() {
+        let a = parse("report --dir out fig1 fig2");
+        // "out" is consumed as the value of --dir; fig1/fig2 positional.
+        assert_eq!(a.get("dir"), Some("out"));
+        assert_eq!(a.positional, vec!["fig1", "fig2"]);
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = parse("--rows 10 run");
+        assert_eq!(a.subcommand, None);
+        // "run" follows a consumed flag value, lands in positional.
+        assert_eq!(a.positional, vec!["run"]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Adaboost (SAMME) [FS99] — tree-based workload.
+//!
+//! Boosted shallow CART trees with per-round sample reweighting, as in
+//! scikit-learn's `AdaBoostClassifier` and mlpack's `AdaBoost`. Every
+//! round re-scans the full dataset through the index array with the
+//! updated weight vector — the repeated-pass pattern that makes Adaboost
+//! the paper's prime candidate for one-time expensive data reorderings
+//! (Table IX: "ensemble based workloads such as Adaboost and Random
+//! Forests"). Quality: weighted-vote train accuracy.
+
+use super::dtree::{fit_cart, CartParams, CartRegions, CartTree};
+use super::{Category, RunContext, RunResult, Workload};
+use crate::data::{make_classification, Dataset};
+use crate::trace::{AddressSpace, Recorder};
+use crate::util::Pcg64;
+
+const SITE_MISCLASS: u32 = 1;
+
+/// Adaboost workload.
+pub struct Adaboost {
+    /// Boosting rounds ("training iterations" scale this).
+    pub rounds_per_iter: usize,
+    /// Weak-learner depth (stumps-ish, as sklearn's default depth-1..3).
+    pub weak_depth: usize,
+}
+
+impl Default for Adaboost {
+    fn default() -> Self {
+        Self { rounds_per_iter: 4, weak_depth: 2 }
+    }
+}
+
+impl Workload for Adaboost {
+    fn name(&self) -> &'static str {
+        "Adaboost"
+    }
+
+    fn category(&self) -> Category {
+        Category::TreeBased
+    }
+
+    fn make_dataset(&self, rows: usize, features: usize, seed: u64) -> Dataset {
+        make_classification(rows, features, (features * 3 / 4).max(2), 2, 0.1, seed)
+    }
+
+    fn run(&self, ds: &Dataset, ctx: &RunContext, rec: &mut Recorder) -> RunResult {
+        let n = ds.n_samples();
+        let m = ds.n_features();
+        let n_classes = ds.n_classes.max(2);
+        let mut space = AddressSpace::new();
+        let regions = CartRegions::alloc(&mut space, n, m, "ada");
+        let r_w = space.alloc_f64("ada.weights", n);
+        let mut rng = Pcg64::new(ctx.seed);
+        let params = CartParams {
+            max_depth: self.weak_depth,
+            min_samples_leaf: 5,
+            max_features: None,
+            n_thresholds: 8,
+        };
+
+        let mut weights = vec![1.0 / n as f64; n];
+        let mut learners: Vec<(CartTree, f64)> = Vec::new();
+        let rounds = self.rounds_per_iter * ctx.iterations.max(1);
+        for _round in 0..rounds {
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            let tree = fit_cart(
+                &ds.x,
+                &ds.y,
+                n_classes,
+                &mut idx,
+                Some(&weights),
+                &params,
+                &regions,
+                rec,
+                &mut rng,
+                ctx.profile.loop_overhead_uops(),
+            );
+            // weighted error: traced prediction + weight pass
+            let mut err = 0.0;
+            let mut miss = vec![false; n];
+            for i in 0..n {
+                rec.load_f64(r_w, i);
+                let pred = tree.predict_traced(&ds.x, i, &regions, rec);
+                let wrong = pred != ds.y[i] as usize;
+                rec.fcmp_branch(SITE_MISCLASS, wrong);
+                if wrong {
+                    err += weights[i];
+                    miss[i] = true;
+                }
+            }
+            let err = err.clamp(1e-10, 1.0 - 1e-10);
+            if err >= 1.0 - 1.0 / n_classes as f64 {
+                break; // weak learner no better than chance
+            }
+            // SAMME learner weight
+            let alpha = ((1.0 - err) / err).ln() + (n_classes as f64 - 1.0).ln();
+            // reweight + normalize (streaming weight pass)
+            rec.load(r_w.f64(0), (n * 8) as u32);
+            rec.store(r_w.f64(0), (n * 8) as u32);
+            rec.compute(0, (3 * n) as u32);
+            let mut z = 0.0;
+            for i in 0..n {
+                if miss[i] {
+                    weights[i] *= alpha.exp();
+                }
+                z += weights[i];
+            }
+            weights.iter_mut().for_each(|w| *w /= z);
+            learners.push((tree, alpha));
+            if err < 1e-9 {
+                break;
+            }
+        }
+
+        // final weighted vote on the training set (untraced: quality only)
+        let mut correct = 0usize;
+        let mut score = vec![0.0; n_classes];
+        for i in 0..n {
+            score.iter_mut().for_each(|s| *s = 0.0);
+            for (t, a) in &learners {
+                score[t.predict(ds.x.row(i))] += a;
+            }
+            let pred = crate::util::stats::argmax(&score).unwrap_or(0);
+            if pred == ds.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / n as f64;
+        RunResult {
+            quality: acc,
+            detail: format!("train accuracy {acc:.4}, {} rounds", learners.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn boosting_beats_a_single_stump() {
+        let ds = Adaboost::default().make_dataset(800, 8, 47);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let stump = Adaboost { rounds_per_iter: 1, weak_depth: 1 }
+            .run(&ds, &RunContext { iterations: 1, ..Default::default() }, &mut rec);
+        let boosted = Adaboost { rounds_per_iter: 12, weak_depth: 1 }
+            .run(&ds, &RunContext { iterations: 1, ..Default::default() }, &mut rec);
+        assert!(
+            boosted.quality >= stump.quality,
+            "{} vs {}",
+            stump.quality,
+            boosted.quality
+        );
+        assert!(boosted.quality > 0.7, "{}", boosted.quality);
+    }
+
+    #[test]
+    fn accuracy_reasonable_on_noisy_labels() {
+        let w = Adaboost::default();
+        let ds = w.make_dataset(600, 10, 48);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let res = w.run(&ds, &RunContext::default(), &mut rec);
+        // 10% label flips cap the achievable train accuracy near 0.9
+        assert!(res.quality > 0.75, "{} ({})", res.quality, res.detail);
+    }
+
+    #[test]
+    fn weights_stay_normalized_implicitly() {
+        // smoke: repeated runs deterministic and finite
+        let w = Adaboost::default();
+        let ds = w.make_dataset(200, 5, 49);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let a = w.run(&ds, &RunContext::default(), &mut rec);
+        assert!(a.quality.is_finite());
+        let b = w.run(&ds, &RunContext::default(), &mut rec);
+        assert_eq!(a.quality, b.quality);
+    }
+}

@@ -1,0 +1,461 @@
+//! Decision-tree induction (CART [Qui86]) — tree-based workload, plus the
+//! shared trainer reused by Random Forests and Adaboost.
+//!
+//! The trainer mirrors scikit-learn's depth-first `Splitter`: each node
+//! owns a range of a **sample-index array**; split search scans the range
+//! through `X[idx[i]][feature]` (the paper's Section IV observation: "in
+//! these workloads the index array B[i] is used to group samples into
+//! different nodes of the decision tree") and partitioning swaps indices
+//! in place. Split comparisons branch on effectively-random data — the
+//! source of the tree category's dominant bad-speculation bound
+//! (Figs. 3–4: 22–28% bad-spec, mispredict-heavy). Quality: train
+//! accuracy.
+
+use super::{Category, RunContext, RunResult, Workload};
+use crate::data::{make_classification, Dataset};
+use crate::trace::{AddressSpace, Recorder, Region};
+use crate::util::{Matrix, Pcg64};
+
+const SITE_SCAN_LE: u32 = 1;
+const SITE_PART: u32 = 2;
+const SITE_TRAVERSE: u32 = 3;
+
+/// CART hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct CartParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Features examined per node (None = all; forests use sqrt(m)).
+    pub max_features: Option<usize>,
+    /// Candidate thresholds per feature.
+    pub n_thresholds: usize,
+}
+
+impl Default for CartParams {
+    fn default() -> Self {
+        Self { max_depth: 10, min_samples_leaf: 10, max_features: None, n_thresholds: 8 }
+    }
+}
+
+/// A fitted CART tree.
+pub struct CartTree {
+    nodes: Vec<CNode>,
+    pub n_classes: usize,
+}
+
+enum CNode {
+    Leaf { label: usize },
+    Split { feat: usize, thresh: f64, left: usize, right: usize },
+}
+
+/// Modelled regions used by a CART fit/predict pass.
+pub struct CartRegions {
+    pub r_x: Region,
+    pub r_y: Region,
+    pub r_idx: Region,
+    pub r_nodes: Region,
+}
+
+impl CartRegions {
+    pub fn alloc(space: &mut AddressSpace, n: usize, m: usize, tag: &str) -> Self {
+        Self {
+            r_x: space.alloc_matrix(&format!("{tag}.x"), n, m),
+            r_y: space.alloc(&format!("{tag}.y"), n as u64 * 4),
+            r_idx: space.alloc(&format!("{tag}.idx"), n as u64 * 4),
+            r_nodes: space.alloc(&format!("{tag}.nodes"), 4096 * 32),
+        }
+    }
+}
+
+/// Weighted Gini impurity of a class-count vector.
+fn gini(counts: &[f64]) -> f64 {
+    let total: f64 = counts.iter().sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    1.0 - counts.iter().map(|c| (c / total) * (c / total)).sum::<f64>()
+}
+
+/// Fit a CART tree on the samples listed in `idx` (modified in place —
+/// the index-array grouping the paper describes). `weights` enables
+/// Adaboost's reweighted rounds.
+#[allow(clippy::too_many_arguments)]
+pub fn fit_cart(
+    x: &Matrix,
+    y: &[f64],
+    n_classes: usize,
+    idx: &mut [u32],
+    weights: Option<&[f64]>,
+    params: &CartParams,
+    regions: &CartRegions,
+    rec: &mut Recorder,
+    rng: &mut Pcg64,
+    profile_overhead: u32,
+) -> CartTree {
+    let mut nodes = Vec::new();
+    let n = idx.len();
+    fit_rec(
+        x, y, n_classes, idx, 0, n, weights, params, regions, rec, rng, &mut nodes, 0,
+        profile_overhead,
+    );
+    CartTree { nodes, n_classes }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fit_rec(
+    x: &Matrix,
+    y: &[f64],
+    n_classes: usize,
+    idx: &mut [u32],
+    lo: usize,
+    hi: usize,
+    weights: Option<&[f64]>,
+    params: &CartParams,
+    regions: &CartRegions,
+    rec: &mut Recorder,
+    rng: &mut Pcg64,
+    nodes: &mut Vec<CNode>,
+    depth: usize,
+    overhead: u32,
+) -> usize {
+    let me = nodes.len();
+    let m = x.cols();
+    let wt = |i: u32| weights.map_or(1.0, |w| w[i as usize]);
+
+    // class histogram of the node (one indirect scan)
+    let mut counts = vec![0.0; n_classes];
+    for i in lo..hi {
+        rec.load(regions.r_idx.elem(i, 4), 4);
+        rec.load(regions.r_y.elem(idx[i] as usize, 4), 4);
+        let _ = overhead;
+        rec.profile_tick();
+        counts[y[idx[i] as usize] as usize] += wt(idx[i]);
+    }
+    let node_gini = gini(&counts);
+    let majority = crate::util::stats::argmax(&counts).unwrap_or(0);
+
+    if depth >= params.max_depth
+        || hi - lo <= params.min_samples_leaf
+        || node_gini < 1e-9
+    {
+        nodes.push(CNode::Leaf { label: majority });
+        return me;
+    }
+
+    // feature subset (forests) or all features (plain CART)
+    let n_feat = params.max_features.unwrap_or(m).min(m);
+    let feats = if n_feat == m {
+        (0..m).collect::<Vec<_>>()
+    } else {
+        rng.sample_indices(m, n_feat)
+    };
+
+    // candidate thresholds from a value subsample
+    let total_w: f64 = counts.iter().sum();
+    let mut best = (f64::INFINITY, 0usize, 0.0f64); // (weighted child gini, feat, thresh)
+    let mut left_counts = vec![0.0; n_classes];
+    for &f in &feats {
+        // threshold candidates: quantiles of ~64 sampled values
+        let mut sample: Vec<f64> = (0..64.min(hi - lo))
+            .map(|_| x[(idx[lo + rng.index(hi - lo)] as usize, f)])
+            .collect();
+        sample.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let mut cand = Vec::with_capacity(params.n_thresholds);
+        for t in 1..=params.n_thresholds {
+            let q = sample[(t * (sample.len() - 1)) / (params.n_thresholds + 1)];
+            if cand.last() != Some(&q) {
+                cand.push(q);
+            }
+        }
+        // per-candidate class counts in one indirect scan of the node
+        let mut left = vec![vec![0.0; n_classes]; cand.len()];
+        for i in lo..hi {
+            if i + 8 < hi {
+                // _mm_prefetch(&X[idx[i+8]][f]) — Section V-C insertion
+                rec.prefetch(regions.r_x.f64(idx[i + 8] as usize * m + f), 8);
+            }
+            let s = idx[i] as usize;
+            rec.load(regions.r_idx.elem(i, 4), 4);
+            rec.load_for_branch(regions.r_x.f64(s * m + f), 8);
+            rec.load(regions.r_y.elem(s, 4), 4);
+            rec.compute(overhead, 1);
+            let v = x[(s, f)];
+            let cls = y[s] as usize;
+            let w = wt(idx[i]);
+            // one data-dependent branch per element (against the median
+            // candidate — how the compiled scan short-circuits); the
+            // other candidate comparisons are branchless accumulations
+            rec.profile_tick();
+            // compiled scans short-circuit against the 75th-percentile
+            // candidate: a biased (not 50/50) data-dependent branch
+            rec.fcmp_branch(SITE_SCAN_LE, v <= cand[3 * cand.len() / 4]);
+            // unrolled candidate-accumulation loop back-edges
+            rec.loop_branch(SITE_SCAN_LE + 8, (cand.len() / 4).max(2) as u32);
+            rec.compute(0, cand.len() as u32);
+            for (ci, &c) in cand.iter().enumerate() {
+                if v <= c {
+                    left[ci][cls] += w;
+                }
+            }
+        }
+        for (ci, lc) in left.iter().enumerate() {
+            let lw: f64 = lc.iter().sum();
+            let rw = total_w - lw;
+            if lw <= 0.0 || rw <= 0.0 {
+                continue;
+            }
+            left_counts.clone_from(lc);
+            let rc: Vec<f64> = counts.iter().zip(lc).map(|(a, b)| a - b).collect();
+            let score = (lw * gini(&left_counts) + rw * gini(&rc)) / total_w;
+            if score < best.0 {
+                best = (score, f, cand[ci]);
+            }
+        }
+    }
+
+    if best.0 >= node_gini - 1e-12 {
+        nodes.push(CNode::Leaf { label: majority });
+        return me;
+    }
+    let (_, f, thresh) = best;
+
+    // in-place partition of the index range (Hoare-style)
+    let mut store = lo;
+    for i in lo..hi {
+        if i + 8 < hi {
+            rec.prefetch(regions.r_x.f64(idx[i + 8] as usize * m + f), 8);
+        }
+        let s = idx[i] as usize;
+        rec.load(regions.r_idx.elem(i, 4), 4);
+        rec.load_for_branch(regions.r_x.f64(s * m + f), 8);
+        if rec.fcmp_branch(SITE_PART, x[(s, f)] <= thresh) {
+            idx.swap(i, store);
+            rec.store(regions.r_idx.elem(store, 4), 4);
+            rec.store(regions.r_idx.elem(i, 4), 4);
+            store += 1;
+        }
+    }
+    let mid = store;
+    if mid == lo || mid == hi {
+        nodes.push(CNode::Leaf { label: majority });
+        return me;
+    }
+    nodes.push(CNode::Leaf { label: usize::MAX }); // placeholder
+    let left = fit_rec(
+        x, y, n_classes, idx, lo, mid, weights, params, regions, rec, rng, nodes,
+        depth + 1, overhead,
+    );
+    let right = fit_rec(
+        x, y, n_classes, idx, mid, hi, weights, params, regions, rec, rng, nodes,
+        depth + 1, overhead,
+    );
+    nodes[me] = CNode::Split { feat: f, thresh, left, right };
+    me
+}
+
+impl CartTree {
+    /// Untraced prediction (tests / quality computation).
+    pub fn predict(&self, row: &[f64]) -> usize {
+        let mut node = 0;
+        loop {
+            match &self.nodes[node] {
+                CNode::Leaf { label } => return *label,
+                CNode::Split { feat, thresh, left, right } => {
+                    node = if row[*feat] <= *thresh { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    /// Traced prediction: node loads feed the traversal branches.
+    pub fn predict_traced(
+        &self,
+        x: &Matrix,
+        row_i: usize,
+        regions: &CartRegions,
+        rec: &mut Recorder,
+    ) -> usize {
+        let m = x.cols();
+        let mut node = 0;
+        loop {
+            rec.load_for_branch(regions.r_nodes.at((node as u64 * 32) % regions.r_nodes.len()), 32);
+            match &self.nodes[node] {
+                CNode::Leaf { label } => return *label,
+                CNode::Split { feat, thresh, left, right } => {
+                    rec.load_for_branch(regions.r_x.f64(row_i * m + feat), 8);
+                    let go_left = x[(row_i, *feat)] <= *thresh;
+                    rec.fcmp_branch(SITE_TRAVERSE, go_left);
+                    node = if go_left { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn depth_hint(&self) -> usize {
+        // nodes were pushed depth-first; a rough bound suffices for tests
+        (self.nodes.len() as f64).log2().ceil() as usize
+    }
+}
+
+/// The Decision Tree workload.
+pub struct DecisionTree {
+    pub params: CartParams,
+}
+
+impl Default for DecisionTree {
+    fn default() -> Self {
+        Self { params: CartParams::default() }
+    }
+}
+
+impl Workload for DecisionTree {
+    fn name(&self) -> &'static str {
+        "Decision Tree"
+    }
+
+    fn category(&self) -> Category {
+        Category::TreeBased
+    }
+
+    fn make_dataset(&self, rows: usize, features: usize, seed: u64) -> Dataset {
+        make_classification(rows, features, (features * 3 / 4).max(2), 4, 0.05, seed)
+    }
+
+    fn run(&self, ds: &Dataset, ctx: &RunContext, rec: &mut Recorder) -> RunResult {
+        let n = ds.n_samples();
+        let mut space = AddressSpace::new();
+        let regions = CartRegions::alloc(&mut space, n, ds.n_features(), "dtree");
+        let mut rng = Pcg64::new(ctx.seed);
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        let tree = fit_cart(
+            &ds.x,
+            &ds.y,
+            ds.n_classes.max(2),
+            &mut idx,
+            None,
+            &self.params,
+            &regions,
+            rec,
+            &mut rng,
+            ctx.profile.loop_overhead_uops(),
+        );
+        // traced prediction pass (the paper's trained-model usage phase)
+        let mut correct = 0usize;
+        for i in 0..n {
+            let pred = tree.predict_traced(&ds.x, i, &regions, rec);
+            if pred == ds.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / n as f64;
+        RunResult {
+            quality: acc,
+            detail: format!("train accuracy {acc:.4}, {} nodes", tree.n_nodes()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{InstructionMix, NullSink};
+
+    #[test]
+    fn tree_fits_separable_data() {
+        let w = DecisionTree::default();
+        let ds = w.make_dataset(1000, 10, 41);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let res = w.run(&ds, &RunContext::default(), &mut rec);
+        assert!(res.quality > 0.8, "accuracy {} ({})", res.quality, res.detail);
+    }
+
+    #[test]
+    fn deeper_trees_fit_train_data_better() {
+        let ds = DecisionTree::default().make_dataset(800, 8, 42);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let shallow = DecisionTree {
+            params: CartParams { max_depth: 2, ..Default::default() },
+        }
+        .run(&ds, &RunContext::default(), &mut rec);
+        let deep = DecisionTree {
+            params: CartParams { max_depth: 12, ..Default::default() },
+        }
+        .run(&ds, &RunContext::default(), &mut rec);
+        assert!(deep.quality >= shallow.quality, "{} vs {}", shallow.quality, deep.quality);
+    }
+
+    #[test]
+    fn gini_extremes() {
+        assert_eq!(gini(&[10.0, 0.0]), 0.0);
+        assert!((gini(&[5.0, 5.0]) - 0.5).abs() < 1e-12);
+        assert_eq!(gini(&[]), 0.0);
+        assert_eq!(gini(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn pure_node_becomes_leaf() {
+        let mut x = Matrix::zeros(20, 2);
+        let y = vec![1.0; 20];
+        for i in 0..20 {
+            x[(i, 0)] = i as f64;
+        }
+        let mut space = AddressSpace::new();
+        let regions = CartRegions::alloc(&mut space, 20, 2, "t");
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let mut rng = Pcg64::new(1);
+        let mut idx: Vec<u32> = (0..20).collect();
+        let t = fit_cart(
+            &x, &y, 2, &mut idx, None, &CartParams::default(), &regions, &mut rec,
+            &mut rng, 1,
+        );
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.predict(&[0.0, 0.0]), 1);
+    }
+
+    #[test]
+    fn weights_bias_the_majority() {
+        // two overlapping classes; upweighting class 1 samples must make
+        // a depth-0-ish tree prefer label 1
+        let mut x = Matrix::zeros(10, 1);
+        let mut y = vec![0.0; 10];
+        for i in 0..10 {
+            x[(i, 0)] = (i % 2) as f64; // useless feature
+            y[i] = (i < 4) as usize as f64; // 4 ones, 6 zeros
+        }
+        let mut w = vec![1.0; 10];
+        for (i, wi) in w.iter_mut().enumerate() {
+            if y[i] == 1.0 {
+                *wi = 10.0;
+            }
+        }
+        let mut space = AddressSpace::new();
+        let regions = CartRegions::alloc(&mut space, 10, 1, "t");
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let mut rng = Pcg64::new(2);
+        let mut idx: Vec<u32> = (0..10).collect();
+        let params = CartParams { max_depth: 0, ..Default::default() };
+        let t = fit_cart(&x, &y, 2, &mut idx, Some(&w), &params, &regions, &mut rec, &mut rng, 1);
+        assert_eq!(t.predict(&[0.0]), 1);
+    }
+
+    #[test]
+    fn branch_heavy_poorly_predicted_trace() {
+        let w = DecisionTree::default();
+        let ds = w.make_dataset(600, 8, 43);
+        let mut mix = InstructionMix::default();
+        {
+            let mut rec = Recorder::new(&mut mix, 0);
+            w.run(&ds, &RunContext::default(), &mut rec);
+        }
+        // paper Fig. 5: tree workloads ~20-25% branches
+        assert!(mix.branch_fraction() > 0.12, "{}", mix.branch_fraction());
+    }
+}

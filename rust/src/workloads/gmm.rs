@@ -1,0 +1,182 @@
+//! Gaussian Mixture Model [SM92] — neighbour-based workload.
+//!
+//! Expectation–Maximization with diagonal covariances (scikit-learn's
+//! `GaussianMixture(covariance_type="diag")`, mlpack's `GMM`): each EM
+//! iteration streams every sample, evaluates k log-densities (FP-heavy),
+//! normalizes responsibilities, and accumulates sufficient statistics.
+//! Honours [`RunContext::visit_order`]. Quality metric: mean per-sample
+//! log-likelihood (increases monotonically under EM).
+
+use super::{Category, RunContext, RunResult, Workload};
+use crate::data::{make_blobs, Dataset};
+use crate::trace::{AddressSpace, Recorder};
+use crate::util::stats::logsumexp;
+use crate::util::Pcg64;
+
+const LOG_2PI: f64 = 1.8378770664093453;
+
+/// GMM workload.
+pub struct Gmm {
+    pub k: usize,
+    /// Variance floor for numerical stability.
+    pub reg: f64,
+}
+
+impl Default for Gmm {
+    fn default() -> Self {
+        Self { k: 5, reg: 1e-6 }
+    }
+}
+
+impl Workload for Gmm {
+    fn name(&self) -> &'static str {
+        "GMM"
+    }
+
+    fn category(&self) -> Category {
+        Category::NeighbourBased
+    }
+
+    fn supports_visit_order(&self) -> bool {
+        true
+    }
+
+    fn make_dataset(&self, rows: usize, features: usize, seed: u64) -> Dataset {
+        make_blobs(rows, features, self.k, 1.2, seed)
+    }
+
+    fn run(&self, ds: &Dataset, ctx: &RunContext, rec: &mut Recorder) -> RunResult {
+        let (n, m) = (ds.n_samples(), ds.n_features());
+        let k = self.k.min(n);
+        let mut space = AddressSpace::new();
+        let r_x = space.alloc_matrix("gmm.x", n, m);
+        let r_params = space.alloc_matrix("gmm.params", k, 2 * m + 1);
+        let r_resp = space.alloc_matrix("gmm.resp", n, k);
+        let overhead = ctx.profile.loop_overhead_uops();
+
+        // init means at random rows, unit variances, uniform weights
+        let mut rng = Pcg64::new(ctx.seed);
+        let init = rng.sample_indices(n, k);
+        let mut means: Vec<Vec<f64>> = init.iter().map(|&i| ds.x.row(i).to_vec()).collect();
+        let mut vars: Vec<Vec<f64>> = vec![vec![1.0; m]; k];
+        let mut weights = vec![1.0 / k as f64; k];
+
+        let default_order: Vec<usize> = (0..n).collect();
+        let order = ctx.visit_order.as_deref().unwrap_or(&default_order);
+        assert_eq!(order.len(), n, "visit order must cover all samples");
+
+        let mut mean_ll = f64::NEG_INFINITY;
+        let mut logp = vec![0.0; k];
+        for _iter in 0..ctx.iterations.max(1) {
+            let mut w_acc = vec![0.0; k];
+            let mut mu_acc = vec![vec![0.0; m]; k];
+            let mut var_acc = vec![vec![0.0; m]; k];
+            let mut ll_sum = 0.0;
+            for &i in order {
+                rec.load_row(r_x, i, m);
+                // parameter block is small and cache-resident
+                rec.load(r_params.at(0), (k * (2 * m + 1) * 8) as u32);
+                let _ = overhead;
+                rec.profile_tick();
+                rec.compute(2, (k * (4 * m + 6)) as u32);
+                // sklearn materializes the (n, k) responsibility matrix
+                rec.store(r_resp.at((i * k * 8) as u64), (k * 8) as u32);
+                let row = ds.x.row(i);
+                for c in 0..k {
+                    rec.loop_branch(1, (m / 2).max(1) as u32);
+                    let mut lp = weights[c].max(1e-300).ln();
+                    for j in 0..m {
+                        let v = vars[c][j];
+                        let d = row[j] - means[c][j];
+                        lp += -0.5 * (LOG_2PI + v.ln() + d * d / v);
+                    }
+                    logp[c] = lp;
+                }
+                let z = logsumexp(&logp);
+                ll_sum += z;
+                for c in 0..k {
+                    let resp = (logp[c] - z).exp();
+                    w_acc[c] += resp;
+                    for j in 0..m {
+                        mu_acc[c][j] += resp * row[j];
+                        var_acc[c][j] += resp * row[j] * row[j];
+                    }
+                }
+                rec.compute(0, (3 * k * m) as u32);
+            }
+            // M-step (in-cache parameter update)
+            rec.store(r_params.at(0), (k * (2 * m + 1) * 8) as u32);
+            rec.compute(0, (3 * k * m) as u32);
+            for c in 0..k {
+                let wc = w_acc[c].max(1e-12);
+                weights[c] = wc / n as f64;
+                for j in 0..m {
+                    means[c][j] = mu_acc[c][j] / wc;
+                    vars[c][j] =
+                        (var_acc[c][j] / wc - means[c][j] * means[c][j]).max(self.reg);
+                }
+            }
+            mean_ll = ll_sum / n as f64;
+        }
+        RunResult {
+            quality: mean_ll,
+            detail: format!("mean log-lik {mean_ll:.4}, k={k}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    fn run_gmm(iters: usize, seed: u64) -> RunResult {
+        let w = Gmm { k: 3, reg: 1e-6 };
+        let ds = w.make_dataset(600, 6, seed);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        w.run(&ds, &RunContext { iterations: iters, ..Default::default() }, &mut rec)
+    }
+
+    #[test]
+    fn loglik_improves_with_em() {
+        let r1 = run_gmm(1, 24);
+        let r10 = run_gmm(10, 24);
+        assert!(r10.quality > r1.quality, "{} -> {}", r1.quality, r10.quality);
+    }
+
+    #[test]
+    fn fits_blobs_reasonably() {
+        let r = run_gmm(15, 25);
+        // 6 dims of unit-ish variance: per-dim NLL about -(0.5 ln 2πe) ≈ -1.42
+        assert!(r.quality > -13.0, "mean ll {}", r.quality);
+    }
+
+    #[test]
+    fn visit_order_invariant() {
+        let w = Gmm { k: 3, reg: 1e-6 };
+        let ds = w.make_dataset(300, 5, 26);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let a = w.run(&ds, &RunContext { iterations: 4, ..Default::default() }, &mut rec);
+        let rev: Vec<usize> = (0..300).rev().collect();
+        let b = w.run(
+            &ds,
+            &RunContext { iterations: 4, visit_order: Some(rev), ..Default::default() },
+            &mut rec,
+        );
+        assert!((a.quality - b.quality).abs() < 1e-6, "{} vs {}", a.quality, b.quality);
+    }
+
+    #[test]
+    fn fp_heavy_low_branch_trace() {
+        let w = Gmm::default();
+        let ds = w.make_dataset(300, 6, 27);
+        let mut mix = crate::trace::InstructionMix::default();
+        {
+            let mut rec = Recorder::new(&mut mix, 0);
+            w.run(&ds, &RunContext { iterations: 2, ..Default::default() }, &mut rec);
+        }
+        assert!(mix.fp_ops > 10 * mix.branches, "GMM is FP-dominated");
+    }
+}

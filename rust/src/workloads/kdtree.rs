@@ -1,0 +1,506 @@
+//! Spatial-tree substrate for the neighbour-based workloads.
+//!
+//! scikit-learn's `neighbors` module stores neighbourhood information in a
+//! **K-D tree** [Ben75]; mlpack uses a **binary space tree** [Tót05]. Both
+//! keep a permuted *index array* whose entries point at dataset rows — the
+//! `A[B[i]]` indirect access pattern the paper identifies as the
+//! neighbour-based workloads' main bottleneck (Section IV, Fig. 11).
+//!
+//! The tree here is both *real* (returns exact nearest neighbours /
+//! radius sets, verified against brute force in tests) and *instrumented*
+//! (emits node loads, split-comparison branches and indirect row loads,
+//! plus the optional software-prefetch events of Section V-C).
+
+use crate::trace::{AddressSpace, Recorder, Region};
+use crate::util::stats::sqdist;
+use crate::util::Matrix;
+
+/// Splitting rule: K-D median split (sklearn) or widest-dimension
+/// midpoint binary-space split (mlpack).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TreeKind {
+    KdTree,
+    BallTree,
+}
+
+/// Tree node: an internal split or a leaf range of the index array.
+#[derive(Debug, Clone)]
+enum Node {
+    Split { dim: usize, thresh: f64, left: usize, right: usize },
+    Leaf { start: usize, end: usize },
+}
+
+// Branch-site ids within this substrate's namespace.
+const SITE_DESCEND: u32 = 1;
+const SITE_LEAF_BETTER: u32 = 2;
+const SITE_PRUNE: u32 = 3;
+const SITE_RADIUS_IN: u32 = 4;
+const SITE_BUILD_PART: u32 = 5;
+const SITE_DIST_LOOP: u32 = 6;
+
+/// Bytes of one packed node record in the modelled layout
+/// (dim + threshold + children + bounds ≈ 48 B).
+const NODE_BYTES: u64 = 48;
+
+/// An instrumented spatial tree over the rows of a dataset matrix.
+pub struct TraceTree {
+    nodes: Vec<Node>,
+    /// Permuted row indices — the paper's Fig. 11 "indices of the dataset
+    /// rows of the samples lying in a certain geometric partition".
+    idx: Vec<u32>,
+    kind: TreeKind,
+    /// Modelled regions: node array, index array, data matrix.
+    pub r_nodes: Region,
+    pub r_idx: Region,
+    pub r_data: Region,
+    cols: usize,
+}
+
+impl TraceTree {
+    /// Build over `data` (whose modelled region is `r_data`), emitting the
+    /// build trace into `rec`. `space` allocates the tree's own arrays.
+    pub fn build(
+        data: &Matrix,
+        r_data: Region,
+        space: &mut AddressSpace,
+        kind: TreeKind,
+        leaf_size: usize,
+        rec: &mut Recorder,
+    ) -> Self {
+        let n = data.rows();
+        assert!(n > 0, "cannot build a tree over zero rows");
+        let leaf_size = leaf_size.max(2);
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        let mut nodes = Vec::new();
+        let r_idx = space.alloc("tree.idx", n as u64 * 4);
+        build_rec(data, r_data, r_idx, kind, leaf_size, &mut idx, 0, n, &mut nodes, rec);
+        let r_nodes = space.alloc("tree.nodes", nodes.len() as u64 * NODE_BYTES);
+        Self { nodes, idx, kind, r_nodes, r_idx, r_data, cols: data.cols() }
+    }
+
+    /// Number of tree nodes.
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Which splitting rule built this tree.
+    pub fn kind(&self) -> TreeKind {
+        self.kind
+    }
+
+    /// The permuted index array (leaf order = spatial order; used by the
+    /// first-touch inspector).
+    pub fn leaf_order(&self) -> &[u32] {
+        &self.idx
+    }
+
+    /// k nearest neighbours of `q`: (sqdist, row) pairs sorted ascending.
+    /// `lookahead > 0` enables software prefetching of the dataset row
+    /// `lookahead` leaf entries ahead (Section V-C's optimization).
+    pub fn knn(
+        &self,
+        data: &Matrix,
+        q: &[f64],
+        k: usize,
+        rec: &mut Recorder,
+        lookahead: usize,
+    ) -> Vec<(f64, u32)> {
+        assert!(k > 0);
+        let mut best: Vec<(f64, u32)> = Vec::with_capacity(k + 1);
+        self.knn_rec(0, data, q, k, &mut best, rec, lookahead);
+        best
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn knn_rec(
+        &self,
+        node: usize,
+        data: &Matrix,
+        q: &[f64],
+        k: usize,
+        best: &mut Vec<(f64, u32)>,
+        rec: &mut Recorder,
+        lookahead: usize,
+    ) {
+        // the node record is loaded and its fields feed the branches below
+        rec.load_for_branch(self.r_nodes.at(node as u64 * NODE_BYTES), NODE_BYTES as u32);
+        match &self.nodes[node] {
+            Node::Leaf { start, end } => {
+                self.scan_leaf(*start, *end, data, q, k, best, rec, lookahead);
+            }
+            Node::Split { dim, thresh, left, right } => {
+                let go_left = q[*dim] <= *thresh;
+                rec.fcmp_branch(SITE_DESCEND, go_left);
+                let (near, far) = if go_left { (*left, *right) } else { (*right, *left) };
+                self.knn_rec(near, data, q, k, best, rec, lookahead);
+                // visit the far side only if the splitting plane is closer
+                // than the current worst neighbour (K-D pruning rule; the
+                // ball/BSP rule differs only in the bound it computes)
+                let plane = q[*dim] - *thresh;
+                let need_far = best.len() < k || plane * plane < best.last().unwrap().0;
+                rec.compute(0, 2);
+                if rec.fcmp_branch(SITE_PRUNE, need_far) {
+                    self.knn_rec(far, data, q, k, best, rec, lookahead);
+                }
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn scan_leaf(
+        &self,
+        start: usize,
+        end: usize,
+        data: &Matrix,
+        q: &[f64],
+        k: usize,
+        best: &mut Vec<(f64, u32)>,
+        rec: &mut Recorder,
+        lookahead: usize,
+    ) {
+        let cols = self.cols;
+        for i in start..end {
+            if lookahead > 0 && i + lookahead < end {
+                // _mm_prefetch(&X[idx[i+d]][0]) — index is in cache (the
+                // idx array streams), the target row usually is not
+                let ahead = self.idx[i + lookahead] as usize;
+                rec.prefetch(self.r_data.f64(ahead * cols), (cols * 8) as u32);
+            }
+            let row = self.idx[i] as usize;
+            rec.load_indirect_row(self.r_idx, i, self.r_data, row, cols);
+            rec.profile_tick();
+            rec.compute(2, (2 * cols) as u32);
+            rec.loop_branch(SITE_DIST_LOOP, (cols / 2).max(1) as u32);
+            let d = sqdist(q, data.row(row));
+            let better = best.len() < k || d < best.last().unwrap().0;
+            if rec.fcmp_branch(SITE_LEAF_BETTER, better) {
+                let pos = best.partition_point(|(bd, _)| *bd < d);
+                best.insert(pos, (d, row as u32));
+                if best.len() > k {
+                    best.pop();
+                }
+            }
+        }
+    }
+
+    /// All rows within squared distance `eps_sq` of `q`, appended to `out`.
+    pub fn radius(
+        &self,
+        data: &Matrix,
+        q: &[f64],
+        eps_sq: f64,
+        rec: &mut Recorder,
+        out: &mut Vec<u32>,
+        lookahead: usize,
+    ) {
+        self.radius_rec(0, data, q, eps_sq, rec, out, lookahead);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn radius_rec(
+        &self,
+        node: usize,
+        data: &Matrix,
+        q: &[f64],
+        eps_sq: f64,
+        rec: &mut Recorder,
+        out: &mut Vec<u32>,
+        lookahead: usize,
+    ) {
+        rec.load_for_branch(self.r_nodes.at(node as u64 * NODE_BYTES), NODE_BYTES as u32);
+        match &self.nodes[node] {
+            Node::Leaf { start, end } => {
+                let cols = self.cols;
+                for i in *start..*end {
+                    if lookahead > 0 && i + lookahead < *end {
+                        let ahead = self.idx[i + lookahead] as usize;
+                        rec.prefetch(self.r_data.f64(ahead * cols), (cols * 8) as u32);
+                    }
+                    let row = self.idx[i] as usize;
+                    rec.load_indirect_row(self.r_idx, i, self.r_data, row, cols);
+                    rec.profile_tick();
+                    rec.compute(2, (2 * cols) as u32);
+                    rec.loop_branch(SITE_DIST_LOOP, (cols / 2).max(1) as u32);
+                    let d = sqdist(q, data.row(row));
+                    if rec.fcmp_branch(SITE_RADIUS_IN, d <= eps_sq) {
+                        out.push(row as u32);
+                    }
+                }
+            }
+            Node::Split { dim, thresh, left, right } => {
+                let eps = eps_sq.sqrt();
+                let delta = q[*dim] - *thresh;
+                rec.compute(0, 2);
+                if rec.fcmp_branch(SITE_DESCEND, delta <= eps) {
+                    self.radius_rec(*left, data, q, eps_sq, rec, out, lookahead);
+                }
+                if rec.fcmp_branch(SITE_DESCEND, delta >= -eps) {
+                    self.radius_rec(*right, data, q, eps_sq, rec, out, lookahead);
+                }
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn build_rec(
+    data: &Matrix,
+    r_data: Region,
+    r_idx: Region,
+    kind: TreeKind,
+    leaf_size: usize,
+    idx: &mut Vec<u32>,
+    lo: usize,
+    hi: usize,
+    nodes: &mut Vec<Node>,
+    rec: &mut Recorder,
+) -> usize {
+    let me = nodes.len();
+    if hi - lo <= leaf_size {
+        nodes.push(Node::Leaf { start: lo, end: hi });
+        return me;
+    }
+    let cols = data.cols();
+    // Choose the widest-spread dimension (sampled to bound build cost —
+    // both real libraries use cheap spread estimates).
+    let stride = ((hi - lo) / 64).max(1);
+    let mut best_dim = 0;
+    let mut best_spread = -1.0;
+    for d in 0..cols {
+        let mut mn = f64::INFINITY;
+        let mut mx = f64::NEG_INFINITY;
+        let mut i = lo;
+        while i < hi {
+            let v = data[(idx[i] as usize, d)];
+            rec.load(r_idx.elem(i, 4), 4);
+            rec.load(r_data.f64(idx[i] as usize * cols + d), 8);
+            mn = mn.min(v);
+            mx = mx.max(v);
+            i += stride;
+        }
+        rec.compute(2, 2);
+        if mx - mn > best_spread {
+            best_spread = mx - mn;
+            best_dim = d;
+        }
+    }
+    let dim = best_dim;
+
+    // Partition point and a *valid separator* threshold: every element in
+    // [lo, mid) has value <= thresh and every element in [mid, hi) has
+    // value >= thresh — required for the pruning bound to be sound.
+    let (mid, thresh) = match kind {
+        TreeKind::KdTree => {
+            let mid = lo + (hi - lo) / 2;
+            idx[lo..hi].select_nth_unstable_by(mid - lo, |&a, &b| {
+                data[(a as usize, dim)]
+                    .partial_cmp(&data[(b as usize, dim)])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            (mid, data[(idx[mid] as usize, dim)])
+        }
+        TreeKind::BallTree => {
+            // midpoint split with a degenerate-partition fallback
+            let mut mn = f64::INFINITY;
+            let mut mx = f64::NEG_INFINITY;
+            for i in lo..hi {
+                let v = data[(idx[i] as usize, dim)];
+                mn = mn.min(v);
+                mx = mx.max(v);
+            }
+            let pivot = 0.5 * (mn + mx);
+            let seg = &mut idx[lo..hi];
+            let mut store = 0usize;
+            for i in 0..seg.len() {
+                if data[(seg[i] as usize, dim)] < pivot {
+                    seg.swap(i, store);
+                    store += 1;
+                }
+            }
+            if store == 0 || store == seg.len() {
+                let m = seg.len() / 2;
+                seg.select_nth_unstable_by(m, |&a, &b| {
+                    data[(a as usize, dim)]
+                        .partial_cmp(&data[(b as usize, dim)])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                (lo + m, data[(idx[lo + m] as usize, dim)])
+            } else {
+                // pivot separates the two sides by construction
+                (lo + store, pivot)
+            }
+        }
+    };
+
+    // Trace the partition pass: one indirect scalar load plus one
+    // compare-branch per element (outcome pattern ~data-dependent).
+    for i in lo..hi {
+        rec.load(r_idx.elem(i, 4), 4);
+        rec.load_for_branch(r_data.f64(idx[i] as usize * cols + dim), 8);
+        rec.fcmp_branch(SITE_BUILD_PART, i < mid);
+    }
+    nodes.push(Node::Leaf { start: 0, end: 0 }); // placeholder, patched below
+    let left = build_rec(data, r_data, r_idx, kind, leaf_size, idx, lo, mid, nodes, rec);
+    let right = build_rec(data, r_data, r_idx, kind, leaf_size, idx, mid, hi, nodes, rec);
+    nodes[me] = Node::Split { dim, thresh, left, right };
+    me
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::make_blobs;
+    use crate::trace::{NullSink, VecSink};
+
+    fn brute_knn(data: &Matrix, q: &[f64], k: usize) -> Vec<(f64, u32)> {
+        let mut all: Vec<(f64, u32)> = (0..data.rows())
+            .map(|i| (sqdist(q, data.row(i)), i as u32))
+            .collect();
+        all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        all.truncate(k);
+        all
+    }
+
+    fn build_tree(kind: TreeKind, n: usize) -> (Matrix, TraceTree) {
+        let ds = make_blobs(n, 5, 4, 2.0, 21);
+        let mut space = AddressSpace::new();
+        let r_data = space.alloc_matrix("x", ds.x.rows(), ds.x.cols());
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 99);
+        let t = TraceTree::build(&ds.x, r_data, &mut space, kind, 16, &mut rec);
+        (ds.x, t)
+    }
+
+    #[test]
+    fn kd_knn_matches_brute_force() {
+        let (x, t) = build_tree(TreeKind::KdTree, 500);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 99);
+        for qi in [0usize, 13, 250, 499] {
+            let got = t.knn(&x, x.row(qi), 5, &mut rec, 0);
+            let want = brute_knn(&x, x.row(qi), 5);
+            assert_eq!(got.len(), 5);
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!((g.0 - w.0).abs() < 1e-9, "dist mismatch {g:?} {w:?}");
+            }
+            // nearest neighbour of a dataset point is itself
+            assert_eq!(got[0].1 as usize, qi);
+        }
+    }
+
+    #[test]
+    fn ball_knn_matches_brute_force() {
+        let (x, t) = build_tree(TreeKind::BallTree, 500);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 99);
+        for qi in [7usize, 100, 333] {
+            let got = t.knn(&x, x.row(qi), 3, &mut rec, 0);
+            let want = brute_knn(&x, x.row(qi), 3);
+            for (g, w) in got.iter().zip(want.iter()) {
+                assert!((g.0 - w.0).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn radius_matches_brute_force() {
+        let (x, t) = build_tree(TreeKind::KdTree, 400);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 99);
+        let eps_sq = 4.0;
+        for qi in [0usize, 200, 399] {
+            let mut got = Vec::new();
+            t.radius(&x, x.row(qi), eps_sq, &mut rec, &mut got, 0);
+            got.sort_unstable();
+            let mut want: Vec<u32> = (0..x.rows() as u32)
+                .filter(|&i| sqdist(x.row(qi), x.row(i as usize)) <= eps_sq)
+                .collect();
+            want.sort_unstable();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn tree_prunes_compared_to_brute() {
+        // the traced leaf scans must touch far fewer rows than brute force
+        let (x, t) = build_tree(TreeKind::KdTree, 2000);
+        let mut sink = VecSink::default();
+        {
+            let mut rec = Recorder::new(&mut sink, 99);
+            t.knn(&x, x.row(77), 5, &mut rec, 0);
+        }
+        let row_loads = sink
+            .events
+            .iter()
+            .filter(|e| matches!(e, crate::trace::Event::Load { size, .. } if *size == 40))
+            .count();
+        assert!(
+            row_loads < 2000 / 3,
+            "tree visited {row_loads} rows of 2000 — no pruning?"
+        );
+        assert!(row_loads > 5, "must at least scan some leaves");
+    }
+
+    #[test]
+    fn query_emits_branches_and_indirect_loads() {
+        let (x, t) = build_tree(TreeKind::KdTree, 300);
+        let mut sink = VecSink::default();
+        {
+            let mut rec = Recorder::new(&mut sink, 99);
+            t.knn(&x, x.row(3), 4, &mut rec, 0);
+        }
+        let branches = sink
+            .events
+            .iter()
+            .filter(|e| matches!(e, crate::trace::Event::Branch { .. }))
+            .count();
+        let idx_loads = sink
+            .events
+            .iter()
+            .filter(|e| matches!(e, crate::trace::Event::Load { size: 4, .. }))
+            .count();
+        assert!(branches > 10);
+        assert!(idx_loads > 10, "A[B[i]] index loads expected");
+    }
+
+    #[test]
+    fn lookahead_emits_sw_prefetches_only_when_enabled() {
+        let (x, t) = build_tree(TreeKind::KdTree, 300);
+        let count_pf = |enable: bool| {
+            let mut sink = VecSink::default();
+            {
+                let mut rec = Recorder::new(&mut sink, 99);
+                rec.sw_prefetch_enabled = enable;
+                t.knn(&x, x.row(3), 4, &mut rec, 4);
+            }
+            sink.events
+                .iter()
+                .filter(|e| matches!(e, crate::trace::Event::SwPrefetch { .. }))
+                .count()
+        };
+        assert_eq!(count_pf(false), 0);
+        assert!(count_pf(true) > 0);
+    }
+
+    #[test]
+    fn leaf_order_is_permutation() {
+        let (_, t) = build_tree(TreeKind::BallTree, 257);
+        let mut sorted: Vec<u32> = t.leaf_order().to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..257).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn single_leaf_tree_works() {
+        let ds = make_blobs(5, 3, 1, 1.0, 2);
+        let mut space = AddressSpace::new();
+        let r = space.alloc_matrix("x", 5, 3);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 99);
+        let t = TraceTree::build(&ds.x, r, &mut space, TreeKind::KdTree, 16, &mut rec);
+        assert_eq!(t.n_nodes(), 1);
+        let got = t.knn(&ds.x, ds.x.row(2), 2, &mut rec, 0);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].1, 2);
+    }
+}

@@ -1,0 +1,197 @@
+//! KMeans clustering [Llo82] — neighbour-based workload.
+//!
+//! Lloyd's algorithm (scikit-learn's `KMeans(algorithm="lloyd")`, mlpack's
+//! `kmeans`): each iteration streams every sample, computes distances to
+//! all k centroids (argmin with a data-dependent compare-branch per
+//! centroid — the source of KMeans' branch traffic), then recomputes
+//! centroids. The per-sample outer loop honours
+//! [`RunContext::visit_order`], making KMeans a computation-reordering
+//! target (paper Section VI). Quality metric: **negative inertia** (so
+//! larger = better, consistent across workloads).
+
+use super::{Category, RunContext, RunResult, Workload};
+use crate::data::{make_blobs, Dataset};
+use crate::trace::{AddressSpace, Recorder};
+use crate::util::stats::sqdist;
+use crate::util::Pcg64;
+
+const SITE_BETTER: u32 = 1;
+const SITE_MOVED: u32 = 2;
+const SITE_DIST_LOOP: u32 = 3;
+
+/// KMeans workload.
+pub struct KMeans {
+    pub k: usize,
+}
+
+impl Default for KMeans {
+    fn default() -> Self {
+        Self { k: 8 }
+    }
+}
+
+impl Workload for KMeans {
+    fn name(&self) -> &'static str {
+        "KMeans"
+    }
+
+    fn category(&self) -> Category {
+        Category::NeighbourBased
+    }
+
+    fn supports_visit_order(&self) -> bool {
+        true
+    }
+
+    fn make_dataset(&self, rows: usize, features: usize, seed: u64) -> Dataset {
+        make_blobs(rows, features, self.k, 1.0, seed)
+    }
+
+    fn run(&self, ds: &Dataset, ctx: &RunContext, rec: &mut Recorder) -> RunResult {
+        let (n, m) = (ds.n_samples(), ds.n_features());
+        let k = self.k.min(n);
+        let mut space = AddressSpace::new();
+        let r_x = space.alloc_matrix("kmeans.x", n, m);
+        let r_c = space.alloc_matrix("kmeans.centroids", k, m);
+        let r_assign = space.alloc("kmeans.assign", n as u64 * 4);
+        let overhead = ctx.profile.loop_overhead_uops();
+
+        // init: k distinct random rows (sklearn "random" init)
+        let mut rng = Pcg64::new(ctx.seed);
+        let init = rng.sample_indices(n, k);
+        let mut centroids: Vec<Vec<f64>> = init.iter().map(|&i| ds.x.row(i).to_vec()).collect();
+        let mut assign = vec![0u32; n];
+        let default_order: Vec<usize> = (0..n).collect();
+        let order = ctx.visit_order.as_deref().unwrap_or(&default_order);
+        assert_eq!(order.len(), n, "visit order must cover all samples");
+
+        let mut inertia = 0.0;
+        for _iter in 0..ctx.iterations.max(1) {
+            inertia = 0.0;
+            let mut sums = vec![vec![0.0; m]; k];
+            let mut counts = vec![0usize; k];
+            for &i in order {
+                rec.load_row(r_x, i, m);
+                let _ = overhead;
+                rec.profile_tick();
+                let row = ds.x.row(i);
+                let mut best = 0usize;
+                let mut best_d = f64::INFINITY;
+                for (c, ctr) in centroids.iter().enumerate() {
+                    // centroid rows are tiny and hot in cache
+                    rec.load_row(r_c, c, m);
+                    rec.compute(1, (2 * m) as u32);
+                    rec.loop_branch(SITE_DIST_LOOP, (m / 2).max(1) as u32);
+                    let d = sqdist(row, ctr);
+                    // the argmin update branch — data-dependent
+                    if rec.fcmp_branch(SITE_BETTER, d < best_d) {
+                        best_d = d;
+                        best = c;
+                    }
+                }
+                // label store + "assignment changed" check (sklearn tracks
+                // movement for convergence)
+                rec.load_for_branch(r_assign.elem(i, 4), 4);
+                rec.cmp_branch(SITE_MOVED, assign[i] != best as u32);
+                rec.store(r_assign.elem(i, 4), 4);
+                assign[i] = best as u32;
+                inertia += best_d;
+                counts[best] += 1;
+                for (j, s) in sums[best].iter_mut().enumerate() {
+                    *s += row[j];
+                }
+                rec.compute(0, m as u32);
+            }
+            // M-step: recompute centroids (k×m, in cache)
+            rec.load(r_c.at(0), (k * m * 8) as u32);
+            rec.store(r_c.at(0), (k * m * 8) as u32);
+            rec.compute(0, (k * m) as u32);
+            for c in 0..k {
+                if counts[c] > 0 {
+                    for j in 0..m {
+                        centroids[c][j] = sums[c][j] / counts[c] as f64;
+                    }
+                }
+            }
+        }
+        RunResult {
+            quality: -inertia,
+            detail: format!("inertia {inertia:.1}, k={k}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{InstructionMix, NullSink};
+
+    fn run_kmeans(iters: usize) -> (RunResult, Dataset) {
+        let w = KMeans { k: 4 };
+        let ds = w.make_dataset(800, 8, 20);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let res = w.run(&ds, &RunContext { iterations: iters, ..Default::default() }, &mut rec);
+        (res, ds)
+    }
+
+    #[test]
+    fn inertia_improves_with_iterations() {
+        let (r1, _) = run_kmeans(1);
+        let (r10, _) = run_kmeans(10);
+        assert!(r10.quality >= r1.quality, "{} -> {}", r1.quality, r10.quality);
+    }
+
+    #[test]
+    fn clusters_blobs_tightly() {
+        let (res, ds) = run_kmeans(15);
+        // inertia per point should be near m * std² = 8 for converged blobs
+        let per_point = -res.quality / ds.n_samples() as f64;
+        // random init can merge blobs into a local optimum; bound loosely
+        assert!(per_point < 80.0, "per-point inertia {per_point}");
+    }
+
+    #[test]
+    fn visit_order_does_not_change_result() {
+        let w = KMeans { k: 3 };
+        let ds = w.make_dataset(300, 5, 21);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let base = w.run(&ds, &RunContext { iterations: 5, ..Default::default() }, &mut rec);
+        let rev: Vec<usize> = (0..300).rev().collect();
+        let ctx = RunContext { iterations: 5, visit_order: Some(rev), ..Default::default() };
+        let reordered = w.run(&ds, &ctx, &mut rec);
+        assert!(
+            (base.quality - reordered.quality).abs() < 1e-6 * base.quality.abs().max(1.0),
+            "{} vs {}",
+            base.quality,
+            reordered.quality
+        );
+    }
+
+    #[test]
+    fn branch_heavy_trace() {
+        let w = KMeans::default();
+        let ds = w.make_dataset(400, 8, 22);
+        let mut mix = InstructionMix::default();
+        {
+            let mut rec = Recorder::new(&mut mix, 0);
+            w.run(&ds, &RunContext { iterations: 2, ..Default::default() }, &mut rec);
+        }
+        // one branch per centroid per sample → branches are a visible
+        // fraction of the mix (paper Fig. 5: ~20% for neighbour workloads)
+        assert!(mix.branch_fraction() > 0.02, "{}", mix.branch_fraction());
+        assert!(mix.conditional_branch_fraction() > 0.8);
+    }
+
+    #[test]
+    #[should_panic(expected = "visit order")]
+    fn wrong_order_length_panics() {
+        let w = KMeans::default();
+        let ds = w.make_dataset(50, 4, 23);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let ctx = RunContext { visit_order: Some(vec![0, 1, 2]), ..Default::default() };
+        w.run(&ds, &ctx, &mut rec);
+    }
+}

@@ -1,0 +1,186 @@
+//! K-Nearest-Neighbours classification [FH89] — neighbour-based workload.
+//!
+//! Tree-accelerated exact kNN: scikit-learn's profile builds a K-D tree,
+//! mlpack's a binary-space tree (paper Section IV). Every query descends
+//! the tree (node loads feeding split branches) and scans leaves through
+//! the permuted index array — the canonical `A[B[i]]` irregular pattern.
+//! The query loop honours [`RunContext::visit_order`] and the leaf scans
+//! carry the Section V-C software-prefetch hooks. Quality metric:
+//! leave-one-out-style training accuracy.
+
+use super::kdtree::{TraceTree, TreeKind};
+use super::{Category, LibraryProfile, RunContext, RunResult, Workload};
+use crate::data::{make_blobs, Dataset};
+use crate::trace::{AddressSpace, Recorder};
+
+/// KNN workload.
+pub struct Knn {
+    pub k: usize,
+    pub leaf_size: usize,
+    /// Software-prefetch lookahead distance in leaf entries (0 = off;
+    /// the recorder's `sw_prefetch_enabled` flag gates actual emission).
+    pub lookahead: usize,
+}
+
+impl Default for Knn {
+    fn default() -> Self {
+        Self { k: 5, leaf_size: 30, lookahead: 8 }
+    }
+}
+
+pub(crate) fn tree_kind(profile: LibraryProfile) -> TreeKind {
+    match profile {
+        LibraryProfile::Sklearn => TreeKind::KdTree,
+        LibraryProfile::Mlpack => TreeKind::BallTree,
+    }
+}
+
+impl Workload for Knn {
+    fn name(&self) -> &'static str {
+        "KNN"
+    }
+
+    fn category(&self) -> Category {
+        Category::NeighbourBased
+    }
+
+    fn supports_visit_order(&self) -> bool {
+        true
+    }
+
+    fn make_dataset(&self, rows: usize, features: usize, seed: u64) -> Dataset {
+        make_blobs(rows, features, 6, 1.5, seed)
+    }
+
+    fn run(&self, ds: &Dataset, ctx: &RunContext, rec: &mut Recorder) -> RunResult {
+        let n = ds.n_samples();
+        let mut space = AddressSpace::new();
+        let r_x = space.alloc_matrix("knn.x", n, ds.n_features());
+        let tree = TraceTree::build(
+            &ds.x,
+            r_x,
+            &mut space,
+            tree_kind(ctx.profile),
+            self.leaf_size,
+            rec,
+        );
+
+        let default_order: Vec<usize> = (0..n).collect();
+        let order = ctx.visit_order.as_deref().unwrap_or(&default_order);
+        assert_eq!(order.len(), n, "visit order must cover all samples");
+
+        let n_classes = ds.n_classes.max(2);
+        let mut votes = vec![0usize; n_classes];
+        let mut correct = 0usize;
+        for &qi in order {
+            rec.load_row(r_x, qi, ds.n_features());
+            // k+1 because the query point finds itself first
+            let neigh = tree.knn(&ds.x, ds.x.row(qi), self.k + 1, rec, self.lookahead);
+            votes.iter_mut().for_each(|v| *v = 0);
+            for &(_, r) in neigh.iter().skip(1) {
+                let label = ds.y[r as usize] as usize;
+                votes[label.min(n_classes - 1)] += 1;
+            }
+            let pred = votes
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &v)| v)
+                .map(|(c, _)| c)
+                .unwrap_or(0);
+            if pred == ds.y[qi] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / n as f64;
+        RunResult {
+            quality: acc,
+            detail: format!("LOO accuracy {acc:.4}, k={}, {} nodes", self.k, tree.n_nodes()),
+        }
+    }
+
+    fn first_touch_order(&self, ds: &Dataset, ctx: &RunContext) -> Vec<usize> {
+        // inspector: the tree's leaf order is the order queries touch rows
+        let mut space = AddressSpace::new();
+        let r_x = space.alloc_matrix("knn.x", ds.n_samples(), ds.n_features());
+        let mut sink = crate::trace::NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let tree = TraceTree::build(
+            &ds.x,
+            r_x,
+            &mut space,
+            tree_kind(ctx.profile),
+            self.leaf_size,
+            &mut rec,
+        );
+        tree.leaf_order().iter().map(|&i| i as usize).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{InstructionMix, NullSink, VecSink};
+
+    #[test]
+    fn knn_classifies_blobs() {
+        let w = Knn { k: 5, leaf_size: 16, lookahead: 0 };
+        let ds = w.make_dataset(800, 6, 28);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let res = w.run(&ds, &RunContext::default(), &mut rec);
+        assert!(res.quality > 0.9, "accuracy {} ({})", res.quality, res.detail);
+    }
+
+    #[test]
+    fn both_profiles_agree_on_accuracy() {
+        let w = Knn { k: 3, leaf_size: 20, lookahead: 0 };
+        let ds = w.make_dataset(500, 5, 29);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let sk = w.run(&ds, &RunContext::with_profile(LibraryProfile::Sklearn), &mut rec);
+        let ml = w.run(&ds, &RunContext::with_profile(LibraryProfile::Mlpack), &mut rec);
+        // exact search ⇒ identical predictions regardless of tree kind
+        assert!((sk.quality - ml.quality).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_has_irregular_indirect_loads_and_branches() {
+        let w = Knn { k: 3, leaf_size: 16, lookahead: 0 };
+        let ds = w.make_dataset(400, 5, 30);
+        let mut mix = InstructionMix::default();
+        {
+            let mut rec = Recorder::new(&mut mix, 0);
+            w.run(&ds, &RunContext::default(), &mut rec);
+        }
+        // paper Fig. 5: neighbour workloads are branchy (~20%)
+        assert!(mix.branch_fraction() > 0.10, "{}", mix.branch_fraction());
+        assert!(mix.conditional_branch_fraction() > 0.8);
+    }
+
+    #[test]
+    fn first_touch_order_is_permutation() {
+        let w = Knn::default();
+        let ds = w.make_dataset(300, 5, 31);
+        let mut ft = w.first_touch_order(&ds, &RunContext::default());
+        ft.sort_unstable();
+        assert_eq!(ft, (0..300).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn lookahead_prefetches_when_enabled() {
+        let w = Knn { k: 3, leaf_size: 16, lookahead: 6 };
+        let ds = w.make_dataset(300, 5, 32);
+        let mut sink = VecSink::default();
+        {
+            let mut rec = Recorder::new(&mut sink, 0);
+            rec.sw_prefetch_enabled = true;
+            w.run(&ds, &RunContext::default(), &mut rec);
+        }
+        let n_pf = sink
+            .events
+            .iter()
+            .filter(|e| matches!(e, crate::trace::Event::SwPrefetch { .. }))
+            .count();
+        assert!(n_pf > 100, "expected prefetch stream, got {n_pf}");
+    }
+}

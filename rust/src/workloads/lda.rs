@@ -1,0 +1,206 @@
+//! Latent Dirichlet Allocation [BNJ03] — matrix-based workload.
+//!
+//! Batch variational EM, the algorithm behind scikit-learn's
+//! `LatentDirichletAllocation` (mlpack has none — paper Section II).
+//! Each E-step sweeps the document-term matrix row by row (streaming row
+//! loads + dense FP on the per-doc variational updates), the M-step
+//! re-normalizes topic-word counts: the classic matrix-workload profile.
+//! Quality metric: mean per-word log-likelihood (rises as topics fit).
+
+use super::{Category, RunContext, RunResult, Workload};
+use crate::data::{make_documents, Dataset};
+use crate::trace::{AddressSpace, Recorder};
+use crate::util::stats::logsumexp;
+use crate::util::Pcg64;
+
+/// LDA workload.
+pub struct Lda {
+    pub n_topics: usize,
+    /// Per-document variational sub-iterations.
+    pub e_iters: usize,
+    /// Dirichlet hyper-parameters.
+    pub alpha: f64,
+    pub eta: f64,
+}
+
+impl Default for Lda {
+    fn default() -> Self {
+        Self { n_topics: 5, e_iters: 8, alpha: 0.1, eta: 0.01 }
+    }
+}
+
+/// Digamma via the standard shift + asymptotic expansion.
+pub(crate) fn digamma(mut x: f64) -> f64 {
+    let mut result = 0.0;
+    while x < 6.0 {
+        result -= 1.0 / x;
+        x += 1.0;
+    }
+    let inv = 1.0 / x;
+    let inv2 = inv * inv;
+    result + x.ln() - 0.5 * inv
+        - inv2 * (1.0 / 12.0 - inv2 * (1.0 / 120.0 - inv2 / 252.0))
+}
+
+impl Workload for Lda {
+    fn name(&self) -> &'static str {
+        "LDA"
+    }
+
+    fn category(&self) -> Category {
+        Category::MatrixBased
+    }
+
+    fn in_mlpack(&self) -> bool {
+        false
+    }
+
+    fn make_dataset(&self, rows: usize, features: usize, seed: u64) -> Dataset {
+        // features = vocabulary size; ~60 words per document
+        make_documents(rows, features.max(4), self.n_topics, 60, seed)
+    }
+
+    fn run(&self, ds: &Dataset, ctx: &RunContext, rec: &mut Recorder) -> RunResult {
+        let (n, v) = (ds.n_samples(), ds.n_features());
+        let k = self.n_topics;
+        let mut space = AddressSpace::new();
+        let r_x = space.alloc_matrix("lda.counts", n, v);
+        let r_beta = space.alloc_matrix("lda.beta", k, v);
+        let r_gamma = space.alloc_matrix("lda.gamma", n, k);
+        let overhead = ctx.profile.loop_overhead_uops();
+
+        // topic-word distributions (rows sum to 1), random init
+        let mut rng = Pcg64::new(ctx.seed);
+        let mut beta: Vec<Vec<f64>> = (0..k).map(|_| rng.dirichlet(1.0, v)).collect();
+        let mut gamma = vec![vec![1.0 + self.alpha; k]; n];
+
+        for _em in 0..ctx.iterations.max(1) {
+            let mut beta_acc = vec![vec![self.eta; v]; k];
+            for d in 0..n {
+                rec.load_row(r_x, d, v);
+                rec.load_row(r_gamma, d, k);
+                let counts = ds.x.row(d);
+                // per-doc variational loop
+                for _ in 0..self.e_iters {
+                    let _ = overhead;
+                    rec.profile_tick();
+                    rec.compute(2, (v * k * 4) as u32);
+                    rec.loop_branch(1, (v / 4).max(1) as u32);
+                    let e_theta: Vec<f64> = {
+                        let dg_sum = digamma(gamma[d].iter().sum::<f64>());
+                        gamma[d].iter().map(|&g| digamma(g) - dg_sum).collect()
+                    };
+                    let mut new_gamma = vec![self.alpha; k];
+                    for w in 0..v {
+                        let c = counts[w];
+                        if c == 0.0 {
+                            continue;
+                        }
+                        // phi_w ∝ beta[.,w] * exp(E[log theta])
+                        let logs: Vec<f64> = (0..k)
+                            .map(|t| beta[t][w].max(1e-300).ln() + e_theta[t])
+                            .collect();
+                        let z = logsumexp(&logs);
+                        for t in 0..k {
+                            new_gamma[t] += c * (logs[t] - z).exp();
+                        }
+                    }
+                    gamma[d] = new_gamma;
+                }
+                rec.store_row(r_gamma, d, k);
+                // accumulate expected topic-word counts for the M-step
+                rec.compute(0, (v * k * 2) as u32);
+                let dg_sum = digamma(gamma[d].iter().sum::<f64>());
+                let e_theta: Vec<f64> =
+                    gamma[d].iter().map(|&g| digamma(g) - dg_sum).collect();
+                for w in 0..v {
+                    let c = counts[w];
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let logs: Vec<f64> = (0..k)
+                        .map(|t| beta[t][w].max(1e-300).ln() + e_theta[t])
+                        .collect();
+                    let z = logsumexp(&logs);
+                    for t in 0..k {
+                        beta_acc[t][w] += c * (logs[t] - z).exp();
+                    }
+                }
+            }
+            // M-step: normalize topics
+            rec.load(r_beta.at(0), (k * v * 8) as u32);
+            rec.store(r_beta.at(0), (k * v * 8) as u32);
+            rec.compute(0, (k * v * 2) as u32);
+            for t in 0..k {
+                let s: f64 = beta_acc[t].iter().sum();
+                for w in 0..v {
+                    beta[t][w] = beta_acc[t][w] / s;
+                }
+            }
+        }
+
+        // mean per-word log likelihood under the fitted doc mixtures
+        let mut ll = 0.0;
+        let mut words = 0.0;
+        for d in 0..n {
+            let gsum: f64 = gamma[d].iter().sum();
+            let theta: Vec<f64> = gamma[d].iter().map(|g| g / gsum).collect();
+            for w in 0..v {
+                let c = ds.x[(d, w)];
+                if c == 0.0 {
+                    continue;
+                }
+                let p: f64 = (0..k).map(|t| theta[t] * beta[t][w]).sum();
+                ll += c * p.max(1e-300).ln();
+                words += c;
+            }
+        }
+        let per_word = ll / words.max(1.0);
+        RunResult {
+            quality: per_word,
+            detail: format!("per-word log-lik {per_word:.4}, {k} topics"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn digamma_matches_known_values() {
+        // digamma(1) = -gamma_E
+        assert!((digamma(1.0) + 0.5772156649).abs() < 1e-8);
+        // recurrence digamma(x+1) = digamma(x) + 1/x
+        for &x in &[0.5, 2.3, 7.7] {
+            assert!((digamma(x + 1.0) - digamma(x) - 1.0 / x).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn lda_beats_uniform_model() {
+        let w = Lda::default();
+        let ds = w.make_dataset(120, 30, 18);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let res = w.run(&ds, &RunContext { iterations: 4, ..Default::default() }, &mut rec);
+        let uniform_ll = (1.0 / 30.0f64).ln();
+        assert!(
+            res.quality > uniform_ll + 0.1,
+            "LDA {} vs uniform {uniform_ll}",
+            res.quality
+        );
+    }
+
+    #[test]
+    fn more_em_iterations_do_not_hurt() {
+        let w = Lda::default();
+        let ds = w.make_dataset(80, 20, 19);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let q1 = w.run(&ds, &RunContext { iterations: 1, ..Default::default() }, &mut rec).quality;
+        let q5 = w.run(&ds, &RunContext { iterations: 5, ..Default::default() }, &mut rec).quality;
+        assert!(q5 >= q1 - 0.05, "{q1} -> {q5}");
+    }
+}

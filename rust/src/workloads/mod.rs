@@ -1,0 +1,275 @@
+//! The paper's 13 traditional-ML workloads (Table I), instrumented.
+//!
+//! Each workload is a *real* implementation of the algorithm (it computes
+//! correct models, verified by unit tests) that additionally emits the
+//! micro-architectural event trace of its inner loops through a
+//! [`Recorder`]. Two library profiles mirror the two implementations the
+//! paper measures:
+//!
+//! - [`LibraryProfile::Sklearn`] — scikit-learn v1.0.x algorithmic
+//!   choices (K-D tree neighbour search, Cython-style loop overhead,
+//!   Fortran-order coordinate descent, ...).
+//! - [`LibraryProfile::Mlpack`] — mlpack v3.4 choices (binary-space
+//!   tree neighbour search, leaner C++ loops). Like the real library it
+//!   implements no SVM-RBF, LDA or t-SNE.
+//!
+//! | Category        | Workloads |
+//! |-----------------|-----------|
+//! | Matrix-based    | Lasso, Ridge, PCA, Linear SVM, SVM-RBF, LDA |
+//! | Neighbour-based | KMeans, GMM, KNN, DBSCAN, t-SNE |
+//! | Tree-based      | Decision Tree, Random Forests, Adaboost |
+
+pub mod adaboost;
+pub mod dbscan;
+pub mod dtree;
+pub mod gmm;
+pub mod kdtree;
+pub mod kmeans;
+pub mod knn;
+pub mod lasso;
+pub mod lda;
+pub mod linalg;
+pub mod pca;
+pub mod rforest;
+pub mod ridge;
+pub mod svm;
+pub mod tsne;
+
+use crate::data::Dataset;
+use crate::trace::Recorder;
+
+/// Workload category (paper Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Category {
+    MatrixBased,
+    NeighbourBased,
+    TreeBased,
+}
+
+impl std::fmt::Display for Category {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Category::MatrixBased => write!(f, "matrix"),
+            Category::NeighbourBased => write!(f, "neighbour"),
+            Category::TreeBased => write!(f, "tree"),
+        }
+    }
+}
+
+/// Which library implementation's algorithmic choices to mirror.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LibraryProfile {
+    Sklearn,
+    Mlpack,
+}
+
+impl LibraryProfile {
+    /// Extra integer uops per inner-loop iteration modelling the
+    /// implementation overhead difference the paper observes (Cython
+    /// generated C with bounds/refcount bookkeeping vs lean templated
+    /// C++). Calibrated so the CPI gap between Figs. 1's sklearn and
+    /// mlpack bars reproduces.
+    pub fn loop_overhead_uops(self) -> u32 {
+        match self {
+            LibraryProfile::Sklearn => 4,
+            LibraryProfile::Mlpack => 1,
+        }
+    }
+}
+
+/// Per-run options threaded to the workload.
+#[derive(Debug, Clone)]
+pub struct RunContext {
+    /// Training iterations (the paper caps at 5).
+    pub iterations: usize,
+    /// RNG seed for any run-internal randomness (shuffles, init).
+    pub seed: u64,
+    pub profile: LibraryProfile,
+    /// Optional computation reordering: the order in which per-sample
+    /// outer loops visit samples (identity when `None`).
+    pub visit_order: Option<Vec<usize>>,
+}
+
+impl Default for RunContext {
+    fn default() -> Self {
+        Self {
+            iterations: 5,
+            seed: 0x5eed,
+            profile: LibraryProfile::Sklearn,
+            visit_order: None,
+        }
+    }
+}
+
+impl RunContext {
+    pub fn with_profile(profile: LibraryProfile) -> Self {
+        Self { profile, ..Default::default() }
+    }
+}
+
+/// Outcome of a traced training run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Workload-specific quality scalar (documented per workload:
+    /// inertia, accuracy, R², log-likelihood, ...). Used by tests to
+    /// assert the algorithm actually works, and by the reordering
+    /// experiments to assert optimizations do not change results.
+    pub quality: f64,
+    /// Human-readable summary of the fitted model.
+    pub detail: String,
+}
+
+/// A traced, instrumented traditional-ML workload.
+pub trait Workload {
+    /// Paper's workload name (e.g. "KMeans").
+    fn name(&self) -> &'static str;
+
+    fn category(&self) -> Category;
+
+    /// Whether the mlpack profile implements this workload
+    /// (mlpack lacks SVM-RBF, LDA and t-SNE — paper Section II).
+    fn in_mlpack(&self) -> bool {
+        true
+    }
+
+    /// Generate the canonical synthetic dataset for this workload at the
+    /// given scale (the paper uses `sklearn.datasets` generators).
+    fn make_dataset(&self, rows: usize, features: usize, seed: u64) -> Dataset;
+
+    /// Train on `ds`, emitting the event trace into `rec`.
+    fn run(&self, ds: &Dataset, ctx: &RunContext, rec: &mut Recorder) -> RunResult;
+
+    /// Row-visit order of the first training sweep (the inspector half of
+    /// inspector–executor first-touch reordering). Default: sequential.
+    fn first_touch_order(&self, ds: &Dataset, ctx: &RunContext) -> Vec<usize> {
+        let _ = ctx;
+        (0..ds.n_samples()).collect()
+    }
+
+    /// Whether the per-sample outer loop supports computation reordering
+    /// (`RunContext::visit_order`). Tree-based ensemble workloads do not
+    /// (paper Table IX: Z-order computation reordering "Not applicable").
+    fn supports_visit_order(&self) -> bool {
+        false
+    }
+}
+
+/// All workloads, in the paper's Table I order.
+pub fn registry() -> Vec<Box<dyn Workload>> {
+    vec![
+        Box::new(lasso::Lasso::default()),
+        Box::new(ridge::Ridge::default()),
+        Box::new(pca::Pca::default()),
+        Box::new(svm::LinearSvm::default()),
+        Box::new(svm::SvmRbf::default()),
+        Box::new(lda::Lda::default()),
+        Box::new(kmeans::KMeans::default()),
+        Box::new(gmm::Gmm::default()),
+        Box::new(knn::Knn::default()),
+        Box::new(dbscan::Dbscan::default()),
+        Box::new(tsne::Tsne::default()),
+        Box::new(dtree::DecisionTree::default()),
+        Box::new(rforest::RandomForest::default()),
+        Box::new(adaboost::Adaboost::default()),
+    ]
+}
+
+/// Look a workload up by its (case-insensitive) paper name.
+pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
+    let lower = name.to_lowercase();
+    registry().into_iter().find(|w| {
+        w.name().to_lowercase() == lower
+            || w.name().to_lowercase().replace([' ', '-'], "") == lower.replace([' ', '-'], "")
+    })
+}
+
+/// The workloads the paper's multicore tables include (those with a
+/// parallel implementation in the respective library): Tables III/IV.
+pub fn multicore_names(profile: LibraryProfile) -> Vec<&'static str> {
+    match profile {
+        LibraryProfile::Sklearn => vec![
+            "LDA", "GMM", "KMeans", "DBSCAN", "KNN", "t-SNE", "Random Forests", "Adaboost",
+        ],
+        LibraryProfile::Mlpack => {
+            vec!["GMM", "KMeans", "DBSCAN", "KNN", "Random Forests", "Adaboost"]
+        }
+    }
+}
+
+/// Branch-site namespaces, one per workload (keeps gshare histories of
+/// different workloads' sites from aliasing in cross-workload tests).
+pub(crate) mod ns {
+    pub const LASSO: u32 = 1;
+    pub const RIDGE: u32 = 2;
+    pub const PCA: u32 = 3;
+    pub const LINSVM: u32 = 4;
+    pub const SVMRBF: u32 = 5;
+    pub const LDA: u32 = 6;
+    pub const KMEANS: u32 = 7;
+    pub const GMM: u32 = 8;
+    pub const KNN: u32 = 9;
+    pub const DBSCAN: u32 = 10;
+    pub const TSNE: u32 = 11;
+    pub const DTREE: u32 = 12;
+    pub const RFOREST: u32 = 13;
+    pub const ADABOOST: u32 = 14;
+    pub const KDTREE: u32 = 15;
+    pub const LINALG: u32 = 16;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_table_i() {
+        let names: Vec<&str> = registry().iter().map(|w| w.name()).collect();
+        for expect in [
+            "Lasso", "Ridge", "PCA", "Linear SVM", "SVM-RBF", "LDA", "KMeans", "GMM", "KNN",
+            "DBSCAN", "t-SNE", "Decision Tree", "Random Forests", "Adaboost",
+        ] {
+            assert!(names.contains(&expect), "missing {expect}");
+        }
+        assert_eq!(names.len(), 14);
+    }
+
+    #[test]
+    fn categories_match_table_i() {
+        for w in registry() {
+            let expected = match w.name() {
+                "Lasso" | "Ridge" | "PCA" | "Linear SVM" | "SVM-RBF" | "LDA" => {
+                    Category::MatrixBased
+                }
+                "KMeans" | "GMM" | "KNN" | "DBSCAN" | "t-SNE" => Category::NeighbourBased,
+                _ => Category::TreeBased,
+            };
+            assert_eq!(w.category(), expected, "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn mlpack_gaps_match_paper() {
+        for w in registry() {
+            let expected = !matches!(w.name(), "SVM-RBF" | "LDA" | "t-SNE");
+            assert_eq!(w.in_mlpack(), expected, "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn by_name_variants() {
+        assert!(by_name("kmeans").is_some());
+        assert!(by_name("KMeans").is_some());
+        assert!(by_name("random forests").is_some());
+        assert!(by_name("svm-rbf").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn multicore_lists_match_tables() {
+        assert_eq!(multicore_names(LibraryProfile::Sklearn).len(), 8);
+        assert_eq!(multicore_names(LibraryProfile::Mlpack).len(), 6);
+        for n in multicore_names(LibraryProfile::Mlpack) {
+            assert!(by_name(n).unwrap().in_mlpack());
+        }
+    }
+}

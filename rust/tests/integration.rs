@@ -1,0 +1,209 @@
+//! Cross-module integration tests: workloads → trace → simulators →
+//! metrics, plus the paper's headline qualitative claims at reduced scale.
+//!
+//! These assert the *shape* results the paper reports (who is worse than
+//! whom, which optimization helps which category) rather than absolute
+//! values — the contract EXPERIMENTS.md documents.
+
+use mlperf::coordinator::*;
+use mlperf::reorder::ReorderKind;
+use mlperf::workloads::{by_name, registry, Category, LibraryProfile};
+
+fn cfg(scale: f64) -> ExperimentConfig {
+    ExperimentConfig { scale, iterations: 1, ..Default::default() }
+}
+
+#[test]
+fn all_workloads_characterize_without_panicking() {
+    let c = cfg(0.02);
+    for w in registry() {
+        let ch = characterize(w.as_ref(), &c);
+        assert!(ch.metrics.cycles > 0.0, "{}", w.name());
+        assert!(ch.metrics.cpi.is_finite(), "{}", w.name());
+        let sum = ch.metrics.retiring_pct
+            + ch.metrics.bad_spec_pct
+            + ch.metrics.core_bound_pct
+            + ch.metrics.mem_bound_pct;
+        assert!(sum <= 105.0, "{}: top-down sum {sum}", w.name());
+    }
+}
+
+/// Paper Section III: tree-based workloads dominate bad speculation.
+#[test]
+fn tree_workloads_have_highest_bad_spec() {
+    let c = cfg(0.06);
+    let mut tree = Vec::new();
+    let mut other = Vec::new();
+    for w in registry() {
+        let m = characterize(w.as_ref(), &c).metrics;
+        match w.category() {
+            Category::TreeBased => tree.push(m.bad_spec_pct),
+            _ => other.push(m.bad_spec_pct),
+        }
+    }
+    let tree_mean = tree.iter().sum::<f64>() / tree.len() as f64;
+    let other_mean = other.iter().sum::<f64>() / other.len() as f64;
+    assert!(
+        tree_mean > 2.0 * other_mean,
+        "tree bad-spec {tree_mean:.1}% must dominate others {other_mean:.1}%"
+    );
+}
+
+/// Paper Fig. 9: matrix workloads burn far more bandwidth than the rest.
+#[test]
+fn matrix_workloads_have_higher_bandwidth_utilization() {
+    let c = cfg(0.06);
+    let bw = |name: &str| {
+        let w = by_name(name).unwrap();
+        characterize(w.as_ref(), &c).metrics.bandwidth_utilization_pct()
+    };
+    let matrix = (bw("Ridge") + bw("SVM-RBF")) / 2.0;
+    let tree = (bw("Decision Tree") + bw("Adaboost")) / 2.0;
+    assert!(
+        matrix > tree,
+        "matrix bw {matrix:.1}% should exceed tree bw {tree:.1}%"
+    );
+}
+
+/// Paper Fig. 13: irregular workloads waste hardware prefetches.
+#[test]
+fn irregular_workloads_waste_more_hw_prefetches() {
+    let c = cfg(0.06);
+    let useless = |name: &str| {
+        let w = by_name(name).unwrap();
+        characterize(w.as_ref(), &c)
+            .metrics
+            .prefetch
+            .hw_useless_fraction()
+    };
+    let knn = useless("KNN");
+    let ridge = useless("Ridge");
+    assert!(
+        knn > ridge,
+        "KNN useless-prefetch {knn:.2} should exceed Ridge {ridge:.2}"
+    );
+    assert!(knn > 0.2, "KNN should waste a large fraction: {knn:.2}");
+}
+
+/// Paper Fig. 12: perfect caches buy meaningful IPC on memory-bound
+/// workloads.
+#[test]
+fn perfect_l2_buys_ipc_on_neighbour_workloads() {
+    let c = cfg(0.06);
+    let w = by_name("DBSCAN").unwrap();
+    let s = perfect_cache_study(w.as_ref(), &c);
+    let gain = s.perfect_l2.ipc / s.base.ipc;
+    assert!(gain > 1.1, "perfect L2 should buy >10% IPC on DBSCAN: {gain:.3}");
+}
+
+/// Paper Fig. 18: software prefetching speeds up neighbour/tree
+/// workloads without changing their results.
+#[test]
+fn sw_prefetch_speeds_up_knn() {
+    let c = cfg(0.08);
+    let w = by_name("KNN").unwrap();
+    let s = prefetch_study(w.as_ref(), &c);
+    assert_eq!(s.base_quality, s.prefetched_quality);
+    let speedup = s.prefetched.speedup_vs(&s.base);
+    assert!(
+        speedup > 1.0,
+        "KNN should speed up under SW prefetch: {speedup:.3}"
+    );
+    assert!(
+        s.prefetched.l2_miss_ratio <= s.base.l2_miss_ratio,
+        "L2 miss ratio should not rise: {} -> {}",
+        s.base.l2_miss_ratio,
+        s.prefetched.l2_miss_ratio
+    );
+}
+
+/// Paper Figs. 20/23: data-layout reordering improves row-buffer hit
+/// ratio and end-to-end cycles for irregular workloads.
+#[test]
+fn zorder_layout_helps_knn_dram_behaviour() {
+    let c = cfg(0.08);
+    let w = by_name("KNN").unwrap();
+    let s = reorder_study(w.as_ref(), ReorderKind::ZOrder, &c);
+    assert!(
+        s.reordered.dram.row_hit_ratio() > s.baseline.dram.row_hit_ratio(),
+        "row-buffer hit ratio should improve: {:.3} -> {:.3}",
+        s.baseline.dram.row_hit_ratio(),
+        s.reordered.dram.row_hit_ratio()
+    );
+    assert!(
+        s.speedup_no_overhead() > 1.0,
+        "Z-order layout should speed KNN up: {:.3}",
+        s.speedup_no_overhead()
+    );
+}
+
+/// Paper Table VII: ideal row buffer lowers average access latency.
+#[test]
+fn ideal_row_buffer_reduces_latency() {
+    let c = cfg(0.06);
+    for name in ["KNN", "Adaboost"] {
+        let w = by_name(name).unwrap();
+        let real = dram_study(w.as_ref(), &c, false);
+        let ideal = dram_study(w.as_ref(), &c, true);
+        assert!(
+            ideal.avg_latency_ns() < real.avg_latency_ns(),
+            "{name}: {:.1} !< {:.1}",
+            ideal.avg_latency_ns(),
+            real.avg_latency_ns()
+        );
+    }
+}
+
+/// Paper Tables III/IV: the single-core conclusions persist at 4/8 cores.
+#[test]
+fn multicore_keeps_bottleneck_structure() {
+    let c = cfg(0.04);
+    let w = by_name("DBSCAN").unwrap();
+    let m1 = multicore_characterize(w.as_ref(), &c, 1);
+    let m4 = multicore_characterize(w.as_ref(), &c, 4);
+    let m8 = multicore_characterize(w.as_ref(), &c, 8);
+    for (n, m) in [(1, &m1), (4, &m4), (8, &m8)] {
+        assert!(
+            m.dram_bound_pct > 5.0,
+            "{n}-core DBSCAN should stay DRAM-bound: {:.1}%",
+            m.dram_bound_pct
+        );
+    }
+}
+
+/// Profiles differ: the mlpack profile executes fewer instructions for
+/// the same work (leaner loops), as the paper's Figs. 1-2 imply.
+#[test]
+fn mlpack_profile_is_leaner() {
+    let mut c = cfg(0.06);
+    let w = by_name("KNN").unwrap();
+    c.profile = LibraryProfile::Sklearn;
+    let sk = characterize(w.as_ref(), &c).metrics;
+    c.profile = LibraryProfile::Mlpack;
+    let ml = characterize(w.as_ref(), &c).metrics;
+    assert!(
+        ml.instructions < sk.instructions,
+        "mlpack should retire fewer instructions: {} vs {}",
+        ml.instructions,
+        sk.instructions
+    );
+    assert!(
+        ml.cycles < sk.cycles,
+        "mlpack should be faster end-to-end: {} vs {}",
+        ml.cycles,
+        sk.cycles
+    );
+}
+
+/// Determinism: identical config ⇒ identical metrics (the reproducibility
+/// contract of EXPERIMENTS.md).
+#[test]
+fn characterization_is_deterministic() {
+    let c = cfg(0.03);
+    let w = by_name("KMeans").unwrap();
+    let a = characterize(w.as_ref(), &c).metrics;
+    let b = characterize(w.as_ref(), &c).metrics;
+    assert_eq!(a.instructions, b.instructions);
+    assert_eq!(a.cycles, b.cycles);
+    assert_eq!(a.mix, b.mix);
+}

@@ -1,0 +1,216 @@
+//! Property-based tests over coordinator/simulator invariants.
+//!
+//! No external proptest crate is available offline, so this file uses a
+//! small self-contained generator loop over the crate's own PCG64: each
+//! property is checked across a randomized sweep of configurations, and
+//! failures print the offending seed for replay.
+
+use mlperf::data::make_blobs;
+use mlperf::reorder::{compute_plan, sfc, ReorderKind};
+use mlperf::sim::{AddrMap, CpuConfig, Dram, DramConfig, Hierarchy, HierarchyConfig, PipelineSim};
+use mlperf::trace::{Event, Recorder, Sink};
+use mlperf::util::Pcg64;
+use mlperf::workloads::{by_name, RunContext};
+
+/// Run `body` over `n` random cases derived from a base seed.
+fn sweep(name: &str, n: u64, mut body: impl FnMut(&mut Pcg64, u64)) {
+    for case in 0..n {
+        let seed = 0xBEEF ^ (case * 0x9E37_79B9);
+        let mut rng = Pcg64::new(seed);
+        // bubble panics with the seed attached
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            body(&mut rng, seed)
+        }));
+        if let Err(e) = result {
+            panic!("property {name} failed for seed {seed:#x}: {e:?}");
+        }
+    }
+}
+
+/// Cache invariant: a line is always a hit immediately after any access
+/// that loaded it, regardless of the surrounding access pattern.
+#[test]
+fn prop_cache_hit_after_access() {
+    sweep("hit-after-access", 20, |rng, _| {
+        let cfg = HierarchyConfig {
+            l1_bytes: 4096,
+            l1_ways: 2,
+            l2_bytes: 16384,
+            l2_ways: 4,
+            l3_bytes: 65536,
+            l3_ways: 4,
+            hw_prefetch: rng.next_f64() < 0.5,
+            perfect_l2: false,
+            perfect_llc: false,
+        };
+        let mut h = Hierarchy::new(&cfg);
+        let mut dram = Vec::new();
+        for _ in 0..2000 {
+            let addr = rng.below(1 << 22) & !7;
+            h.access(addr, 8, rng.next_f64() < 0.3, &mut dram);
+            let (lvl, _) = h.access(addr, 8, false, &mut dram);
+            assert_eq!(lvl, mlperf::sim::Level::L1, "addr {addr:#x}");
+            dram.clear();
+        }
+    });
+}
+
+/// Cache invariant: miss counts are monotone in the access stream and
+/// never exceed accesses.
+#[test]
+fn prop_cache_stats_sane() {
+    sweep("cache-stats", 10, |rng, _| {
+        let mut h = Hierarchy::new(&HierarchyConfig::default());
+        let mut dram = Vec::new();
+        for _ in 0..20_000 {
+            let addr = rng.below(1 << 28);
+            h.access(addr, 1 + (rng.below(256)) as u32, false, &mut dram);
+            dram.clear();
+        }
+        for c in [&h.l1, &h.l2, &h.l3] {
+            assert!(c.stats.misses <= c.stats.accesses);
+        }
+        // inclusive-ish ordering: L2 sees at most L1's misses (demand)
+        assert!(h.l2.stats.accesses <= h.l1.stats.misses);
+        assert!(h.l3.stats.accesses <= h.l2.stats.misses);
+    });
+}
+
+/// DRAM invariant: hits + misses + conflicts == requests; ideal mode is
+/// never slower than the real mode on the same stream.
+#[test]
+fn prop_dram_accounting_and_ideal_bound() {
+    sweep("dram-accounting", 10, |rng, _| {
+        let mut real = Dram::new(DramConfig::default());
+        let mut ideal = Dram::new(DramConfig { ideal_row_hits: true, ..Default::default() });
+        let mut t = 0.0;
+        for _ in 0..5_000 {
+            let addr = rng.below(1 << 32) & !63;
+            real.request(t, addr, false, false);
+            ideal.request(t, addr, false, false);
+            t += rng.uniform(3.0, 200.0);
+        }
+        let s = &real.stats;
+        assert_eq!(s.row_hits + s.row_misses + s.row_conflicts, s.requests);
+        assert!(ideal.stats.avg_latency_ns() <= real.stats.avg_latency_ns() + 1e-9);
+    });
+}
+
+/// DRAM invariant: both address mappings are total and bank/row bounded.
+#[test]
+fn prop_addr_maps_in_range() {
+    sweep("addr-map", 6, |rng, _| {
+        for map in [AddrMap::RoBaRaCoCh, AddrMap::ChRaBaRoCo] {
+            let d = Dram::new(DramConfig { addr_map: map, ..Default::default() });
+            for _ in 0..5_000 {
+                let c = d.map(rng.below(1 << 35));
+                assert!(c.bank < 16 && c.row < 32 * 1024);
+            }
+        }
+    });
+}
+
+/// SFC invariant: every curve order is a permutation, for random shapes.
+#[test]
+fn prop_sfc_orders_are_permutations() {
+    sweep("sfc-perm", 8, |rng, seed| {
+        let n = 16 + rng.index(200);
+        let m = 1 + rng.index(8);
+        let ds = make_blobs(n, m, 1 + rng.index(4), 0.5 + rng.next_f64(), seed);
+        let bits = sfc::max_bits_for_dims(m);
+        for hilbert in [false, true] {
+            let mut ord = sfc::sfc_order(&ds.x, bits, hilbert);
+            ord.sort_unstable();
+            assert_eq!(ord, (0..n).collect::<Vec<_>>());
+        }
+    });
+}
+
+/// Reordering invariant: for every kind and random small datasets, the
+/// plan is a permutation and `apply` preserves the (row, label) pairing.
+#[test]
+fn prop_reorder_plans_preserve_data() {
+    sweep("reorder-preserve", 6, |rng, seed| {
+        let w = by_name("kmeans").unwrap();
+        let n = 64 + rng.index(200);
+        let ds = make_blobs(n, 4, 3, 1.0, seed);
+        let ctx = RunContext::default();
+        for kind in ReorderKind::ALL {
+            let mut sink = mlperf::trace::NullSink;
+            let mut rec = Recorder::new(&mut sink, 40);
+            let plan = compute_plan(kind, &ds, w.as_ref(), &ctx, &mut rec);
+            let mut p = plan.perm.clone();
+            p.sort_unstable();
+            assert_eq!(p, (0..n).collect::<Vec<_>>(), "{kind}");
+            let (ds2, _) = plan.apply(&ds, &ctx);
+            if kind.is_data_layout() {
+                for i in 0..n {
+                    assert_eq!(ds2.x.row(i), ds.x.row(plan.perm[i]));
+                    assert_eq!(ds2.y[i], ds.y[plan.perm[i]]);
+                }
+            } else {
+                assert_eq!(ds2.x, ds.x);
+            }
+        }
+    });
+}
+
+/// Pipeline invariant: metrics are finite, top-down sums ≤ ~100%, port
+/// distribution sums to 1 — under arbitrary random event streams.
+#[test]
+fn prop_pipeline_metrics_bounded() {
+    sweep("pipeline-bounded", 10, |rng, _| {
+        let mut sim = PipelineSim::new(CpuConfig::default());
+        for _ in 0..5_000 {
+            let ev = match rng.below(6) {
+                0 => Event::Compute {
+                    int_ops: rng.below(8) as u32,
+                    fp_ops: rng.below(8) as u32,
+                },
+                1 => Event::Serial { ops: 1 + rng.below(4) as u32 },
+                2 => Event::Load {
+                    addr: rng.below(1 << 30),
+                    size: 1 + rng.below(512) as u32,
+                    feeds_branch: rng.next_f64() < 0.2,
+                },
+                3 => Event::Store { addr: rng.below(1 << 30), size: 8 },
+                4 => Event::Branch {
+                    site: rng.below(64) as u32,
+                    taken: rng.next_f64() < 0.5,
+                    conditional: rng.next_f64() < 0.9,
+                },
+                _ => Event::SwPrefetch { addr: rng.below(1 << 30) },
+            };
+            sim.event(ev);
+        }
+        Sink::finish(&mut sim);
+        let m = sim.metrics();
+        assert!(m.cycles.is_finite() && m.cycles > 0.0);
+        assert!(m.cpi.is_finite());
+        let sum = m.retiring_pct + m.bad_spec_pct + m.core_bound_pct + m.mem_bound_pct;
+        assert!((0.0..=105.0).contains(&sum), "top-down sum {sum}");
+        let pd: f64 = m.port_dist.iter().sum();
+        assert!((pd - 1.0).abs() < 1e-6);
+        assert!(m.port_dist.iter().all(|&p| (-1e-9..=1.0 + 1e-9).contains(&p)));
+    });
+}
+
+/// Workload invariant: traces are deterministic per seed across repeated
+/// runs (the whole experiment pipeline depends on this).
+#[test]
+fn prop_workload_traces_deterministic() {
+    sweep("trace-deterministic", 3, |rng, seed| {
+        let names = ["kmeans", "knn", "ridge"];
+        let name = names[rng.index(names.len())];
+        let w = by_name(name).unwrap();
+        let ds = w.make_dataset(400, 5, seed);
+        let ctx = RunContext { iterations: 1, ..Default::default() };
+        let run = || {
+            let mut mix = mlperf::trace::InstructionMix::default();
+            let mut rec = Recorder::new(&mut mix, 9);
+            w.run(&ds, &ctx, &mut rec);
+            mix
+        };
+        assert_eq!(run(), run(), "{name} trace must be deterministic");
+    });
+}
