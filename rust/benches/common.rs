@@ -1,3 +1,6 @@
+// Each bench target includes this file via `#[path]`, so any one target
+// uses only a subset of it — silence per-target dead-code noise.
+#![allow(dead_code)]
 //! Shared bench-harness plumbing. Every bench target regenerates one
 //! paper table/figure; they all accept
 //! `cargo bench --bench <name> -- --scale 0.5 --iterations 3` and honour

@@ -4,41 +4,54 @@
 //! Paper shape to reproduce: CPI between ~0.4 and ~1.75 everywhere;
 //! retiring 15-40% for all workloads except GMM/KMeans (higher under
 //! mlpack); sklearn bars worse than mlpack bars.
+//!
+//! Characterizations are independent, so the bench fans them out over the
+//! parallel experiment driver (one job per workload × profile) instead of
+//! looping sequentially; result order stays the registry order.
 
 #[path = "common.rs"]
 mod common;
 
 use mlperf::analysis::{pct, r2, Table};
-use mlperf::coordinator::characterize;
+use mlperf::coordinator::{run_jobs, Job, Scenario};
 use mlperf::workloads::{registry, LibraryProfile};
 
 fn main() {
     common::banner("Figs 1-2: CPI + retiring ratio");
     let mut cfg = common::config();
+
+    let names: Vec<&'static str> = registry().iter().map(|w| w.name()).collect();
+    let ml_names: Vec<&'static str> = registry()
+        .iter()
+        .filter(|w| w.in_mlpack())
+        .map(|w| w.name())
+        .collect();
+
+    cfg.profile = LibraryProfile::Sklearn;
+    let sk_jobs: Vec<Job> = names.iter().map(|n| Job::new(*n, Scenario::Baseline)).collect();
+    let sk = common::timed("sklearn grid", || run_jobs(&cfg, &sk_jobs, 0));
+
+    cfg.profile = LibraryProfile::Mlpack;
+    let ml_jobs: Vec<Job> = ml_names.iter().map(|n| Job::new(*n, Scenario::Baseline)).collect();
+    let ml = common::timed("mlpack grid", || run_jobs(&cfg, &ml_jobs, 0));
+
     let mut t = Table::new(
         "fig01_02",
         "CPI and retiring ratio (sklearn vs mlpack)",
         &["workload", "CPI sk", "CPI ml", "retiring% sk", "retiring% ml"],
     );
-    for w in registry() {
-        let (cpi_sk, ret_sk) = common::timed(w.name(), || {
-            cfg.profile = LibraryProfile::Sklearn;
-            let m = characterize(w.as_ref(), &cfg).metrics;
-            (m.cpi, m.retiring_pct)
-        });
-        let (cpi_ml, ret_ml) = if w.in_mlpack() {
-            cfg.profile = LibraryProfile::Mlpack;
-            let m = characterize(w.as_ref(), &cfg).metrics;
-            (Some(m.cpi), Some(m.retiring_pct))
-        } else {
-            (None, None)
-        };
+    for (i, name) in names.iter().enumerate() {
+        let m_sk = &sk.outputs[i].metrics;
+        let m_ml = ml_names
+            .iter()
+            .position(|n| n == name)
+            .map(|j| &ml.outputs[j].metrics);
         t.row(vec![
-            w.name().into(),
-            r2(cpi_sk),
-            cpi_ml.map(r2).unwrap_or_else(|| "-".into()),
-            pct(ret_sk),
-            ret_ml.map(pct).unwrap_or_else(|| "-".into()),
+            (*name).into(),
+            r2(m_sk.cpi),
+            m_ml.map(|m| r2(m.cpi)).unwrap_or_else(|| "-".into()),
+            pct(m_sk.retiring_pct),
+            m_ml.map(|m| pct(m.retiring_pct)).unwrap_or_else(|| "-".into()),
         ]);
     }
     t.emit();

@@ -4,24 +4,34 @@
 //! Paper shape: ~31-37% of cycles DRAM-bound across categories; matrix
 //! workloads at ~80% bandwidth utilization vs ~40% for the rest; 15-38%
 //! core-bound stalls.
+//!
+//! One baseline job per workload, fanned out over the parallel experiment
+//! driver; outputs come back in registry order.
 
 #[path = "common.rs"]
 mod common;
 
 use mlperf::analysis::{pct, r3, Table};
-use mlperf::coordinator::characterize;
+use mlperf::coordinator::{run_jobs, Job, Scenario};
 use mlperf::workloads::registry;
 
 fn main() {
     common::banner("Figs 7-10: memory behaviour");
     let cfg = common::config();
+    let jobs: Vec<Job> = registry()
+        .iter()
+        .map(|w| Job::new(w.name(), Scenario::Baseline))
+        .collect();
+    let report = common::timed("baseline grid", || run_jobs(&cfg, &jobs, 0));
+    println!("[{} jobs on {} threads]", report.outputs.len(), report.threads_used);
+
     let mut t = Table::new(
         "fig07_10",
         "DRAM bound, LLC miss, bandwidth utilization, core bound",
         &["workload", "category", "dram bound %", "LLC miss", "bw util %", "core bound %", "p0/p1/p2/p3+"],
     );
-    for w in registry() {
-        let m = common::timed(w.name(), || characterize(w.as_ref(), &cfg).metrics);
+    for (w, out) in registry().iter().zip(&report.outputs) {
+        let m = &out.metrics;
         t.row(vec![
             w.name().into(),
             w.category().to_string(),

@@ -5,17 +5,28 @@
 //! Paper shape: L2 miss down 10-35% (except KMeans/SVM), DRAM bound down
 //! 5-26%, bad-spec down 8-10% on tree workloads, 2+f uops up ~12.8%,
 //! speedup 5.2-27.1% (except SVM-RBF and KMeans).
+//!
+//! Each workload contributes two independent jobs (baseline, prefetched)
+//! to the parallel experiment driver; pairs are re-joined by index.
 
 #[path = "common.rs"]
 mod common;
 
 use mlperf::analysis::{pct, r3, Table};
-use mlperf::coordinator::prefetch_study;
-use mlperf::workloads::by_name;
+use mlperf::coordinator::{run_jobs, Job, Scenario};
 
 fn main() {
     common::banner("Figs 14-18: software prefetching");
     let cfg = common::config();
+    let names = common::prefetch_workloads();
+    let jobs: Vec<Job> = names
+        .iter()
+        .flat_map(|n| {
+            [Job::new(*n, Scenario::Baseline), Job::new(*n, Scenario::SwPrefetch)]
+        })
+        .collect();
+    let report = common::timed("prefetch grid", || run_jobs(&cfg, &jobs, 0));
+
     let mut t = Table::new(
         "fig14_18",
         "software prefetching before/after (neighbour + tree workloads)",
@@ -25,21 +36,21 @@ fn main() {
         ],
     );
     let mut speedups = Vec::new();
-    for name in common::prefetch_workloads() {
-        let w = by_name(name).unwrap();
-        let s = common::timed(name, || prefetch_study(w.as_ref(), &cfg));
-        let sp = s.prefetched.speedup_vs(&s.base);
+    for (i, name) in names.iter().enumerate() {
+        let base = &report.outputs[2 * i].metrics;
+        let pf = &report.outputs[2 * i + 1].metrics;
+        let sp = pf.speedup_vs(base);
         speedups.push((name, sp));
         t.row(vec![
-            name.into(),
-            r3(s.base.l2_miss_ratio),
-            r3(s.prefetched.l2_miss_ratio),
-            pct(s.base.dram_bound_pct),
-            pct(s.prefetched.dram_bound_pct),
-            pct(s.base.bad_spec_pct),
-            pct(s.prefetched.bad_spec_pct),
-            r3(s.base.two_plus_uops_fraction()),
-            r3(s.prefetched.two_plus_uops_fraction()),
+            (*name).into(),
+            r3(base.l2_miss_ratio),
+            r3(pf.l2_miss_ratio),
+            pct(base.dram_bound_pct),
+            pct(pf.dram_bound_pct),
+            pct(base.bad_spec_pct),
+            pct(pf.bad_spec_pct),
+            r3(base.two_plus_uops_fraction()),
+            r3(pf.two_plus_uops_fraction()),
             format!("{:.3}x", sp),
         ]);
     }

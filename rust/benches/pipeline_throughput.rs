@@ -1,0 +1,136 @@
+//! Micro-benchmark: trace-delivery throughput (events/sec) of the legacy
+//! per-event `dyn Sink` path versus the batched columnar block pipeline,
+//! for both a cheap counting consumer (isolates delivery overhead — the
+//! quantity the refactor targets) and the full pipeline simulator (end to
+//! end). Numbers and methodology are recorded in DESIGN.md §Block
+//! pipeline.
+//!
+//! ```bash
+//! cargo bench --bench pipeline_throughput            # default 2M elements
+//! PIPELINE_BENCH_ELEMS=500000 cargo bench --bench pipeline_throughput
+//! ```
+
+use mlperf::sim::{CpuConfig, PipelineSim};
+use mlperf::trace::{BlockSink, Event, InstructionMix, Recorder, Sink};
+use mlperf::util::Pcg64;
+use std::hint::black_box;
+use std::time::Instant;
+
+const NS: u32 = 1;
+
+/// Pre-generated logical stream: each element expands to three events
+/// (load, compute, branch) — the shape of a neighbour-workload inner loop.
+struct Stream {
+    addrs: Vec<u64>,
+    outcomes: Vec<bool>,
+}
+
+fn make_stream(n: usize) -> Stream {
+    let mut rng = Pcg64::new(0xB10C);
+    Stream {
+        // 1-in-4 random far accesses amid sequential walking, as in the
+        // paper's index-array access patterns
+        addrs: (0..n)
+            .map(|i| {
+                if i % 4 == 0 {
+                    rng.below(1 << 28) & !7
+                } else {
+                    (i as u64 * 8) % (1 << 22)
+                }
+            })
+            .collect(),
+        outcomes: (0..n).map(|_| rng.next_f64() < 0.3).collect(),
+    }
+}
+
+/// Seed path: one virtual call + enum match per event.
+fn drive_dyn(sink: &mut dyn Sink, s: &Stream) -> u64 {
+    for i in 0..s.addrs.len() {
+        sink.event(Event::Load { addr: s.addrs[i], size: 8, feeds_branch: false });
+        sink.event(Event::Compute { int_ops: 1, fp_ops: 2 });
+        sink.event(Event::Branch { site: NS << 16 | 1, taken: s.outcomes[i], conditional: true });
+    }
+    sink.finish();
+    3 * s.addrs.len() as u64
+}
+
+/// Block path: lane appends in the recorder, one block delivery per 4K
+/// events. Generic so the same code measures the erased and the
+/// monomorphized pipeline.
+fn drive_block<S: BlockSink + ?Sized>(rec: &mut Recorder<S>, s: &Stream) -> u64 {
+    for i in 0..s.addrs.len() {
+        rec.load(s.addrs[i], 8);
+        rec.compute(1, 2);
+        rec.branch(1, s.outcomes[i]);
+    }
+    rec.finish();
+    rec.events_emitted()
+}
+
+/// Best-of-`reps` events/sec for one mode; `f` returns (events, checksum).
+fn measure(label: &str, reps: usize, mut f: impl FnMut() -> (u64, u64)) -> f64 {
+    let mut best_per_event = f64::INFINITY;
+    let mut check = 0;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let (events, chk) = f();
+        let dt = t0.elapsed().as_secs_f64();
+        best_per_event = best_per_event.min(dt / events as f64);
+        check = chk;
+    }
+    let eps = 1.0 / best_per_event;
+    println!("{label:>34}: {:>8.1} M events/s   (checksum {check})", eps / 1e6);
+    eps
+}
+
+fn main() {
+    let n: usize = std::env::var("PIPELINE_BENCH_ELEMS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2_000_000);
+    let s = make_stream(n);
+    println!("# pipeline_throughput | {} elements -> {} events per mode", n, 3 * n);
+
+    // --- delivery-layer isolation: counting consumer ---
+    let dyn_mix = measure("dyn Sink -> InstructionMix", 3, || {
+        let mut mix = InstructionMix::default();
+        let events = drive_dyn(black_box(&mut mix), &s);
+        (events, mix.instructions())
+    });
+    let block_dyn_mix = measure("blocks (dyn) -> InstructionMix", 3, || {
+        let mut mix = InstructionMix::default();
+        let events = {
+            let mut rec = Recorder::new(&mut mix, NS);
+            drive_block(black_box(&mut rec), &s)
+        };
+        (events, mix.instructions())
+    });
+    let block_typed_mix = measure("blocks (typed) -> InstructionMix", 3, || {
+        let mut mix = InstructionMix::default();
+        let events = {
+            let mut rec = Recorder::typed(&mut mix, NS);
+            drive_block(black_box(&mut rec), &s)
+        };
+        (events, mix.instructions())
+    });
+
+    // --- end to end: full pipeline simulator ---
+    let dyn_sim = measure("dyn Sink -> PipelineSim", 2, || {
+        let mut sim = PipelineSim::new(CpuConfig::default());
+        let events = drive_dyn(black_box(&mut sim), &s);
+        (events, sim.metrics().instructions)
+    });
+    let block_sim = measure("blocks (dyn) -> PipelineSim", 2, || {
+        let mut sim = PipelineSim::new(CpuConfig::default());
+        let events = {
+            let mut rec = Recorder::new(&mut sim, NS);
+            drive_block(black_box(&mut rec), &s)
+        };
+        (events, sim.metrics().instructions)
+    });
+
+    println!();
+    println!("delivery speedup (blocks dyn   / per-event dyn): {:.2}x", block_dyn_mix / dyn_mix);
+    println!("delivery speedup (blocks typed / per-event dyn): {:.2}x", block_typed_mix / dyn_mix);
+    println!("end-to-end sim speedup (blocks / per-event dyn): {:.2}x", block_sim / dyn_sim);
+}

@@ -24,7 +24,7 @@ use mlperf::runtime::{default_artifacts_dir, Runtime, BATCH, FEATURES, K};
 use mlperf::util::{solve_spd, Matrix, Pcg64};
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mlperf::util::error::Result<()> {
     let dir = default_artifacts_dir();
     let t0 = Instant::now();
     let rt = Runtime::load(&dir)?;
@@ -40,7 +40,7 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-fn kmeans_e2e(rt: &Runtime) -> anyhow::Result<()> {
+fn kmeans_e2e(rt: &Runtime) -> mlperf::util::error::Result<()> {
     const ROWS: usize = 65_536; // 16 batches of 4096
     let ds = make_blobs(ROWS, FEATURES, K, 1.0, 42);
     println!("\n== KMeans end-to-end: {} rows x {} features, k={} ==", ROWS, FEATURES, K);
@@ -97,7 +97,7 @@ fn kmeans_e2e(rt: &Runtime) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn ridge_e2e(rt: &Runtime) -> anyhow::Result<()> {
+fn ridge_e2e(rt: &Runtime) -> mlperf::util::error::Result<()> {
     const ROWS: usize = 65_536;
     let (ds, w_true) = make_regression(ROWS, FEATURES, FEATURES, 0.5, 43);
     println!("\n== Ridge end-to-end: {} rows x {} features ==", ROWS, FEATURES);

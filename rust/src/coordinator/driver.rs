@@ -1,0 +1,257 @@
+//! Parallel experiment driver: run independent (workload × scenario)
+//! characterizations across OS threads with deterministic result order.
+//!
+//! Every cell of the paper's figure/table grid is an independent,
+//! deterministic simulation — embarrassingly parallel at the experiment
+//! level even though each individual trace must stay sequential. The
+//! driver fans a [`Job`] list out over a work-stealing index, runs each
+//! job through the block-pipeline coordinator entry points, and writes
+//! results into per-job slots, so the output order always equals the
+//! input order no matter how the scheduler interleaves completions.
+//! Workload objects are constructed inside the worker thread (via
+//! [`by_name`]) because `Box<dyn Workload>` is deliberately not `Send`.
+//!
+//! [`by_name`]: crate::workloads::by_name
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::{
+    characterize_with, multicore_characterize, reorder_study, ExperimentConfig,
+};
+use crate::reorder::ReorderKind;
+use crate::sim::Metrics;
+use crate::workloads::{by_name, multicore_names, registry};
+
+/// One experiment scenario — the column dimension of the job grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Scenario {
+    /// Figs. 1–10 baseline characterization.
+    Baseline,
+    /// Figs. 14–18: software prefetching enabled.
+    SwPrefetch,
+    /// Fig. 12: perfect (always-hit) L2.
+    PerfectL2,
+    /// Fig. 12: perfect (always-hit) LLC.
+    PerfectLlc,
+    /// Fig. 13 companion: hardware prefetchers disabled.
+    NoHwPrefetch,
+    /// Tables III/IV: sharded run over `n` cores with LLC/bus contention.
+    Multicore(usize),
+    /// Table VII: ideal row-buffer DRAM.
+    DramIdealRows,
+    /// Figs. 20–24: one reordering optimization (reordered-run metrics).
+    Reorder(ReorderKind),
+}
+
+impl std::fmt::Display for Scenario {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Scenario::Baseline => write!(f, "baseline"),
+            Scenario::SwPrefetch => write!(f, "sw-prefetch"),
+            Scenario::PerfectL2 => write!(f, "perfect-L2"),
+            Scenario::PerfectLlc => write!(f, "perfect-LLC"),
+            Scenario::NoHwPrefetch => write!(f, "no-hw-prefetch"),
+            Scenario::Multicore(n) => write!(f, "{n}-core"),
+            Scenario::DramIdealRows => write!(f, "ideal-rows"),
+            Scenario::Reorder(k) => write!(f, "reorder:{k}"),
+        }
+    }
+}
+
+/// One unit of driver work: a workload (by paper name) under a scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Job {
+    pub workload: String,
+    pub scenario: Scenario,
+}
+
+impl Job {
+    pub fn new(workload: impl Into<String>, scenario: Scenario) -> Self {
+        Self { workload: workload.into(), scenario }
+    }
+}
+
+/// Result slot for one job, in input order.
+#[derive(Debug, Clone)]
+pub struct JobOutput {
+    pub job: Job,
+    pub metrics: Metrics,
+    /// Workload quality scalar where the scenario produces one
+    /// (multicore aggregation does not).
+    pub quality: Option<f64>,
+}
+
+/// What [`run_jobs`] hands back.
+#[derive(Debug)]
+pub struct DriverReport {
+    /// One output per input job, **in input order** (deterministic
+    /// regardless of thread interleaving).
+    pub outputs: Vec<JobOutput>,
+    pub threads_used: usize,
+    pub wall_seconds: f64,
+}
+
+/// The standard characterization grid for `cfg`'s profile: a baseline
+/// cell per workload plus the multicore cells of Tables III/IV.
+pub fn standard_grid(cfg: &ExperimentConfig) -> Vec<Job> {
+    let mut jobs: Vec<Job> = registry()
+        .iter()
+        .map(|w| Job::new(w.name(), Scenario::Baseline))
+        .collect();
+    for name in multicore_names(cfg.profile) {
+        for cores in [4usize, 8] {
+            jobs.push(Job::new(name, Scenario::Multicore(cores)));
+        }
+    }
+    jobs
+}
+
+/// Run one job synchronously on the current thread.
+///
+/// Panics on an unknown workload name or a reordering scenario that the
+/// workload does not support — grid builders only emit valid cells.
+pub fn run_job(cfg: &ExperimentConfig, job: &Job) -> JobOutput {
+    let w = by_name(&job.workload)
+        .unwrap_or_else(|| panic!("driver: unknown workload {:?}", job.workload));
+    let w = w.as_ref();
+    let (metrics, quality) = match job.scenario {
+        Scenario::Baseline => {
+            let c = characterize_with(w, cfg, false, None, None, |_| {});
+            (c.metrics, Some(c.result.quality))
+        }
+        Scenario::SwPrefetch => {
+            let c = characterize_with(w, cfg, true, None, None, |_| {});
+            (c.metrics, Some(c.result.quality))
+        }
+        Scenario::PerfectL2 => {
+            let c = characterize_with(w, cfg, false, None, None, |c| c.cache.perfect_l2 = true);
+            (c.metrics, Some(c.result.quality))
+        }
+        Scenario::PerfectLlc => {
+            let c = characterize_with(w, cfg, false, None, None, |c| c.cache.perfect_llc = true);
+            (c.metrics, Some(c.result.quality))
+        }
+        Scenario::NoHwPrefetch => {
+            let c = characterize_with(w, cfg, false, None, None, |c| c.cache.hw_prefetch = false);
+            (c.metrics, Some(c.result.quality))
+        }
+        Scenario::Multicore(n) => (multicore_characterize(w, cfg, n), None),
+        Scenario::DramIdealRows => {
+            let c = characterize_with(w, cfg, false, None, None, |c| {
+                c.dram.ideal_row_hits = true;
+            });
+            (c.metrics, Some(c.result.quality))
+        }
+        Scenario::Reorder(kind) => {
+            assert!(
+                kind.applicable_to(w),
+                "driver: {kind} is not applicable to {}",
+                w.name()
+            );
+            let s = reorder_study(w, kind, cfg);
+            (s.reordered, Some(s.reordered_quality))
+        }
+    };
+    JobOutput { job: job.clone(), metrics, quality }
+}
+
+/// Run `jobs` across up to `threads` OS threads (`0` = one per available
+/// core). Jobs are claimed from a shared atomic cursor (work stealing by
+/// index), so long simulations do not convoy behind short ones; results
+/// land in per-job slots and come back in input order.
+pub fn run_jobs(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverReport {
+    let t0 = std::time::Instant::now();
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let requested = if threads == 0 { auto } else { threads };
+    let threads_used = requested.min(jobs.len()).max(1);
+
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<JobOutput>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads_used {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let out = run_job(cfg, &jobs[i]);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    let outputs = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("every job slot filled"))
+        .collect();
+    DriverReport { outputs, threads_used, wall_seconds: t0.elapsed().as_secs_f64() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExperimentConfig {
+        ExperimentConfig { scale: 0.02, iterations: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn outputs_follow_input_order() {
+        let cfg = tiny();
+        let jobs = vec![
+            Job::new("KMeans", Scenario::Baseline),
+            Job::new("KNN", Scenario::SwPrefetch),
+            Job::new("Ridge", Scenario::Baseline),
+        ];
+        let report = run_jobs(&cfg, &jobs, 3);
+        assert_eq!(report.outputs.len(), 3);
+        for (job, out) in jobs.iter().zip(&report.outputs) {
+            assert_eq!(*job, out.job);
+            assert!(out.metrics.instructions > 0, "{job:?}");
+        }
+    }
+
+    #[test]
+    fn parallel_results_equal_sequential() {
+        let cfg = tiny();
+        let jobs = vec![
+            Job::new("KMeans", Scenario::Baseline),
+            Job::new("DBSCAN", Scenario::Baseline),
+            Job::new("KNN", Scenario::PerfectLlc),
+            Job::new("GMM", Scenario::Multicore(2)),
+        ];
+        let seq = run_jobs(&cfg, &jobs, 1);
+        let par = run_jobs(&cfg, &jobs, 4);
+        assert_eq!(par.threads_used, 4);
+        for (a, b) in seq.outputs.iter().zip(&par.outputs) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.metrics, b.metrics, "{:?}", a.job);
+            assert_eq!(a.quality, b.quality);
+        }
+    }
+
+    #[test]
+    fn standard_grid_covers_every_workload() {
+        let cfg = tiny();
+        let jobs = standard_grid(&cfg);
+        for w in crate::workloads::registry() {
+            assert!(
+                jobs.iter().any(|j| j.workload == w.name()),
+                "missing {}",
+                w.name()
+            );
+        }
+        assert!(jobs.iter().any(|j| matches!(j.scenario, Scenario::Multicore(8))));
+    }
+
+    #[test]
+    fn zero_threads_means_auto() {
+        let cfg = tiny();
+        let jobs = vec![Job::new("Lasso", Scenario::Baseline)];
+        let report = run_jobs(&cfg, &jobs, 0);
+        assert_eq!(report.threads_used, 1, "capped at job count");
+        assert!(report.outputs[0].quality.is_some());
+    }
+}

@@ -7,10 +7,14 @@
 //! DESIGN.md's experiment index); the bench targets under `rust/benches/`
 //! are thin wrappers that format the results.
 
+pub mod driver;
+
+pub use driver::{run_job, run_jobs, standard_grid, DriverReport, Job, JobOutput, Scenario};
+
 use crate::data::Dataset;
 use crate::reorder::{compute_plan, ReorderKind, ReorderPlan};
 use crate::sim::{run_multicore, CpuConfig, Metrics, PipelineSim};
-use crate::trace::{NullSink, Recorder, Sink};
+use crate::trace::{NullSink, Recorder};
 use crate::workloads::{LibraryProfile, RunContext, RunResult, Workload};
 
 /// Global experiment configuration.
@@ -255,13 +259,12 @@ pub fn multicore_characterize(
         let per_core_bytes = (rows.max(256) * cfg.features * 8) as u64;
         shrink_hierarchy(&mut cpu, per_core_bytes * n_cores as u64);
     }
-    run_multicore(&cpu, n_cores, |core, sim| {
+    run_multicore(&cpu, n_cores, workload_ns(w), |core, rec| {
         let ds = w.make_dataset(rows.max(256), cfg.features, cfg.seed + core as u64);
         let mut ctx = cfg.run_ctx();
         ctx.seed = cfg.seed + 1000 + core as u64;
-        let mut rec = Recorder::new(sim, workload_ns(w));
         rec.profile_overhead = ctx.profile.loop_overhead_uops();
-        w.run(&ds, &ctx, &mut rec);
+        w.run(&ds, &ctx, rec);
     })
 }
 
@@ -295,7 +298,7 @@ pub fn run_untraced(w: &dyn Workload, ds: &Dataset, ctx: &RunContext) -> RunResu
     let mut sink = NullSink;
     let mut rec = Recorder::new(&mut sink, workload_ns(w));
     let r = w.run(ds, ctx, &mut rec);
-    Sink::finish(&mut sink);
+    rec.finish();
     r
 }
 

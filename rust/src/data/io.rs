@@ -7,8 +7,9 @@
 //! little-endian f64 X payload followed by f64 y payload.
 
 use super::synth::Dataset;
+use crate::bail;
+use crate::util::error::{Context, Result};
 use crate::util::Matrix;
-use anyhow::{bail, Context, Result};
 use std::io::{Read, Write};
 use std::path::Path;
 

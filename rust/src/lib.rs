@@ -15,11 +15,17 @@
 //! - [`reorder`] — the paper's five data-layout / computation reordering
 //!   optimizations (Table VIII) with overhead accounting.
 //! - [`coordinator`] — the experiment registry mapping every figure and
-//!   table of the paper to a runnable experiment.
+//!   table of the paper to a runnable experiment, plus the parallel
+//!   (workload × scenario) driver (`coordinator::driver`).
+//! - [`trace`] — the batched columnar event pipeline ([`trace::block`])
+//!   connecting instrumented workloads to the simulators.
 //! - [`runtime`] — PJRT executor that loads the AOT-compiled JAX/Pallas
-//!   numeric kernels (`artifacts/*.hlo.txt`) and runs them from Rust.
+//!   numeric kernels (`artifacts/*.hlo.txt`) and runs them from Rust;
+//!   stubbed out unless built with `--features pjrt` (needs `xla`
+//!   bindings the offline image lacks).
 //!
-//! See `examples/quickstart.rs` for the five-minute tour.
+//! See `rust/examples/quickstart.rs` for the five-minute tour, DESIGN.md
+//! (repo root) for the substitution table and pipeline architecture.
 
 pub mod analysis;
 pub mod coordinator;

@@ -12,8 +12,9 @@
 //! mlperf report      [--scale 0.2]     # every figure/table, slow
 //! ```
 
-use anyhow::{anyhow, bail, Result};
 use mlperf::analysis::{pct, r2, r3, Table};
+use mlperf::util::error::Result;
+use mlperf::{anyhow, bail};
 use mlperf::coordinator::*;
 use mlperf::reorder::ReorderKind;
 use mlperf::util::Args;
@@ -66,6 +67,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("gen-data") => cmd_gen_data(args),
         Some("runtime") => cmd_runtime(args),
         Some("report") => cmd_report(args),
+        Some("grid") => cmd_grid(args),
         Some(other) => bail!("unknown subcommand {other:?}"),
         None => {
             println!("{}", HELP);
@@ -75,8 +77,9 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "mlperf — Performance Characterization of Traditional ML (repro)
-subcommands: list, characterize, prefetch, reorder, multicore, gen-data, runtime, report
-common flags: --workload <name> --scale <f> --iterations <n> --profile sklearn|mlpack --seed <n>";
+subcommands: list, characterize, prefetch, reorder, multicore, gen-data, runtime, report, grid
+common flags: --workload <name> --scale <f> --iterations <n> --profile sklearn|mlpack --seed <n>
+grid flags:   --threads <n>   (0 = one per core; runs baseline + multicore cells for every workload in parallel)";
 
 fn cmd_list() -> Result<()> {
     let mut t = Table::new("workloads", "Table I — workloads and categories", &[
@@ -256,6 +259,39 @@ fn cmd_runtime(args: &Args) -> Result<()> {
         .collect();
     let (_, inertia) = rt.kmeans_step(&x, &c)?;
     println!("kmeans_step OK (batch inertia {inertia:.1})");
+    Ok(())
+}
+
+fn cmd_grid(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let threads: usize = args.get_parsed_or("threads", 0usize);
+    let jobs = standard_grid(&cfg);
+    println!("running {} jobs at scale {} …", jobs.len(), cfg.scale);
+    let report = run_jobs(&cfg, &jobs, threads);
+    let mut t = Table::new(
+        "grid",
+        &format!(
+            "parallel experiment grid ({} jobs, {} threads, {:.1}s wall)",
+            report.outputs.len(),
+            report.threads_used,
+            report.wall_seconds
+        ),
+        &["workload", "scenario", "CPI", "ret%", "bspec%", "dram%", "core%", "quality"],
+    );
+    for out in &report.outputs {
+        let m = &out.metrics;
+        t.row(vec![
+            out.job.workload.clone(),
+            out.job.scenario.to_string(),
+            r2(m.cpi),
+            pct(m.retiring_pct),
+            pct(m.bad_spec_pct),
+            pct(m.dram_bound_pct),
+            pct(m.core_bound_pct),
+            out.quality.map(|q| format!("{q:.4}")).unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.emit();
     Ok(())
 }
 

@@ -328,8 +328,10 @@ mod tests {
         let ds = make_blobs(400, 5, 3, 1.0, 61);
         let cost = |kind| {
             let mut mix = InstructionMix::default();
-            let mut rec = Recorder::new(&mut mix, 40);
-            compute_plan(kind, &ds, w.as_ref(), &RunContext::default(), &mut rec);
+            {
+                let mut rec = Recorder::new(&mut mix, 40);
+                compute_plan(kind, &ds, w.as_ref(), &RunContext::default(), &mut rec);
+            }
             mix.instructions()
         };
         let ft = cost(ReorderKind::FirstTouch);

@@ -1,0 +1,220 @@
+//! Real PJRT executor, compiled only with `--features pjrt`.
+//!
+//! Requires a local `xla` bindings crate (the offline image does not ship
+//! one); add it to `Cargo.toml` alongside the feature:
+//!
+//! ```toml
+//! [dependencies]
+//! xla = { path = "/opt/xla-rs" }   # or wherever the bindings live
+//! ```
+//!
+//! The interchange format is HLO **text**: jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see python/compile/aot.py and
+//! /opt/xla-example/README.md).
+
+use super::{BATCH, FEATURES, K};
+use crate::util::error::{Context, Error, Result};
+use crate::{anyhow, bail};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded PJRT executor for the exported compute graphs.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Load every artifact in `dir` and compile it on the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let mut rt = Self { client, execs: HashMap::new(), dir: dir.to_path_buf() };
+        for name in ["pairwise", "kmeans_step", "gram_xty"] {
+            rt.load_one(name)
+                .with_context(|| format!("loading artifact {name} from {}", dir.display()))?;
+        }
+        Ok(rt)
+    }
+
+    fn load_one(&mut self, name: &str) -> Result<()> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "{} missing — run `make artifacts` first (python/compile/aot.py)",
+                path.display()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(wrap)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(wrap)?;
+        self.execs.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("executable {name} not loaded"))?;
+        let result = exe.execute::<xla::Literal>(inputs).map_err(wrap)?;
+        let lit = result[0][0].to_literal_sync().map_err(wrap)?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        lit.to_tuple().map_err(wrap)
+    }
+
+    /// Distance matrix of one batch: x is BATCH*FEATURES, c is K*FEATURES
+    /// (both row-major f32). Returns BATCH*K distances.
+    pub fn pairwise(&self, x: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+        let (lx, lc) = self.batch_inputs(x, c)?;
+        let out = self.run("pairwise", &[lx, lc])?;
+        out[0].to_vec::<f32>().map_err(wrap)
+    }
+
+    /// One Lloyd iteration over a batch: returns (new_centroids K*FEATURES,
+    /// batch inertia).
+    pub fn kmeans_step(&self, x: &[f32], c: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let (lx, lc) = self.batch_inputs(x, c)?;
+        let out = self.run("kmeans_step", &[lx, lc])?;
+        let new_c = out[0].to_vec::<f32>().map_err(wrap)?;
+        let inertia = out[1].to_vec::<f32>().map_err(wrap)?[0];
+        Ok((new_c, inertia))
+    }
+
+    /// Normal-equation blocks of a batch: returns (XᵀX FEATURES², Xᵀy).
+    pub fn gram_xty(&self, x: &[f32], y: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        if x.len() != BATCH * FEATURES || y.len() != BATCH {
+            bail!("gram_xty expects {}x{} + {} inputs", BATCH, FEATURES, BATCH);
+        }
+        let lx = xla::Literal::vec1(x)
+            .reshape(&[BATCH as i64, FEATURES as i64])
+            .map_err(wrap)?;
+        let ly = xla::Literal::vec1(y);
+        let out = self.run("gram_xty", &[lx, ly])?;
+        Ok((
+            out[0].to_vec::<f32>().map_err(wrap)?,
+            out[1].to_vec::<f32>().map_err(wrap)?,
+        ))
+    }
+
+    fn batch_inputs(&self, x: &[f32], c: &[f32]) -> Result<(xla::Literal, xla::Literal)> {
+        if x.len() != BATCH * FEATURES {
+            bail!("batch must be {}x{} f32, got {} values", BATCH, FEATURES, x.len());
+        }
+        if c.len() != K * FEATURES {
+            bail!("centroids must be {}x{} f32, got {}", K, FEATURES, c.len());
+        }
+        let lx = xla::Literal::vec1(x)
+            .reshape(&[BATCH as i64, FEATURES as i64])
+            .map_err(wrap)?;
+        let lc = xla::Literal::vec1(c)
+            .reshape(&[K as i64, FEATURES as i64])
+            .map_err(wrap)?;
+        Ok((lx, lc))
+    }
+}
+
+fn wrap(e: xla::Error) -> Error {
+    anyhow!("xla: {e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifacts_dir;
+    use crate::util::Pcg64;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifacts_dir();
+        if !dir.join("kmeans_step.hlo.txt").exists() {
+            eprintln!("artifacts missing; skipping runtime test");
+            return None;
+        }
+        Some(Runtime::load(&dir).expect("runtime should load"))
+    }
+
+    fn rand_batch(seed: u64) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Pcg64::new(seed);
+        let x: Vec<f32> = (0..BATCH * FEATURES).map(|_| rng.normal() as f32).collect();
+        let c: Vec<f32> = (0..K * FEATURES).map(|_| rng.normal() as f32).collect();
+        (x, c)
+    }
+
+    #[test]
+    fn pairwise_matches_cpu_reference() {
+        let Some(rt) = runtime() else { return };
+        let (x, c) = rand_batch(70);
+        let d = rt.pairwise(&x, &c).unwrap();
+        assert_eq!(d.len(), BATCH * K);
+        // check a few entries against a scalar reference
+        for &i in &[0usize, 17, 4095] {
+            for j in 0..K {
+                let mut want = 0.0f32;
+                for f in 0..FEATURES {
+                    let diff = x[i * FEATURES + f] - c[j * FEATURES + f];
+                    want += diff * diff;
+                }
+                let got = d[i * K + j];
+                assert!(
+                    (got - want).abs() < 1e-2 * want.abs().max(1.0),
+                    "d[{i},{j}] = {got}, want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_step_reduces_inertia() {
+        let Some(rt) = runtime() else { return };
+        let (x, c0) = rand_batch(71);
+        let (c1, i1) = rt.kmeans_step(&x, &c0).unwrap();
+        let (_c2, i2) = rt.kmeans_step(&x, &c1).unwrap();
+        assert!(i2 <= i1 * 1.001, "inertia must not increase: {i1} -> {i2}");
+        assert_eq!(c1.len(), K * FEATURES);
+    }
+
+    #[test]
+    fn gram_xty_solves_regression() {
+        let Some(rt) = runtime() else { return };
+        let mut rng = Pcg64::new(72);
+        let w_true: Vec<f64> = (0..FEATURES).map(|_| rng.normal()).collect();
+        let x: Vec<f32> = (0..BATCH * FEATURES).map(|_| rng.normal() as f32).collect();
+        let y: Vec<f32> = (0..BATCH)
+            .map(|i| {
+                (0..FEATURES)
+                    .map(|f| x[i * FEATURES + f] as f64 * w_true[f])
+                    .sum::<f64>() as f32
+            })
+            .collect();
+        let (g, xty) = rt.gram_xty(&x, &y).unwrap();
+        // solve in f64 with the crate's own Cholesky
+        let mut a = crate::util::Matrix::zeros(FEATURES, FEATURES);
+        for i in 0..FEATURES {
+            for j in 0..FEATURES {
+                a[(i, j)] = g[i * FEATURES + j] as f64;
+            }
+            a[(i, i)] += 1e-6;
+        }
+        let b: Vec<f64> = xty.iter().map(|&v| v as f64).collect();
+        let w = crate::util::solve_spd(&a, &b).unwrap();
+        for (got, want) in w.iter().zip(&w_true) {
+            assert!((got - want).abs() < 1e-2, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn shape_errors_are_reported() {
+        let Some(rt) = runtime() else { return };
+        let err = rt.pairwise(&[0.0; 10], &[0.0; 10]).unwrap_err().to_string();
+        assert!(err.contains("batch must be"), "{err}");
+    }
+}

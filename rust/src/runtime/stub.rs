@@ -1,0 +1,54 @@
+//! Feature-gated stand-in for the PJRT executor: keeps the `runtime` API
+//! compiling when the `xla` bindings crate is unavailable (the default
+//! offline build). `load` always fails; the methods below are never
+//! reachable on this configuration but preserve the call-site types.
+
+use crate::bail;
+use crate::util::error::Result;
+use std::path::Path;
+
+/// Stub executor. Construction always fails with an explanatory error.
+pub struct Runtime {
+    _private: (),
+}
+
+const UNAVAILABLE: &str =
+    "PJRT runtime unavailable: this build has the `pjrt` feature disabled \
+     (the offline image ships no `xla` bindings crate). Rebuild with \
+     `cargo build --features pjrt` and a local `xla` dependency to run \
+     AOT artifacts.";
+
+impl Runtime {
+    /// Always fails on a stub build.
+    pub fn load(dir: &Path) -> Result<Self> {
+        bail!("{UNAVAILABLE} (artifacts dir: {})", dir.display());
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature disabled)".to_string()
+    }
+
+    pub fn pairwise(&self, _x: &[f32], _c: &[f32]) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn kmeans_step(&self, _x: &[f32], _c: &[f32]) -> Result<(Vec<f32>, f32)> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn gram_xty(&self, _x: &[f32], _y: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        bail!("{UNAVAILABLE}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_reports_feature_gate() {
+        let err = Runtime::load(Path::new("artifacts")).err().expect("stub must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+}

@@ -17,7 +17,7 @@ use super::branch::{BranchStats, Gshare};
 use super::cache::{DramRequest, Hierarchy, HierarchyConfig, Level};
 use super::dram::{Dram, DramConfig, DramStats};
 use super::prefetch::PrefetchStats;
-use crate::trace::{Event, InstructionMix, Sink};
+use crate::trace::{BlockSink, Event, EventBlock, EventKind, InstructionMix, Sink};
 
 /// Core configuration (defaults model the paper's "aggressive 5-way
 /// superscalar" client core at 2.9 GHz).
@@ -62,7 +62,7 @@ struct Outstanding {
 }
 
 /// Full metric set for one characterized run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Metrics {
     pub instructions: u64,
     pub cycles: f64,
@@ -356,20 +356,55 @@ impl PipelineSim {
     }
 }
 
+// Per-event timeline handlers, shared verbatim by the legacy per-event
+// [`Sink`] path and the batched [`BlockSink`] path so the two produce
+// bit-identical metrics (the parity tests assert this).
+impl PipelineSim {
+    #[inline]
+    fn on_compute(&mut self, int_ops: u32, fp_ops: u32) {
+        self.issue((int_ops + fp_ops) as f64);
+        self.drain_window(false);
+    }
+
+    #[inline]
+    fn on_serial(&mut self, ops: u32) {
+        // dependency chain: 1 uop issued, ALU latency exposed
+        self.uops += ops as f64;
+        self.cycle += ops as f64 * 1.5;
+        self.drain_window(false);
+    }
+
+    #[inline]
+    fn on_loop_branch(&mut self, count: u32) {
+        // count-1 taken back-edges + 1 fall-through. A gshare
+        // predictor learns the exit only when the whole trip fits
+        // in its history register; longer trips mispredict the
+        // exit once per loop instance.
+        self.issue(count as f64);
+        self.branch_stats.conditional += count as u64;
+        if count as u64 > 14 {
+            self.branch_stats.mispredicts += 1;
+            self.bad_spec_cycles += self.cfg.mispredict_penalty;
+            self.cycle += self.cfg.mispredict_penalty;
+        }
+    }
+
+    #[inline]
+    fn on_sw_prefetch(&mut self, addr: u64) {
+        // a prefetch instruction occupies one issue slot but never
+        // blocks retirement
+        self.issue(1.0);
+        self.hierarchy.sw_prefetch(addr, &mut self.dram_scratch);
+        self.run_dram_traffic();
+    }
+}
+
 impl Sink for PipelineSim {
     fn event(&mut self, ev: Event) {
         self.mix.event(ev);
         match ev {
-            Event::Compute { int_ops, fp_ops } => {
-                self.issue((int_ops + fp_ops) as f64);
-                self.drain_window(false);
-            }
-            Event::Serial { ops } => {
-                // dependency chain: 1 uop issued, ALU latency exposed
-                self.uops += ops as f64;
-                self.cycle += ops as f64 * 1.5;
-                self.drain_window(false);
-            }
+            Event::Compute { int_ops, fp_ops } => self.on_compute(int_ops, fp_ops),
+            Event::Serial { ops } => self.on_serial(ops),
             Event::Load { addr, size, feeds_branch } => {
                 self.memory_access(addr, size, false, feeds_branch);
             }
@@ -379,26 +414,8 @@ impl Sink for PipelineSim {
             Event::Branch { site, taken, conditional } => {
                 self.branch_event(site, taken, conditional);
             }
-            Event::LoopBranch { count, .. } => {
-                // count-1 taken back-edges + 1 fall-through. A gshare
-                // predictor learns the exit only when the whole trip fits
-                // in its history register; longer trips mispredict the
-                // exit once per loop instance.
-                self.issue(count as f64);
-                self.branch_stats.conditional += count as u64;
-                if count as u64 > 14 {
-                    self.branch_stats.mispredicts += 1;
-                    self.bad_spec_cycles += self.cfg.mispredict_penalty;
-                    self.cycle += self.cfg.mispredict_penalty;
-                }
-            }
-            Event::SwPrefetch { addr } => {
-                // a prefetch instruction occupies one issue slot but never
-                // blocks retirement
-                self.issue(1.0);
-                self.hierarchy.sw_prefetch(addr, &mut self.dram_scratch);
-                self.run_dram_traffic();
-            }
+            Event::LoopBranch { count, .. } => self.on_loop_branch(count),
+            Event::SwPrefetch { addr } => self.on_sw_prefetch(addr),
         }
     }
 
@@ -416,6 +433,60 @@ impl Sink for PipelineSim {
             }
         }
         self.finished = true;
+    }
+}
+
+impl BlockSink for PipelineSim {
+    /// Consume a whole columnar block: the instruction mix is accumulated
+    /// lane-wise (no per-event dispatch), then the timeline model walks
+    /// the discriminant lane with per-lane cursors — monomorphized, with
+    /// every payload lane contiguous in cache.
+    fn consume(&mut self, block: &EventBlock) {
+        self.mix.add_block(block);
+        let (mut ci, mut si, mut li, mut sti, mut bi, mut lbi, mut pi) = (0, 0, 0, 0, 0, 0, 0);
+        for &kind in block.kinds() {
+            match kind {
+                EventKind::Compute => {
+                    let (int_ops, fp_ops) = block.compute[ci];
+                    ci += 1;
+                    self.on_compute(int_ops, fp_ops);
+                }
+                EventKind::Serial => {
+                    let ops = block.serial[si];
+                    si += 1;
+                    self.on_serial(ops);
+                }
+                EventKind::Load => {
+                    let l = block.loads[li];
+                    li += 1;
+                    self.memory_access(l.addr, l.size, false, l.feeds_branch);
+                }
+                EventKind::Store => {
+                    let s = block.stores[sti];
+                    sti += 1;
+                    self.memory_access(s.addr, s.size, true, false);
+                }
+                EventKind::Branch => {
+                    let br = block.branches[bi];
+                    bi += 1;
+                    self.branch_event(br.site, br.taken, br.conditional);
+                }
+                EventKind::LoopBranch => {
+                    let (_site, count) = block.loop_branches[lbi];
+                    lbi += 1;
+                    self.on_loop_branch(count);
+                }
+                EventKind::SwPrefetch => {
+                    let addr = block.prefetches[pi];
+                    pi += 1;
+                    self.on_sw_prefetch(addr);
+                }
+            }
+        }
+    }
+
+    fn finalize(&mut self) {
+        <Self as Sink>::finish(self);
     }
 }
 
@@ -590,5 +661,53 @@ mod tests {
     fn metrics_before_finish_panics() {
         let s = sim();
         let _ = s.metrics();
+    }
+
+    /// The per-event Sink path and the columnar BlockSink path must agree
+    /// bit-for-bit on every metric for an arbitrary mixed stream.
+    #[test]
+    fn block_and_event_paths_produce_identical_metrics() {
+        let mut rng = crate::util::Pcg64::new(77);
+        let events: Vec<Event> = (0..30_000)
+            .map(|_| match rng.below(7) {
+                0 => Event::Compute { int_ops: rng.below(6) as u32, fp_ops: rng.below(6) as u32 },
+                1 => Event::Serial { ops: 1 + rng.below(4) as u32 },
+                2 => Event::Load {
+                    addr: rng.below(1 << 30),
+                    size: 1 + rng.below(256) as u32,
+                    feeds_branch: rng.next_f64() < 0.2,
+                },
+                3 => Event::Store { addr: rng.below(1 << 30), size: 8 },
+                4 => Event::Branch {
+                    site: rng.below(64) as u32,
+                    taken: rng.next_f64() < 0.5,
+                    conditional: rng.next_f64() < 0.9,
+                },
+                5 => Event::LoopBranch { site: rng.below(32) as u32, count: 1 + rng.below(30) as u32 },
+                _ => Event::SwPrefetch { addr: rng.below(1 << 30) },
+            })
+            .collect();
+
+        let mut per_event = sim();
+        for &ev in &events {
+            per_event.event(ev);
+        }
+        Sink::finish(&mut per_event);
+
+        let mut batched = sim();
+        let mut block = EventBlock::with_capacity();
+        for &ev in &events {
+            block.push_event(ev);
+            if block.is_full() {
+                batched.consume(&block);
+                block.clear();
+            }
+        }
+        if !block.is_empty() {
+            batched.consume(&block);
+        }
+        BlockSink::finalize(&mut batched);
+
+        assert_eq!(per_event.metrics(), batched.metrics());
     }
 }

@@ -83,7 +83,7 @@ pub enum RowOutcome {
 }
 
 /// Aggregate DRAM statistics.
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct DramStats {
     pub requests: u64,
     pub reads: u64,

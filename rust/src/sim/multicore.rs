@@ -19,6 +19,7 @@
 //! substitution (the paper used real hardware).
 
 use super::cpu::{CpuConfig, Metrics, PipelineSim};
+use crate::trace::Recorder;
 use crate::util::stats;
 
 /// Derive the per-core effective configuration for an `n`-core run.
@@ -66,18 +67,23 @@ pub fn aggregate(per_core: &[Metrics]) -> Metrics {
     out
 }
 
-/// Run an `n_cores`-way simulation: `run_core(core_id, sim)` drives core
-/// `core_id`'s shard of the workload into its pipeline simulator.
-pub fn run_multicore<F>(base: &CpuConfig, n_cores: usize, mut run_core: F) -> Metrics
+/// Run an `n_cores`-way simulation: `run_core(core_id, rec)` drives core
+/// `core_id`'s shard of the workload through a block-pipeline [`Recorder`]
+/// into that core's private pipeline simulator. `ns` is the branch-site
+/// namespace handed to each per-core recorder.
+pub fn run_multicore<F>(base: &CpuConfig, n_cores: usize, ns: u32, mut run_core: F) -> Metrics
 where
-    F: FnMut(usize, &mut PipelineSim),
+    F: FnMut(usize, &mut Recorder),
 {
     let cfg = percore_config(base, n_cores);
     let mut per_core = Vec::with_capacity(n_cores);
     for core in 0..n_cores {
         let mut sim = PipelineSim::new(cfg.clone());
-        run_core(core, &mut sim);
-        crate::trace::Sink::finish(&mut sim);
+        {
+            let mut rec = Recorder::new(&mut sim, ns);
+            run_core(core, &mut rec);
+            rec.finish();
+        }
         per_core.push(sim.metrics());
     }
     aggregate(&per_core)
@@ -86,7 +92,6 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::trace::{Event, Sink};
 
     #[test]
     fn percore_config_partitions_llc_and_bus() {
@@ -126,15 +131,15 @@ mod tests {
         // same per-core random-access shard on 1 vs 8 cores
         let mut rng = crate::util::Pcg64::new(13);
         let addrs: Vec<u64> = (0..20_000).map(|_| rng.below(1 << 31) & !63).collect();
-        let drive = |_c: usize, sim: &mut crate::sim::cpu::PipelineSim| {
+        let drive = |_c: usize, rec: &mut Recorder| {
             for &a in &addrs {
-                sim.event(Event::Load { addr: a, size: 8, feeds_branch: false });
-                sim.event(Event::Compute { int_ops: 2, fp_ops: 1 });
+                rec.load(a, 8);
+                rec.compute(2, 1);
             }
         };
         let base = CpuConfig::default();
-        let m1 = run_multicore(&base, 1, drive);
-        let m8 = run_multicore(&base, 8, drive);
+        let m1 = run_multicore(&base, 1, 1, drive);
+        let m8 = run_multicore(&base, 8, 1, drive);
         assert!(
             m8.cpi >= m1.cpi * 0.9,
             "8-core contention should not make cores faster: {} vs {}",

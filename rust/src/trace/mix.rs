@@ -5,6 +5,7 @@
 //! one instruction (a reasonable x86 uop-to-instruction mapping for the
 //! compiled loops the paper studies).
 
+use super::block::{BlockSink, EventBlock};
 use super::event::{Event, Sink};
 
 /// Dynamic instruction mix counters.
@@ -55,6 +56,41 @@ impl InstructionMix {
         } else {
             (self.loads + self.stores) as f64 / n as f64
         }
+    }
+
+    /// Columnar accumulation of a whole [`EventBlock`]: each counter is a
+    /// lane reduction, with no per-event tag dispatch. Produces exactly
+    /// the counts that feeding the block's events one at a time would
+    /// (all counters are integers, so the equality is bit-for-bit).
+    pub fn add_block(&mut self, b: &EventBlock) {
+        for &(int_ops, fp_ops) in &b.compute {
+            self.int_ops += int_ops as u64;
+            self.fp_ops += fp_ops as u64;
+        }
+        for &ops in &b.serial {
+            self.int_ops += ops as u64;
+        }
+        self.loads += b.loads.len() as u64;
+        for l in &b.loads {
+            self.bytes_loaded += l.size as u64;
+        }
+        self.stores += b.stores.len() as u64;
+        for s in &b.stores {
+            self.bytes_stored += s.size as u64;
+        }
+        self.branches += b.branches.len() as u64;
+        self.cond_branches += b.branches.iter().filter(|br| br.conditional).count() as u64;
+        for &(_, count) in &b.loop_branches {
+            self.branches += count as u64;
+            self.cond_branches += count as u64;
+        }
+        self.sw_prefetches += b.prefetches.len() as u64;
+    }
+}
+
+impl BlockSink for InstructionMix {
+    fn consume(&mut self, block: &EventBlock) {
+        self.add_block(block);
     }
 }
 
@@ -119,6 +155,30 @@ mod tests {
         m.event(Event::Compute { int_ops: 7, fp_ops: 0 });
         assert!((m.branch_fraction() - 0.3).abs() < 1e-12);
         assert!((m.conditional_branch_fraction() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_block_matches_per_event() {
+        let events = [
+            Event::Compute { int_ops: 3, fp_ops: 2 },
+            Event::Serial { ops: 5 },
+            Event::Load { addr: 0, size: 8, feeds_branch: false },
+            Event::Load { addr: 8, size: 16, feeds_branch: true },
+            Event::Store { addr: 0, size: 8 },
+            Event::Branch { site: 1, taken: true, conditional: true },
+            Event::Branch { site: 2, taken: true, conditional: false },
+            Event::LoopBranch { site: 3, count: 12 },
+            Event::SwPrefetch { addr: 0 },
+        ];
+        let mut per_event = InstructionMix::default();
+        let mut block = EventBlock::with_capacity();
+        for ev in events {
+            per_event.event(ev);
+            block.push_event(ev);
+        }
+        let mut batched = InstructionMix::default();
+        batched.add_block(&block);
+        assert_eq!(per_event, batched);
     }
 
     #[test]

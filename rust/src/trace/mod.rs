@@ -1,13 +1,23 @@
 //! Trace substrate: the event model connecting instrumented workloads to
 //! the micro-architectural simulators. Equivalent role to the paper's
 //! `perf` / `perf mem` / VTune collection layer.
+//!
+//! Delivery is batched and columnar: workloads record through
+//! [`Recorder`] into struct-of-arrays [`EventBlock`]s consumed whole by
+//! [`BlockSink`]s (see [`block`]). The per-event [`Sink`] trait remains
+//! for tests, diagnostics, and the [`PerEvent`] migration adapter.
 
 pub mod addr;
+pub mod block;
 pub mod event;
 pub mod mix;
 pub mod recorder;
 
 pub use addr::{line_of, page_of, AddressSpace, Region, LINE_SIZE, PAGE_SIZE};
+pub use block::{
+    BlockSink, BlockTee, BranchRec, EventBlock, EventKind, LaneCursors, LoadRec, PerEvent,
+    StoreRec, BLOCK_EVENTS,
+};
 pub use event::{Event, NullSink, Sink, Tee, VecSink};
 pub use mix::InstructionMix;
 pub use recorder::Recorder;

@@ -1,16 +1,29 @@
 //! Ergonomic instrumentation facade used inside workload inner loops.
 //!
-//! `Recorder` wraps a `Sink` and provides the idioms the workloads need:
-//! row reads, compare-and-branch, indirect `A[B[i]]` loads, and optional
-//! software prefetching that can be toggled per run (the paper's before /
-//! after comparison runs the *same* code with prefetching on or off).
+//! `Recorder` provides the idioms the workloads need — row reads,
+//! compare-and-branch, indirect `A[B[i]]` loads, and optional software
+//! prefetching that can be toggled per run (the paper's before / after
+//! comparison runs the *same* code with prefetching on or off) — and
+//! buffers what they emit into a columnar [`EventBlock`], delivering it to
+//! a [`BlockSink`] one full block at a time. The per-event cost inside a
+//! workload loop is therefore a pair of lane appends, not a virtual call:
+//! the batching discipline the paper prescribes, applied to our own
+//! measurement substrate.
+//!
+//! `Recorder` is generic over its sink so benches and other call sites
+//! that know the concrete consumer get a fully monomorphized pipeline;
+//! the default type parameter keeps `&mut Recorder` (as the [`Workload`]
+//! trait uses it) spelled exactly as before, erased to
+//! `dyn BlockSink` — one virtual call per [`BLOCK_EVENTS`] events.
+//!
+//! [`Workload`]: crate::workloads::Workload
+//! [`BLOCK_EVENTS`]: super::block::BLOCK_EVENTS
 
-use super::event::{Event, Sink};
 use super::addr::{Region, LINE_SIZE};
+use super::block::{BlockSink, EventBlock};
 
 /// Instrumentation handle passed to a workload for one traced run.
-pub struct Recorder<'a> {
-    sink: &'a mut dyn Sink,
+pub struct Recorder<'a, S: BlockSink + ?Sized = dyn BlockSink + 'a> {
     /// Workload-unique namespace for branch site ids.
     ns: u32,
     /// Whether `prefetch*` calls emit events (Section V-C on/off switch).
@@ -22,18 +35,48 @@ pub struct Recorder<'a> {
     /// profile parameter.
     pub profile_overhead: u32,
     events: u64,
+    buf: EventBlock,
+    sink: &'a mut S,
 }
 
 impl<'a> Recorder<'a> {
-    /// New recorder with branch-site namespace `ns` (one per workload).
-    pub fn new(sink: &'a mut dyn Sink, ns: u32) -> Self {
-        Self { sink, ns, sw_prefetch_enabled: false, profile_overhead: 2, events: 0 }
+    /// New recorder over a type-erased sink with branch-site namespace
+    /// `ns` (one per workload). Any `&mut impl BlockSink` coerces here;
+    /// use [`Recorder::typed`] to keep the sink monomorphized.
+    pub fn new(sink: &'a mut (dyn BlockSink + 'a), ns: u32) -> Self {
+        Recorder::typed(sink, ns)
+    }
+}
+
+impl<'a, S: BlockSink + ?Sized> Recorder<'a, S> {
+    /// New recorder statically bound to sink type `S`: block delivery
+    /// monomorphizes and the whole pipeline inlines (no dynamic dispatch
+    /// at any granularity).
+    pub fn typed(sink: &'a mut S, ns: u32) -> Self {
+        Self {
+            ns,
+            sw_prefetch_enabled: false,
+            profile_overhead: 2,
+            events: 0,
+            buf: EventBlock::with_capacity(),
+            sink,
+        }
+    }
+
+    /// Deliver the buffered partial block to the sink, if any.
+    pub fn flush(&mut self) {
+        if !self.buf.is_empty() {
+            self.sink.consume(&self.buf);
+            self.buf.clear();
+        }
     }
 
     #[inline]
-    fn emit(&mut self, ev: Event) {
+    fn emitted(&mut self) {
         self.events += 1;
-        self.sink.event(ev);
+        if self.buf.is_full() {
+            self.flush();
+        }
     }
 
     /// Number of events emitted so far.
@@ -44,36 +87,43 @@ impl<'a> Recorder<'a> {
     /// Aggregated compute uops.
     #[inline]
     pub fn compute(&mut self, int_ops: u32, fp_ops: u32) {
-        self.emit(Event::Compute { int_ops, fp_ops });
+        self.buf.push_compute(int_ops, fp_ops);
+        self.emitted();
     }
 
     /// The library profile's per-element serialized bookkeeping chain
     /// (see [`Event::Serial`]); call once per instrumented inner-loop
     /// element.
+    ///
+    /// [`Event::Serial`]: super::event::Event::Serial
     #[inline]
     pub fn profile_tick(&mut self) {
         let ops = self.profile_overhead;
         if ops > 0 {
-            self.emit(Event::Serial { ops });
+            self.buf.push_serial(ops);
+            self.emitted();
         }
     }
 
     /// A plain load of `size` bytes.
     #[inline]
     pub fn load(&mut self, addr: u64, size: u32) {
-        self.emit(Event::Load { addr, size, feeds_branch: false });
+        self.buf.push_load(addr, size, false);
+        self.emitted();
     }
 
     /// A load whose result immediately feeds a conditional branch.
     #[inline]
     pub fn load_for_branch(&mut self, addr: u64, size: u32) {
-        self.emit(Event::Load { addr, size, feeds_branch: true });
+        self.buf.push_load(addr, size, true);
+        self.emitted();
     }
 
     /// A store of `size` bytes.
     #[inline]
     pub fn store(&mut self, addr: u64, size: u32) {
-        self.emit(Event::Store { addr, size });
+        self.buf.push_store(addr, size);
+        self.emitted();
     }
 
     /// Read one f64 element.
@@ -124,11 +174,8 @@ impl<'a> Recorder<'a> {
     /// `if r.branch(SITE_X, a < b) { ... }`.
     #[inline]
     pub fn branch(&mut self, site: u32, cond: bool) -> bool {
-        self.emit(Event::Branch {
-            site: self.ns << 16 | site,
-            taken: cond,
-            conditional: true,
-        });
+        self.buf.push_branch(self.ns << 16 | site, cond, true);
+        self.emitted();
         cond
     }
 
@@ -157,7 +204,8 @@ impl<'a> Recorder<'a> {
     /// Unconditional branch (loop back-edges, calls).
     #[inline]
     pub fn jump(&mut self, site: u32) {
-        self.emit(Event::Branch { site: self.ns << 16 | site, taken: true, conditional: false });
+        self.buf.push_branch(self.ns << 16 | site, true, false);
+        self.emitted();
     }
 
     /// A counted inner loop executing `count` back-edge branches (e.g. a
@@ -165,7 +213,8 @@ impl<'a> Recorder<'a> {
     #[inline]
     pub fn loop_branch(&mut self, site: u32, count: u32) {
         if count > 0 {
-            self.emit(Event::LoopBranch { site: self.ns << 16 | site, count });
+            self.buf.push_loop_branch(self.ns << 16 | site, count);
+            self.emitted();
         }
     }
 
@@ -177,7 +226,8 @@ impl<'a> Recorder<'a> {
             let first = addr / LINE_SIZE;
             let last = (addr + size.max(1) as u64 - 1) / LINE_SIZE;
             for line in first..=last {
-                self.emit(Event::SwPrefetch { addr: line * LINE_SIZE });
+                self.buf.push_prefetch(line * LINE_SIZE);
+                self.emitted();
             }
         }
     }
@@ -190,9 +240,20 @@ impl<'a> Recorder<'a> {
         }
     }
 
-    /// End-of-trace marker; drains the sink.
+    /// End-of-trace marker; flushes the partial block and finalizes the
+    /// sink.
     pub fn finish(&mut self) {
-        self.sink.finish();
+        self.flush();
+        self.sink.finalize();
+    }
+}
+
+/// Dropping a recorder flushes any buffered partial block (but does not
+/// finalize the sink), so sinks inspected after the recorder goes out of
+/// scope — the idiom throughout the tests — observe the complete stream.
+impl<S: BlockSink + ?Sized> Drop for Recorder<'_, S> {
+    fn drop(&mut self) {
+        self.flush();
     }
 }
 
@@ -200,7 +261,8 @@ impl<'a> Recorder<'a> {
 mod tests {
     use super::*;
     use crate::trace::addr::AddressSpace;
-    use crate::trace::event::VecSink;
+    use crate::trace::block::BLOCK_EVENTS;
+    use crate::trace::event::{Event, VecSink};
 
     #[test]
     fn branch_returns_condition_and_namespaces_site() {
@@ -288,5 +350,61 @@ mod tests {
         r.compute(1, 1);
         r.load(0x40, 8);
         assert_eq!(r.events_emitted(), 2);
+    }
+
+    /// Blocks are delivered at capacity boundaries; the tail arrives on
+    /// drop/finish. Event order must survive the batching exactly.
+    #[test]
+    fn batching_preserves_order_across_block_boundaries() {
+        let n = 2 * BLOCK_EVENTS + 100;
+        let mut v = VecSink::default();
+        {
+            let mut r = Recorder::new(&mut v, 1);
+            for i in 0..n {
+                match i % 3 {
+                    0 => r.load(i as u64 * 8, 8),
+                    1 => r.compute(1, 2),
+                    _ => {
+                        r.branch(1, i % 2 == 0);
+                    }
+                }
+            }
+            assert_eq!(r.events_emitted(), n as u64);
+            r.finish();
+        }
+        assert!(v.finished);
+        assert_eq!(v.events.len(), n);
+        for (i, ev) in v.events.iter().enumerate() {
+            match i % 3 {
+                0 => assert_eq!(
+                    *ev,
+                    Event::Load { addr: i as u64 * 8, size: 8, feeds_branch: false }
+                ),
+                1 => assert_eq!(*ev, Event::Compute { int_ops: 1, fp_ops: 2 }),
+                _ => assert!(matches!(ev, Event::Branch { conditional: true, .. })),
+            }
+        }
+    }
+
+    /// A monomorphized recorder behaves identically to the erased one.
+    #[test]
+    fn typed_recorder_matches_dyn_recorder() {
+        let drive = |r: &mut Recorder<VecSink>| {
+            r.load(0x100, 64);
+            r.cmp_branch(2, true);
+            r.loop_branch(3, 17);
+            r.finish();
+        };
+        let mut a = VecSink::default();
+        drive(&mut Recorder::typed(&mut a, 5));
+        let mut b = VecSink::default();
+        {
+            let mut r = Recorder::new(&mut b, 5);
+            r.load(0x100, 64);
+            r.cmp_branch(2, true);
+            r.loop_branch(3, 17);
+            r.finish();
+        }
+        assert_eq!(a.events, b.events);
     }
 }

@@ -1,0 +1,130 @@
+//! Minimal error/context substrate standing in for `anyhow`.
+//!
+//! The offline build environment provides no external crates, so the few
+//! fallible boundaries of the crate (dataset I/O, the CLI, the optional
+//! PJRT runtime) use this ~80-line equivalent: a string-chain error type,
+//! `anyhow!`/`bail!` macros, and a `Context` extension trait. Like
+//! `anyhow::Error`, [`Error`] deliberately does **not** implement
+//! `std::error::Error` so the blanket `From<E: std::error::Error>`
+//! conversion can exist without colliding with the reflexive `From`.
+
+use std::fmt;
+
+/// A boxed-string error with a chain of context frames.
+pub struct Error {
+    msg: String,
+    /// Context frames, innermost first (display prints them outermost
+    /// first, matching `anyhow`'s `{:#}` rendering).
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string(), context: Vec::new() }
+    }
+
+    /// Attach an outer context frame.
+    pub fn context(mut self, ctx: impl fmt::Display) -> Self {
+        self.context.push(ctx.to_string());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{self}")
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Crate-wide result alias (mirrors `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to any
+/// result whose error converts into [`Error`].
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Format an [`Error`] in place (mirrors `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] (mirrors `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fail_io() -> Result<()> {
+        let e = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        Err(e.into())
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain_context() {
+        let err = fail_io()
+            .context("reading header")
+            .unwrap_err()
+            .context("loading dataset");
+        assert_eq!(err.to_string(), "loading dataset: reading header: gone");
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = crate::anyhow!("bad value {}", 7);
+        assert_eq!(e.to_string(), "bad value 7");
+        fn bails() -> Result<()> {
+            crate::bail!("nope: {}", "reason");
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "nope: reason");
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let ok: Result<u32> = Ok(5u32);
+        let v = ok.with_context(|| {
+            called = true;
+            "ctx"
+        });
+        assert_eq!(v.unwrap(), 5);
+        assert!(!called, "context closure must not run on Ok");
+    }
+}

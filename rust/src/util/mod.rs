@@ -1,12 +1,14 @@
 //! Self-contained utility substrate: deterministic RNG, dense matrices,
-//! statistics, and a CLI parser. The offline build environment provides no
-//! external crates beyond `xla`/`anyhow`, so these are implemented here.
+//! statistics, a CLI parser, and an error/context type. The offline build
+//! environment provides no external crates, so these are implemented here.
 
 pub mod cli;
+pub mod error;
 pub mod matrix;
 pub mod rng;
 pub mod stats;
 
 pub use cli::Args;
+pub use error::{Context, Error, Result};
 pub use matrix::{solve_spd, Matrix};
 pub use rng::Pcg64;

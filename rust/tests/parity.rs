@@ -1,0 +1,105 @@
+//! Trace-parity tests: the same workload run through the legacy
+//! per-event `dyn Sink` path (via the `PerEvent` adapter) and through the
+//! native columnar block pipeline must emit the same number of events and
+//! produce identical `Metrics` — bit-for-bit, since the two paths share
+//! the per-event timeline handlers and all mix counters are integers.
+
+use mlperf::sim::{CpuConfig, Metrics, PipelineSim};
+use mlperf::trace::{PerEvent, Recorder};
+use mlperf::workloads::{by_name, RunContext, Workload};
+
+fn ctx() -> RunContext {
+    RunContext { iterations: 1, ..Default::default() }
+}
+
+/// Native path: Recorder -> EventBlock -> PipelineSim::consume.
+fn run_block_path(w: &dyn Workload, rows: usize) -> (Metrics, u64) {
+    let ds = w.make_dataset(rows, 8, 0x9A11);
+    let mut sim = PipelineSim::new(CpuConfig::default());
+    let events = {
+        let mut rec = Recorder::new(&mut sim, 3);
+        let _ = w.run(&ds, &ctx(), &mut rec);
+        rec.finish();
+        rec.events_emitted()
+    };
+    (sim.metrics(), events)
+}
+
+/// Legacy path: Recorder -> EventBlock -> PerEvent -> Sink::event, one
+/// virtual call and enum match per event, exactly as the seed pipeline
+/// dispatched.
+fn run_legacy_path(w: &dyn Workload, rows: usize) -> (Metrics, u64) {
+    let ds = w.make_dataset(rows, 8, 0x9A11);
+    let mut sim = PipelineSim::new(CpuConfig::default());
+    let events = {
+        let mut adapter = PerEvent(&mut sim);
+        let mut rec = Recorder::new(&mut adapter, 3);
+        let _ = w.run(&ds, &ctx(), &mut rec);
+        rec.finish();
+        rec.events_emitted()
+    };
+    (sim.metrics(), events)
+}
+
+#[test]
+fn block_pipeline_matches_legacy_event_counts_and_metrics() {
+    // one workload per paper category, plus the branch-heavy tree case
+    for name in ["KMeans", "KNN", "Ridge", "Decision Tree"] {
+        let w = by_name(name).unwrap();
+        let (block_m, block_events) = run_block_path(w.as_ref(), 500);
+        let (legacy_m, legacy_events) = run_legacy_path(w.as_ref(), 500);
+        assert_eq!(block_events, legacy_events, "{name}: event counts diverge");
+        assert!(block_events > 1_000, "{name}: trivial trace ({block_events} events)");
+        assert_eq!(block_m, legacy_m, "{name}: metrics diverge");
+    }
+}
+
+#[test]
+fn parity_holds_with_software_prefetching() {
+    let w = by_name("KNN").unwrap();
+    let ds = w.make_dataset(400, 8, 0x9A12);
+
+    let run = |legacy: bool| -> (Metrics, u64) {
+        let mut sim = PipelineSim::new(CpuConfig::default());
+        let events = if legacy {
+            let mut adapter = PerEvent(&mut sim);
+            let mut rec = Recorder::new(&mut adapter, 3);
+            rec.sw_prefetch_enabled = true;
+            let _ = w.run(&ds, &ctx(), &mut rec);
+            rec.finish();
+            rec.events_emitted()
+        } else {
+            let mut rec = Recorder::new(&mut sim, 3);
+            rec.sw_prefetch_enabled = true;
+            let _ = w.run(&ds, &ctx(), &mut rec);
+            rec.finish();
+            rec.events_emitted()
+        };
+        (sim.metrics(), events)
+    };
+
+    let (block_m, block_events) = run(false);
+    let (legacy_m, legacy_events) = run(true);
+    assert_eq!(block_events, legacy_events);
+    assert!(block_m.mix.sw_prefetches > 0, "prefetch events expected");
+    assert_eq!(block_m, legacy_m);
+}
+
+#[test]
+fn workload_quality_is_path_independent() {
+    // the trace transport must not perturb the algorithm itself
+    let w = by_name("KMeans").unwrap();
+    let ds = w.make_dataset(400, 6, 0x9A13);
+    let mut sim_a = PipelineSim::new(CpuConfig::default());
+    let mut sim_b = PipelineSim::new(CpuConfig::default());
+    let q_block = {
+        let mut rec = Recorder::new(&mut sim_a, 3);
+        w.run(&ds, &ctx(), &mut rec).quality
+    };
+    let q_legacy = {
+        let mut adapter = PerEvent(&mut sim_b);
+        let mut rec = Recorder::new(&mut adapter, 3);
+        w.run(&ds, &ctx(), &mut rec).quality
+    };
+    assert_eq!(q_block, q_legacy);
+}

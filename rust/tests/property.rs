@@ -207,8 +207,10 @@ fn prop_workload_traces_deterministic() {
         let ctx = RunContext { iterations: 1, ..Default::default() };
         let run = || {
             let mut mix = mlperf::trace::InstructionMix::default();
-            let mut rec = Recorder::new(&mut mix, 9);
-            w.run(&ds, &ctx, &mut rec);
+            {
+                let mut rec = Recorder::new(&mut mix, 9);
+                w.run(&ds, &ctx, &mut rec);
+            }
             mix
         };
         assert_eq!(run(), run(), "{name} trace must be deterministic");
