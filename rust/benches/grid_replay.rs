@@ -1,0 +1,75 @@
+//! Record-once/replay-many grid benchmark: the same 4-scenario ×
+//! N-workload grid run in direct mode (every cell re-executes its
+//! workload) and in replay mode (one capture per workload, replays for
+//! every cell), printing wall clocks, workload-execution counts, a
+//! parity checksum, and the speedup.
+//!
+//! Replay mode must be bit-identical — the checksum proves it on every
+//! run — so the speedup is pure win: scenario count stops multiplying
+//! workload execution time, which is what lets the grid grow toward the
+//! paper's full 14-workload × many-configuration sweeps.
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{r2, Table};
+use mlperf::coordinator::{run_jobs, run_jobs_replayed, DriverReport, Job, Scenario};
+
+fn checksum(report: &DriverReport) -> u64 {
+    // integer event/instruction counts fold into a stable parity witness
+    report
+        .outputs
+        .iter()
+        .fold(0u64, |h, o| h.wrapping_mul(31).wrapping_add(o.metrics.instructions))
+}
+
+fn main() {
+    common::banner("grid replay: record-once/replay-many vs direct re-execution");
+    let cfg = common::config();
+
+    let scenarios = [
+        Scenario::Baseline,
+        Scenario::PerfectL2,
+        Scenario::PerfectLlc,
+        Scenario::DramIdealRows,
+    ];
+    let workloads = ["KMeans", "KNN", "DBSCAN", "Decision Tree"];
+    let jobs: Vec<Job> = workloads
+        .iter()
+        .flat_map(|w| scenarios.iter().map(move |s| Job::new(*w, *s)))
+        .collect();
+
+    let direct = common::timed("direct grid", || run_jobs(&cfg, &jobs, 0));
+    let replayed = common::timed("replay grid", || run_jobs_replayed(&cfg, &jobs, 0));
+
+    assert_eq!(
+        checksum(&direct),
+        checksum(&replayed),
+        "replay mode diverged from direct execution"
+    );
+
+    let mut t = Table::new(
+        "grid_replay",
+        &format!(
+            "{} cells ({} workloads x {} scenarios), parity checksum {:#x}",
+            jobs.len(),
+            workloads.len(),
+            scenarios.len(),
+            checksum(&direct)
+        ),
+        &["mode", "workload executions", "wall (s)", "speedup"],
+    );
+    t.row(vec![
+        "direct".into(),
+        format!("{}", direct.workload_executions),
+        format!("{:.2}", direct.wall_seconds),
+        "1.00".into(),
+    ]);
+    t.row(vec![
+        "replay".into(),
+        format!("{}", replayed.workload_executions),
+        format!("{:.2}", replayed.wall_seconds),
+        r2(direct.wall_seconds / replayed.wall_seconds.max(1e-9)),
+    ]);
+    t.emit();
+}

@@ -11,16 +11,36 @@
 //! Workload objects are constructed inside the worker thread (via
 //! [`by_name`]) because `Box<dyn Workload>` is deliberately not `Send`.
 //!
+//! Two execution modes share that skeleton:
+//!
+//! - [`run_jobs`] — direct mode: every cell re-executes its workload.
+//! - [`run_jobs_replayed`] — record-once/replay-many mode: cells whose
+//!   scenario only varies the *simulator* configuration (perfect caches,
+//!   prefetcher toggles, ideal DRAM rows — see
+//!   [`Scenario::trace_variant`]) are grouped per (workload, prefetch
+//!   variant); a worker claims a whole group, executes the workload once
+//!   into an in-memory [`CapturedTrace`], then replays that capture into
+//!   a fresh `PipelineSim` per cell. Replay delivers the identical block
+//!   stream the recording produced, so every cell's `Metrics` are
+//!   bit-identical to direct mode — scenario count no longer multiplies
+//!   workload execution time, which is what lets the grid grow toward
+//!   the paper's full 14-workload × many-configuration sweeps.
+//!   Scenarios that change execution itself (multicore sharding,
+//!   reordering) fall back to direct cells inside the same run.
+//!
 //! [`by_name`]: crate::workloads::by_name
+//! [`CapturedTrace`]: crate::trace::CapturedTrace
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 use super::{
-    characterize_with, multicore_characterize, reorder_study, ExperimentConfig,
+    capture_trace, characterize_with, multicore_characterize, reorder_study, replay_characterize,
+    ExperimentConfig,
 };
 use crate::reorder::ReorderKind;
-use crate::sim::Metrics;
+use crate::sim::{CpuConfig, Metrics};
 use crate::workloads::{by_name, multicore_names, registry};
 
 /// One experiment scenario — the column dimension of the job grid.
@@ -42,6 +62,42 @@ pub enum Scenario {
     DramIdealRows,
     /// Figs. 20–24: one reordering optimization (reordered-run metrics).
     Reorder(ReorderKind),
+}
+
+impl Scenario {
+    /// The recorded-trace variant this scenario can replay, expressed as
+    /// the `sw_prefetch` flag of the recording it needs (prefetch events
+    /// are part of the trace, so the on/off variants are distinct
+    /// recordings). `None` means the scenario changes workload execution
+    /// itself — sharded multicore runs, reordered visit orders — and must
+    /// run directly.
+    pub fn trace_variant(self) -> Option<bool> {
+        match self {
+            Scenario::SwPrefetch => Some(true),
+            Scenario::Baseline
+            | Scenario::PerfectL2
+            | Scenario::PerfectLlc
+            | Scenario::NoHwPrefetch
+            | Scenario::DramIdealRows => Some(false),
+            Scenario::Multicore(_) | Scenario::Reorder(_) => None,
+        }
+    }
+
+    /// Apply this scenario's CPU-configuration mutation. Direct execution
+    /// ([`run_job`]) and trace replay ([`run_jobs_replayed`]) both go
+    /// through here, so the two modes cannot drift apart.
+    pub fn apply_cpu(self, cpu: &mut CpuConfig) {
+        match self {
+            Scenario::PerfectL2 => cpu.cache.perfect_l2 = true,
+            Scenario::PerfectLlc => cpu.cache.perfect_llc = true,
+            Scenario::NoHwPrefetch => cpu.cache.hw_prefetch = false,
+            Scenario::DramIdealRows => cpu.dram.ideal_row_hits = true,
+            Scenario::Baseline
+            | Scenario::SwPrefetch
+            | Scenario::Multicore(_)
+            | Scenario::Reorder(_) => {}
+        }
+    }
 }
 
 impl std::fmt::Display for Scenario {
@@ -82,7 +138,7 @@ pub struct JobOutput {
     pub quality: Option<f64>,
 }
 
-/// What [`run_jobs`] hands back.
+/// What [`run_jobs`] / [`run_jobs_replayed`] hand back.
 #[derive(Debug)]
 pub struct DriverReport {
     /// One output per input job, **in input order** (deterministic
@@ -90,15 +146,54 @@ pub struct DriverReport {
     pub outputs: Vec<JobOutput>,
     pub threads_used: usize,
     pub wall_seconds: f64,
+    /// Workload-cell executions the run actually paid for: one per job in
+    /// direct mode, one per (workload × trace variant) capture plus one
+    /// per non-replayable cell in replay mode. The replay speedup story
+    /// is `outputs.len()` vs this number.
+    pub workload_executions: usize,
 }
 
 /// The standard characterization grid for `cfg`'s profile: a baseline
-/// cell per workload plus the multicore cells of Tables III/IV.
+/// cell per workload the profile implements (mlpack lacks SVM-RBF, LDA
+/// and t-SNE) plus the multicore cells of Tables III/IV.
 pub fn standard_grid(cfg: &ExperimentConfig) -> Vec<Job> {
     let mut jobs: Vec<Job> = registry()
         .iter()
+        .filter(|w| cfg.profile.implements(w.as_ref()))
         .map(|w| Job::new(w.name(), Scenario::Baseline))
         .collect();
+    for name in multicore_names(cfg.profile) {
+        for cores in [4usize, 8] {
+            jobs.push(Job::new(name, Scenario::Multicore(cores)));
+        }
+    }
+    jobs
+}
+
+/// The full configuration sweep: every CPU-config scenario column of the
+/// paper (baseline, SW prefetch, perfect L2/LLC, HW prefetch off, ideal
+/// DRAM rows) for every workload the profile implements, plus the
+/// multicore cells. Six replayable cells per workload share one or two
+/// recordings under [`run_jobs_replayed`], which is what makes this sweep
+/// affordable — the reason the trace store exists.
+pub fn full_grid(cfg: &ExperimentConfig) -> Vec<Job> {
+    let scenarios = [
+        Scenario::Baseline,
+        Scenario::SwPrefetch,
+        Scenario::PerfectL2,
+        Scenario::PerfectLlc,
+        Scenario::NoHwPrefetch,
+        Scenario::DramIdealRows,
+    ];
+    let mut jobs: Vec<Job> = Vec::new();
+    for w in registry() {
+        if !cfg.profile.implements(w.as_ref()) {
+            continue;
+        }
+        for s in scenarios {
+            jobs.push(Job::new(w.name(), s));
+        }
+    }
     for name in multicore_names(cfg.profile) {
         for cores in [4usize, 8] {
             jobs.push(Job::new(name, Scenario::Multicore(cores)));
@@ -116,33 +211,7 @@ pub fn run_job(cfg: &ExperimentConfig, job: &Job) -> JobOutput {
         .unwrap_or_else(|| panic!("driver: unknown workload {:?}", job.workload));
     let w = w.as_ref();
     let (metrics, quality) = match job.scenario {
-        Scenario::Baseline => {
-            let c = characterize_with(w, cfg, false, None, None, |_| {});
-            (c.metrics, Some(c.result.quality))
-        }
-        Scenario::SwPrefetch => {
-            let c = characterize_with(w, cfg, true, None, None, |_| {});
-            (c.metrics, Some(c.result.quality))
-        }
-        Scenario::PerfectL2 => {
-            let c = characterize_with(w, cfg, false, None, None, |c| c.cache.perfect_l2 = true);
-            (c.metrics, Some(c.result.quality))
-        }
-        Scenario::PerfectLlc => {
-            let c = characterize_with(w, cfg, false, None, None, |c| c.cache.perfect_llc = true);
-            (c.metrics, Some(c.result.quality))
-        }
-        Scenario::NoHwPrefetch => {
-            let c = characterize_with(w, cfg, false, None, None, |c| c.cache.hw_prefetch = false);
-            (c.metrics, Some(c.result.quality))
-        }
         Scenario::Multicore(n) => (multicore_characterize(w, cfg, n), None),
-        Scenario::DramIdealRows => {
-            let c = characterize_with(w, cfg, false, None, None, |c| {
-                c.dram.ideal_row_hits = true;
-            });
-            (c.metrics, Some(c.result.quality))
-        }
         Scenario::Reorder(kind) => {
             assert!(
                 kind.applicable_to(w),
@@ -152,41 +221,146 @@ pub fn run_job(cfg: &ExperimentConfig, job: &Job) -> JobOutput {
             let s = reorder_study(w, kind, cfg);
             (s.reordered, Some(s.reordered_quality))
         }
+        scenario => {
+            // every CPU-config-only scenario shares one code path, with
+            // the mutation owned by Scenario::apply_cpu (the same one the
+            // replay driver applies)
+            let sw_prefetch = scenario.trace_variant() == Some(true);
+            let c = characterize_with(w, cfg, sw_prefetch, None, None, |c| scenario.apply_cpu(c));
+            (c.metrics, Some(c.result.quality))
+        }
     };
     JobOutput { job: job.clone(), metrics, quality }
 }
 
-/// Run `jobs` across up to `threads` OS threads (`0` = one per available
-/// core). Jobs are claimed from a shared atomic cursor (work stealing by
-/// index), so long simulations do not convoy behind short ones; results
-/// land in per-job slots and come back in input order.
-pub fn run_jobs(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverReport {
-    let t0 = std::time::Instant::now();
+/// Shared worker-pool skeleton of both driver modes: claim unit indices
+/// `0..units` from an atomic cursor (work stealing by index, so long
+/// units do not convoy behind short ones) across up to `threads` OS
+/// threads (`0` = one per available core, capped at the unit count).
+/// Returns the thread count actually used.
+fn fan_out(units: usize, threads: usize, work: impl Fn(usize) + Sync) -> usize {
     let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let requested = if threads == 0 { auto } else { threads };
-    let threads_used = requested.min(jobs.len()).max(1);
-
+    let threads_used = requested.min(units).max(1);
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<JobOutput>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
-
     std::thread::scope(|scope| {
         for _ in 0..threads_used {
             scope.spawn(|| loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= jobs.len() {
+                if i >= units {
                     break;
                 }
-                let out = run_job(cfg, &jobs[i]);
-                *slots[i].lock().unwrap() = Some(out);
+                work(i);
             });
         }
     });
+    threads_used
+}
 
-    let outputs = slots
+/// Unwrap the per-job result slots in input order.
+fn collect_slots(slots: Vec<Mutex<Option<JobOutput>>>) -> Vec<JobOutput> {
+    slots
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("every job slot filled"))
-        .collect();
-    DriverReport { outputs, threads_used, wall_seconds: t0.elapsed().as_secs_f64() }
+        .collect()
+}
+
+/// Run `jobs` across up to `threads` OS threads (`0` = one per available
+/// core). Results land in per-job slots and come back in input order.
+pub fn run_jobs(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverReport {
+    let t0 = std::time::Instant::now();
+    let slots: Vec<Mutex<Option<JobOutput>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    let threads_used = fan_out(jobs.len(), threads, |i| {
+        *slots[i].lock().unwrap() = Some(run_job(cfg, &jobs[i]));
+    });
+    DriverReport {
+        outputs: collect_slots(slots),
+        threads_used,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        workload_executions: jobs.len(),
+    }
+}
+
+/// Run `jobs` in record-once/replay-many mode: execute each (workload ×
+/// trace-variant) once, then satisfy every CPU-config-only scenario cell
+/// by replaying the captured trace; non-replayable cells — and groups
+/// whose capture would serve only a single cell, where buffering the
+/// trace saves nothing — run directly. Results are bit-identical to
+/// [`run_jobs`] and come back in input order; only `workload_executions`
+/// (and the wall clock) differ.
+///
+/// Work is claimed group-at-a-time (a group = one capture plus all the
+/// cells it serves, or one direct cell), so at most `threads` captures
+/// are resident in memory at once.
+pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverReport {
+    let t0 = std::time::Instant::now();
+
+    struct Group<'j> {
+        /// `(workload, sw_prefetch)` to capture, or `None` for a direct cell.
+        capture: Option<(&'j str, bool)>,
+        idxs: Vec<usize>,
+    }
+    let mut groups: Vec<Group> = Vec::new();
+    let mut by_key: BTreeMap<(&str, bool), usize> = BTreeMap::new();
+    for (i, job) in jobs.iter().enumerate() {
+        match job.scenario.trace_variant() {
+            Some(pf) => {
+                let key = (job.workload.as_str(), pf);
+                let gi = *by_key.entry(key).or_insert_with(|| {
+                    groups.push(Group { capture: Some(key), idxs: Vec::new() });
+                    groups.len() - 1
+                });
+                groups[gi].idxs.push(i);
+            }
+            None => groups.push(Group { capture: None, idxs: vec![i] }),
+        }
+    }
+
+    let executions = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<JobOutput>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+
+    let threads_used = fan_out(groups.len(), threads, |g| {
+        let group = &groups[g];
+        match group.capture {
+            // A capture only pays off when it serves several cells; for a
+            // single-cell group direct execution streams block-by-block
+            // (O(one block) memory) to the identical Metrics, so buffering
+            // the whole trace would cost RAM and save nothing.
+            Some(_) if group.idxs.len() == 1 => {
+                executions.fetch_add(1, Ordering::Relaxed);
+                let i = group.idxs[0];
+                *slots[i].lock().unwrap() = Some(run_job(cfg, &jobs[i]));
+            }
+            Some((name, sw_prefetch)) => {
+                let w = by_name(name)
+                    .unwrap_or_else(|| panic!("driver: unknown workload {name:?}"));
+                let recorded = capture_trace(w.as_ref(), cfg, sw_prefetch);
+                executions.fetch_add(1, Ordering::Relaxed);
+                for &i in &group.idxs {
+                    let job = &jobs[i];
+                    let metrics =
+                        replay_characterize(&recorded, cfg, |c| job.scenario.apply_cpu(c));
+                    *slots[i].lock().unwrap() = Some(JobOutput {
+                        job: job.clone(),
+                        metrics,
+                        quality: Some(recorded.result.quality),
+                    });
+                }
+            }
+            None => {
+                executions.fetch_add(1, Ordering::Relaxed);
+                let i = group.idxs[0];
+                *slots[i].lock().unwrap() = Some(run_job(cfg, &jobs[i]));
+            }
+        }
+    });
+
+    DriverReport {
+        outputs: collect_slots(slots),
+        threads_used,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        workload_executions: executions.into_inner(),
+    }
 }
 
 #[cfg(test)]
@@ -253,5 +427,80 @@ mod tests {
         let report = run_jobs(&cfg, &jobs, 0);
         assert_eq!(report.threads_used, 1, "capped at job count");
         assert!(report.outputs[0].quality.is_some());
+    }
+
+    #[test]
+    fn replayed_grid_matches_direct_and_executes_once() {
+        let cfg = tiny();
+        let jobs = vec![
+            Job::new("KMeans", Scenario::Baseline),
+            Job::new("KMeans", Scenario::PerfectL2),
+            Job::new("KMeans", Scenario::PerfectLlc),
+            Job::new("KMeans", Scenario::NoHwPrefetch),
+        ];
+        let direct = run_jobs(&cfg, &jobs, 2);
+        let replayed = run_jobs_replayed(&cfg, &jobs, 2);
+        assert_eq!(replayed.workload_executions, 1, "4 scenario cells, one execution");
+        assert_eq!(direct.workload_executions, 4);
+        assert_eq!(replayed.outputs.len(), 4);
+        for (a, b) in direct.outputs.iter().zip(&replayed.outputs) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.metrics, b.metrics, "replay diverged for {:?}", a.job);
+            assert_eq!(a.quality, b.quality);
+        }
+    }
+
+    #[test]
+    fn replayed_grid_handles_prefetch_variants_and_direct_cells() {
+        let cfg = tiny();
+        let jobs = vec![
+            Job::new("KNN", Scenario::SwPrefetch),
+            Job::new("GMM", Scenario::Multicore(2)),
+            Job::new("KNN", Scenario::Baseline),
+        ];
+        let direct = run_jobs(&cfg, &jobs, 1);
+        let replayed = run_jobs_replayed(&cfg, &jobs, 3);
+        // KNN needs both trace variants (prefetch on and off) and the
+        // multicore cell runs directly: 3 executions either way here, but
+        // the outputs must still be bit-identical across modes.
+        assert_eq!(replayed.workload_executions, 3);
+        for (a, b) in direct.outputs.iter().zip(&replayed.outputs) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.metrics, b.metrics, "replay diverged for {:?}", a.job);
+            assert_eq!(a.quality, b.quality);
+        }
+    }
+
+    #[test]
+    fn full_grid_covers_scenarios_and_respects_profile() {
+        let cfg = tiny();
+        let jobs = full_grid(&cfg);
+        let kmeans_replayable = jobs
+            .iter()
+            .filter(|j| j.workload == "KMeans" && j.scenario.trace_variant().is_some())
+            .count();
+        assert_eq!(kmeans_replayable, 6, "six CPU-config scenario columns per workload");
+        let cfg_ml = ExperimentConfig {
+            profile: crate::workloads::LibraryProfile::Mlpack,
+            ..tiny()
+        };
+        assert!(!full_grid(&cfg_ml).iter().any(|j| j.workload == "t-SNE"));
+    }
+
+    #[test]
+    fn mlpack_grid_excludes_unimplemented_workloads() {
+        let cfg = ExperimentConfig {
+            profile: crate::workloads::LibraryProfile::Mlpack,
+            ..tiny()
+        };
+        let jobs = standard_grid(&cfg);
+        assert!(!jobs.is_empty());
+        for j in &jobs {
+            let w = by_name(&j.workload).unwrap();
+            assert!(w.in_mlpack(), "{} leaked into the mlpack grid", j.workload);
+        }
+        for absent in ["SVM-RBF", "LDA", "t-SNE"] {
+            assert!(!jobs.iter().any(|j| j.workload == absent), "{absent} present");
+        }
     }
 }

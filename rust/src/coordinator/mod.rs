@@ -9,13 +9,21 @@
 
 pub mod driver;
 
-pub use driver::{run_job, run_jobs, standard_grid, DriverReport, Job, JobOutput, Scenario};
+pub use driver::{
+    full_grid, run_job, run_jobs, run_jobs_replayed, standard_grid, DriverReport, Job, JobOutput,
+    Scenario,
+};
 
 use crate::data::Dataset;
 use crate::reorder::{compute_plan, ReorderKind, ReorderPlan};
 use crate::sim::{run_multicore, CpuConfig, Metrics, PipelineSim};
-use crate::trace::{NullSink, Recorder};
+use crate::trace::{
+    BlockTee, CapturedTrace, NullSink, Recorder, ReplaySource, ReplayStats, TraceMeta,
+    TraceSummary, TraceWriter,
+};
+use crate::util::error::Result;
 use crate::workloads::{LibraryProfile, RunContext, RunResult, Workload};
+use std::path::Path;
 
 /// Global experiment configuration.
 #[derive(Debug, Clone)]
@@ -145,6 +153,129 @@ pub fn shrink_hierarchy(cpu: &mut CpuConfig, working_set_bytes: u64) {
 /// Baseline characterization (Figs. 1–10).
 pub fn characterize(w: &dyn Workload, cfg: &ExperimentConfig) -> Characterization {
     characterize_with(w, cfg, false, None, None, |_| {})
+}
+
+/// Trace header for a recording of `w` under `cfg`.
+fn trace_meta(
+    w: &dyn Workload,
+    cfg: &ExperimentConfig,
+    sw_prefetch: bool,
+    ds: &Dataset,
+) -> TraceMeta {
+    TraceMeta {
+        workload: w.name().to_string(),
+        profile: cfg.profile,
+        sw_prefetch,
+        rows: ds.n_samples() as u64,
+        features: ds.n_features() as u64,
+        iterations: cfg.iterations as u64,
+        seed: cfg.seed,
+        dataset_bytes: ds.bytes(),
+    }
+}
+
+/// One workload execution captured as a replayable in-memory trace — the
+/// record half of record-once/replay-many. Replaying [`RecordedRun::trace`]
+/// into a `PipelineSim` configured like the original run reproduces its
+/// `Metrics` bit-for-bit ([`replay_characterize`]).
+pub struct RecordedRun {
+    pub trace: CapturedTrace,
+    /// Algorithm outcome of the recording run. Scenario replays reuse it:
+    /// the trace fixes the execution, so CPU-config variations cannot
+    /// change the model quality.
+    pub result: RunResult,
+    pub meta: TraceMeta,
+}
+
+/// Execute `w` once under `cfg`, capturing its block stream in memory
+/// for later replays instead of simulating it now.
+pub fn capture_trace(w: &dyn Workload, cfg: &ExperimentConfig, sw_prefetch: bool) -> RecordedRun {
+    let rows = cfg.rows_for(w);
+    let ds = w.make_dataset(rows, cfg.features, cfg.seed);
+    let ctx = cfg.run_ctx();
+    let mut trace = CapturedTrace::default();
+    let result = {
+        let mut rec = Recorder::new(&mut trace, workload_ns(w));
+        rec.sw_prefetch_enabled = sw_prefetch;
+        rec.profile_overhead = ctx.profile.loop_overhead_uops();
+        let r = w.run(&ds, &ctx, &mut rec);
+        rec.finish();
+        r
+    };
+    let meta = trace_meta(w, cfg, sw_prefetch, &ds);
+    RecordedRun { trace, result, meta }
+}
+
+/// Replay a captured trace through a fresh `PipelineSim` with `mutate`
+/// applied to the CPU config — the replay counterpart of
+/// [`characterize_with`], sharing its config discipline (`mutate` first,
+/// then `auto_shrink` against the recorded dataset footprint) so the
+/// `Metrics` are bit-identical to a direct run under the same scenario.
+pub fn replay_characterize(
+    recorded: &RecordedRun,
+    cfg: &ExperimentConfig,
+    mutate: impl FnOnce(&mut CpuConfig),
+) -> Metrics {
+    let mut cpu = cfg.cpu.clone();
+    mutate(&mut cpu);
+    if cfg.auto_shrink {
+        shrink_hierarchy(&mut cpu, recorded.meta.dataset_bytes);
+    }
+    let mut sim = PipelineSim::new(cpu);
+    recorded.trace.replay_into(&mut sim);
+    sim.metrics()
+}
+
+/// `mlperf record`: run `w` once, streaming its trace to `path` while
+/// simultaneously simulating it (one execution yields both the trace
+/// artifact and the baseline metric table).
+pub fn record_characterize(
+    w: &dyn Workload,
+    cfg: &ExperimentConfig,
+    sw_prefetch: bool,
+    path: &Path,
+) -> Result<(Characterization, TraceSummary)> {
+    let rows = cfg.rows_for(w);
+    let ds = w.make_dataset(rows, cfg.features, cfg.seed);
+    let mut cpu = cfg.cpu.clone();
+    if cfg.auto_shrink {
+        shrink_hierarchy(&mut cpu, ds.bytes());
+    }
+    let ctx = cfg.run_ctx();
+    let mut writer = TraceWriter::create(path, &trace_meta(w, cfg, sw_prefetch, &ds))?;
+    let mut sim = PipelineSim::new(cpu);
+    let result = {
+        let mut tee = BlockTee { a: &mut sim, b: &mut writer };
+        let mut rec = Recorder::new(&mut tee, workload_ns(w));
+        rec.sw_prefetch_enabled = sw_prefetch;
+        rec.profile_overhead = ctx.profile.loop_overhead_uops();
+        let r = w.run(&ds, &ctx, &mut rec);
+        rec.finish();
+        r
+    };
+    let summary = writer.finish()?;
+    Ok((Characterization { metrics: sim.metrics(), result }, summary))
+}
+
+/// `mlperf replay`: stream a stored trace file through `PipelineSim`
+/// with `mutate` applied to the CPU config, never constructing the
+/// workload. `auto_shrink` uses the dataset footprint recorded in the
+/// trace header, matching the recording run's hierarchy exactly.
+pub fn replay_file(
+    path: &Path,
+    cfg: &ExperimentConfig,
+    mutate: impl FnOnce(&mut CpuConfig),
+) -> Result<(TraceMeta, Metrics, ReplayStats)> {
+    let src = ReplaySource::open(path)?;
+    let meta = src.meta().clone();
+    let mut cpu = cfg.cpu.clone();
+    mutate(&mut cpu);
+    if cfg.auto_shrink {
+        shrink_hierarchy(&mut cpu, meta.dataset_bytes);
+    }
+    let mut sim = PipelineSim::new(cpu);
+    let stats = src.replay_into(&mut sim)?;
+    Ok((meta, sim.metrics(), stats))
 }
 
 fn workload_ns(w: &dyn Workload) -> u32 {
@@ -374,6 +505,23 @@ mod tests {
         let st = dram_study(w.as_ref(), &tiny(), true);
         assert!(st.requests > 0);
         assert_eq!(st.row_hit_ratio(), 1.0);
+    }
+
+    #[test]
+    fn replayed_capture_matches_direct_metrics() {
+        let w = by_name("kmeans").unwrap();
+        let cfg = tiny();
+        let direct = characterize(w.as_ref(), &cfg);
+        let recorded = capture_trace(w.as_ref(), &cfg, false);
+        assert!(recorded.trace.is_finalized());
+        assert_eq!(recorded.result.quality, direct.result.quality);
+        let replayed = replay_characterize(&recorded, &cfg, |_| {});
+        assert_eq!(replayed, direct.metrics, "replay must be bit-identical");
+        // and under a scenario mutation
+        let direct_l2 =
+            characterize_with(w.as_ref(), &cfg, false, None, None, |c| c.cache.perfect_l2 = true);
+        let replayed_l2 = replay_characterize(&recorded, &cfg, |c| c.cache.perfect_l2 = true);
+        assert_eq!(replayed_l2, direct_l2.metrics);
     }
 
     #[test]

@@ -4,10 +4,13 @@
 //! scikit-learn, `.bin` for mlpack) "to avoid the overhead incurred due to
 //! reading input text files". We implement the same idea with a minimal
 //! self-describing container: magic, version, rows, cols, n_classes,
-//! little-endian f64 X payload followed by f64 y payload.
+//! little-endian f64 X payload followed by f64 y payload. (Trace files
+//! are a separate container — see [`crate::trace::store`]; both share the
+//! [`crate::util::binio`] encoding primitives.)
 
 use super::synth::Dataset;
 use crate::bail;
+use crate::util::binio::{read_u64, write_u64};
 use crate::util::error::{Context, Result};
 use crate::util::Matrix;
 use std::io::{Read, Write};
@@ -21,9 +24,9 @@ pub fn save(ds: &Dataset, path: &Path) -> Result<()> {
         std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
     );
     f.write_all(MAGIC)?;
-    f.write_all(&(ds.n_samples() as u64).to_le_bytes())?;
-    f.write_all(&(ds.n_features() as u64).to_le_bytes())?;
-    f.write_all(&(ds.n_classes as u64).to_le_bytes())?;
+    write_u64(&mut f, ds.n_samples() as u64)?;
+    write_u64(&mut f, ds.n_features() as u64)?;
+    write_u64(&mut f, ds.n_classes as u64)?;
     for v in ds.x.as_slice() {
         f.write_all(&v.to_le_bytes())?;
     }
@@ -57,12 +60,6 @@ pub fn load(path: &Path) -> Result<Dataset> {
     let mut y = vec![0.0f64; rows];
     read_f64s(&mut f, &mut y)?;
     Ok(Dataset { x: Matrix::from_vec(rows, cols, xdata), y, n_classes })
-}
-
-fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
 }
 
 fn read_f64s<R: Read>(r: &mut R, out: &mut [f64]) -> Result<()> {

@@ -16,9 +16,12 @@
 //!   optimizations (Table VIII) with overhead accounting.
 //! - [`coordinator`] — the experiment registry mapping every figure and
 //!   table of the paper to a runnable experiment, plus the parallel
-//!   (workload × scenario) driver (`coordinator::driver`).
+//!   (workload × scenario) driver (`coordinator::driver`) with its
+//!   record-once/replay-many grid mode.
 //! - [`trace`] — the batched columnar event pipeline ([`trace::block`])
-//!   connecting instrumented workloads to the simulators.
+//!   connecting instrumented workloads to the simulators, and the
+//!   on-disk columnar trace store ([`trace::store`]) that makes one
+//!   recorded execution replayable across many simulator configurations.
 //! - [`runtime`] — PJRT executor that loads the AOT-compiled JAX/Pallas
 //!   numeric kernels (`artifacts/*.hlo.txt`) and runs them from Rust;
 //!   stubbed out unless built with `--features pjrt` (needs `xla`

@@ -8,17 +8,21 @@
 //! mlperf reorder     --workload dbscan --method hilbert
 //! mlperf multicore   --workload gmm --cores 4
 //! mlperf gen-data    --rows 100000 --features 20 --out data.bin
+//! mlperf record      --workload kmeans [--out kmeans.mlt] [--sw-prefetch]
+//! mlperf replay      --trace kmeans.mlt [--perfect-l2|--perfect-llc|--no-hw-prefetch|--ideal-rows]
 //! mlperf runtime     [--artifacts artifacts/]
 //! mlperf report      [--scale 0.2]     # every figure/table, slow
+//! mlperf grid        [--threads 0] [--direct]
 //! ```
 
 use mlperf::analysis::{pct, r2, r3, Table};
+use mlperf::sim::Metrics;
 use mlperf::util::error::Result;
 use mlperf::{anyhow, bail};
 use mlperf::coordinator::*;
 use mlperf::reorder::ReorderKind;
 use mlperf::util::Args;
-use mlperf::workloads::{by_name, registry, LibraryProfile, Workload};
+use mlperf::workloads::{by_name, registry, supported_names, LibraryProfile, Workload};
 
 fn main() {
     let args = Args::from_env();
@@ -57,6 +61,22 @@ fn workload_from(args: &Args) -> Result<Box<dyn Workload>> {
     by_name(name).ok_or_else(|| anyhow!("unknown workload {name:?} (see `mlperf list`)"))
 }
 
+/// Reject workloads the selected library profile does not implement with
+/// an actionable error (instead of silently simulating — or panicking on
+/// — an implementation that does not exist in the real library).
+fn require_profile_support(w: &dyn Workload, profile: LibraryProfile) -> Result<()> {
+    if !profile.implements(w) {
+        bail!(
+            "{} is not implemented in the {:?} profile (mlpack v3.4 ships no \
+             SVM-RBF/LDA/t-SNE); valid workloads for this profile: {}",
+            w.name(),
+            profile,
+            supported_names(profile).join(", ")
+        );
+    }
+    Ok(())
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("list") => cmd_list(),
@@ -65,6 +85,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("reorder") => cmd_reorder(args),
         Some("multicore") => cmd_multicore(args),
         Some("gen-data") => cmd_gen_data(args),
+        Some("record") => cmd_record(args),
+        Some("replay") => cmd_replay(args),
         Some("runtime") => cmd_runtime(args),
         Some("report") => cmd_report(args),
         Some("grid") => cmd_grid(args),
@@ -77,9 +99,11 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "mlperf — Performance Characterization of Traditional ML (repro)
-subcommands: list, characterize, prefetch, reorder, multicore, gen-data, runtime, report, grid
+subcommands: list, characterize, prefetch, reorder, multicore, gen-data, record, replay, runtime, report, grid
 common flags: --workload <name> --scale <f> --iterations <n> --profile sklearn|mlpack --seed <n>
-grid flags:   --threads <n>   (0 = one per core; runs baseline + multicore cells for every workload in parallel)";
+record flags: --out <file.mlt> --sw-prefetch       (execute once, persist the columnar trace)
+replay flags: --trace <file.mlt> [--perfect-l2 --perfect-llc --no-hw-prefetch --ideal-rows]
+grid flags:   --threads <n> (0 = one per core) --full (all scenario columns) --direct (re-execute per cell)";
 
 fn cmd_list() -> Result<()> {
     let mut t = Table::new("workloads", "Table I — workloads and categories", &[
@@ -97,17 +121,10 @@ fn cmd_list() -> Result<()> {
     Ok(())
 }
 
-fn cmd_characterize(args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
-    let w = workload_from(args)?;
-    let c = characterize(w.as_ref(), &cfg);
-    let m = &c.metrics;
-    let mut t = Table::new(
-        "characterize",
-        &format!("{} ({:?}, rows={})", w.name(), cfg.profile, cfg.rows_for(w.as_ref())),
-        &["metric", "value"],
-    );
-    for (k, v) in [
+/// The full single-run metric rows shared by `characterize`, `record`,
+/// and `replay`.
+fn metric_rows(m: &Metrics) -> Vec<(&'static str, String)> {
+    vec![
         ("instructions", format!("{}", m.instructions)),
         ("cycles", format!("{:.0}", m.cycles)),
         ("CPI", r2(m.cpi)),
@@ -125,9 +142,92 @@ fn cmd_characterize(args: &Args) -> Result<()> {
         ("DRAM avg latency (ns)", r2(m.dram.avg_latency_ns())),
         ("bandwidth utilization %", pct(m.bandwidth_utilization_pct())),
         ("HW prefetch useless frac", r3(m.prefetch.hw_useless_fraction())),
-        ("quality", format!("{:.4}", c.result.quality)),
-        ("model", c.result.detail.clone()),
-    ] {
+    ]
+}
+
+fn cmd_characterize(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let w = workload_from(args)?;
+    require_profile_support(w.as_ref(), cfg.profile)?;
+    let c = characterize(w.as_ref(), &cfg);
+    let mut t = Table::new(
+        "characterize",
+        &format!("{} ({:?}, rows={})", w.name(), cfg.profile, cfg.rows_for(w.as_ref())),
+        &["metric", "value"],
+    );
+    for (k, v) in metric_rows(&c.metrics) {
+        t.row(vec![k.into(), v]);
+    }
+    t.row(vec!["quality".into(), format!("{:.4}", c.result.quality)]);
+    t.row(vec!["model".into(), c.result.detail.clone()]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_record(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let w = workload_from(args)?;
+    require_profile_support(w.as_ref(), cfg.profile)?;
+    let sw_prefetch = args.has("sw-prefetch");
+    let default_out = format!("{}.mlt", w.name().to_lowercase().replace([' ', '-'], "_"));
+    let out = args.get_or("out", &default_out);
+    let (c, summary) =
+        record_characterize(w.as_ref(), &cfg, sw_prefetch, std::path::Path::new(&out))?;
+    let mut t = Table::new(
+        "record",
+        &format!(
+            "recorded {} ({:?}, rows={}, sw_prefetch={})",
+            w.name(),
+            cfg.profile,
+            cfg.rows_for(w.as_ref()),
+            sw_prefetch
+        ),
+        &["metric", "value"],
+    );
+    for (k, v) in metric_rows(&c.metrics) {
+        t.row(vec![k.into(), v]);
+    }
+    t.row(vec!["quality".into(), format!("{:.4}", c.result.quality)]);
+    t.row(vec!["trace file".into(), out.clone()]);
+    t.row(vec!["trace blocks".into(), format!("{}", summary.blocks)]);
+    t.row(vec!["trace events".into(), format!("{}", summary.events)]);
+    t.row(vec!["trace bytes".into(), format!("{}", summary.bytes)]);
+    t.row(vec![
+        "bytes/event".into(),
+        format!("{:.2}", summary.bytes as f64 / summary.events.max(1) as f64),
+    ]);
+    println!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let path = args.get("trace").ok_or_else(|| {
+        anyhow!("--trace <file.mlt> required (create one with `mlperf record`)")
+    })?;
+    let (meta, m, stats) = replay_file(std::path::Path::new(path), &cfg, |c| {
+        if args.has("perfect-l2") {
+            c.cache.perfect_l2 = true;
+        }
+        if args.has("perfect-llc") {
+            c.cache.perfect_llc = true;
+        }
+        if args.has("no-hw-prefetch") {
+            c.cache.hw_prefetch = false;
+        }
+        if args.has("ideal-rows") {
+            c.dram.ideal_row_hits = true;
+        }
+    })?;
+    let mut t = Table::new(
+        "replay",
+        &format!(
+            "replayed {} ({:?}, rows={}, sw_prefetch={}, {} events in {} blocks)",
+            meta.workload, meta.profile, meta.rows, meta.sw_prefetch, stats.events, stats.blocks
+        ),
+        &["metric", "value"],
+    );
+    for (k, v) in metric_rows(&m) {
         t.row(vec![k.into(), v]);
     }
     println!("{}", t.render());
@@ -137,6 +237,7 @@ fn cmd_characterize(args: &Args) -> Result<()> {
 fn cmd_prefetch(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let w = workload_from(args)?;
+    require_profile_support(w.as_ref(), cfg.profile)?;
     let s = prefetch_study(w.as_ref(), &cfg);
     let mut t = Table::new(
         "prefetch",
@@ -164,6 +265,7 @@ fn cmd_prefetch(args: &Args) -> Result<()> {
 fn cmd_reorder(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let w = workload_from(args)?;
+    require_profile_support(w.as_ref(), cfg.profile)?;
     let method = args.get_or("method", "zorder");
     let kind = parse_kind(&method)?;
     if !kind.applicable_to(w.as_ref()) {
@@ -220,6 +322,7 @@ pub fn parse_kind(s: &str) -> Result<ReorderKind> {
 fn cmd_multicore(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let w = workload_from(args)?;
+    require_profile_support(w.as_ref(), cfg.profile)?;
     let cores: usize = args.get_parsed_or("cores", 4);
     let m = multicore_characterize(w.as_ref(), &cfg, cores);
     let mut t = Table::new(
@@ -265,14 +368,25 @@ fn cmd_runtime(args: &Args) -> Result<()> {
 fn cmd_grid(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let threads: usize = args.get_parsed_or("threads", 0usize);
-    let jobs = standard_grid(&cfg);
-    println!("running {} jobs at scale {} …", jobs.len(), cfg.scale);
-    let report = run_jobs(&cfg, &jobs, threads);
+    let direct = args.has("direct");
+    let jobs = if args.has("full") { full_grid(&cfg) } else { standard_grid(&cfg) };
+    println!(
+        "running {} jobs at scale {} in {} mode …",
+        jobs.len(),
+        cfg.scale,
+        if direct { "direct" } else { "record-once/replay-many" }
+    );
+    let report = if direct {
+        run_jobs(&cfg, &jobs, threads)
+    } else {
+        run_jobs_replayed(&cfg, &jobs, threads)
+    };
     let mut t = Table::new(
         "grid",
         &format!(
-            "parallel experiment grid ({} jobs, {} threads, {:.1}s wall)",
+            "parallel experiment grid ({} jobs, {} workload executions, {} threads, {:.1}s wall)",
             report.outputs.len(),
+            report.workload_executions,
             report.threads_used,
             report.wall_seconds
         ),
@@ -304,6 +418,9 @@ fn cmd_report(args: &Args) -> Result<()> {
         &["workload", "CPI", "ret%", "bspec%", "dram%", "core%", "br-frac", "LLC-miss"],
     );
     for w in registry() {
+        if !cfg.profile.implements(w.as_ref()) {
+            continue;
+        }
         let c = characterize(w.as_ref(), &cfg);
         let m = &c.metrics;
         t.row(vec![

@@ -25,16 +25,36 @@ use super::event::{Event, Sink};
 pub const BLOCK_EVENTS: usize = 4096;
 
 /// Discriminant lane entry: which typed lane the next event lives in.
+///
+/// The discriminant values are part of the on-disk trace format
+/// ([`crate::trace::store`]): they appear verbatim in the run-length
+/// encoded tag lane, so variants must keep their positions (append-only).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
 pub enum EventKind {
-    Compute,
-    Serial,
-    Load,
-    Store,
-    Branch,
-    LoopBranch,
-    SwPrefetch,
+    Compute = 0,
+    Serial = 1,
+    Load = 2,
+    Store = 3,
+    Branch = 4,
+    LoopBranch = 5,
+    SwPrefetch = 6,
+}
+
+impl EventKind {
+    /// Inverse of `kind as u8` (trace-store decode path).
+    pub fn from_u8(v: u8) -> Option<EventKind> {
+        Some(match v {
+            0 => EventKind::Compute,
+            1 => EventKind::Serial,
+            2 => EventKind::Load,
+            3 => EventKind::Store,
+            4 => EventKind::Branch,
+            5 => EventKind::LoopBranch,
+            6 => EventKind::SwPrefetch,
+            _ => return None,
+        })
+    }
 }
 
 /// Load lane record (`Event::Load` payload).
@@ -65,7 +85,7 @@ pub struct BranchRec {
 /// `kinds` records emission order; each payload lane holds only its own
 /// event type, in emission order restricted to that type. Reconstruct the
 /// interleaved stream with [`EventBlock::iter`].
-#[derive(Debug, Default, Clone)]
+#[derive(Debug, Default, Clone, PartialEq)]
 pub struct EventBlock {
     kinds: Vec<EventKind>,
     pub compute: Vec<(u32, u32)>,
@@ -187,6 +207,37 @@ impl EventBlock {
     /// Reconstruct the interleaved event stream in emission order.
     pub fn iter(&self) -> EventBlockIter<'_> {
         EventBlockIter { block: self, pos: 0, cur: LaneCursors::default() }
+    }
+
+    /// Reassemble a block from already-separated lanes (the trace-store
+    /// decode path, which materializes each lane from its on-disk
+    /// encoding and must not pay a per-event re-dispatch through
+    /// [`EventBlock::push_event`]). The per-kind counts in `kinds` must
+    /// match the lane lengths; this is debug-asserted, and a decoder
+    /// validates it before calling.
+    #[allow(clippy::too_many_arguments)] // one parameter per lane, by design
+    pub fn from_lanes(
+        kinds: Vec<EventKind>,
+        compute: Vec<(u32, u32)>,
+        serial: Vec<u32>,
+        loads: Vec<LoadRec>,
+        stores: Vec<StoreRec>,
+        branches: Vec<BranchRec>,
+        loop_branches: Vec<(u32, u32)>,
+        prefetches: Vec<u64>,
+    ) -> Self {
+        debug_assert_eq!(
+            kinds.len(),
+            compute.len()
+                + serial.len()
+                + loads.len()
+                + stores.len()
+                + branches.len()
+                + loop_branches.len()
+                + prefetches.len(),
+            "lane lengths must sum to the tag-lane length"
+        );
+        Self { kinds, compute, serial, loads, stores, branches, loop_branches, prefetches }
     }
 }
 

@@ -6,12 +6,18 @@
 //! [`Recorder`] into struct-of-arrays [`EventBlock`]s consumed whole by
 //! [`BlockSink`]s (see [`block`]). The per-event [`Sink`] trait remains
 //! for tests, diagnostics, and the [`PerEvent`] migration adapter.
+//!
+//! Traces are also durable artifacts: [`store`] persists the block
+//! stream to a compact columnar file (record once) and [`ReplaySource`] /
+//! [`CapturedTrace`] feed it back into any [`BlockSink`] (replay many) —
+//! the foundation of the grid driver's record-once/replay-many mode.
 
 pub mod addr;
 pub mod block;
 pub mod event;
 pub mod mix;
 pub mod recorder;
+pub mod store;
 
 pub use addr::{line_of, page_of, AddressSpace, Region, LINE_SIZE, PAGE_SIZE};
 pub use block::{
@@ -21,3 +27,6 @@ pub use block::{
 pub use event::{Event, NullSink, Sink, Tee, VecSink};
 pub use mix::InstructionMix;
 pub use recorder::Recorder;
+pub use store::{
+    CapturedTrace, ReplaySource, ReplayStats, TraceMeta, TraceReader, TraceSummary, TraceWriter,
+};

@@ -1,0 +1,855 @@
+//! On-disk columnar trace persistence: record a workload's event stream
+//! once, replay it into any [`BlockSink`] many times.
+//!
+//! The paper's methodology is trace-driven — one instrumented execution
+//! feeds many cache/DRAM/prefetch configurations — and re-executing a
+//! workload per scenario cell just to regenerate a bit-identical event
+//! stream is the dominant cost of a sweep. This module makes the trace
+//! itself the reusable artifact:
+//!
+//! - [`TraceWriter`] is a [`BlockSink`]: hang it off a
+//!   [`Recorder`](super::Recorder) (alone or behind a
+//!   [`BlockTee`](super::BlockTee)) and every [`EventBlock`] streams to
+//!   disk as it is flushed.
+//! - [`TraceReader`] streams blocks back, validating the per-block
+//!   checksums and the end-of-trace totals.
+//! - [`ReplaySource`] pumps a stored trace into any `BlockSink`
+//!   (typically a [`PipelineSim`](crate::sim::PipelineSim)) without ever
+//!   touching the workload layer.
+//! - [`CapturedTrace`] is the in-memory equivalent used by the
+//!   record-once/replay-many grid driver
+//!   ([`crate::coordinator::driver::run_jobs_replayed`]), where one
+//!   capture fans out to all scenario cells of a workload.
+//!
+//! # File format (version 1)
+//!
+//! All integers are little-endian; `varint` is LEB128, `ivarint` is
+//! zigzag-mapped LEB128 (see [`crate::util::binio`]).
+//!
+//! ```text
+//! header   magic "MLTRACE1" (8) · version u32 · meta
+//! meta     u16 name_len · workload name (utf-8) · profile u8
+//!          (0 = sklearn, 1 = mlpack) · sw_prefetch u8 · rows u64 ·
+//!          features u64 · iterations u64 · seed u64 · dataset_bytes u64
+//! blocks   repeated: 0xB1 · payload_len u32 · fnv1a64 checksum u64 ·
+//!          payload
+//! trailer  0xE7 · total_events u64 · total_blocks u64
+//! ```
+//!
+//! Each block payload is self-contained (delta bases reset per block):
+//!
+//! ```text
+//! varint n_events
+//! tag lane      RLE runs of (kind u8, varint run_len) summing to n_events
+//! compute lane  per record: varint int_ops · varint fp_ops
+//! serial lane   per record: varint ops
+//! load lane     per record: ivarint Δaddr · varint (size << 1 | feeds_branch)
+//! store lane    per record: ivarint Δaddr · varint size
+//! branch lane   per record: ivarint Δsite · flags u8 (taken | conditional << 1)
+//! loop lane     per record: ivarint Δsite · varint count
+//! prefetch lane per record: ivarint Δaddr
+//! ```
+//!
+//! Compatibility rules: the magic identifies the family; a reader accepts
+//! exactly its own `TRACE_VERSION` and tells the user to re-record
+//! otherwise (traces are cheap to regenerate — they are caches of
+//! executions, not primary data). Any lane or header change bumps the
+//! version; `EventKind` discriminants are append-only because they appear
+//! verbatim in the tag lane.
+
+use super::block::{BlockSink, BranchRec, EventBlock, EventKind, LoadRec, StoreRec, BLOCK_EVENTS};
+use crate::util::binio::{
+    fnv1a64, get_ivarint, get_uvarint, put_ivarint, put_uvarint, read_u16, read_u32, read_u64,
+    read_u8, write_u64,
+};
+use crate::util::error::{Context, Result};
+use crate::workloads::LibraryProfile;
+use crate::{anyhow, bail};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// File magic for the columnar trace container.
+pub const TRACE_MAGIC: &[u8; 8] = b"MLTRACE1";
+/// Format version written and accepted by this build.
+pub const TRACE_VERSION: u32 = 1;
+
+const BLOCK_MARKER: u8 = 0xB1;
+const END_MARKER: u8 = 0xE7;
+/// Upper bound on an encoded block payload. The worst-case encoding of a
+/// full 4096-event block is under 100 KiB; anything larger is corruption.
+const MAX_PAYLOAD: usize = 1 << 20;
+
+/// Provenance carried in the trace header: everything replay needs to
+/// reproduce the recording run's simulator configuration (notably
+/// `dataset_bytes`, which drives `auto_shrink`) and everything a human
+/// needs to know what the file is.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMeta {
+    /// Paper workload name (e.g. "KMeans").
+    pub workload: String,
+    /// Library profile the recording ran under.
+    pub profile: LibraryProfile,
+    /// Whether software prefetching was enabled (prefetch events change
+    /// the trace, so the on/off variants are distinct recordings).
+    pub sw_prefetch: bool,
+    /// Dataset rows the recording used.
+    pub rows: u64,
+    /// Dataset feature count.
+    pub features: u64,
+    /// Training iterations.
+    pub iterations: u64,
+    /// RNG seed of the recording run.
+    pub seed: u64,
+    /// Modelled dataset footprint in bytes (input to `auto_shrink`).
+    pub dataset_bytes: u64,
+}
+
+fn profile_to_u8(p: LibraryProfile) -> u8 {
+    match p {
+        LibraryProfile::Sklearn => 0,
+        LibraryProfile::Mlpack => 1,
+    }
+}
+
+fn profile_from_u8(v: u8) -> Result<LibraryProfile> {
+    match v {
+        0 => Ok(LibraryProfile::Sklearn),
+        1 => Ok(LibraryProfile::Mlpack),
+        other => Err(anyhow!("invalid profile byte {other} in trace header")),
+    }
+}
+
+fn write_meta<W: Write>(w: &mut W, meta: &TraceMeta) -> Result<u64> {
+    let name = meta.workload.as_bytes();
+    if name.len() > u16::MAX as usize {
+        bail!("workload name too long for trace header");
+    }
+    w.write_all(&(name.len() as u16).to_le_bytes())?;
+    w.write_all(name)?;
+    w.write_all(&[profile_to_u8(meta.profile), u8::from(meta.sw_prefetch)])?;
+    for v in [meta.rows, meta.features, meta.iterations, meta.seed, meta.dataset_bytes] {
+        write_u64(w, v)?;
+    }
+    Ok(2 + name.len() as u64 + 2 + 5 * 8)
+}
+
+fn read_meta<R: Read>(r: &mut R) -> Result<TraceMeta> {
+    let name_len = read_u16(r).context("reading trace meta")? as usize;
+    if name_len > 4096 {
+        bail!("trace header claims a {name_len}-byte workload name — corrupt");
+    }
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name).context("reading trace meta")?;
+    let workload = String::from_utf8(name).context("workload name is not utf-8")?;
+    let profile = profile_from_u8(read_u8(r)?)?;
+    let sw_prefetch = match read_u8(r)? {
+        0 => false,
+        1 => true,
+        other => bail!("invalid sw_prefetch byte {other} in trace header"),
+    };
+    Ok(TraceMeta {
+        workload,
+        profile,
+        sw_prefetch,
+        rows: read_u64(r)?,
+        features: read_u64(r)?,
+        iterations: read_u64(r)?,
+        seed: read_u64(r)?,
+        dataset_bytes: read_u64(r)?,
+    })
+}
+
+/// Append the columnar encoding of `block` to `buf` (which the caller
+/// clears; the writer reuses one scratch buffer across blocks).
+pub fn encode_block(block: &EventBlock, buf: &mut Vec<u8>) {
+    put_uvarint(buf, block.len() as u64);
+
+    // Tag lane, run-length encoded: inner loops emit long runs of the
+    // same kind (a counted loop is one LoopBranch run; a row scan is a
+    // Load/Compute alternation), so runs compress the order information
+    // far below one byte per event.
+    let kinds = block.kinds();
+    let mut i = 0;
+    while i < kinds.len() {
+        let k = kinds[i];
+        let mut j = i + 1;
+        while j < kinds.len() && kinds[j] == k {
+            j += 1;
+        }
+        buf.push(k as u8);
+        put_uvarint(buf, (j - i) as u64);
+        i = j;
+    }
+
+    for &(int_ops, fp_ops) in &block.compute {
+        put_uvarint(buf, u64::from(int_ops));
+        put_uvarint(buf, u64::from(fp_ops));
+    }
+    for &ops in &block.serial {
+        put_uvarint(buf, u64::from(ops));
+    }
+    let mut prev = 0u64;
+    for l in &block.loads {
+        put_ivarint(buf, l.addr.wrapping_sub(prev) as i64);
+        prev = l.addr;
+        put_uvarint(buf, (u64::from(l.size) << 1) | u64::from(l.feeds_branch));
+    }
+    let mut prev = 0u64;
+    for s in &block.stores {
+        put_ivarint(buf, s.addr.wrapping_sub(prev) as i64);
+        prev = s.addr;
+        put_uvarint(buf, u64::from(s.size));
+    }
+    let mut prev = 0u64;
+    for b in &block.branches {
+        put_ivarint(buf, u64::from(b.site).wrapping_sub(prev) as i64);
+        prev = u64::from(b.site);
+        buf.push(u8::from(b.taken) | (u8::from(b.conditional) << 1));
+    }
+    let mut prev = 0u64;
+    for &(site, count) in &block.loop_branches {
+        put_ivarint(buf, u64::from(site).wrapping_sub(prev) as i64);
+        prev = u64::from(site);
+        put_uvarint(buf, u64::from(count));
+    }
+    let mut prev = 0u64;
+    for &addr in &block.prefetches {
+        put_ivarint(buf, addr.wrapping_sub(prev) as i64);
+        prev = addr;
+    }
+}
+
+fn get_u32_field(buf: &[u8], pos: &mut usize, what: &str) -> Result<u32> {
+    let v = get_uvarint(buf, pos)?;
+    u32::try_from(v).map_err(|_| anyhow!("{what} {v} overflows u32"))
+}
+
+fn get_delta_base(buf: &[u8], pos: &mut usize, prev: &mut u64) -> Result<u64> {
+    *prev = prev.wrapping_add(get_ivarint(buf, pos)? as u64);
+    Ok(*prev)
+}
+
+/// Decode one payload (as produced by [`encode_block`]) into `out`,
+/// replacing its contents. Every field is validated; a malformed payload
+/// yields an error, never a panic or a silently wrong block.
+pub fn decode_block(buf: &[u8], out: &mut EventBlock) -> Result<()> {
+    let pos = &mut 0usize;
+    let n = get_uvarint(buf, pos)? as usize;
+    if n > BLOCK_EVENTS {
+        bail!("block claims {n} events (format max {BLOCK_EVENTS})");
+    }
+
+    let mut kinds: Vec<EventKind> = Vec::with_capacity(n);
+    let mut counts = [0usize; 7];
+    while kinds.len() < n {
+        let Some(&kb) = buf.get(*pos) else {
+            bail!("truncated tag lane");
+        };
+        *pos += 1;
+        let kind =
+            EventKind::from_u8(kb).ok_or_else(|| anyhow!("invalid event kind byte {kb}"))?;
+        let run = get_uvarint(buf, pos)? as usize;
+        if run == 0 || kinds.len() + run > n {
+            bail!("tag-lane run of {run} inconsistent with event count {n}");
+        }
+        counts[kb as usize] += run;
+        kinds.resize(kinds.len() + run, kind);
+    }
+
+    let mut compute = Vec::with_capacity(counts[EventKind::Compute as usize]);
+    for _ in 0..counts[EventKind::Compute as usize] {
+        let int_ops = get_u32_field(buf, pos, "int_ops")?;
+        let fp_ops = get_u32_field(buf, pos, "fp_ops")?;
+        compute.push((int_ops, fp_ops));
+    }
+
+    let mut serial = Vec::with_capacity(counts[EventKind::Serial as usize]);
+    for _ in 0..counts[EventKind::Serial as usize] {
+        serial.push(get_u32_field(buf, pos, "serial ops")?);
+    }
+
+    let mut loads = Vec::with_capacity(counts[EventKind::Load as usize]);
+    let mut prev = 0u64;
+    for _ in 0..counts[EventKind::Load as usize] {
+        let addr = get_delta_base(buf, pos, &mut prev)?;
+        let raw = get_uvarint(buf, pos)?;
+        let size = u32::try_from(raw >> 1).map_err(|_| anyhow!("load size overflows u32"))?;
+        loads.push(LoadRec { addr, size, feeds_branch: raw & 1 != 0 });
+    }
+
+    let mut stores = Vec::with_capacity(counts[EventKind::Store as usize]);
+    let mut prev = 0u64;
+    for _ in 0..counts[EventKind::Store as usize] {
+        let addr = get_delta_base(buf, pos, &mut prev)?;
+        let size = get_u32_field(buf, pos, "store size")?;
+        stores.push(StoreRec { addr, size });
+    }
+
+    let mut branches = Vec::with_capacity(counts[EventKind::Branch as usize]);
+    let mut prev = 0u64;
+    for _ in 0..counts[EventKind::Branch as usize] {
+        let site_w = get_delta_base(buf, pos, &mut prev)?;
+        let site = u32::try_from(site_w).map_err(|_| anyhow!("branch site overflows u32"))?;
+        let Some(&flags) = buf.get(*pos) else {
+            bail!("truncated branch flags");
+        };
+        *pos += 1;
+        if flags > 0b11 {
+            bail!("invalid branch flags byte {flags:#x}");
+        }
+        branches.push(BranchRec { site, taken: flags & 1 != 0, conditional: flags & 2 != 0 });
+    }
+
+    let mut loop_branches = Vec::with_capacity(counts[EventKind::LoopBranch as usize]);
+    let mut prev = 0u64;
+    for _ in 0..counts[EventKind::LoopBranch as usize] {
+        let site_w = get_delta_base(buf, pos, &mut prev)?;
+        let site = u32::try_from(site_w).map_err(|_| anyhow!("loop site overflows u32"))?;
+        let count = get_u32_field(buf, pos, "loop count")?;
+        loop_branches.push((site, count));
+    }
+
+    let mut prefetches = Vec::with_capacity(counts[EventKind::SwPrefetch as usize]);
+    let mut prev = 0u64;
+    for _ in 0..counts[EventKind::SwPrefetch as usize] {
+        prefetches.push(get_delta_base(buf, pos, &mut prev)?);
+    }
+
+    if *pos != buf.len() {
+        bail!("{} trailing bytes after block payload", buf.len() - *pos);
+    }
+    *out = EventBlock::from_lanes(
+        kinds, compute, serial, loads, stores, branches, loop_branches, prefetches,
+    );
+    Ok(())
+}
+
+/// What a completed recording looked like on disk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceSummary {
+    pub blocks: u64,
+    pub events: u64,
+    /// Total file size, header and trailer included.
+    pub bytes: u64,
+}
+
+/// Streaming trace recorder: a [`BlockSink`] that encodes each consumed
+/// block and appends it to the file.
+///
+/// `BlockSink::consume` cannot return errors, so I/O failures are stashed
+/// and surfaced by [`TraceWriter::finish`] — always call it (after the
+/// recorder has flushed) to learn whether the file is complete.
+pub struct TraceWriter {
+    out: BufWriter<File>,
+    scratch: Vec<u8>,
+    blocks: u64,
+    events: u64,
+    bytes: u64,
+    finalized: bool,
+    error: Option<crate::util::error::Error>,
+}
+
+impl TraceWriter {
+    /// Create `path`, write the header, and return a writer ready to
+    /// consume blocks.
+    pub fn create(path: &Path, meta: &TraceMeta) -> Result<TraceWriter> {
+        let f = File::create(path).with_context(|| format!("create {}", path.display()))?;
+        let mut out = BufWriter::new(f);
+        out.write_all(TRACE_MAGIC)?;
+        out.write_all(&TRACE_VERSION.to_le_bytes())?;
+        let meta_bytes = write_meta(&mut out, meta)?;
+        Ok(TraceWriter {
+            out,
+            scratch: Vec::new(),
+            blocks: 0,
+            events: 0,
+            bytes: 12 + meta_bytes,
+            finalized: false,
+            error: None,
+        })
+    }
+
+    fn try_consume(&mut self, block: &EventBlock) -> Result<()> {
+        self.scratch.clear();
+        encode_block(block, &mut self.scratch);
+        self.out.write_all(&[BLOCK_MARKER])?;
+        self.out.write_all(&(self.scratch.len() as u32).to_le_bytes())?;
+        write_u64(&mut self.out, fnv1a64(&self.scratch))?;
+        self.out.write_all(&self.scratch)?;
+        self.blocks += 1;
+        self.events += block.len() as u64;
+        self.bytes += 1 + 4 + 8 + self.scratch.len() as u64;
+        Ok(())
+    }
+
+    fn write_end(&mut self) {
+        if self.finalized {
+            return;
+        }
+        self.finalized = true;
+        if self.error.is_some() {
+            return;
+        }
+        let r = (|| -> Result<()> {
+            self.out.write_all(&[END_MARKER])?;
+            write_u64(&mut self.out, self.events)?;
+            write_u64(&mut self.out, self.blocks)?;
+            self.out.flush()?;
+            Ok(())
+        })();
+        match r {
+            Ok(()) => self.bytes += 1 + 8 + 8,
+            Err(e) => self.error = Some(e),
+        }
+    }
+
+    /// Seal the trace (end marker + totals trailer) and report what was
+    /// written, or the first I/O error encountered anywhere in the
+    /// recording.
+    pub fn finish(mut self) -> Result<TraceSummary> {
+        self.write_end();
+        if let Some(e) = self.error.take() {
+            return Err(e.context("writing trace"));
+        }
+        Ok(TraceSummary { blocks: self.blocks, events: self.events, bytes: self.bytes })
+    }
+}
+
+impl BlockSink for TraceWriter {
+    fn consume(&mut self, block: &EventBlock) {
+        if block.is_empty() || self.error.is_some() || self.finalized {
+            return;
+        }
+        if let Err(e) = self.try_consume(block) {
+            self.error = Some(e);
+        }
+    }
+
+    fn finalize(&mut self) {
+        self.write_end();
+    }
+}
+
+/// Streaming reader over a recorded trace file.
+pub struct TraceReader {
+    inp: BufReader<File>,
+    meta: TraceMeta,
+    payload: Vec<u8>,
+    blocks_read: u64,
+    events_read: u64,
+    done: bool,
+}
+
+impl TraceReader {
+    /// Open `path`, validating magic, version, and header.
+    pub fn open(path: &Path) -> Result<TraceReader> {
+        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let mut inp = BufReader::new(f);
+        let mut magic = [0u8; 8];
+        inp.read_exact(&mut magic)
+            .with_context(|| format!("reading header of {}", path.display()))?;
+        if &magic != TRACE_MAGIC {
+            bail!("{}: bad magic (not an mlperf trace file)", path.display());
+        }
+        let version = read_u32(&mut inp)?;
+        if version != TRACE_VERSION {
+            bail!(
+                "{}: trace format version {version} unsupported (this build reads version \
+                 {TRACE_VERSION}); re-record the trace",
+                path.display()
+            );
+        }
+        let meta = read_meta(&mut inp)?;
+        Ok(TraceReader {
+            inp,
+            meta,
+            payload: Vec::new(),
+            blocks_read: 0,
+            events_read: 0,
+            done: false,
+        })
+    }
+
+    /// Header metadata.
+    pub fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    /// Blocks decoded so far.
+    pub fn blocks_read(&self) -> u64 {
+        self.blocks_read
+    }
+
+    /// Events decoded so far.
+    pub fn events_read(&self) -> u64 {
+        self.events_read
+    }
+
+    /// Decode the next block into `block` (replacing its contents).
+    /// Returns `Ok(false)` once the validated end-of-trace trailer has
+    /// been consumed; every error path names what was inconsistent.
+    pub fn next_block(&mut self, block: &mut EventBlock) -> Result<bool> {
+        if self.done {
+            return Ok(false);
+        }
+        let marker = read_u8(&mut self.inp).context("reading block marker")?;
+        match marker {
+            BLOCK_MARKER => {
+                let len = read_u32(&mut self.inp)? as usize;
+                if len > MAX_PAYLOAD {
+                    bail!("block {}: payload length {len} exceeds format cap", self.blocks_read);
+                }
+                let checksum = read_u64(&mut self.inp)?;
+                self.payload.resize(len, 0);
+                self.inp
+                    .read_exact(&mut self.payload)
+                    .with_context(|| format!("block {}: truncated payload", self.blocks_read))?;
+                if fnv1a64(&self.payload) != checksum {
+                    bail!("block {}: checksum mismatch (corrupted trace)", self.blocks_read);
+                }
+                decode_block(&self.payload, block)
+                    .with_context(|| format!("decoding block {}", self.blocks_read))?;
+                self.blocks_read += 1;
+                self.events_read += block.len() as u64;
+                Ok(true)
+            }
+            END_MARKER => {
+                let events = read_u64(&mut self.inp)?;
+                let blocks = read_u64(&mut self.inp)?;
+                if events != self.events_read || blocks != self.blocks_read {
+                    bail!(
+                        "trace trailer mismatch: trailer says {blocks} blocks / {events} \
+                         events, stream held {} / {}",
+                        self.blocks_read,
+                        self.events_read
+                    );
+                }
+                self.done = true;
+                Ok(false)
+            }
+            other => bail!("corrupt trace: unexpected marker byte {other:#04x}"),
+        }
+    }
+}
+
+/// Outcome of one replay pump.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReplayStats {
+    pub blocks: u64,
+    pub events: u64,
+}
+
+/// Feeds a stored trace into any [`BlockSink`] — the simulator stack sees
+/// exactly the block stream the recording run produced, so `Metrics` are
+/// bit-identical to direct execution, with the workload layer never
+/// involved.
+pub struct ReplaySource {
+    reader: TraceReader,
+}
+
+impl ReplaySource {
+    /// Open a trace file for replay.
+    pub fn open(path: &Path) -> Result<ReplaySource> {
+        Ok(ReplaySource { reader: TraceReader::open(path)? })
+    }
+
+    /// Header metadata of the underlying trace.
+    pub fn meta(&self) -> &TraceMeta {
+        &self.reader.meta
+    }
+
+    /// Stream every block into `sink` (finalizing it at end-of-trace) and
+    /// report how much was replayed.
+    pub fn replay_into<S: BlockSink + ?Sized>(mut self, sink: &mut S) -> Result<ReplayStats> {
+        let mut block = EventBlock::with_capacity();
+        while self.reader.next_block(&mut block)? {
+            sink.consume(&block);
+        }
+        sink.finalize();
+        Ok(ReplayStats { blocks: self.reader.blocks_read, events: self.reader.events_read })
+    }
+}
+
+/// In-memory recorded trace: the capture side of the grid driver's
+/// record-once/replay-many mode. Blocks are stored exactly as the
+/// recorder flushed them, so a replay delivers the identical block
+/// stream (and therefore bit-identical `Metrics`) to every consumer.
+#[derive(Debug, Default, Clone)]
+pub struct CapturedTrace {
+    blocks: Vec<EventBlock>,
+    events: u64,
+    finalized: bool,
+}
+
+impl CapturedTrace {
+    /// Events captured.
+    pub fn events(&self) -> u64 {
+        self.events
+    }
+
+    /// Blocks captured.
+    pub fn blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Whether the producing recorder finalized the stream.
+    pub fn is_finalized(&self) -> bool {
+        self.finalized
+    }
+
+    /// Feed the captured stream into `sink`, finalizing it at the end.
+    pub fn replay_into<S: BlockSink + ?Sized>(&self, sink: &mut S) {
+        for b in &self.blocks {
+            sink.consume(b);
+        }
+        sink.finalize();
+    }
+
+    /// Persist the capture as a trace file.
+    pub fn write_to(&self, path: &Path, meta: &TraceMeta) -> Result<TraceSummary> {
+        let mut w = TraceWriter::create(path, meta)?;
+        for b in &self.blocks {
+            BlockSink::consume(&mut w, b);
+        }
+        w.finish()
+    }
+}
+
+impl BlockSink for CapturedTrace {
+    fn consume(&mut self, block: &EventBlock) {
+        if block.is_empty() {
+            return;
+        }
+        self.events += block.len() as u64;
+        self.blocks.push(block.clone());
+    }
+
+    fn finalize(&mut self) {
+        self.finalized = true;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::event::Event;
+
+    fn mixed_block() -> EventBlock {
+        let mut b = EventBlock::with_capacity();
+        b.push_compute(2, 1);
+        b.push_load(0x4000, 8, true);
+        b.push_load(0x4040, 8, false); // +64 delta
+        b.push_load(0x1000, 160, false); // negative delta
+        b.push_branch(7 << 16 | 3, true, true);
+        b.push_branch(7 << 16 | 1, false, true); // negative site delta
+        b.push_serial(4);
+        b.push_store(0x9000, 64);
+        b.push_loop_branch(7 << 16 | 9, 20);
+        b.push_prefetch(0x4080);
+        b.push_prefetch(0x40C0);
+        b.push_compute(u32::MAX, u32::MAX); // extreme lane values
+        b
+    }
+
+    fn roundtrip(b: &EventBlock) -> EventBlock {
+        let mut buf = Vec::new();
+        encode_block(b, &mut buf);
+        let mut out = EventBlock::with_capacity();
+        decode_block(&buf, &mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn encode_decode_is_identity() {
+        let b = mixed_block();
+        let out = roundtrip(&b);
+        assert_eq!(out, b);
+        assert_eq!(out.iter().collect::<Vec<Event>>(), b.iter().collect::<Vec<Event>>());
+    }
+
+    #[test]
+    fn empty_block_roundtrips() {
+        let b = EventBlock::with_capacity();
+        assert_eq!(roundtrip(&b), b);
+    }
+
+    #[test]
+    fn long_runs_compress_below_a_byte_per_event() {
+        let mut b = EventBlock::with_capacity();
+        for i in 0..BLOCK_EVENTS {
+            b.push_load(0x1_0000 + i as u64 * 64, 64, false);
+        }
+        let mut buf = Vec::new();
+        encode_block(&b, &mut buf);
+        // one RLE run for the whole tag lane + (2-byte Δ=64 zigzag varint
+        // + 2-byte size<<1 varint) per load ≈ 4 B/event, vs 13 B raw
+        assert!(
+            buf.len() < 5 * BLOCK_EVENTS,
+            "sequential-load block encoded to {} bytes",
+            buf.len()
+        );
+        assert_eq!(roundtrip(&b), b);
+    }
+
+    #[test]
+    fn decode_rejects_truncation_and_garbage() {
+        let b = mixed_block();
+        let mut buf = Vec::new();
+        encode_block(&b, &mut buf);
+        let mut out = EventBlock::with_capacity();
+        // truncated at every prefix must error, never panic
+        for cut in 0..buf.len() {
+            assert!(
+                decode_block(&buf[..cut], &mut out).is_err(),
+                "prefix of {cut} bytes decoded successfully"
+            );
+        }
+        // trailing garbage
+        buf.push(0);
+        assert!(decode_block(&buf, &mut out).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_bad_kind_and_oversized_count() {
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 1);
+        buf.push(99); // no such EventKind
+        put_uvarint(&mut buf, 1);
+        let mut out = EventBlock::with_capacity();
+        let err = decode_block(&buf, &mut out).unwrap_err().to_string();
+        assert!(err.contains("invalid event kind"), "{err}");
+
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, (BLOCK_EVENTS + 1) as u64);
+        let err = decode_block(&buf, &mut out).unwrap_err().to_string();
+        assert!(err.contains("format max"), "{err}");
+    }
+
+    #[test]
+    fn captured_trace_replays_identically() {
+        let mut cap = CapturedTrace::default();
+        let b = mixed_block();
+        cap.consume(&b);
+        cap.finalize();
+        assert!(cap.is_finalized());
+        assert_eq!(cap.events(), b.len() as u64);
+
+        let mut sink = crate::trace::event::VecSink::default();
+        {
+            let mut adapter = crate::trace::block::PerEvent(&mut sink);
+            cap.replay_into(&mut adapter);
+        }
+        assert_eq!(sink.events, b.iter().collect::<Vec<Event>>());
+        assert!(sink.finished);
+    }
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("mlperf-store-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            workload: "KMeans".into(),
+            profile: LibraryProfile::Sklearn,
+            sw_prefetch: false,
+            rows: 1600,
+            features: 8,
+            iterations: 1,
+            seed: 0xDA7A,
+            dataset_bytes: 1600 * 9 * 8,
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_preserves_meta_and_blocks() {
+        let p = tmpfile("roundtrip.mlt");
+        let b = mixed_block();
+        let summary = {
+            let mut w = TraceWriter::create(&p, &meta()).unwrap();
+            w.consume(&b);
+            w.consume(&b);
+            w.finalize();
+            w.finish().unwrap()
+        };
+        assert_eq!(summary.blocks, 2);
+        assert_eq!(summary.events, 2 * b.len() as u64);
+        assert_eq!(summary.bytes, std::fs::metadata(&p).unwrap().len());
+
+        let mut r = TraceReader::open(&p).unwrap();
+        assert_eq!(*r.meta(), meta());
+        let mut got = EventBlock::with_capacity();
+        let mut blocks = 0;
+        while r.next_block(&mut got).unwrap() {
+            assert_eq!(got, b);
+            blocks += 1;
+        }
+        assert_eq!(blocks, 2);
+        // idempotent at end
+        assert!(!r.next_block(&mut got).unwrap());
+    }
+
+    #[test]
+    fn reader_rejects_version_bump() {
+        let p = tmpfile("version.mlt");
+        {
+            let mut w = TraceWriter::create(&p, &meta()).unwrap();
+            w.consume(&mixed_block());
+            w.finish().unwrap();
+        }
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[8] = 0xFE; // version field, little-endian low byte
+        std::fs::write(&p, &bytes).unwrap();
+        let err = TraceReader::open(&p).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+        assert!(err.contains("re-record"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_flipped_payload_bit() {
+        let p = tmpfile("corrupt.mlt");
+        {
+            let mut w = TraceWriter::create(&p, &meta()).unwrap();
+            w.consume(&mixed_block());
+            w.finish().unwrap();
+        }
+        let mut bytes = std::fs::read(&p).unwrap();
+        let header = 12 + 2 + "KMeans".len() + 2 + 40;
+        let payload_at = header + 1 + 4 + 8;
+        bytes[payload_at + 2] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let mut r = TraceReader::open(&p).unwrap();
+        let mut got = EventBlock::with_capacity();
+        let err = r.next_block(&mut got).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+    }
+
+    #[test]
+    fn reader_rejects_truncated_file() {
+        let p = tmpfile("trunc.mlt");
+        {
+            let mut w = TraceWriter::create(&p, &meta()).unwrap();
+            w.consume(&mixed_block());
+            w.finish().unwrap();
+        }
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() - 9]).unwrap(); // lose the trailer
+        let mut r = TraceReader::open(&p).unwrap();
+        let mut got = EventBlock::with_capacity();
+        let mut res = Ok(true);
+        while let Ok(true) = res {
+            res = r.next_block(&mut got);
+        }
+        assert!(res.is_err(), "truncated trace must not read to a clean end");
+    }
+
+    #[test]
+    fn reader_rejects_bad_magic() {
+        let p = tmpfile("magic.mlt");
+        std::fs::write(&p, b"NOTTRACE________________________").unwrap();
+        let err = TraceReader::open(&p).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+}

@@ -1,0 +1,212 @@
+//! Shared binary-encoding primitives for the crate's on-disk containers
+//! (the dataset container in [`crate::data::io`] and the columnar trace
+//! format in [`crate::trace::store`]).
+//!
+//! Everything here is little-endian and allocation-free on the encode
+//! side: fixed-width integers, LEB128 varints, zigzag signed mapping, and
+//! the FNV-1a 64-bit checksum the trace format uses per block. Decoders
+//! are bounds-checked and return [`Error`]s instead of panicking so a
+//! corrupted or truncated file surfaces as a clean CLI error.
+//!
+//! [`Error`]: crate::util::error::Error
+
+use crate::bail;
+use crate::util::error::Result;
+use std::io::{Read, Write};
+
+/// Read a little-endian `u64` from a stream.
+pub fn read_u64<R: Read>(r: &mut R) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Read a little-endian `u32` from a stream.
+pub fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+/// Read a little-endian `u16` from a stream.
+pub fn read_u16<R: Read>(r: &mut R) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+/// Read a single byte from a stream.
+pub fn read_u8<R: Read>(r: &mut R) -> Result<u8> {
+    let mut b = [0u8; 1];
+    r.read_exact(&mut b)?;
+    Ok(b[0])
+}
+
+/// Write a little-endian `u64` to a stream.
+pub fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+/// Write a little-endian `u32` to a stream.
+pub fn write_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+/// Append a LEB128 unsigned varint (1 byte for values < 128, up to 10
+/// bytes for the full `u64` range).
+pub fn put_uvarint(buf: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        buf.push((v as u8 & 0x7F) | 0x80);
+        v >>= 7;
+    }
+    buf.push(v as u8);
+}
+
+/// Decode a LEB128 unsigned varint from `buf` at `*pos`, advancing `*pos`.
+pub fn get_uvarint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v: u64 = 0;
+    let mut shift = 0u32;
+    loop {
+        let Some(&b) = buf.get(*pos) else {
+            bail!("truncated varint at byte {}", *pos);
+        };
+        *pos += 1;
+        // 10th byte sits at shift 63 and may only contribute bit 0; an
+        // 11th byte (shift 70) can contribute nothing at all.
+        if shift >= 64 || (shift == 63 && (b & 0x7F) > 1) {
+            bail!("varint overflows u64 at byte {}", *pos);
+        }
+        v |= u64::from(b & 0x7F) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Zigzag-map a signed delta so small magnitudes of either sign encode to
+/// short varints (0 → 0, -1 → 1, 1 → 2, -2 → 3, ...).
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Append a zigzag-varint signed delta.
+pub fn put_ivarint(buf: &mut Vec<u8>, v: i64) {
+    put_uvarint(buf, zigzag(v));
+}
+
+/// Decode a zigzag-varint signed delta.
+pub fn get_ivarint(buf: &[u8], pos: &mut usize) -> Result<i64> {
+    Ok(unzigzag(get_uvarint(buf, pos)?))
+}
+
+/// FNV-1a 64-bit hash — the trace format's per-block checksum. Not
+/// cryptographic; it exists to catch torn writes, truncation, and bit rot.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= u64::from(b);
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uvarint_roundtrip_across_ranges() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX];
+        for &v in &vals {
+            buf.clear();
+            put_uvarint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_uvarint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len(), "value {v} left trailing bytes");
+        }
+    }
+
+    #[test]
+    fn uvarint_small_values_are_one_byte() {
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, 127);
+        assert_eq!(buf.len(), 1);
+        buf.clear();
+        put_uvarint(&mut buf, 128);
+        assert_eq!(buf.len(), 2);
+    }
+
+    #[test]
+    fn truncated_varint_is_error() {
+        let buf = [0x80u8, 0x80]; // continuation bits with no terminator
+        let mut pos = 0;
+        assert!(get_uvarint(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn overlong_varint_is_error_not_silent_truncation() {
+        // 10th byte may only carry bit 0 (u64::MAX ends in 0x01)
+        let mut ok = vec![0xFFu8; 9];
+        ok.push(0x01);
+        let mut pos = 0;
+        assert_eq!(get_uvarint(&ok, &mut pos).unwrap(), u64::MAX);
+
+        let mut bad = vec![0x80u8; 9];
+        bad.push(0x7E); // bits above bit 0 would be silently dropped
+        let mut pos = 0;
+        assert!(get_uvarint(&bad, &mut pos).is_err());
+
+        let mut eleven = vec![0x80u8; 10];
+        eleven.push(0x01);
+        let mut pos = 0;
+        assert!(get_uvarint(&eleven, &mut pos).is_err());
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, 1, -1, 2, -2, 63, -64, i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    #[test]
+    fn ivarint_roundtrip() {
+        let mut buf = Vec::new();
+        for v in [0i64, -1, 1, -1000, 1000, i64::MIN, i64::MAX] {
+            buf.clear();
+            put_ivarint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_ivarint(&buf, &mut pos).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn fnv_known_vectors() {
+        // Reference values for the 64-bit FNV-1a parameters.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_ne!(fnv1a64(b"abc"), fnv1a64(b"acb"));
+    }
+
+    #[test]
+    fn fixed_width_roundtrip() {
+        let mut buf = Vec::new();
+        write_u64(&mut buf, 0xDEAD_BEEF_0102_0304).unwrap();
+        write_u32(&mut buf, 77).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        assert_eq!(read_u64(&mut cur).unwrap(), 0xDEAD_BEEF_0102_0304);
+        assert_eq!(read_u32(&mut cur).unwrap(), 77);
+    }
+}

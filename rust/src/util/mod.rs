@@ -2,6 +2,7 @@
 //! statistics, a CLI parser, and an error/context type. The offline build
 //! environment provides no external crates, so these are implemented here.
 
+pub mod binio;
 pub mod cli;
 pub mod error;
 pub mod matrix;

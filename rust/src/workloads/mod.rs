@@ -75,6 +75,17 @@ impl LibraryProfile {
             LibraryProfile::Mlpack => 1,
         }
     }
+
+    /// Whether this library profile implements `w` at all. scikit-learn
+    /// covers every Table I workload; mlpack v3.4 ships no SVM-RBF, LDA
+    /// or t-SNE (paper Section II), so those must be rejected up front
+    /// rather than silently simulated under the wrong profile.
+    pub fn implements(self, w: &dyn Workload) -> bool {
+        match self {
+            LibraryProfile::Sklearn => true,
+            LibraryProfile::Mlpack => w.in_mlpack(),
+        }
+    }
 }
 
 /// Per-run options threaded to the workload.
@@ -174,6 +185,16 @@ pub fn registry() -> Vec<Box<dyn Workload>> {
     ]
 }
 
+/// The workload names a library profile implements, in Table I order
+/// (the valid `--workload` values under that `--profile`).
+pub fn supported_names(profile: LibraryProfile) -> Vec<&'static str> {
+    registry()
+        .iter()
+        .filter(|w| profile.implements(w.as_ref()))
+        .map(|w| w.name())
+        .collect()
+}
+
 /// Look a workload up by its (case-insensitive) paper name.
 pub fn by_name(name: &str) -> Option<Box<dyn Workload>> {
     let lower = name.to_lowercase();
@@ -262,6 +283,20 @@ mod tests {
         assert!(by_name("random forests").is_some());
         assert!(by_name("svm-rbf").is_some());
         assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn profile_support_matches_library_gaps() {
+        let sk = supported_names(LibraryProfile::Sklearn);
+        assert_eq!(sk.len(), 14, "sklearn implements all of Table I");
+        let ml = supported_names(LibraryProfile::Mlpack);
+        assert_eq!(ml.len(), 11);
+        for missing in ["SVM-RBF", "LDA", "t-SNE"] {
+            assert!(!ml.contains(&missing), "{missing} must not be in the mlpack set");
+            let w = by_name(missing).unwrap();
+            assert!(!LibraryProfile::Mlpack.implements(w.as_ref()));
+            assert!(LibraryProfile::Sklearn.implements(w.as_ref()));
+        }
     }
 
     #[test]

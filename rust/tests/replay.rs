@@ -1,0 +1,130 @@
+//! Record-once/replay-many integration tests: a trace recorded from a
+//! real workload and replayed through `PipelineSim` — from memory or
+//! from disk — must produce `Metrics` bit-identical to direct execution,
+//! for both library profiles, with and without software prefetching, and
+//! under scenario CPU-config mutations. Corruption must surface as clean
+//! errors, and the replay grid driver must execute each workload exactly
+//! once however many scenario cells it serves.
+
+use mlperf::coordinator::{
+    capture_trace, characterize, characterize_with, record_characterize, replay_characterize,
+    replay_file, run_jobs, run_jobs_replayed, ExperimentConfig, Job, Scenario,
+};
+use mlperf::workloads::{by_name, LibraryProfile};
+
+fn tiny(profile: LibraryProfile) -> ExperimentConfig {
+    ExperimentConfig { scale: 0.02, iterations: 1, profile, ..Default::default() }
+}
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("mlperf-replay-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn file_replay_matches_direct_execution_across_workloads_and_profiles() {
+    for profile in [LibraryProfile::Sklearn, LibraryProfile::Mlpack] {
+        for name in ["KMeans", "KNN", "Decision Tree"] {
+            let cfg = tiny(profile);
+            let w = by_name(name).unwrap();
+            let direct = characterize(w.as_ref(), &cfg);
+            let path = tmpfile(&format!("{}_{profile:?}.mlt", name.replace(' ', "_")));
+            let (recorded, summary) =
+                record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
+            assert_eq!(
+                recorded.metrics, direct.metrics,
+                "{name}/{profile:?}: the recording run's own simulation diverged"
+            );
+            assert_eq!(recorded.result.quality, direct.result.quality);
+            assert!(summary.events > 1_000, "{name}/{profile:?}: trivial trace");
+            let (meta, replayed, stats) = replay_file(&path, &cfg, |_| {}).unwrap();
+            assert_eq!(meta.workload, name);
+            assert_eq!(meta.profile, profile);
+            assert_eq!(stats.events, summary.events);
+            assert_eq!(stats.blocks, summary.blocks);
+            assert_eq!(replayed, direct.metrics, "{name}/{profile:?}: file replay diverged");
+        }
+    }
+}
+
+#[test]
+fn file_replay_honours_prefetch_variant_and_scenario_mutations() {
+    let cfg = tiny(LibraryProfile::Sklearn);
+    let w = by_name("KNN").unwrap();
+
+    // prefetch-enabled recording is its own trace variant
+    let pf_path = tmpfile("knn_pf.mlt");
+    record_characterize(w.as_ref(), &cfg, true, &pf_path).unwrap();
+    let direct_pf = characterize_with(w.as_ref(), &cfg, true, None, None, |_| {});
+    let (meta, replayed_pf, _) = replay_file(&pf_path, &cfg, |_| {}).unwrap();
+    assert!(meta.sw_prefetch);
+    assert!(replayed_pf.mix.sw_prefetches > 0, "prefetch events must survive the store");
+    assert_eq!(replayed_pf, direct_pf.metrics);
+
+    // CPU-config scenario applied at replay time, not record time
+    let base_path = tmpfile("knn_base.mlt");
+    record_characterize(w.as_ref(), &cfg, false, &base_path).unwrap();
+    let direct_l2 =
+        characterize_with(w.as_ref(), &cfg, false, None, None, |c| c.cache.perfect_l2 = true);
+    let (_, replayed_l2, _) =
+        replay_file(&base_path, &cfg, |c| c.cache.perfect_l2 = true).unwrap();
+    assert_eq!(replayed_l2, direct_l2.metrics);
+}
+
+#[test]
+fn in_memory_capture_written_to_disk_replays_identically() {
+    let cfg = tiny(LibraryProfile::Sklearn);
+    let w = by_name("GMM").unwrap();
+    let recorded = capture_trace(w.as_ref(), &cfg, false);
+    let from_memory = replay_characterize(&recorded, &cfg, |_| {});
+
+    let path = tmpfile("gmm_mem.mlt");
+    let summary = recorded.trace.write_to(&path, &recorded.meta).unwrap();
+    assert_eq!(summary.events, recorded.trace.events());
+    let (meta, from_disk, stats) = replay_file(&path, &cfg, |_| {}).unwrap();
+    assert_eq!(meta, recorded.meta);
+    assert_eq!(stats.events, summary.events);
+    assert_eq!(from_disk, from_memory, "disk and memory replays must agree bit-for-bit");
+}
+
+#[test]
+fn four_scenario_grid_replays_from_one_execution() {
+    let cfg = tiny(LibraryProfile::Sklearn);
+    let scenarios = [
+        Scenario::Baseline,
+        Scenario::PerfectL2,
+        Scenario::PerfectLlc,
+        Scenario::DramIdealRows,
+    ];
+    let jobs: Vec<Job> = scenarios.iter().map(|s| Job::new("DBSCAN", *s)).collect();
+    let direct = run_jobs(&cfg, &jobs, 2);
+    let replayed = run_jobs_replayed(&cfg, &jobs, 2);
+    assert_eq!(replayed.workload_executions, 1, "one capture must serve all 4 cells");
+    assert_eq!(direct.workload_executions, jobs.len());
+    assert_eq!(replayed.outputs.len(), jobs.len());
+    for (a, b) in direct.outputs.iter().zip(&replayed.outputs) {
+        assert_eq!(a.job, b.job);
+        assert_eq!(a.metrics, b.metrics, "replay grid diverged for {:?}", a.job);
+        assert_eq!(a.quality, b.quality);
+    }
+}
+
+#[test]
+fn replay_file_reports_corruption_cleanly() {
+    let cfg = tiny(LibraryProfile::Sklearn);
+    let w = by_name("Ridge").unwrap();
+    let path = tmpfile("ridge_corrupt.mlt");
+    record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xFF;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = replay_file(&path, &cfg, |_| {}).unwrap_err().to_string();
+    assert!(
+        ["checksum", "truncated", "cap", "marker", "trailer", "decoding"]
+            .iter()
+            .any(|needle| err.contains(needle)),
+        "corruption produced an unhelpful error: {err}"
+    );
+}
