@@ -1,18 +1,32 @@
-//! Micro-benchmark: trace-delivery throughput (events/sec) of the legacy
-//! per-event `dyn Sink` path versus the batched columnar block pipeline,
-//! for both a cheap counting consumer (isolates delivery overhead — the
-//! quantity the refactor targets) and the full pipeline simulator (end to
-//! end). Numbers and methodology are recorded in DESIGN.md §Block
-//! pipeline.
+//! Micro-benchmark: simulation throughput (events/sec) across the
+//! delivery *and* consumption layers:
+//!
+//! - legacy per-event `dyn Sink` vs batched columnar blocks (delivery,
+//!   PR 1);
+//! - seed-layout reference hierarchy ([`RefPipelineSim`]) vs the packed
+//!   hot-path hierarchy (consumption, PR 3) — the two run the identical
+//!   timeline, so the ratio isolates the packed-set/MRU-filter/block-lane
+//!   rework;
+//! - per-workload direct execution vs trace replay (record-once/
+//!   replay-many, PR 2).
+//!
+//! Numbers and methodology are recorded in DESIGN.md §Simulator hot path.
 //!
 //! ```bash
-//! cargo bench --bench pipeline_throughput            # default 2M elements
+//! cargo bench --bench pipeline_throughput             # default 2M elements
 //! PIPELINE_BENCH_ELEMS=500000 cargo bench --bench pipeline_throughput
+//! cargo bench --bench pipeline_throughput -- --json   # + BENCH_sim_throughput.json
 //! ```
+//!
+//! `--json` writes `BENCH_sim_throughput.json` at the repository root
+//! (override with `--json-out <path>`); CI uploads it as an artifact so
+//! the events/sec trajectory is tracked per commit.
 
-use mlperf::sim::{CpuConfig, PipelineSim};
+use mlperf::coordinator::{capture_trace, characterize_with, replay_characterize, ExperimentConfig};
+use mlperf::sim::{CpuConfig, PipelineSim, RefPipelineSim};
 use mlperf::trace::{BlockSink, Event, InstructionMix, Recorder, Sink};
-use mlperf::util::Pcg64;
+use mlperf::util::{Args, Pcg64};
+use mlperf::workloads::by_name;
 use std::hint::black_box;
 use std::time::Instant;
 
@@ -83,7 +97,80 @@ fn measure(label: &str, reps: usize, mut f: impl FnMut() -> (u64, u64)) -> f64 {
     eps
 }
 
+/// One workload's direct-vs-replay throughput row.
+struct WorkloadRow {
+    name: &'static str,
+    events: u64,
+    direct_eps: f64,
+    replay_eps: f64,
+}
+
+/// Best-of-2 events/sec of `f` over a fixed event count.
+fn best_eps(events: u64, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    events as f64 / best
+}
+
+/// Direct execution (workload + simulation) vs replay (simulation only)
+/// of the same captured trace — both reported as simulated events/sec.
+fn measure_workloads(cfg: &ExperimentConfig) -> Vec<WorkloadRow> {
+    let mut rows = Vec::new();
+    for name in ["KMeans", "KNN", "Ridge"] {
+        let w = by_name(name).unwrap();
+        let recorded = capture_trace(w.as_ref(), cfg, false);
+        let events = recorded.trace.events();
+        // dataset generated once outside the timed region: neither mode
+        // under comparison includes synthesis time
+        let ds = w.make_dataset(cfg.rows_for(w.as_ref()), cfg.features, cfg.seed);
+        let direct_eps = best_eps(events, || {
+            let c = characterize_with(w.as_ref(), cfg, false, None, Some(&ds), |_| {});
+            black_box(c.metrics.instructions);
+        });
+        let replay_eps = best_eps(events, || {
+            black_box(replay_characterize(&recorded, cfg, |_| {}).instructions);
+        });
+        println!(
+            "{name:>34}: {:>8.1} M events/s direct, {:>8.1} M events/s replay ({events} events)",
+            direct_eps / 1e6,
+            replay_eps / 1e6
+        );
+        rows.push(WorkloadRow { name, events, direct_eps, replay_eps });
+    }
+    rows
+}
+
+fn write_json(path: &str, elems: usize, modes: &[(&str, f64)], rows: &[WorkloadRow]) {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str("  \"bench\": \"sim_throughput\",\n");
+    s.push_str(&format!("  \"elements\": {elems},\n"));
+    s.push_str("  \"events_per_sec\": {\n");
+    for (i, (k, v)) in modes.iter().enumerate() {
+        let sep = if i + 1 < modes.len() { "," } else { "" };
+        s.push_str(&format!("    \"{k}\": {v:.1}{sep}\n"));
+    }
+    s.push_str("  },\n");
+    s.push_str("  \"workloads\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        let sep = if i + 1 < rows.len() { "," } else { "" };
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"events\": {}, \"direct_eps\": {:.1}, \
+             \"replay_eps\": {:.1}}}{sep}\n",
+            r.name, r.events, r.direct_eps, r.replay_eps
+        ));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, s).unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
+    println!("\nwrote {path}");
+}
+
 fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench"));
     let n: usize = std::env::var("PIPELINE_BENCH_ELEMS")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -120,7 +207,15 @@ fn main() {
         let events = drive_dyn(black_box(&mut sim), &s);
         (events, sim.metrics().instructions)
     });
-    let block_sim = measure("blocks (dyn) -> PipelineSim", 2, || {
+    let seed_sim = measure("blocks -> PipelineSim (seed cache)", 2, || {
+        let mut sim = RefPipelineSim::with_cache_model(CpuConfig::default());
+        let events = {
+            let mut rec = Recorder::new(&mut sim, NS);
+            drive_block(black_box(&mut rec), &s)
+        };
+        (events, sim.metrics().instructions)
+    });
+    let block_sim = measure("blocks -> PipelineSim (packed)", 2, || {
         let mut sim = PipelineSim::new(CpuConfig::default());
         let events = {
             let mut rec = Recorder::new(&mut sim, NS);
@@ -129,8 +224,35 @@ fn main() {
         (events, sim.metrics().instructions)
     });
 
+    // --- real workloads: direct execution vs trace replay ---
+    println!();
+    let wl_cfg = ExperimentConfig {
+        scale: args.get_parsed_or(
+            "scale",
+            std::env::var("MLPERF_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(0.05),
+        ),
+        iterations: 1,
+        ..Default::default()
+    };
+    let rows = measure_workloads(&wl_cfg);
+
     println!();
     println!("delivery speedup (blocks dyn   / per-event dyn): {:.2}x", block_dyn_mix / dyn_mix);
     println!("delivery speedup (blocks typed / per-event dyn): {:.2}x", block_typed_mix / dyn_mix);
     println!("end-to-end sim speedup (blocks / per-event dyn): {:.2}x", block_sim / dyn_sim);
+    println!("hot-path speedup (packed / seed cache layout)  : {:.2}x", block_sim / seed_sim);
+
+    if args.has("json") {
+        let default_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sim_throughput.json");
+        let path = args.get_or("json-out", default_path);
+        let modes = [
+            ("dyn_sink_mix", dyn_mix),
+            ("blocks_dyn_mix", block_dyn_mix),
+            ("blocks_typed_mix", block_typed_mix),
+            ("dyn_sink_sim", dyn_sim),
+            ("blocks_sim_seed_cache", seed_sim),
+            ("blocks_sim_packed", block_sim),
+        ];
+        write_json(&path, n, &modes, &rows);
+    }
 }

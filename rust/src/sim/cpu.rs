@@ -14,10 +14,12 @@
 //! the bad-speculation bound (Figs. 16/22).
 
 use super::branch::{BranchStats, Gshare};
-use super::cache::{DramRequest, Hierarchy, HierarchyConfig, Level};
+use super::cache::{Cache, CacheModel, DramRequest, Hierarchy, HierarchyConfig, Level};
 use super::dram::{Dram, DramConfig, DramStats};
 use super::prefetch::PrefetchStats;
-use crate::trace::{BlockSink, Event, EventBlock, EventKind, InstructionMix, Sink};
+use crate::trace::{
+    line_span, BlockSink, Event, EventBlock, EventKind, InstructionMix, LoadRec, Sink, StoreRec,
+};
 
 /// Core configuration (defaults model the paper's "aggressive 5-way
 /// superscalar" client core at 2.9 GHz).
@@ -117,9 +119,14 @@ impl Metrics {
 
 /// The trace-driven pipeline simulator. Implements [`Sink`]; feed it a
 /// workload trace, call `finish()`, then read [`PipelineSim::metrics`].
-pub struct PipelineSim {
+///
+/// Generic over the cache model so the parity tests and the throughput
+/// bench can drive the seed-layout
+/// [`RefCache`](super::reference::RefCache) through the identical
+/// timeline; production code uses the default packed [`Cache`].
+pub struct PipelineSim<C: CacheModel = Cache> {
     cfg: CpuConfig,
-    pub hierarchy: Hierarchy,
+    pub hierarchy: Hierarchy<C>,
     pub dram: Dram,
     predictor: Gshare,
     mix: InstructionMix,
@@ -129,6 +136,10 @@ pub struct PipelineSim {
     cycle: f64,
     outstanding: Vec<Outstanding>,
     dram_scratch: Vec<DramRequest>,
+    // block lane scratch: per-lane touched-line spans, precomputed
+    // lane-wise before the tag walk (§Perf: block-vectorized access path)
+    load_spans: Vec<(u64, u64)>,
+    store_spans: Vec<(u64, u64)>,
     // stall accumulators (cycles)
     bad_spec_cycles: f64,
     l2_stall: f64,
@@ -140,10 +151,18 @@ pub struct PipelineSim {
     finished: bool,
 }
 
-impl PipelineSim {
+impl PipelineSim<Cache> {
+    /// Simulator over the packed hot-path cache model.
     pub fn new(cfg: CpuConfig) -> Self {
+        Self::with_cache_model(cfg)
+    }
+}
+
+impl<C: CacheModel> PipelineSim<C> {
+    /// Simulator over an explicit cache model (see [`PipelineSim::new`]).
+    pub fn with_cache_model(cfg: CpuConfig) -> Self {
         Self {
-            hierarchy: Hierarchy::new(&cfg.cache),
+            hierarchy: Hierarchy::with_model(&cfg.cache),
             dram: Dram::new(cfg.dram.clone()),
             predictor: Gshare::default_config(),
             mix: InstructionMix::default(),
@@ -152,6 +171,8 @@ impl PipelineSim {
             cycle: 0.0,
             outstanding: Vec::with_capacity(cfg.mshrs + 1),
             dram_scratch: Vec::with_capacity(16),
+            load_spans: Vec::new(),
+            store_spans: Vec::new(),
             bad_spec_cycles: 0.0,
             l2_stall: 0.0,
             l3_stall: 0.0,
@@ -211,6 +232,11 @@ impl PipelineSim {
     /// Route DRAM-reaching cache traffic through the DRAM timing model,
     /// returning the latency (cycles) of the *demand* request if present.
     fn run_dram_traffic(&mut self) -> Option<f64> {
+        // §Perf: hoists the dominant no-DRAM-traffic case (cache-resident
+        // accesses, filtered prefetches) past the drain/take machinery
+        if self.dram_scratch.is_empty() {
+            return None;
+        }
         let mut demand_cycles = None;
         let now_ns = self.cycle / self.cfg.freq_ghz;
         // take ownership to satisfy the borrow checker
@@ -225,16 +251,16 @@ impl PipelineSim {
         demand_cycles
     }
 
-    fn memory_access(&mut self, addr: u64, size: u32, store: bool, feeds_branch: bool) {
-        let lines = crate::trace::line_of(addr + size.max(1) as u64 - 1)
-            - crate::trace::line_of(addr)
-            + 1;
+    /// Demand access over a precomputed `first..=last` touched-line span
+    /// (the block lane computes spans lane-wise; the per-event [`Sink`]
+    /// path computes them inline — both land here).
+    fn memory_access_span(&mut self, first: u64, last: u64, store: bool, feeds_branch: bool) {
         // one mem uop per touched line (vectorized row reads decompose
         // into per-line accesses in hardware too)
-        self.issue(lines as f64);
+        self.issue((last - first + 1) as f64);
         let (level, _) = self
             .hierarchy
-            .access(addr, size, store, &mut self.dram_scratch);
+            .access_span(first, last, store, &mut self.dram_scratch);
         let dram_lat = self.run_dram_traffic();
         if store {
             // stores retire through the store buffer; no consumer stalls
@@ -343,9 +369,9 @@ impl PipelineSim {
             branch_mispredict_ratio: self.branch_stats.mispredict_ratio(),
             branch_fraction: self.mix.branch_fraction(),
             cond_branch_fraction: self.mix.conditional_branch_fraction(),
-            l1_miss_ratio: self.hierarchy.l1.stats.miss_ratio(),
-            l2_miss_ratio: self.hierarchy.l2.stats.miss_ratio(),
-            llc_miss_ratio: self.hierarchy.l3.stats.miss_ratio(),
+            l1_miss_ratio: self.hierarchy.l1.stats().miss_ratio(),
+            l2_miss_ratio: self.hierarchy.l2.stats().miss_ratio(),
+            llc_miss_ratio: self.hierarchy.l3.stats().miss_ratio(),
             port_dist,
             mix: self.mix.clone(),
             branch: self.branch_stats,
@@ -359,7 +385,7 @@ impl PipelineSim {
 // Per-event timeline handlers, shared verbatim by the legacy per-event
 // [`Sink`] path and the batched [`BlockSink`] path so the two produce
 // bit-identical metrics (the parity tests assert this).
-impl PipelineSim {
+impl<C: CacheModel> PipelineSim<C> {
     #[inline]
     fn on_compute(&mut self, int_ops: u32, fp_ops: u32) {
         self.issue((int_ops + fp_ops) as f64);
@@ -399,17 +425,19 @@ impl PipelineSim {
     }
 }
 
-impl Sink for PipelineSim {
+impl<C: CacheModel> Sink for PipelineSim<C> {
     fn event(&mut self, ev: Event) {
         self.mix.event(ev);
         match ev {
             Event::Compute { int_ops, fp_ops } => self.on_compute(int_ops, fp_ops),
             Event::Serial { ops } => self.on_serial(ops),
             Event::Load { addr, size, feeds_branch } => {
-                self.memory_access(addr, size, false, feeds_branch);
+                let (first, last) = line_span(addr, size);
+                self.memory_access_span(first, last, false, feeds_branch);
             }
             Event::Store { addr, size } => {
-                self.memory_access(addr, size, true, false);
+                let (first, last) = line_span(addr, size);
+                self.memory_access_span(first, last, true, false);
             }
             Event::Branch { site, taken, conditional } => {
                 self.branch_event(site, taken, conditional);
@@ -436,13 +464,19 @@ impl Sink for PipelineSim {
     }
 }
 
-impl BlockSink for PipelineSim {
+impl<C: CacheModel> BlockSink for PipelineSim<C> {
     /// Consume a whole columnar block: the instruction mix is accumulated
-    /// lane-wise (no per-event dispatch), then the timeline model walks
-    /// the discriminant lane with per-lane cursors — monomorphized, with
-    /// every payload lane contiguous in cache.
+    /// lane-wise (no per-event dispatch), touched-line spans for both
+    /// memory lanes are precomputed in two branch-free lane sweeps, then
+    /// the timeline model walks the discriminant lane with per-lane
+    /// cursors — monomorphized, with every payload lane contiguous in
+    /// cache.
     fn consume(&mut self, block: &EventBlock) {
         self.mix.add_block(block);
+        self.load_spans.clear();
+        self.load_spans.extend(block.loads.iter().map(LoadRec::line_span));
+        self.store_spans.clear();
+        self.store_spans.extend(block.stores.iter().map(StoreRec::line_span));
         let (mut ci, mut si, mut li, mut sti, mut bi, mut lbi, mut pi) = (0, 0, 0, 0, 0, 0, 0);
         for &kind in block.kinds() {
             match kind {
@@ -457,14 +491,15 @@ impl BlockSink for PipelineSim {
                     self.on_serial(ops);
                 }
                 EventKind::Load => {
-                    let l = block.loads[li];
+                    let feeds_branch = block.loads[li].feeds_branch;
+                    let (first, last) = self.load_spans[li];
                     li += 1;
-                    self.memory_access(l.addr, l.size, false, l.feeds_branch);
+                    self.memory_access_span(first, last, false, feeds_branch);
                 }
                 EventKind::Store => {
-                    let s = block.stores[sti];
+                    let (first, last) = self.store_spans[sti];
                     sti += 1;
-                    self.memory_access(s.addr, s.size, true, false);
+                    self.memory_access_span(first, last, true, false);
                 }
                 EventKind::Branch => {
                     let br = block.branches[bi];
@@ -683,7 +718,10 @@ mod tests {
                     taken: rng.next_f64() < 0.5,
                     conditional: rng.next_f64() < 0.9,
                 },
-                5 => Event::LoopBranch { site: rng.below(32) as u32, count: 1 + rng.below(30) as u32 },
+                5 => Event::LoopBranch {
+                    site: rng.below(32) as u32,
+                    count: 1 + rng.below(30) as u32,
+                },
                 _ => Event::SwPrefetch { addr: rng.below(1 << 30) },
             })
             .collect();

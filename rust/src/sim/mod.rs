@@ -11,6 +11,8 @@
 //! - [`cpu`] — interval-style top-down pipeline model producing the
 //!   paper's metric set (Figs. 1–10).
 //! - [`multicore`] — shared-LLC/-bandwidth composition (Tables III/IV).
+//! - [`reference`] — the seed cache layout, frozen as the bit-parity
+//!   reference and performance baseline of the packed hot path.
 
 pub mod branch;
 pub mod cache;
@@ -18,10 +20,14 @@ pub mod cpu;
 pub mod dram;
 pub mod multicore;
 pub mod prefetch;
+pub mod reference;
 
 pub use branch::{BranchStats, Gshare};
-pub use cache::{Cache, CacheStats, DramRequest, Hierarchy, HierarchyConfig, Level};
+pub use cache::{
+    BlockAccess, Cache, CacheModel, CacheStats, DramRequest, Hierarchy, HierarchyConfig, Level,
+};
 pub use cpu::{CpuConfig, Metrics, PipelineSim};
 pub use dram::{AddrMap, Dram, DramConfig, DramStats, RowOutcome};
-pub use multicore::{aggregate, percore_config, run_multicore};
+pub use multicore::{aggregate, percore_config, run_multicore, run_multicore_with_model};
 pub use prefetch::{AdjacentLinePrefetcher, PrefetchStats, StreamPrefetcher};
+pub use reference::{RefCache, RefHierarchy, RefPipelineSim};

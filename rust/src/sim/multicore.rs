@@ -18,6 +18,7 @@
 //! DRAM bound) persists at 4 and 8 cores. DESIGN.md documents the
 //! substitution (the paper used real hardware).
 
+use super::cache::{Cache, CacheModel};
 use super::cpu::{CpuConfig, Metrics, PipelineSim};
 use crate::trace::Recorder;
 use crate::util::stats;
@@ -71,14 +72,29 @@ pub fn aggregate(per_core: &[Metrics]) -> Metrics {
 /// `core_id`'s shard of the workload through a block-pipeline [`Recorder`]
 /// into that core's private pipeline simulator. `ns` is the branch-site
 /// namespace handed to each per-core recorder.
-pub fn run_multicore<F>(base: &CpuConfig, n_cores: usize, ns: u32, mut run_core: F) -> Metrics
+pub fn run_multicore<F>(base: &CpuConfig, n_cores: usize, ns: u32, run_core: F) -> Metrics
+where
+    F: FnMut(usize, &mut Recorder),
+{
+    run_multicore_with_model::<Cache, F>(base, n_cores, ns, run_core)
+}
+
+/// [`run_multicore`] over an explicit per-core cache model (the hot-path
+/// parity tests drive the seed-layout reference through the identical
+/// sharding/aggregation).
+pub fn run_multicore_with_model<C: CacheModel, F>(
+    base: &CpuConfig,
+    n_cores: usize,
+    ns: u32,
+    mut run_core: F,
+) -> Metrics
 where
     F: FnMut(usize, &mut Recorder),
 {
     let cfg = percore_config(base, n_cores);
     let mut per_core = Vec::with_capacity(n_cores);
     for core in 0..n_cores {
-        let mut sim = PipelineSim::new(cfg.clone());
+        let mut sim = PipelineSim::<C>::with_cache_model(cfg.clone());
         {
             let mut rec = Recorder::new(&mut sim, ns);
             run_core(core, &mut rec);

@@ -53,16 +53,13 @@ impl StreamPrefetcher {
         let line = line_of(addr);
         let page = page_of(addr);
         // Find an entry for this page.
-        let mut found = None;
-        for (i, e) in self.entries.iter().enumerate() {
-            if e.valid && e.page == page {
-                found = Some(i);
-                break;
-            }
-        }
+        let found = self.entries.iter().position(|e| e.valid && e.page == page);
         match found {
             Some(i) => {
-                let mut e = self.entries[i];
+                // update in place (§Perf: the tracked-stream case runs on
+                // every L2 miss — no copy-out/copy-back of the entry)
+                let stamp = self.stamp;
+                let e = &mut self.entries[i];
                 let delta = line as i64 - e.last_line as i64;
                 if delta == 0 {
                     return; // same line, nothing to learn
@@ -74,7 +71,7 @@ impl StreamPrefetcher {
                     e.confidence = 0;
                 }
                 e.last_line = line;
-                e.stamp = self.stamp;
+                e.stamp = stamp;
                 if e.confidence >= self.threshold {
                     for k in 1..=self.degree {
                         let target = line as i64 + e.dir * k as i64;
@@ -83,7 +80,6 @@ impl StreamPrefetcher {
                         }
                     }
                 }
-                self.entries[i] = e;
             }
             None => {
                 // Allocate, evicting the LRU entry.
@@ -113,6 +109,7 @@ pub struct AdjacentLinePrefetcher;
 
 impl AdjacentLinePrefetcher {
     /// Buddy line address for a missing line.
+    #[inline]
     pub fn buddy(addr: u64) -> u64 {
         let line = line_of(addr);
         let buddy_line = line ^ 1;

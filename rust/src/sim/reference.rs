@@ -1,0 +1,195 @@
+//! Seed-layout reference cache, retained verbatim for parity testing and
+//! as the performance baseline of the packed hot path.
+//!
+//! [`RefCache`] is the cache level exactly as the seed shipped it: three
+//! parallel `Vec`s (`tags`/`meta`/`lru`), 8-byte global LRU stamps, a
+//! branchy per-way scan, and a full-set `invalidate` sweep. It implements
+//! [`CacheModel`], so [`RefHierarchy`]/[`RefPipelineSim`] drive the
+//! *identical* hierarchy and timeline code over the old probe path —
+//! `tests/hotpath_parity.rs` asserts bit-identical `CacheStats`,
+//! `PrefetchStats`, and full `Metrics` against the packed
+//! [`Cache`](super::cache::Cache), and `benches/pipeline_throughput.rs`
+//! measures the layout speedup against it. Do not "fix" or optimize this
+//! module: its value is being frozen seed behavior.
+
+use super::cache::{CacheModel, CacheStats, Evicted, Hierarchy};
+use super::cpu::PipelineSim;
+use crate::trace::LINE_SIZE;
+
+// Per-line metadata bits (seed encoding).
+const VALID: u8 = 1;
+const DIRTY: u8 = 2;
+const HW_PF: u8 = 4;
+const SW_PF: u8 = 8;
+
+/// One set-associative cache level in the seed's scattered layout.
+pub struct RefCache {
+    sets: usize,
+    ways: usize,
+    tags: Vec<u64>,
+    meta: Vec<u8>,
+    lru: Vec<u64>,
+    stamp: u64,
+    /// Perfect mode: every demand access hits (Fig. 12 idealization).
+    pub perfect: bool,
+    pub stats: CacheStats,
+}
+
+impl RefCache {
+    fn set_of(&self, line: u64) -> usize {
+        (line as usize) & (self.sets - 1)
+    }
+
+    fn slot_range(&self, set: usize) -> std::ops::Range<usize> {
+        set * self.ways..(set + 1) * self.ways
+    }
+}
+
+impl CacheModel for RefCache {
+    fn new(size_bytes: u64, ways: usize) -> Self {
+        let lines = (size_bytes / LINE_SIZE) as usize;
+        assert!(lines % ways == 0, "size/ways mismatch");
+        let sets = lines / ways;
+        assert!(sets.is_power_of_two(), "sets must be a power of two");
+        Self {
+            sets,
+            ways,
+            tags: vec![0; lines],
+            meta: vec![0; lines],
+            lru: vec![0; lines],
+            stamp: 0,
+            perfect: false,
+            stats: CacheStats::default(),
+        }
+    }
+
+    fn set_perfect(&mut self, on: bool) {
+        self.perfect = on;
+    }
+
+    fn is_perfect(&self) -> bool {
+        self.perfect
+    }
+
+    fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    fn demand_probe(&mut self, line: u64, store: bool) -> (bool, bool, bool) {
+        self.stats.accesses += 1;
+        self.stamp += 1;
+        if self.perfect {
+            return (true, false, false);
+        }
+        let set = self.set_of(line);
+        for i in self.slot_range(set) {
+            if self.meta[i] & VALID != 0 && self.tags[i] == line {
+                self.lru[i] = self.stamp;
+                let was_hw = self.meta[i] & HW_PF != 0;
+                let was_sw = self.meta[i] & SW_PF != 0;
+                self.meta[i] &= !(HW_PF | SW_PF);
+                if store {
+                    self.meta[i] |= DIRTY;
+                }
+                return (true, was_hw, was_sw);
+            }
+        }
+        self.stats.misses += 1;
+        (false, false, false)
+    }
+
+    fn contains(&self, line: u64) -> bool {
+        if self.perfect {
+            return true;
+        }
+        let set = self.set_of(line);
+        self.slot_range(set)
+            .any(|i| self.meta[i] & VALID != 0 && self.tags[i] == line)
+    }
+
+    fn fill(&mut self, line: u64, store: bool, hw_pf: bool, sw_pf: bool) -> Option<Evicted> {
+        if self.perfect {
+            return None;
+        }
+        self.stamp += 1;
+        let set = self.set_of(line);
+        // single pass: existing copy + victim tracking, as in the seed
+        let mut victim = set * self.ways;
+        let mut best = u64::MAX;
+        for i in self.slot_range(set) {
+            if self.meta[i] & VALID == 0 {
+                if best != 0 {
+                    victim = i;
+                    best = 0;
+                }
+                continue;
+            }
+            if self.tags[i] == line {
+                self.lru[i] = self.stamp;
+                if store {
+                    self.meta[i] |= DIRTY;
+                }
+                return None;
+            }
+            if self.lru[i] < best {
+                best = self.lru[i];
+                victim = i;
+            }
+        }
+        let evicted = if self.meta[victim] & VALID != 0 {
+            let dirty = self.meta[victim] & DIRTY != 0;
+            if dirty {
+                self.stats.writebacks += 1;
+            }
+            Some(Evicted {
+                line: self.tags[victim],
+                dirty,
+                untouched_hw_pf: self.meta[victim] & HW_PF != 0,
+                untouched_sw_pf: self.meta[victim] & SW_PF != 0,
+            })
+        } else {
+            None
+        };
+        self.tags[victim] = line;
+        self.lru[victim] = self.stamp;
+        self.meta[victim] = VALID
+            | if store { DIRTY } else { 0 }
+            | if hw_pf { HW_PF } else { 0 }
+            | if sw_pf { SW_PF } else { 0 };
+        evicted
+    }
+
+    fn invalidate(&mut self, line: u64) {
+        // seed behavior: scan every way even after the (unique) match
+        let set = self.set_of(line);
+        for i in self.slot_range(set) {
+            if self.meta[i] & VALID != 0 && self.tags[i] == line {
+                self.meta[i] = 0;
+            }
+        }
+    }
+}
+
+/// Hierarchy over the seed cache layout.
+pub type RefHierarchy = Hierarchy<RefCache>;
+
+/// Full pipeline simulator over the seed cache layout — same timeline
+/// code as the default [`PipelineSim`], differing only in the probe path.
+pub type RefPipelineSim = PipelineSim<RefCache>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ref_cache_basic_hit_miss() {
+        let mut c = RefCache::new(1024, 2);
+        let (hit, _, _) = c.demand_probe(1, false);
+        assert!(!hit);
+        c.fill(1, false, false, false);
+        let (hit2, _, _) = c.demand_probe(1, false);
+        assert!(hit2);
+        assert_eq!(c.stats.accesses, 2);
+        assert_eq!(c.stats.misses, 1);
+    }
+}

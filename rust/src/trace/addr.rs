@@ -125,6 +125,14 @@ pub fn page_of(addr: u64) -> u64 {
     addr / PAGE_SIZE
 }
 
+/// `(first, last)` cache-line indices touched by a `size`-byte access at
+/// `addr` (zero-size accesses touch their first line, matching the
+/// simulator's `size.max(1)` convention).
+#[inline]
+pub fn line_span(addr: u64, size: u32) -> (u64, u64) {
+    (line_of(addr), line_of(addr + size.max(1) as u64 - 1))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,6 +183,18 @@ mod tests {
         assert_eq!(line_of(64), 1);
         assert_eq!(page_of(4095), 0);
         assert_eq!(page_of(4096), 1);
+    }
+
+    #[test]
+    fn line_span_covers_touched_lines() {
+        assert_eq!(line_span(0, 1), (0, 0));
+        assert_eq!(line_span(0, 64), (0, 0));
+        assert_eq!(line_span(0, 65), (0, 1));
+        assert_eq!(line_span(60, 8), (0, 1));
+        // 160-byte row from a line boundary spans 3 lines
+        assert_eq!(line_span(0x20000, 160), (0x800, 0x802));
+        // zero-size accesses still touch their first line
+        assert_eq!(line_span(130, 0), (2, 2));
     }
 
     #[test]

@@ -65,11 +65,27 @@ pub struct LoadRec {
     pub feeds_branch: bool,
 }
 
+impl LoadRec {
+    /// Touched-line span (the block consumers precompute these lane-wise).
+    #[inline]
+    pub fn line_span(&self) -> (u64, u64) {
+        super::addr::line_span(self.addr, self.size)
+    }
+}
+
 /// Store lane record (`Event::Store` payload).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct StoreRec {
     pub addr: u64,
     pub size: u32,
+}
+
+impl StoreRec {
+    /// Touched-line span (the block consumers precompute these lane-wise).
+    #[inline]
+    pub fn line_span(&self) -> (u64, u64) {
+        super::addr::line_span(self.addr, self.size)
+    }
 }
 
 /// Branch lane record (`Event::Branch` payload).

@@ -19,7 +19,7 @@ pub mod mix;
 pub mod recorder;
 pub mod store;
 
-pub use addr::{line_of, page_of, AddressSpace, Region, LINE_SIZE, PAGE_SIZE};
+pub use addr::{line_of, line_span, page_of, AddressSpace, Region, LINE_SIZE, PAGE_SIZE};
 pub use block::{
     BlockSink, BlockTee, BranchRec, EventBlock, EventKind, LaneCursors, LoadRec, PerEvent,
     StoreRec, BLOCK_EVENTS,

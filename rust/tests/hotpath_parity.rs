@@ -1,0 +1,242 @@
+//! Hot-path parity: the packed-set/MRU-filter cache ([`mlperf::sim::Cache`])
+//! must be bit-identical — in `CacheStats`, `PrefetchStats`, DRAM traffic,
+//! and full `Metrics` — to the seed-layout reference
+//! ([`mlperf::sim::RefCache`], the probe path exactly as PR 2 shipped it)
+//! across randomized traces, prefetch on/off, perfect-L2/LLC idealizations,
+//! and multi-line accesses. The reference rides the *identical* hierarchy
+//! and timeline code, so any divergence is the packed layout's fault.
+
+use mlperf::sim::{
+    run_multicore, run_multicore_with_model, BlockAccess, CpuConfig, Hierarchy, HierarchyConfig,
+    PipelineSim, RefCache, RefHierarchy, RefPipelineSim,
+};
+use mlperf::trace::{BlockSink, Event, EventBlock, Recorder, Sink};
+use mlperf::util::Pcg64;
+use mlperf::workloads::{by_name, RunContext};
+
+/// Random mixed event stream with multi-line loads/stores.
+fn random_events(rng: &mut Pcg64, n: usize) -> Vec<Event> {
+    (0..n)
+        .map(|_| match rng.below(7) {
+            0 => Event::Compute { int_ops: rng.below(6) as u32, fp_ops: rng.below(6) as u32 },
+            1 => Event::Serial { ops: 1 + rng.below(4) as u32 },
+            2 => Event::Load {
+                addr: rng.below(1 << 30),
+                size: 1 + rng.below(512) as u32,
+                feeds_branch: rng.next_f64() < 0.2,
+            },
+            3 => Event::Store { addr: rng.below(1 << 30), size: 1 + rng.below(256) as u32 },
+            4 => Event::Branch {
+                site: rng.below(64) as u32,
+                taken: rng.next_f64() < 0.5,
+                conditional: rng.next_f64() < 0.9,
+            },
+            5 => Event::LoopBranch { site: rng.below(32) as u32, count: 1 + rng.below(30) as u32 },
+            _ => Event::SwPrefetch { addr: rng.below(1 << 30) },
+        })
+        .collect()
+}
+
+/// The scenario grid of the acceptance criteria: hw-prefetch on/off ×
+/// {real, perfect-L2, perfect-LLC}.
+fn scenario_grid() -> Vec<CpuConfig> {
+    let mut out = Vec::new();
+    for hw_prefetch in [true, false] {
+        for (perfect_l2, perfect_llc) in [(false, false), (true, false), (false, true)] {
+            let mut cfg = CpuConfig::default();
+            cfg.cache.hw_prefetch = hw_prefetch;
+            cfg.cache.perfect_l2 = perfect_l2;
+            cfg.cache.perfect_llc = perfect_llc;
+            out.push(cfg);
+        }
+    }
+    out
+}
+
+/// Feed events through the block lane (Recorder-equivalent delivery).
+fn consume_blocks<S: BlockSink>(sink: &mut S, events: &[Event]) {
+    let mut block = EventBlock::with_capacity();
+    for &ev in events {
+        block.push_event(ev);
+        if block.is_full() {
+            sink.consume(&block);
+            block.clear();
+        }
+    }
+    if !block.is_empty() {
+        sink.consume(&block);
+    }
+    sink.finalize();
+}
+
+/// Randomized-trace property: packed (block lane) vs seed reference
+/// (per-event lane) produce bit-identical `Metrics` — which embeds the
+/// instruction mix, miss ratios, branch, DRAM, and `PrefetchStats` — and
+/// bit-identical per-level `CacheStats`, on every scenario of the grid.
+#[test]
+fn metrics_bit_identical_across_scenarios() {
+    for (case, cfg) in scenario_grid().into_iter().enumerate() {
+        let mut rng = Pcg64::new(0x9ACC ^ (case as u64 * 0x9E37_79B9));
+        let events = random_events(&mut rng, 30_000);
+
+        let mut packed = PipelineSim::new(cfg.clone());
+        consume_blocks(&mut packed, &events);
+
+        let mut reference = RefPipelineSim::with_cache_model(cfg.clone());
+        for &ev in &events {
+            reference.event(ev);
+        }
+        Sink::finish(&mut reference);
+
+        assert_eq!(packed.metrics(), reference.metrics(), "metrics diverged in scenario {case}");
+        assert_eq!(
+            packed.hierarchy.l1.stats, reference.hierarchy.l1.stats,
+            "L1 stats diverged in scenario {case}"
+        );
+        assert_eq!(
+            packed.hierarchy.l2.stats, reference.hierarchy.l2.stats,
+            "L2 stats diverged in scenario {case}"
+        );
+        assert_eq!(
+            packed.hierarchy.l3.stats, reference.hierarchy.l3.stats,
+            "L3 stats diverged in scenario {case}"
+        );
+        assert_eq!(packed.hierarchy.pf_stats, reference.hierarchy.pf_stats);
+    }
+}
+
+/// Step-level property: every access returns the same serving level and
+/// appends the same DRAM requests, under a small thrash-prone hierarchy
+/// (maximal eviction/back-invalidation pressure on the packed layout).
+#[test]
+fn hierarchy_levels_and_dram_traffic_identical_per_access() {
+    let cfg = HierarchyConfig {
+        l1_bytes: 1024,
+        l1_ways: 2,
+        l2_bytes: 4096,
+        l2_ways: 4,
+        l3_bytes: 16384,
+        l3_ways: 4,
+        hw_prefetch: true,
+        perfect_l2: false,
+        perfect_llc: false,
+    };
+    let mut packed = Hierarchy::new(&cfg);
+    let mut reference = RefHierarchy::with_model(&cfg);
+    let mut rng = Pcg64::new(0xCAFE);
+    let (mut dram_p, mut dram_r) = (Vec::new(), Vec::new());
+    for step in 0..50_000 {
+        let addr = rng.below(1 << 22);
+        let size = 1 + rng.below(192) as u32;
+        let store = rng.next_f64() < 0.3;
+        if rng.next_f64() < 0.05 {
+            packed.sw_prefetch(addr, &mut dram_p);
+            reference.sw_prefetch(addr, &mut dram_r);
+        }
+        let got_p = packed.access(addr, size, store, &mut dram_p);
+        let got_r = reference.access(addr, size, store, &mut dram_r);
+        assert_eq!(got_p, got_r, "level diverged at step {step}");
+        assert_eq!(dram_p, dram_r, "dram traffic diverged at step {step}");
+        dram_p.clear();
+        dram_r.clear();
+    }
+    assert_eq!(packed.l1.stats, reference.l1.stats);
+    assert_eq!(packed.l2.stats, reference.l2.stats);
+    assert_eq!(packed.l3.stats, reference.l3.stats);
+    assert_eq!(packed.pf_stats, reference.pf_stats);
+}
+
+/// Real-workload traces agree too (block lane on both sides).
+#[test]
+fn workload_metrics_bit_identical() {
+    for name in ["KMeans", "KNN"] {
+        let w = by_name(name).unwrap();
+        let ds = w.make_dataset(400, 8, 0x5EED);
+        let ctx = RunContext { iterations: 1, ..Default::default() };
+
+        let mut packed = PipelineSim::new(CpuConfig::default());
+        {
+            let mut rec = Recorder::new(&mut packed, 7);
+            w.run(&ds, &ctx, &mut rec);
+            rec.finish();
+        }
+        let mut reference = RefPipelineSim::with_cache_model(CpuConfig::default());
+        {
+            let mut rec = Recorder::new(&mut reference, 7);
+            w.run(&ds, &ctx, &mut rec);
+            rec.finish();
+        }
+        assert_eq!(packed.metrics(), reference.metrics(), "{name} diverged");
+    }
+}
+
+/// Multicore sharding/aggregation is cache-model independent.
+#[test]
+fn multicore_aggregate_bit_identical() {
+    let mut rng = Pcg64::new(0x4C0E);
+    let addrs: Vec<u64> = (0..10_000).map(|_| rng.below(1 << 26) & !7).collect();
+    let drive = |_c: usize, rec: &mut Recorder| {
+        for &a in &addrs {
+            rec.load(a, 8);
+            rec.compute(2, 1);
+        }
+    };
+    let base = CpuConfig::default();
+    let packed = run_multicore(&base, 4, 9, drive);
+    let reference = run_multicore_with_model::<RefCache, _>(&base, 4, 9, drive);
+    assert_eq!(packed, reference);
+}
+
+/// The cache-only block lane (`Hierarchy::access_block`) replays a
+/// block's memory lanes exactly like per-event access calls.
+#[test]
+fn access_block_matches_per_event_accesses() {
+    let cfg = HierarchyConfig::default();
+    let mut rng = Pcg64::new(0xB10C2);
+    let events = random_events(&mut rng, 20_000);
+
+    let mut batch = Hierarchy::new(&cfg);
+    let mut dram_b = Vec::new();
+    let mut block = EventBlock::with_capacity();
+    let mut summary = BlockAccess::default();
+    for &ev in &events {
+        block.push_event(ev);
+        if block.is_full() {
+            let s = batch.access_block(&block, &mut dram_b);
+            summary.accesses += s.accesses;
+            summary.dram_lines += s.dram_lines;
+            block.clear();
+        }
+    }
+    if !block.is_empty() {
+        let s = batch.access_block(&block, &mut dram_b);
+        summary.accesses += s.accesses;
+        summary.dram_lines += s.dram_lines;
+    }
+
+    let mut single = Hierarchy::new(&cfg);
+    let mut dram_s = Vec::new();
+    let (mut accesses, mut dram_lines) = (0u64, 0u64);
+    for &ev in &events {
+        match ev {
+            Event::Load { addr, size, .. } => {
+                accesses += 1;
+                dram_lines += single.access(addr, size, false, &mut dram_s).1 as u64;
+            }
+            Event::Store { addr, size } => {
+                accesses += 1;
+                dram_lines += single.access(addr, size, true, &mut dram_s).1 as u64;
+            }
+            Event::SwPrefetch { addr } => single.sw_prefetch(addr, &mut dram_s),
+            _ => {}
+        }
+    }
+
+    assert_eq!(summary.accesses, accesses);
+    assert_eq!(summary.dram_lines, dram_lines);
+    assert_eq!(dram_b, dram_s);
+    assert_eq!(batch.l1.stats, single.l1.stats);
+    assert_eq!(batch.l2.stats, single.l2.stats);
+    assert_eq!(batch.l3.stats, single.l3.stats);
+    assert_eq!(batch.pf_stats, single.pf_stats);
+}
