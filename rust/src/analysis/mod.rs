@@ -1,10 +1,14 @@
 //! Result aggregation and table/figure formatting.
 //!
 //! Every bench target renders its results through [`Table`] — an ASCII
-//! table for the terminal plus CSV for plotting — so the output rows can
-//! be compared one-to-one with the paper's figures.
+//! table for the terminal plus CSV and JSON artifacts, all three from
+//! the same header/row source — so the output rows can be compared
+//! one-to-one with the paper's figures and consumed by scripts without
+//! table scraping.
 
 use crate::sim::Metrics;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
 
 /// A named results table (one per paper figure/table).
 #[derive(Debug, Clone)]
@@ -76,12 +80,50 @@ impl Table {
         out
     }
 
-    /// Print to stdout and persist CSV under `results/`.
+    /// JSON rendering — the same headers/rows the ASCII and CSV forms
+    /// use, so the three artifacts can never disagree.
+    pub fn to_json(&self) -> String {
+        Json::Obj(vec![
+            ("id".to_string(), Json::Str(self.id.clone())),
+            ("title".to_string(), Json::Str(self.title.clone())),
+            (
+                "headers".to_string(),
+                Json::Arr(self.headers.iter().map(|h| Json::Str(h.clone())).collect()),
+            ),
+            (
+                "rows".to_string(),
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+        .render()
+    }
+
+    /// Persist `<dir>/<id>.csv` and `<dir>/<id>.json`.
+    pub fn save_artifacts(&self, dir: &std::path::Path) -> Result<()> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let csv = dir.join(format!("{}.csv", self.id));
+        std::fs::write(&csv, self.to_csv())
+            .with_context(|| format!("writing {}", csv.display()))?;
+        let json = dir.join(format!("{}.json", self.id));
+        std::fs::write(&json, self.to_json())
+            .with_context(|| format!("writing {}", json.display()))?;
+        Ok(())
+    }
+
+    /// Print to stdout and persist CSV + JSON under `results/`. A failed
+    /// write is reported on stderr (a full disk or read-only checkout
+    /// must not silently drop the artifact trail), but does not abort —
+    /// the table already reached stdout.
     pub fn emit(&self) {
         println!("{}", self.render());
-        let dir = std::path::Path::new("results");
-        if std::fs::create_dir_all(dir).is_ok() {
-            let _ = std::fs::write(dir.join(format!("{}.csv", self.id)), self.to_csv());
+        if let Err(e) = self.save_artifacts(std::path::Path::new("results")) {
+            eprintln!("warning: table {:?} artifacts not persisted: {e:#}", self.id);
         }
     }
 }
@@ -148,5 +190,29 @@ mod tests {
     fn topdown_cells_shape() {
         let m = Metrics::default();
         assert_eq!(topdown_cells(&m).len(), 5);
+    }
+
+    #[test]
+    fn json_mirrors_table_content() {
+        let mut t = Table::new("t4", "json demo", &["name", "v"]);
+        t.row(vec!["a\"b".into(), "1.5".into()]);
+        let v = Json::parse(&t.to_json()).unwrap();
+        assert_eq!(v.get("id").unwrap().as_str(), Some("t4"));
+        assert_eq!(v.get("headers").unwrap().as_arr().unwrap().len(), 2);
+        let rows = v.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].as_arr().unwrap()[0].as_str(), Some("a\"b"));
+    }
+
+    #[test]
+    fn save_artifacts_writes_csv_and_json_and_reports_failure() {
+        let mut t = Table::new("t5", "artifacts", &["a"]);
+        t.row(vec!["1".into()]);
+        let dir = std::env::temp_dir().join("mlperf-analysis-tests");
+        t.save_artifacts(&dir).unwrap();
+        assert!(dir.join("t5.csv").exists());
+        assert!(dir.join("t5.json").exists());
+        // a file where the directory should be must surface as an error
+        let bad = dir.join("t5.csv");
+        assert!(t.save_artifacts(&bad).is_err());
     }
 }

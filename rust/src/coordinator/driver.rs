@@ -39,8 +39,10 @@ use super::{
     capture_trace, characterize_with, multicore_characterize, reorder_study, replay_characterize,
     ExperimentConfig,
 };
+use crate::ledger::{cell_fingerprint, Fingerprint, Ledger, LedgerRecord, Provenance};
 use crate::reorder::ReorderKind;
 use crate::sim::{CpuConfig, Metrics};
+use crate::util::error::Result;
 use crate::workloads::{by_name, multicore_names, registry};
 
 /// One experiment scenario — the column dimension of the job grid.
@@ -100,6 +102,34 @@ impl Scenario {
     }
 }
 
+impl Scenario {
+    /// Inverse of `Display` (case-insensitive) — how ledger provenance
+    /// and baseline JSON cells round-trip back into runnable jobs.
+    pub fn parse(s: &str) -> Option<Scenario> {
+        let lower = s.trim().to_lowercase();
+        match lower.as_str() {
+            "baseline" => return Some(Scenario::Baseline),
+            "sw-prefetch" => return Some(Scenario::SwPrefetch),
+            "perfect-l2" => return Some(Scenario::PerfectL2),
+            "perfect-llc" => return Some(Scenario::PerfectLlc),
+            "no-hw-prefetch" => return Some(Scenario::NoHwPrefetch),
+            "ideal-rows" => return Some(Scenario::DramIdealRows),
+            _ => {}
+        }
+        if let Some(n) = lower.strip_suffix("-core") {
+            // 0 cores would divide by zero in multicore_characterize
+            return n.parse::<usize>().ok().filter(|&n| n >= 1).map(Scenario::Multicore);
+        }
+        if let Some(kind) = lower.strip_prefix("reorder:") {
+            return ReorderKind::ALL
+                .into_iter()
+                .find(|k| k.name().to_lowercase() == kind)
+                .map(Scenario::Reorder);
+        }
+        None
+    }
+}
+
 impl std::fmt::Display for Scenario {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -151,6 +181,11 @@ pub struct DriverReport {
     /// per non-replayable cell in replay mode. The replay speedup story
     /// is `outputs.len()` vs this number.
     pub workload_executions: usize,
+    /// Cells satisfied straight from the experiment ledger without any
+    /// execution or simulation ([`run_jobs_ledgered`]); 0 in the other
+    /// modes. A fully warmed ledger reports `cached_cells ==
+    /// outputs.len()` and `workload_executions == 0`.
+    pub cached_cells: usize,
 }
 
 /// The standard characterization grid for `cfg`'s profile: a baseline
@@ -278,6 +313,7 @@ pub fn run_jobs(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverR
         threads_used,
         wall_seconds: t0.elapsed().as_secs_f64(),
         workload_executions: jobs.len(),
+        cached_cells: 0,
     }
 }
 
@@ -360,6 +396,99 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
         threads_used,
         wall_seconds: t0.elapsed().as_secs_f64(),
         workload_executions: executions.into_inner(),
+        cached_cells: 0,
+    }
+}
+
+/// Run `jobs` through the experiment ledger: cells whose
+/// [`cell_fingerprint`] is already stored are answered from disk without
+/// touching a workload or simulator; only the misses run (via
+/// [`run_jobs_replayed`], so they still share captures), and their
+/// results are appended to the ledger before returning. Results come
+/// back in input order either way, and a cached cell's `Metrics` are
+/// bit-identical to the run that produced them (the store round-trips
+/// `f64`s by bit pattern) — so a warm second run renders byte-identical
+/// tables while reporting `workload_executions == 0`.
+pub fn run_jobs_ledgered(
+    cfg: &ExperimentConfig,
+    jobs: &[Job],
+    threads: usize,
+    ledger: &mut Ledger,
+) -> Result<DriverReport> {
+    let t0 = std::time::Instant::now();
+    let fps: Vec<Fingerprint> = jobs.iter().map(|j| cell_fingerprint(cfg, j)).collect();
+    let mut outputs: Vec<Option<JobOutput>> = vec![None; jobs.len()];
+    let mut miss_idx: Vec<usize> = Vec::new();
+    for (i, job) in jobs.iter().enumerate() {
+        match ledger.get(fps[i]) {
+            Some(rec) => {
+                outputs[i] = Some(JobOutput {
+                    job: job.clone(),
+                    metrics: rec.metrics.clone(),
+                    quality: rec.quality,
+                });
+            }
+            None => miss_idx.push(i),
+        }
+    }
+    let cached_cells = jobs.len() - miss_idx.len();
+
+    let mut workload_executions = 0;
+    let mut threads_used = 1;
+    if !miss_idx.is_empty() {
+        let missing: Vec<Job> = miss_idx.iter().map(|&i| jobs[i].clone()).collect();
+        let sub = run_jobs_replayed(cfg, &missing, threads);
+        workload_executions = sub.workload_executions;
+        threads_used = sub.threads_used;
+        // wall time is paid per batch, not per cell — amortize it so the
+        // provenance stays order-of-magnitude honest
+        let wall_nanos = (sub.wall_seconds * 1e9) as u64 / missing.len().max(1) as u64;
+        let unix_secs = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        for (k, out) in sub.outputs.into_iter().enumerate() {
+            let i = miss_idx[k];
+            ledger.append(LedgerRecord {
+                fingerprint: fps[i],
+                provenance: cell_provenance(cfg, &out.job, wall_nanos, unix_secs),
+                metrics: out.metrics.clone(),
+                quality: out.quality,
+            })?;
+            outputs[i] = Some(out);
+        }
+    }
+
+    Ok(DriverReport {
+        outputs: outputs.into_iter().map(|o| o.expect("every job slot filled")).collect(),
+        threads_used,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        workload_executions,
+        cached_cells,
+    })
+}
+
+/// Provenance block for a freshly executed cell.
+fn cell_provenance(
+    cfg: &ExperimentConfig,
+    job: &Job,
+    wall_nanos: u64,
+    unix_secs: u64,
+) -> Provenance {
+    let rows = by_name(&job.workload)
+        .map(|w| cfg.rows_for(w.as_ref()) as u64)
+        .unwrap_or(0);
+    Provenance {
+        workload: job.workload.clone(),
+        scenario: job.scenario.to_string(),
+        profile: format!("{:?}", cfg.profile),
+        rows,
+        features: cfg.features as u64,
+        iterations: cfg.iterations as u64,
+        seed: cfg.seed,
+        dataset_bytes: rows * cfg.features as u64 * 8,
+        wall_nanos,
+        unix_secs,
     }
 }
 
@@ -485,6 +614,30 @@ mod tests {
             ..tiny()
         };
         assert!(!full_grid(&cfg_ml).iter().any(|j| j.workload == "t-SNE"));
+    }
+
+    #[test]
+    fn scenario_display_parse_roundtrip() {
+        let all = [
+            Scenario::Baseline,
+            Scenario::SwPrefetch,
+            Scenario::PerfectL2,
+            Scenario::PerfectLlc,
+            Scenario::NoHwPrefetch,
+            Scenario::Multicore(4),
+            Scenario::Multicore(8),
+            Scenario::DramIdealRows,
+            Scenario::Reorder(ReorderKind::Hilbert),
+            Scenario::Reorder(ReorderKind::ZOrderComp),
+        ];
+        for s in all {
+            assert_eq!(Scenario::parse(&s.to_string()), Some(s), "{s}");
+        }
+        assert_eq!(Scenario::parse("PERFECT-L2"), Some(Scenario::PerfectL2));
+        assert_eq!(Scenario::parse("bogus"), None);
+        assert_eq!(Scenario::parse("x-core"), None);
+        assert_eq!(Scenario::parse("0-core"), None, "0 cores would divide by zero");
+        assert_eq!(Scenario::parse("reorder:bogus"), None);
     }
 
     #[test]

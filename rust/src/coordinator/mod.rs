@@ -10,8 +10,8 @@
 pub mod driver;
 
 pub use driver::{
-    full_grid, run_job, run_jobs, run_jobs_replayed, standard_grid, DriverReport, Job, JobOutput,
-    Scenario,
+    full_grid, run_job, run_jobs, run_jobs_ledgered, run_jobs_replayed, standard_grid,
+    DriverReport, Job, JobOutput, Scenario,
 };
 
 use crate::data::Dataset;

@@ -1,0 +1,614 @@
+//! Baseline comparison and regression gating.
+//!
+//! A grid run flattens to a [`GridResults`] — one [`GridCell`] of tracked
+//! metrics per (workload, scenario) — serialized as the canonical results
+//! JSON (`BENCH_grid_baseline.json` is exactly this format, committed).
+//! [`diff`] compares a current run against a baseline with a relative
+//! tolerance band per metric and produces a machine-readable
+//! [`DiffReport`]: per-metric deltas, missing cells, and a single
+//! pass/fail verdict `mlperf report --gate` turns into an exit code.
+//!
+//! The simulator is deterministic, so under an unchanged configuration
+//! the expected drift is exactly zero — the tolerance band exists to
+//! absorb *intentional* small perturbations (e.g. a recalibrated DRAM
+//! timing constant) without forcing a baseline refresh for every commit.
+
+use super::fingerprint::Fingerprint;
+use crate::analysis::Table;
+use crate::coordinator::{ExperimentConfig, JobOutput};
+use crate::sim::Metrics;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::{anyhow, bail};
+use std::path::Path;
+
+/// The metrics the gate tracks, by name — the paper's headline
+/// characterization numbers. Quality is tracked separately (it comes
+/// from the workload, not the simulator).
+pub const TRACKED: &[(&str, fn(&Metrics) -> f64)] = &[
+    ("cpi", |m| m.cpi),
+    ("ipc", |m| m.ipc),
+    ("retiring_pct", |m| m.retiring_pct),
+    ("bad_spec_pct", |m| m.bad_spec_pct),
+    ("dram_bound_pct", |m| m.dram_bound_pct),
+    ("core_bound_pct", |m| m.core_bound_pct),
+    ("branch_mispredict_ratio", |m| m.branch_mispredict_ratio),
+    ("l2_miss_ratio", |m| m.l2_miss_ratio),
+    ("llc_miss_ratio", |m| m.llc_miss_ratio),
+    ("dram_row_hit_ratio", |m| m.dram.row_hit_ratio()),
+];
+
+/// Default relative tolerance band (1%) — see module docs for why the
+/// expected drift is zero.
+pub const DEFAULT_TOLERANCE: f64 = 0.01;
+
+/// One grid cell's tracked results.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridCell {
+    pub workload: String,
+    pub scenario: String,
+    pub fingerprint: Option<Fingerprint>,
+    pub quality: Option<f64>,
+    /// `(metric name, value)` in [`TRACKED`] order.
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// A whole grid run, flattened for serialization and diffing. The run
+/// parameters (scale/profile/seed/iterations/features) ride along so a
+/// gate re-run can reproduce the producing configuration exactly —
+/// without them a baseline built with non-default flags would always
+/// "drift".
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridResults {
+    pub scale: f64,
+    pub profile: String,
+    pub seed: u64,
+    pub iterations: usize,
+    pub features: usize,
+    /// The one CPU-level knob the grid CLI exposes (`--no-hw-prefetch`);
+    /// without it a baseline recorded with prefetchers off could not be
+    /// reproduced by the gate.
+    pub hw_prefetch: bool,
+    pub cells: Vec<GridCell>,
+}
+
+const SCHEMA: &str = "mlperf-grid/v1";
+
+impl GridResults {
+    /// Flatten driver outputs into the canonical results form.
+    pub fn from_outputs(cfg: &ExperimentConfig, outputs: &[JobOutput]) -> GridResults {
+        let cells = outputs
+            .iter()
+            .map(|out| GridCell {
+                workload: out.job.workload.clone(),
+                scenario: out.job.scenario.to_string(),
+                fingerprint: Some(super::fingerprint::cell_fingerprint(cfg, &out.job)),
+                quality: out.quality,
+                metrics: TRACKED
+                    .iter()
+                    .map(|(name, get)| ((*name).to_string(), get(&out.metrics)))
+                    .collect(),
+            })
+            .collect();
+        GridResults {
+            scale: cfg.scale,
+            profile: format!("{:?}", cfg.profile),
+            seed: cfg.seed,
+            iterations: cfg.iterations,
+            features: cfg.features,
+            hw_prefetch: cfg.cpu.cache.hw_prefetch,
+            cells,
+        }
+    }
+
+    pub fn to_json(&self) -> String {
+        let cells: Vec<Json> = self
+            .cells
+            .iter()
+            .map(|c| {
+                let mut fields = vec![
+                    ("workload".to_string(), Json::Str(c.workload.clone())),
+                    ("scenario".to_string(), Json::Str(c.scenario.clone())),
+                ];
+                if let Some(fp) = c.fingerprint {
+                    fields.push(("fingerprint".to_string(), Json::Str(fp.to_string())));
+                }
+                fields.push((
+                    "quality".to_string(),
+                    c.quality.map(Json::num).unwrap_or(Json::Null),
+                ));
+                fields.push((
+                    "metrics".to_string(),
+                    Json::Obj(
+                        c.metrics
+                            .iter()
+                            .map(|(k, v)| (k.clone(), Json::num(*v)))
+                            .collect(),
+                    ),
+                ));
+                Json::Obj(fields)
+            })
+            .collect();
+        Json::Obj(vec![
+            ("schema".to_string(), Json::Str(SCHEMA.into())),
+            ("scale".to_string(), Json::num(self.scale)),
+            ("profile".to_string(), Json::Str(self.profile.clone())),
+            // string, not number: a full-range u64 seed would lose bits
+            // through a JSON f64
+            ("seed".to_string(), Json::Str(self.seed.to_string())),
+            ("iterations".to_string(), Json::num(self.iterations as f64)),
+            ("features".to_string(), Json::num(self.features as f64)),
+            ("hw_prefetch".to_string(), Json::Bool(self.hw_prefetch)),
+            ("cells".to_string(), Json::Arr(cells)),
+        ])
+        .render()
+    }
+
+    pub fn from_json(s: &str) -> Result<GridResults> {
+        let v = Json::parse(s).context("parsing grid results JSON")?;
+        let schema = v.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != SCHEMA {
+            bail!("unsupported results schema {schema:?} (expected {SCHEMA:?})");
+        }
+        let scale = v.get("scale").and_then(Json::as_f64).unwrap_or(0.0);
+        let profile = v
+            .get("profile")
+            .and_then(Json::as_str)
+            .unwrap_or("Sklearn")
+            .to_string();
+        // absent run parameters (pre-run-parameter files) fall back to
+        // the crate defaults; a *present but malformed* one is an error,
+        // never a silent substitution
+        let defaults = ExperimentConfig::default();
+        let seed = match v.get("seed") {
+            None | Some(Json::Null) => defaults.seed,
+            // canonical encoding is a string (a full u64 overflows f64),
+            // but accept the numeric spelling hand-written files use
+            Some(Json::Str(s)) => s
+                .parse::<u64>()
+                .map_err(|_| anyhow!("results JSON has malformed seed {s:?}"))?,
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 && *n < 9e15 => *n as u64,
+            Some(other) => bail!("results JSON has malformed seed {:?}", other),
+        };
+        let iterations = match v.get("iterations") {
+            None | Some(Json::Null) => defaults.iterations,
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => *n as usize,
+            Some(other) => bail!("results JSON has malformed iterations {:?}", other),
+        };
+        let features = match v.get("features") {
+            None | Some(Json::Null) => defaults.features,
+            Some(Json::Num(n)) if *n >= 0.0 && n.fract() == 0.0 => *n as usize,
+            Some(other) => bail!("results JSON has malformed features {:?}", other),
+        };
+        let hw_prefetch = match v.get("hw_prefetch") {
+            None | Some(Json::Null) => true,
+            Some(Json::Bool(b)) => *b,
+            Some(other) => bail!("results JSON has malformed hw_prefetch {:?}", other),
+        };
+        let mut cells = Vec::new();
+        for cell in v
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("results JSON has no \"cells\" array"))?
+        {
+            let workload = cell
+                .get("workload")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("cell missing \"workload\""))?
+                .to_string();
+            let scenario = cell
+                .get("scenario")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("cell missing \"scenario\""))?
+                .to_string();
+            let quality = cell.get("quality").and_then(Json::as_f64);
+            let mut metrics = Vec::new();
+            if let Some(Json::Obj(fields)) = cell.get("metrics") {
+                for (k, v) in fields {
+                    let val = v
+                        .as_f64()
+                        .ok_or_else(|| anyhow!("metric {k:?} is not a number"))?;
+                    metrics.push((k.clone(), val));
+                }
+            }
+            cells.push(GridCell {
+                workload,
+                scenario,
+                fingerprint: None, // informational; not needed for diffing
+                quality,
+                metrics,
+            });
+        }
+        Ok(GridResults { scale, profile, seed, iterations, features, hw_prefetch, cells })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<GridResults> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&s).with_context(|| path.display().to_string())
+    }
+}
+
+/// One compared metric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffRow {
+    pub workload: String,
+    pub scenario: String,
+    pub metric: String,
+    pub baseline: f64,
+    pub current: f64,
+    /// Signed relative delta `(current - baseline) / |baseline|`
+    /// (absolute delta when the baseline is ~0).
+    pub rel_delta: f64,
+    pub within: bool,
+}
+
+/// Full comparison outcome.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffReport {
+    pub tolerance: f64,
+    pub rows: Vec<DiffRow>,
+    /// Baseline cells absent from the current run — a vanished cell is a
+    /// regression (a workload or scenario silently dropped out).
+    pub missing: Vec<(String, String)>,
+    /// Current cells the baseline does not know (new workloads/scenarios
+    /// — informational, never a failure).
+    pub untracked: usize,
+}
+
+impl DiffReport {
+    /// The gate verdict: every tracked metric within tolerance and no
+    /// baseline cell missing.
+    pub fn pass(&self) -> bool {
+        self.missing.is_empty() && self.rows.iter().all(|r| r.within)
+    }
+
+    pub fn drifted(&self) -> usize {
+        self.rows.iter().filter(|r| !r.within).count()
+    }
+
+    /// Per-metric delta table: drifted rows always shown, in-band rows
+    /// summarized (printing hundreds of zero-delta lines buries the
+    /// signal).
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "baseline_diff",
+            &format!(
+                "baseline comparison — {} metrics over {} cells, tolerance ±{:.2}%: {}",
+                self.rows.len(),
+                self.cell_count(),
+                self.tolerance * 100.0,
+                if self.pass() { "PASS" } else { "FAIL" }
+            ),
+            &["workload", "scenario", "metric", "baseline", "current", "delta%", "ok"],
+        );
+        for r in self.rows.iter().filter(|r| !r.within) {
+            t.row(row_cells(r));
+        }
+        // worst in-band drifts give the reader scale even when passing
+        let mut within: Vec<&DiffRow> = self.rows.iter().filter(|r| r.within).collect();
+        within.sort_by(|a, b| {
+            b.rel_delta.abs().partial_cmp(&a.rel_delta.abs()).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for r in within.into_iter().take(5) {
+            t.row(row_cells(r));
+        }
+        for (w, s) in &self.missing {
+            t.row(vec![
+                w.clone(),
+                s.clone(),
+                "<cell missing>".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "FAIL".into(),
+            ]);
+        }
+        t
+    }
+
+    fn cell_count(&self) -> usize {
+        let mut cells: Vec<(&str, &str)> = self
+            .rows
+            .iter()
+            .map(|r| (r.workload.as_str(), r.scenario.as_str()))
+            .collect();
+        cells.sort();
+        cells.dedup();
+        cells.len()
+    }
+
+    /// Machine-readable verdict (written next to the tables so CI and
+    /// scripts need no table scraping).
+    pub fn verdict_json(&self) -> String {
+        Json::Obj(vec![
+            ("schema".to_string(), Json::Str("mlperf-gate-verdict/v1".into())),
+            ("pass".to_string(), Json::Bool(self.pass())),
+            ("tolerance".to_string(), Json::num(self.tolerance)),
+            ("compared".to_string(), Json::num(self.rows.len() as f64)),
+            ("drifted".to_string(), Json::num(self.drifted() as f64)),
+            ("missing".to_string(), Json::num(self.missing.len() as f64)),
+            ("untracked".to_string(), Json::num(self.untracked as f64)),
+            (
+                "failures".to_string(),
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .filter(|r| !r.within)
+                        .map(|r| {
+                            Json::Obj(vec![
+                                ("workload".to_string(), Json::Str(r.workload.clone())),
+                                ("scenario".to_string(), Json::Str(r.scenario.clone())),
+                                ("metric".to_string(), Json::Str(r.metric.clone())),
+                                ("baseline".to_string(), Json::num(r.baseline)),
+                                ("current".to_string(), Json::num(r.current)),
+                                ("rel_delta".to_string(), Json::num(r.rel_delta)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+        .render()
+    }
+}
+
+fn row_cells(r: &DiffRow) -> Vec<String> {
+    vec![
+        r.workload.clone(),
+        r.scenario.clone(),
+        r.metric.clone(),
+        format!("{:.4}", r.baseline),
+        format!("{:.4}", r.current),
+        format!("{:+.3}", r.rel_delta * 100.0),
+        if r.within { "ok" } else { "FAIL" }.into(),
+    ]
+}
+
+/// Values this close to zero are compared absolutely — a ratio that goes
+/// from 0.0 to 1e-12 is noise, not an infinite relative regression.
+const ZERO_EPS: f64 = 1e-9;
+
+/// Compare `current` against `baseline` with relative tolerance `tol`.
+/// Metrics present in only one of the two cell versions are skipped
+/// (schema evolution must not fail old baselines); quality is compared
+/// like any tracked metric when both sides carry it.
+pub fn diff(current: &GridResults, baseline: &GridResults, tol: f64) -> DiffReport {
+    let find = |w: &str, s: &str| {
+        current
+            .cells
+            .iter()
+            .find(|c| c.workload == w && c.scenario == s)
+    };
+    let mut rows = Vec::new();
+    let mut missing = Vec::new();
+    for base in &baseline.cells {
+        let Some(cur) = find(&base.workload, &base.scenario) else {
+            missing.push((base.workload.clone(), base.scenario.clone()));
+            continue;
+        };
+        for (name, bval) in &base.metrics {
+            let Some((_, cval)) = cur.metrics.iter().find(|(n, _)| n == name) else {
+                continue;
+            };
+            rows.push(make_row(base, name, *bval, *cval, tol));
+        }
+        if let (Some(bq), Some(cq)) = (base.quality, cur.quality) {
+            rows.push(make_row(base, "quality", bq, cq, tol));
+        }
+    }
+    let untracked = current
+        .cells
+        .iter()
+        .filter(|c| {
+            !baseline
+                .cells
+                .iter()
+                .any(|b| b.workload == c.workload && b.scenario == c.scenario)
+        })
+        .count();
+    DiffReport { tolerance: tol, rows, missing, untracked }
+}
+
+fn make_row(cell: &GridCell, metric: &str, baseline: f64, current: f64, tol: f64) -> DiffRow {
+    let rel_delta = if baseline.abs() < ZERO_EPS {
+        current - baseline
+    } else {
+        (current - baseline) / baseline.abs()
+    };
+    DiffRow {
+        workload: cell.workload.clone(),
+        scenario: cell.scenario.clone(),
+        metric: metric.to_string(),
+        baseline,
+        current,
+        rel_delta,
+        within: rel_delta.abs() <= tol,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_results() -> GridResults {
+        GridResults {
+            scale: 0.02,
+            profile: "Sklearn".into(),
+            // > 2^53, to prove the string encoding loses no seed bits
+            seed: 0xDEAD_BEEF_DEAD_BEEF,
+            iterations: 1,
+            features: 20,
+            hw_prefetch: false,
+            cells: vec![
+                GridCell {
+                    workload: "KMeans".into(),
+                    scenario: "baseline".into(),
+                    fingerprint: Some(Fingerprint { version: 1, hash: 0x1234 }),
+                    quality: Some(0.87),
+                    metrics: vec![("cpi".into(), 1.25), ("llc_miss_ratio".into(), 0.4)],
+                },
+                GridCell {
+                    workload: "KNN".into(),
+                    scenario: "perfect-L2".into(),
+                    fingerprint: None,
+                    quality: None,
+                    metrics: vec![("cpi".into(), 0.75)],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_cells() {
+        let r = sample_results();
+        let back = GridResults::from_json(&r.to_json()).unwrap();
+        assert_eq!(back.scale, r.scale);
+        assert_eq!(back.profile, r.profile);
+        assert_eq!(back.seed, 0xDEAD_BEEF_DEAD_BEEF, "seed must round-trip bit-exactly");
+        assert_eq!(back.iterations, r.iterations);
+        assert_eq!(back.features, r.features);
+        assert!(!back.hw_prefetch, "the --no-hw-prefetch knob must ride along");
+        assert_eq!(back.cells.len(), 2);
+        assert_eq!(back.cells[0].workload, "KMeans");
+        assert_eq!(back.cells[0].quality, Some(0.87));
+        assert_eq!(back.cells[0].metrics, r.cells[0].metrics);
+        assert_eq!(back.cells[1].quality, None);
+    }
+
+    #[test]
+    fn run_parameters_accept_legacy_and_numeric_spellings() {
+        // pre-run-parameter files (no seed/iterations/...) get defaults
+        let legacy = r#"{"schema":"mlperf-grid/v1","scale":0.02,"profile":"Sklearn","cells":[]}"#;
+        let r = GridResults::from_json(legacy).unwrap();
+        let d = ExperimentConfig::default();
+        assert_eq!(r.seed, d.seed);
+        assert_eq!(r.iterations, d.iterations);
+        assert_eq!(r.features, d.features);
+        assert!(r.hw_prefetch);
+
+        // a hand-written numeric seed is honored, not silently defaulted
+        let numeric = r#"{"schema":"mlperf-grid/v1","scale":0.02,"profile":"Sklearn","seed":123,"cells":[]}"#;
+        assert_eq!(GridResults::from_json(numeric).unwrap().seed, 123);
+
+        // malformed run parameters are errors, never substitutions
+        for bad in [
+            r#"{"schema":"mlperf-grid/v1","scale":1,"profile":"Sklearn","seed":1.5,"cells":[]}"#,
+            r#"{"schema":"mlperf-grid/v1","scale":1,"profile":"Sklearn","seed":"x","cells":[]}"#,
+            r#"{"schema":"mlperf-grid/v1","scale":1,"profile":"Sklearn","iterations":"two","cells":[]}"#,
+            r#"{"schema":"mlperf-grid/v1","scale":1,"profile":"Sklearn","hw_prefetch":1,"cells":[]}"#,
+        ] {
+            assert!(GridResults::from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn identical_results_pass() {
+        let r = sample_results();
+        let report = diff(&r, &r, 0.0);
+        assert!(report.pass());
+        assert_eq!(report.drifted(), 0);
+        assert!(report.missing.is_empty());
+        assert_eq!(report.untracked, 0);
+        // 3 metric rows + 1 quality row
+        assert_eq!(report.rows.len(), 4);
+    }
+
+    #[test]
+    fn drift_beyond_tolerance_fails() {
+        let base = sample_results();
+        let mut cur = base.clone();
+        cur.cells[0].metrics[0].1 = 1.25 * 1.05; // +5% CPI
+        let report = diff(&cur, &base, 0.01);
+        assert!(!report.pass());
+        assert_eq!(report.drifted(), 1);
+        let bad = report.rows.iter().find(|r| !r.within).unwrap();
+        assert_eq!(bad.metric, "cpi");
+        assert!((bad.rel_delta - 0.05).abs() < 1e-12);
+        // same drift inside a wider band passes
+        assert!(diff(&cur, &base, 0.10).pass());
+    }
+
+    #[test]
+    fn missing_cell_fails_untracked_does_not() {
+        let base = sample_results();
+        let mut cur = base.clone();
+        cur.cells.remove(1);
+        cur.cells.push(GridCell {
+            workload: "GMM".into(),
+            scenario: "baseline".into(),
+            fingerprint: None,
+            quality: None,
+            metrics: vec![("cpi".into(), 2.0)],
+        });
+        let report = diff(&cur, &base, 0.01);
+        assert!(!report.pass());
+        assert_eq!(report.missing, vec![("KNN".to_string(), "perfect-L2".to_string())]);
+        assert_eq!(report.untracked, 1);
+
+        // untracked alone is not a failure
+        let mut grown = base.clone();
+        grown.cells.push(cur.cells.last().unwrap().clone());
+        assert!(diff(&grown, &base, 0.01).pass());
+    }
+
+    #[test]
+    fn zero_baseline_compares_absolutely() {
+        let mut base = sample_results();
+        base.cells[0].metrics[0].1 = 0.0;
+        let mut cur = base.clone();
+        cur.cells[0].metrics[0].1 = 1e-12;
+        assert!(diff(&cur, &base, 0.01).pass(), "1e-12 above a zero baseline is noise");
+        cur.cells[0].metrics[0].1 = 0.5;
+        assert!(!diff(&cur, &base, 0.01).pass());
+    }
+
+    #[test]
+    fn verdict_json_parses_and_reports_failures() {
+        let base = sample_results();
+        let mut cur = base.clone();
+        cur.cells[0].metrics[1].1 *= 2.0;
+        let report = diff(&cur, &base, 0.01);
+        let v = Json::parse(&report.verdict_json()).unwrap();
+        assert_eq!(v.get("pass").unwrap().as_bool(), Some(false));
+        let failures = v.get("failures").unwrap().as_arr().unwrap();
+        assert_eq!(failures.len(), 1);
+        assert_eq!(
+            failures[0].get("metric").unwrap().as_str(),
+            Some("llc_miss_ratio")
+        );
+    }
+
+    #[test]
+    fn diff_table_shows_failures_and_verdict() {
+        let base = sample_results();
+        let mut cur = base.clone();
+        cur.cells[0].metrics[0].1 *= 1.5;
+        let report = diff(&cur, &base, 0.01);
+        let rendered = report.table().render();
+        assert!(rendered.contains("FAIL"));
+        assert!(rendered.contains("cpi"));
+    }
+
+    #[test]
+    fn empty_baseline_passes_trivially() {
+        let cur = sample_results();
+        let empty = GridResults {
+            scale: 0.02,
+            profile: "Sklearn".into(),
+            seed: 0xDA7A,
+            iterations: 1,
+            features: 20,
+            hw_prefetch: true,
+            cells: vec![],
+        };
+        let report = diff(&cur, &empty, 0.01);
+        assert!(report.pass());
+        assert_eq!(report.untracked, 2);
+    }
+}

@@ -1,0 +1,319 @@
+//! Content-addressing of experiment cells.
+//!
+//! A grid cell is fully determined by (workload identity, dataset
+//! parameters, library profile, scenario, post-scenario simulator
+//! configuration). This module reduces that tuple to a stable 64-bit
+//! fingerprint so the [ledger store](super::store) can answer "has this
+//! exact simulation already run?" without re-executing anything.
+//!
+//! ## Canonicalization
+//!
+//! Every configuration field is serialized as a named `(field, value)`
+//! pair; the pairs are **sorted by field name** before hashing, so the
+//! fingerprint is independent of the order fields are added (struct
+//! reordering, refactors that regroup the builder calls). Values are
+//! length-prefixed and hashed with the same FNV-1a-64 the trace
+//! container uses per block ([`fnv1a64`]), keeping the whole on-disk
+//! story on one checksum primitive.
+//!
+//! ## Invalidation rules
+//!
+//! - Changing any field *value* changes the hash (the property tests
+//!   enumerate every `CpuConfig`/`DramConfig` field).
+//! - Adding or removing a field changes the hash for every cell — new
+//!   simulator knobs invalidate old results, which is the safe default.
+//! - [`FINGERPRINT_VERSION`] is carried alongside the hash and must be
+//!   bumped when the canonicalization itself changes meaning without
+//!   changing bytes (e.g. a field is renamed but keeps its value, or a
+//!   value's encoding changes). Lookups only match on (version, hash),
+//!   so a bump invalidates the whole ledger cleanly rather than
+//!   returning stale cells.
+//! - The crate version participates in every hash, so a release that
+//!   changes simulator *behavior* (not just configuration surface) must
+//!   bump the version in Cargo.toml — that invalidates warm ledgers
+//!   built by older binaries.
+
+use crate::coordinator::{ExperimentConfig, Job};
+use crate::sim::{AddrMap, CpuConfig};
+use crate::util::binio::{fnv1a64, put_uvarint};
+
+/// Bump when the canonicalization changes incompatibly (see module docs).
+pub const FINGERPRINT_VERSION: u32 = 1;
+
+/// A versioned 64-bit content address of one experiment cell.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Fingerprint {
+    pub version: u32,
+    pub hash: u64,
+}
+
+impl std::fmt::Display for Fingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "v{}:{:016x}", self.version, self.hash)
+    }
+}
+
+/// Accumulates named fields and hashes them order-independently.
+#[derive(Debug, Default)]
+pub struct FingerprintBuilder {
+    fields: Vec<(&'static str, Vec<u8>)>,
+}
+
+impl FingerprintBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&mut self, name: &'static str, bytes: Vec<u8>) {
+        debug_assert!(
+            !self.fields.iter().any(|(n, _)| *n == name),
+            "duplicate fingerprint field {name:?}"
+        );
+        self.fields.push((name, bytes));
+    }
+
+    pub fn u64(&mut self, name: &'static str, v: u64) {
+        let mut b = Vec::with_capacity(10);
+        put_uvarint(&mut b, v);
+        self.push(name, b);
+    }
+
+    pub fn usize(&mut self, name: &'static str, v: usize) {
+        self.u64(name, v as u64);
+    }
+
+    pub fn bool(&mut self, name: &'static str, v: bool) {
+        self.push(name, vec![u8::from(v)]);
+    }
+
+    /// `f64` by exact bit pattern — two configs fingerprint equal only if
+    /// the values are bit-identical (0.1 + 0.2 != 0.3 here, by design).
+    pub fn f64(&mut self, name: &'static str, v: f64) {
+        self.push(name, v.to_bits().to_le_bytes().to_vec());
+    }
+
+    pub fn str(&mut self, name: &'static str, v: &str) {
+        self.push(name, v.as_bytes().to_vec());
+    }
+
+    /// Hash the accumulated fields: sort by name, then FNV-1a-64 over
+    /// `len(name) · name · len(value) · value` for each pair, seeded with
+    /// the version so `v1` and `v2` never collide by construction.
+    pub fn finish(mut self) -> Fingerprint {
+        self.fields.sort_by(|a, b| a.0.cmp(b.0));
+        let mut buf = Vec::with_capacity(64 + self.fields.len() * 24);
+        put_uvarint(&mut buf, u64::from(FINGERPRINT_VERSION));
+        for (name, value) in &self.fields {
+            put_uvarint(&mut buf, name.len() as u64);
+            buf.extend_from_slice(name.as_bytes());
+            put_uvarint(&mut buf, value.len() as u64);
+            buf.extend_from_slice(value);
+        }
+        Fingerprint { version: FINGERPRINT_VERSION, hash: fnv1a64(&buf) }
+    }
+}
+
+fn addr_map_name(m: AddrMap) -> &'static str {
+    match m {
+        AddrMap::RoBaRaCoCh => "RoBaRaCoCh",
+        AddrMap::ChRaBaRoCo => "ChRaBaRoCo",
+    }
+}
+
+/// Add every `CpuConfig` field (core + cache hierarchy + DRAM) to `b`.
+/// New simulator knobs **must** be added here — the `fingerprint_covers_
+/// every_config_field` property test enumerates the fields and fails on
+/// a knob whose change does not change the fingerprint.
+pub fn fingerprint_cpu(b: &mut FingerprintBuilder, cpu: &CpuConfig) {
+    b.f64("cpu.width", cpu.width);
+    b.f64("cpu.freq_ghz", cpu.freq_ghz);
+    b.f64("cpu.mispredict_penalty", cpu.mispredict_penalty);
+    b.f64("cpu.rob_uops", cpu.rob_uops);
+    b.usize("cpu.mshrs", cpu.mshrs);
+    b.f64("cpu.fp_ports", cpu.fp_ports);
+    b.f64("cpu.int_ports", cpu.int_ports);
+    b.f64("cpu.mem_ports", cpu.mem_ports);
+
+    b.u64("cache.l1_bytes", cpu.cache.l1_bytes);
+    b.usize("cache.l1_ways", cpu.cache.l1_ways);
+    b.u64("cache.l2_bytes", cpu.cache.l2_bytes);
+    b.usize("cache.l2_ways", cpu.cache.l2_ways);
+    b.u64("cache.l3_bytes", cpu.cache.l3_bytes);
+    b.usize("cache.l3_ways", cpu.cache.l3_ways);
+    b.bool("cache.hw_prefetch", cpu.cache.hw_prefetch);
+    b.bool("cache.perfect_l2", cpu.cache.perfect_l2);
+    b.bool("cache.perfect_llc", cpu.cache.perfect_llc);
+
+    b.u64("dram.channels", cpu.dram.channels);
+    b.u64("dram.ranks", cpu.dram.ranks);
+    b.u64("dram.banks", cpu.dram.banks);
+    b.u64("dram.rows_per_bank", cpu.dram.rows_per_bank);
+    b.u64("dram.row_bytes", cpu.dram.row_bytes);
+    b.str("dram.addr_map", addr_map_name(cpu.dram.addr_map));
+    b.u64("dram.cap", u64::from(cpu.dram.cap));
+    b.bool("dram.ideal_row_hits", cpu.dram.ideal_row_hits);
+    b.f64("dram.t_rcd", cpu.dram.t_rcd);
+    b.f64("dram.t_cl", cpu.dram.t_cl);
+    b.f64("dram.t_rp", cpu.dram.t_rp);
+    b.f64("dram.t_bl", cpu.dram.t_bl);
+    b.f64("dram.t_overhead", cpu.dram.t_overhead);
+}
+
+/// Fingerprint one grid cell: the workload + dataset + profile identity
+/// (which fix the recorded trace, block checksums and all), the scenario
+/// discriminator, and the **post-scenario** simulator configuration
+/// ([`Scenario::apply_cpu`](crate::coordinator::Scenario::apply_cpu) is
+/// applied before hashing, so a cell cached under `perfect-L2` can never
+/// satisfy a `baseline` lookup even if the scenario labels were
+/// mangled).
+pub fn cell_fingerprint(cfg: &ExperimentConfig, job: &Job) -> Fingerprint {
+    let mut b = FingerprintBuilder::new();
+    // Configuration alone cannot see *simulator behavior* changes, so the
+    // crate version participates too: a release that changes what the
+    // simulator computes must bump the version in Cargo.toml (or
+    // `FINGERPRINT_VERSION`), or a warm ledger would serve stale results
+    // produced by the old binary.
+    b.str("code.crate_version", env!("CARGO_PKG_VERSION"));
+    b.str("cell.workload", &job.workload);
+    b.str("cell.scenario", &job.scenario.to_string());
+    b.str("cell.profile", &format!("{:?}", cfg.profile));
+    b.f64("cell.scale", cfg.scale);
+    b.usize("cell.features", cfg.features);
+    b.usize("cell.iterations", cfg.iterations);
+    b.u64("cell.seed", cfg.seed);
+    b.bool("cell.auto_shrink", cfg.auto_shrink);
+    let mut cpu = cfg.cpu.clone();
+    job.scenario.apply_cpu(&mut cpu);
+    fingerprint_cpu(&mut b, &cpu);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Scenario;
+    use crate::reorder::ReorderKind;
+
+    fn cfg() -> ExperimentConfig {
+        ExperimentConfig { scale: 0.02, iterations: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn identical_cells_fingerprint_equal() {
+        // two independently constructed configs — nothing shared
+        let a = cell_fingerprint(&cfg(), &Job::new("KMeans", Scenario::Baseline));
+        let b = cell_fingerprint(&cfg(), &Job::new("KMeans", Scenario::Baseline));
+        assert_eq!(a, b);
+        assert_eq!(a.version, FINGERPRINT_VERSION);
+    }
+
+    #[test]
+    fn field_order_does_not_matter() {
+        let mut fwd = FingerprintBuilder::new();
+        fwd.u64("alpha", 7);
+        fwd.str("beta", "x");
+        fwd.bool("gamma", true);
+        let mut rev = FingerprintBuilder::new();
+        rev.bool("gamma", true);
+        rev.str("beta", "x");
+        rev.u64("alpha", 7);
+        assert_eq!(fwd.finish(), rev.finish());
+    }
+
+    #[test]
+    fn name_value_split_is_unambiguous() {
+        // ("ab", "c") must not collide with ("a", "bc")
+        let mut a = FingerprintBuilder::new();
+        a.str("ab", "c");
+        let mut b = FingerprintBuilder::new();
+        b.str("a", "bc");
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn scenario_and_workload_distinguish_cells() {
+        let base = cell_fingerprint(&cfg(), &Job::new("KMeans", Scenario::Baseline));
+        for job in [
+            Job::new("KNN", Scenario::Baseline),
+            Job::new("KMeans", Scenario::PerfectL2),
+            Job::new("KMeans", Scenario::PerfectLlc),
+            Job::new("KMeans", Scenario::SwPrefetch),
+            Job::new("KMeans", Scenario::Multicore(4)),
+            Job::new("KMeans", Scenario::Multicore(8)),
+            Job::new("KMeans", Scenario::Reorder(ReorderKind::Hilbert)),
+        ] {
+            assert_ne!(base, cell_fingerprint(&cfg(), &job), "{job:?}");
+        }
+    }
+
+    #[test]
+    fn experiment_config_fields_distinguish_cells() {
+        let job = Job::new("KMeans", Scenario::Baseline);
+        let base = cell_fingerprint(&cfg(), &job);
+        let muts: &[(&str, fn(&mut ExperimentConfig))] = &[
+            ("scale", |c| c.scale = 0.03),
+            ("features", |c| c.features += 1),
+            ("iterations", |c| c.iterations += 1),
+            ("seed", |c| c.seed ^= 1),
+            ("auto_shrink", |c| c.auto_shrink = !c.auto_shrink),
+            ("profile", |c| c.profile = crate::workloads::LibraryProfile::Mlpack),
+        ];
+        for (name, m) in muts {
+            let mut c = cfg();
+            m(&mut c);
+            assert_ne!(base, cell_fingerprint(&c, &job), "mutating {name} did not change fp");
+        }
+    }
+
+    #[test]
+    fn fingerprint_covers_every_config_field() {
+        let job = Job::new("KMeans", Scenario::Baseline);
+        let base = cell_fingerprint(&cfg(), &job);
+        let muts: &[(&str, fn(&mut CpuConfig))] = &[
+            ("width", |c| c.width += 1.0),
+            ("freq_ghz", |c| c.freq_ghz += 0.1),
+            ("mispredict_penalty", |c| c.mispredict_penalty += 1.0),
+            ("rob_uops", |c| c.rob_uops += 1.0),
+            ("mshrs", |c| c.mshrs += 1),
+            ("fp_ports", |c| c.fp_ports += 1.0),
+            ("int_ports", |c| c.int_ports += 1.0),
+            ("mem_ports", |c| c.mem_ports += 1.0),
+            ("l1_bytes", |c| c.cache.l1_bytes *= 2),
+            ("l1_ways", |c| c.cache.l1_ways *= 2),
+            ("l2_bytes", |c| c.cache.l2_bytes *= 2),
+            ("l2_ways", |c| c.cache.l2_ways *= 2),
+            ("l3_bytes", |c| c.cache.l3_bytes *= 2),
+            ("l3_ways", |c| c.cache.l3_ways *= 2),
+            ("hw_prefetch", |c| c.cache.hw_prefetch = !c.cache.hw_prefetch),
+            ("perfect_l2", |c| c.cache.perfect_l2 = !c.cache.perfect_l2),
+            ("perfect_llc", |c| c.cache.perfect_llc = !c.cache.perfect_llc),
+            ("channels", |c| c.dram.channels *= 2),
+            ("ranks", |c| c.dram.ranks *= 2),
+            ("banks", |c| c.dram.banks *= 2),
+            ("rows_per_bank", |c| c.dram.rows_per_bank *= 2),
+            ("row_bytes", |c| c.dram.row_bytes *= 2),
+            ("addr_map", |c| c.dram.addr_map = AddrMap::ChRaBaRoCo),
+            ("cap", |c| c.dram.cap += 1),
+            ("ideal_row_hits", |c| c.dram.ideal_row_hits = !c.dram.ideal_row_hits),
+            ("t_rcd", |c| c.dram.t_rcd += 0.01),
+            ("t_cl", |c| c.dram.t_cl += 0.01),
+            ("t_rp", |c| c.dram.t_rp += 0.01),
+            ("t_bl", |c| c.dram.t_bl += 0.01),
+            ("t_overhead", |c| c.dram.t_overhead += 0.01),
+        ];
+        let mut seen = std::collections::BTreeSet::new();
+        for (name, m) in muts {
+            let mut c = cfg();
+            m(&mut c.cpu);
+            let fp = cell_fingerprint(&c, &job);
+            assert_ne!(base, fp, "mutating {name} did not change the fingerprint");
+            assert!(seen.insert(fp.hash), "{name} collided with another single-field mutation");
+        }
+    }
+
+    #[test]
+    fn display_is_hex() {
+        let fp = Fingerprint { version: 1, hash: 0xDEAD_BEEF };
+        assert_eq!(fp.to_string(), "v1:00000000deadbeef");
+    }
+}

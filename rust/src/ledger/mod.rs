@@ -1,0 +1,28 @@
+//! Experiment ledger: simulate-once/query-many.
+//!
+//! PR 2 made one workload *execution* serve many scenario cells
+//! (record-once/replay-many); this module completes the arc by making
+//! one *simulation* serve many grid runs. Every (workload × scenario ×
+//! configuration) cell is reduced to a content address
+//! ([`fingerprint`]), its full result set is persisted in an append-only
+//! checksummed store ([`store`]), and whole runs become durable,
+//! diffable artifacts with tolerance-banded regression gating
+//! ([`diff`]).
+//!
+//! The driver consults the ledger before scheduling
+//! ([`run_jobs_ledgered`](crate::coordinator::run_jobs_ledgered)): a
+//! grid whose configuration has not changed re-executes **nothing** —
+//! the second `mlperf grid --ledger` run reports 0 executions and
+//! renders byte-identical tables from stored bits.
+
+pub mod diff;
+pub mod fingerprint;
+pub mod store;
+
+pub use diff::{diff, DiffReport, DiffRow, GridCell, GridResults, DEFAULT_TOLERANCE, TRACKED};
+pub use fingerprint::{
+    cell_fingerprint, fingerprint_cpu, Fingerprint, FingerprintBuilder, FINGERPRINT_VERSION,
+};
+pub use store::{
+    CompactionReport, Ledger, LedgerRecord, LedgerStats, Provenance, LEDGER_VERSION,
+};

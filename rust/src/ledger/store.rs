@@ -1,0 +1,784 @@
+//! Append-only on-disk experiment ledger.
+//!
+//! Maps [`Fingerprint`] → full result payload (`Metrics` + provenance),
+//! so a grid run can skip every cell whose exact configuration has
+//! already been simulated. The file format follows the trace container's
+//! discipline (`trace/store.rs`): a magic/version header, then
+//! self-delimiting checksummed records —
+//!
+//! ```text
+//! header   "MLLG" · version u32
+//! records  repeated: 0xE1 · payload_len u32 · fnv1a64(payload) u64 · payload
+//! ```
+//!
+//! Appends are atomic at record granularity: a crash mid-write leaves a
+//! torn tail that [`Ledger::open`] detects (marker, length bound, or
+//! checksum mismatch) and truncates, keeping every record before it —
+//! an append-only log needs no other repair. Duplicate fingerprints are
+//! legal (re-runs append; the in-memory index keeps the latest) and are
+//! garbage-collected by [`Ledger::compact`].
+//!
+//! All `f64` values are stored as raw IEEE-754 bits, so a metric read
+//! back from the ledger is bit-identical to the one the simulator
+//! produced — cached grid cells render byte-identical tables.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use super::fingerprint::Fingerprint;
+use crate::sim::{BranchStats, DramStats, Metrics, PrefetchStats};
+use crate::trace::InstructionMix;
+use crate::util::binio::{fnv1a64, get_uvarint, put_uvarint};
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::{anyhow, bail};
+
+const MAGIC: &[u8; 4] = b"MLLG";
+/// Bump when the record payload layout changes — an old-version file is
+/// rejected at open (results are cheap to regenerate; migration is not
+/// worth the code).
+pub const LEDGER_VERSION: u32 = 1;
+const HEADER_LEN: u64 = 8;
+const RECORD_MARKER: u8 = 0xE1;
+/// A record is one metric set + provenance strings — a few hundred
+/// bytes. Anything above this is a corrupt length field.
+const MAX_PAYLOAD: usize = 1 << 20;
+
+/// Where a result came from — everything a human (or the export
+/// artifact) needs to interpret a ledger entry without the config that
+/// produced it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Provenance {
+    pub workload: String,
+    pub scenario: String,
+    pub profile: String,
+    pub rows: u64,
+    pub features: u64,
+    pub iterations: u64,
+    pub seed: u64,
+    /// Modelled dataset footprint (rows × features × 8), bytes.
+    pub dataset_bytes: u64,
+    /// Wall time attributed to producing this cell, nanoseconds
+    /// (amortized over the batch that executed it).
+    pub wall_nanos: u64,
+    /// Unix timestamp (seconds) when the record was appended.
+    pub unix_secs: u64,
+}
+
+/// One ledger entry: fingerprint → result + provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LedgerRecord {
+    pub fingerprint: Fingerprint,
+    pub provenance: Provenance,
+    pub metrics: Metrics,
+    pub quality: Option<f64>,
+}
+
+/// Summary counters for `mlperf ledger stats`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LedgerStats {
+    pub records: usize,
+    /// Distinct fingerprints (lookups resolve to the latest record).
+    pub unique: usize,
+    /// Records shadowed by a newer append with the same fingerprint.
+    pub superseded: usize,
+    pub file_bytes: u64,
+    /// Torn-tail bytes dropped by recovery at open (0 = clean file).
+    pub recovered_tail_bytes: u64,
+}
+
+/// Outcome of [`Ledger::compact`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompactionReport {
+    pub records_before: usize,
+    pub records_after: usize,
+    pub bytes_before: u64,
+    pub bytes_after: u64,
+}
+
+// ---------------------------------------------------------------------
+// payload encoding
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+fn get_f64(buf: &[u8], pos: &mut usize) -> Result<f64> {
+    let Some(chunk) = buf.get(*pos..*pos + 8) else {
+        bail!("truncated f64 at byte {}", *pos);
+    };
+    *pos += 8;
+    Ok(f64::from_bits(u64::from_le_bytes(chunk.try_into().unwrap())))
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_uvarint(buf, s.len() as u64);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(buf: &[u8], pos: &mut usize) -> Result<String> {
+    let len = get_uvarint(buf, pos)? as usize;
+    if len > MAX_PAYLOAD {
+        bail!("ledger string length {len} is corrupt");
+    }
+    let Some(chunk) = buf.get(*pos..*pos + len) else {
+        bail!("truncated string at byte {}", *pos);
+    };
+    *pos += len;
+    String::from_utf8(chunk.to_vec()).map_err(|_| anyhow!("ledger string is not utf-8"))
+}
+
+fn encode_metrics(buf: &mut Vec<u8>, m: &Metrics) {
+    put_uvarint(buf, m.instructions);
+    for v in [
+        m.cycles,
+        m.cpi,
+        m.ipc,
+        m.retiring_pct,
+        m.bad_spec_pct,
+        m.core_bound_pct,
+        m.mem_bound_pct,
+        m.dram_bound_pct,
+        m.l2_bound_pct,
+        m.l3_bound_pct,
+        m.branch_mispredict_ratio,
+        m.branch_fraction,
+        m.cond_branch_fraction,
+        m.l1_miss_ratio,
+        m.l2_miss_ratio,
+        m.llc_miss_ratio,
+    ] {
+        put_f64(buf, v);
+    }
+    for v in m.port_dist {
+        put_f64(buf, v);
+    }
+    for v in [
+        m.mix.int_ops,
+        m.mix.fp_ops,
+        m.mix.loads,
+        m.mix.stores,
+        m.mix.branches,
+        m.mix.cond_branches,
+        m.mix.sw_prefetches,
+        m.mix.bytes_loaded,
+        m.mix.bytes_stored,
+    ] {
+        put_uvarint(buf, v);
+    }
+    for v in [m.branch.conditional, m.branch.unconditional, m.branch.mispredicts] {
+        put_uvarint(buf, v);
+    }
+    for v in [
+        m.dram.requests,
+        m.dram.reads,
+        m.dram.writes,
+        m.dram.prefetch_reads,
+        m.dram.row_hits,
+        m.dram.row_misses,
+        m.dram.row_conflicts,
+        m.dram.demand_row_hits,
+        m.dram.demand_requests,
+    ] {
+        put_uvarint(buf, v);
+    }
+    for v in [
+        m.dram.total_latency_ns,
+        m.dram.demand_latency_ns,
+        m.dram.bus_busy_ns,
+        m.dram.last_completion_ns,
+        m.dram.first_arrival_ns,
+    ] {
+        put_f64(buf, v);
+    }
+    for v in [
+        m.prefetch.hw_issued,
+        m.prefetch.hw_useful,
+        m.prefetch.hw_useless,
+        m.prefetch.sw_issued,
+        m.prefetch.sw_useful,
+        m.prefetch.sw_useless,
+    ] {
+        put_uvarint(buf, v);
+    }
+    put_f64(buf, m.sim_time_ns);
+}
+
+fn decode_metrics(buf: &[u8], pos: &mut usize) -> Result<Metrics> {
+    // struct-literal fields evaluate in written order, which is exactly
+    // the encode order above
+    Ok(Metrics {
+        instructions: get_uvarint(buf, pos)?,
+        cycles: get_f64(buf, pos)?,
+        cpi: get_f64(buf, pos)?,
+        ipc: get_f64(buf, pos)?,
+        retiring_pct: get_f64(buf, pos)?,
+        bad_spec_pct: get_f64(buf, pos)?,
+        core_bound_pct: get_f64(buf, pos)?,
+        mem_bound_pct: get_f64(buf, pos)?,
+        dram_bound_pct: get_f64(buf, pos)?,
+        l2_bound_pct: get_f64(buf, pos)?,
+        l3_bound_pct: get_f64(buf, pos)?,
+        branch_mispredict_ratio: get_f64(buf, pos)?,
+        branch_fraction: get_f64(buf, pos)?,
+        cond_branch_fraction: get_f64(buf, pos)?,
+        l1_miss_ratio: get_f64(buf, pos)?,
+        l2_miss_ratio: get_f64(buf, pos)?,
+        llc_miss_ratio: get_f64(buf, pos)?,
+        port_dist: [
+            get_f64(buf, pos)?,
+            get_f64(buf, pos)?,
+            get_f64(buf, pos)?,
+            get_f64(buf, pos)?,
+        ],
+        mix: InstructionMix {
+            int_ops: get_uvarint(buf, pos)?,
+            fp_ops: get_uvarint(buf, pos)?,
+            loads: get_uvarint(buf, pos)?,
+            stores: get_uvarint(buf, pos)?,
+            branches: get_uvarint(buf, pos)?,
+            cond_branches: get_uvarint(buf, pos)?,
+            sw_prefetches: get_uvarint(buf, pos)?,
+            bytes_loaded: get_uvarint(buf, pos)?,
+            bytes_stored: get_uvarint(buf, pos)?,
+        },
+        branch: BranchStats {
+            conditional: get_uvarint(buf, pos)?,
+            unconditional: get_uvarint(buf, pos)?,
+            mispredicts: get_uvarint(buf, pos)?,
+        },
+        dram: DramStats {
+            requests: get_uvarint(buf, pos)?,
+            reads: get_uvarint(buf, pos)?,
+            writes: get_uvarint(buf, pos)?,
+            prefetch_reads: get_uvarint(buf, pos)?,
+            row_hits: get_uvarint(buf, pos)?,
+            row_misses: get_uvarint(buf, pos)?,
+            row_conflicts: get_uvarint(buf, pos)?,
+            demand_row_hits: get_uvarint(buf, pos)?,
+            demand_requests: get_uvarint(buf, pos)?,
+            total_latency_ns: get_f64(buf, pos)?,
+            demand_latency_ns: get_f64(buf, pos)?,
+            bus_busy_ns: get_f64(buf, pos)?,
+            last_completion_ns: get_f64(buf, pos)?,
+            first_arrival_ns: get_f64(buf, pos)?,
+        },
+        prefetch: PrefetchStats {
+            hw_issued: get_uvarint(buf, pos)?,
+            hw_useful: get_uvarint(buf, pos)?,
+            hw_useless: get_uvarint(buf, pos)?,
+            sw_issued: get_uvarint(buf, pos)?,
+            sw_useful: get_uvarint(buf, pos)?,
+            sw_useless: get_uvarint(buf, pos)?,
+        },
+        sim_time_ns: get_f64(buf, pos)?,
+    })
+}
+
+/// Encode a record payload (everything after the checksum).
+fn encode_record(rec: &LedgerRecord, buf: &mut Vec<u8>) {
+    put_uvarint(buf, u64::from(rec.fingerprint.version));
+    buf.extend_from_slice(&rec.fingerprint.hash.to_le_bytes());
+    let p = &rec.provenance;
+    put_str(buf, &p.workload);
+    put_str(buf, &p.scenario);
+    put_str(buf, &p.profile);
+    for v in [
+        p.rows,
+        p.features,
+        p.iterations,
+        p.seed,
+        p.dataset_bytes,
+        p.wall_nanos,
+        p.unix_secs,
+    ] {
+        put_uvarint(buf, v);
+    }
+    match rec.quality {
+        Some(q) => {
+            buf.push(1);
+            put_f64(buf, q);
+        }
+        None => buf.push(0),
+    }
+    encode_metrics(buf, &rec.metrics);
+}
+
+fn decode_record(buf: &[u8]) -> Result<LedgerRecord> {
+    let mut pos = 0usize;
+    let version = get_uvarint(buf, &mut pos)? as u32;
+    let Some(chunk) = buf.get(pos..pos + 8) else {
+        bail!("truncated fingerprint hash");
+    };
+    let hash = u64::from_le_bytes(chunk.try_into().unwrap());
+    pos += 8;
+    let workload = get_str(buf, &mut pos)?;
+    let scenario = get_str(buf, &mut pos)?;
+    let profile = get_str(buf, &mut pos)?;
+    let provenance = Provenance {
+        workload,
+        scenario,
+        profile,
+        rows: get_uvarint(buf, &mut pos)?,
+        features: get_uvarint(buf, &mut pos)?,
+        iterations: get_uvarint(buf, &mut pos)?,
+        seed: get_uvarint(buf, &mut pos)?,
+        dataset_bytes: get_uvarint(buf, &mut pos)?,
+        wall_nanos: get_uvarint(buf, &mut pos)?,
+        unix_secs: get_uvarint(buf, &mut pos)?,
+    };
+    let quality = match buf.get(pos) {
+        Some(&0) => {
+            pos += 1;
+            None
+        }
+        Some(&1) => {
+            pos += 1;
+            Some(get_f64(buf, &mut pos)?)
+        }
+        _ => bail!("invalid quality marker at byte {pos}"),
+    };
+    let metrics = decode_metrics(buf, &mut pos)?;
+    if pos != buf.len() {
+        bail!("record has {} trailing bytes", buf.len() - pos);
+    }
+    Ok(LedgerRecord {
+        fingerprint: Fingerprint { version, hash },
+        provenance,
+        metrics,
+        quality,
+    })
+}
+
+/// Write one framed record (marker · length · checksum · payload) —
+/// the single definition of the frame layout shared by `append` and
+/// `compact`. Returns the framed byte count.
+fn write_frame<W: Write>(w: &mut W, rec: &LedgerRecord) -> Result<u64> {
+    let mut payload = Vec::with_capacity(512);
+    encode_record(rec, &mut payload);
+    w.write_all(&[RECORD_MARKER])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&fnv1a64(&payload).to_le_bytes())?;
+    w.write_all(&payload)?;
+    Ok(13 + payload.len() as u64)
+}
+
+// ---------------------------------------------------------------------
+// the store
+
+/// The on-disk ledger with its in-memory index. Open once, look up and
+/// append freely; every append is flushed to disk before returning.
+pub struct Ledger {
+    path: PathBuf,
+    file: File,
+    records: Vec<LedgerRecord>,
+    /// fingerprint → index into `records` of the **latest** record.
+    index: BTreeMap<Fingerprint, usize>,
+    file_bytes: u64,
+    recovered_tail_bytes: u64,
+}
+
+impl Ledger {
+    /// Open (creating if absent) the ledger at `path`. A corrupt or torn
+    /// tail is truncated away — every record before the first bad byte
+    /// survives; a wrong magic/version is a hard error (not silently
+    /// clobbered: the file is not ours to rewrite).
+    pub fn open(path: &Path) -> Result<Ledger> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("opening ledger {}", path.display()))?;
+        let len = file.metadata()?.len();
+        if len == 0 {
+            file.write_all(MAGIC)?;
+            file.write_all(&LEDGER_VERSION.to_le_bytes())?;
+            return Ok(Ledger {
+                path: path.to_path_buf(),
+                file,
+                records: Vec::new(),
+                index: BTreeMap::new(),
+                file_bytes: HEADER_LEN,
+                recovered_tail_bytes: 0,
+            });
+        }
+
+        let mut bytes = Vec::with_capacity(len as usize);
+        file.read_to_end(&mut bytes)?;
+        if bytes.len() < HEADER_LEN as usize || &bytes[0..4] != MAGIC {
+            bail!("{} is not a ledger file (bad magic)", path.display());
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != LEDGER_VERSION {
+            bail!(
+                "{}: ledger version {version} unsupported (this build reads v{LEDGER_VERSION}); \
+                 delete the file to regenerate",
+                path.display()
+            );
+        }
+
+        let mut records = Vec::new();
+        let mut good_end = HEADER_LEN as usize;
+        let mut pos = good_end;
+        // Stop at the first malformed record: in an append-only log
+        // everything after a torn write is unreachable garbage.
+        while pos < bytes.len() {
+            match Self::parse_record_at(&bytes, pos) {
+                Some((rec, next)) => {
+                    records.push(rec);
+                    good_end = next;
+                    pos = next;
+                }
+                None => break,
+            }
+        }
+
+        let recovered = (bytes.len() - good_end) as u64;
+        if recovered > 0 {
+            file.set_len(good_end as u64)?;
+        }
+        file.seek(SeekFrom::Start(good_end as u64))?;
+
+        let mut index = BTreeMap::new();
+        for (i, rec) in records.iter().enumerate() {
+            index.insert(rec.fingerprint, i); // later records shadow earlier
+        }
+        Ok(Ledger {
+            path: path.to_path_buf(),
+            file,
+            records,
+            index,
+            file_bytes: good_end as u64,
+            recovered_tail_bytes: recovered,
+        })
+    }
+
+    /// Parse one record starting at `pos`; `None` on any corruption
+    /// (bad marker, absurd length, truncation, checksum, decode error).
+    fn parse_record_at(bytes: &[u8], pos: usize) -> Option<(LedgerRecord, usize)> {
+        let header = bytes.get(pos..pos + 13)?;
+        if header[0] != RECORD_MARKER {
+            return None;
+        }
+        let payload_len = u32::from_le_bytes(header[1..5].try_into().unwrap()) as usize;
+        if payload_len > MAX_PAYLOAD {
+            return None;
+        }
+        let checksum = u64::from_le_bytes(header[5..13].try_into().unwrap());
+        let payload = bytes.get(pos + 13..pos + 13 + payload_len)?;
+        if fnv1a64(payload) != checksum {
+            return None;
+        }
+        let rec = decode_record(payload).ok()?;
+        Some((rec, pos + 13 + payload_len))
+    }
+
+    /// Latest record for `fp`, if any.
+    pub fn get(&self, fp: Fingerprint) -> Option<&LedgerRecord> {
+        self.index.get(&fp).map(|&i| &self.records[i])
+    }
+
+    /// Append a record and flush it to disk.
+    pub fn append(&mut self, rec: LedgerRecord) -> Result<()> {
+        let written = write_frame(&mut self.file, &rec)
+            .with_context(|| format!("appending to ledger {}", self.path.display()))?;
+        self.file.flush()?;
+        self.file_bytes += written;
+        self.index.insert(rec.fingerprint, self.records.len());
+        self.records.push(rec);
+        Ok(())
+    }
+
+    /// All records in append order (superseded duplicates included).
+    pub fn records(&self) -> &[LedgerRecord] {
+        &self.records
+    }
+
+    pub fn stats(&self) -> LedgerStats {
+        LedgerStats {
+            records: self.records.len(),
+            unique: self.index.len(),
+            superseded: self.records.len() - self.index.len(),
+            file_bytes: self.file_bytes,
+            recovered_tail_bytes: self.recovered_tail_bytes,
+        }
+    }
+
+    /// Rewrite the file keeping only the latest record per fingerprint
+    /// (append order preserved among survivors). Writes to a sibling
+    /// temp file and renames over, so a crash mid-compaction leaves the
+    /// original intact.
+    pub fn compact(&mut self) -> Result<CompactionReport> {
+        let before = self.stats();
+        let keep: std::collections::BTreeSet<usize> = self.index.values().copied().collect();
+        let survivors: Vec<LedgerRecord> = self
+            .records
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| keep.contains(i))
+            .map(|(_, r)| r.clone())
+            .collect();
+
+        let tmp = self.path.with_extension("mllg.tmp");
+        {
+            let mut f = File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(MAGIC)?;
+            f.write_all(&LEDGER_VERSION.to_le_bytes())?;
+            for rec in &survivors {
+                write_frame(&mut f, rec)?;
+            }
+            f.flush()?;
+        }
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+
+        // reopen the handle on the new file, positioned for appends
+        self.file = OpenOptions::new().read(true).write(true).open(&self.path)?;
+        self.file_bytes = self.file.seek(SeekFrom::End(0))?;
+        self.records = survivors;
+        self.index = self
+            .records
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (r.fingerprint, i))
+            .collect();
+        Ok(CompactionReport {
+            records_before: before.records,
+            records_after: self.records.len(),
+            bytes_before: before.file_bytes,
+            bytes_after: self.file_bytes,
+        })
+    }
+
+    /// Machine-readable export of every live (non-superseded) record:
+    /// the artifact CI uploads so a perf trajectory can be reconstructed
+    /// without the binary file format.
+    pub fn export_json(&self) -> String {
+        let mut cells = Vec::new();
+        for &i in self.index.values() {
+            let r = &self.records[i];
+            let p = &r.provenance;
+            let mut metrics: Vec<(String, Json)> = vec![
+                ("instructions".into(), Json::num(r.metrics.instructions as f64)),
+                ("cycles".into(), Json::num(r.metrics.cycles)),
+            ];
+            for (name, get) in super::diff::TRACKED {
+                metrics.push(((*name).into(), Json::num(get(&r.metrics))));
+            }
+            cells.push(Json::Obj(vec![
+                ("fingerprint".into(), Json::Str(r.fingerprint.to_string())),
+                ("workload".into(), Json::Str(p.workload.clone())),
+                ("scenario".into(), Json::Str(p.scenario.clone())),
+                ("profile".into(), Json::Str(p.profile.clone())),
+                ("rows".into(), Json::num(p.rows as f64)),
+                ("features".into(), Json::num(p.features as f64)),
+                ("iterations".into(), Json::num(p.iterations as f64)),
+                // string, like the grid results JSON: a full-range u64
+                // seed would lose bits through a JSON f64
+                ("seed".into(), Json::Str(p.seed.to_string())),
+                ("dataset_bytes".into(), Json::num(p.dataset_bytes as f64)),
+                ("wall_nanos".into(), Json::num(p.wall_nanos as f64)),
+                ("unix_secs".into(), Json::num(p.unix_secs as f64)),
+                (
+                    "quality".into(),
+                    r.quality.map(Json::num).unwrap_or(Json::Null),
+                ),
+                ("metrics".into(), Json::Obj(metrics)),
+            ]));
+        }
+        Json::Obj(vec![
+            ("schema".into(), Json::Str("mlperf-ledger-export/v1".into())),
+            ("records".into(), Json::num(self.records.len() as f64)),
+            ("unique".into(), Json::num(self.index.len() as f64)),
+            ("cells".into(), Json::Arr(cells)),
+        ])
+        .render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("mlperf-ledger-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn sample(tag: u64) -> LedgerRecord {
+        let m = Metrics {
+            instructions: 1000 + tag,
+            cycles: 1234.5 + tag as f64,
+            cpi: 1.0 + tag as f64 * 0.25,
+            port_dist: [0.1, 0.2, 0.3, 0.4],
+            mix: InstructionMix { loads: 77 + tag, ..Default::default() },
+            dram: DramStats {
+                requests: 9 * tag,
+                total_latency_ns: 0.125 * tag as f64,
+                ..Default::default()
+            },
+            prefetch: PrefetchStats { hw_issued: tag, ..Default::default() },
+            sim_time_ns: 5e6 + tag as f64,
+            ..Default::default()
+        };
+        LedgerRecord {
+            fingerprint: Fingerprint { version: 1, hash: 0xABCD_0000 + tag },
+            provenance: Provenance {
+                workload: format!("W{tag}"),
+                scenario: "baseline".into(),
+                profile: "Sklearn".into(),
+                rows: 600,
+                features: 20,
+                iterations: 1,
+                seed: 0xDA7A,
+                dataset_bytes: 600 * 20 * 8,
+                wall_nanos: 42,
+                unix_secs: 1_700_000_000,
+            },
+            metrics: m,
+            quality: if tag % 2 == 0 { Some(0.5 + tag as f64) } else { None },
+        }
+    }
+
+    #[test]
+    fn record_payload_roundtrips_bit_exact() {
+        for tag in [0u64, 1, 7] {
+            let rec = sample(tag);
+            let mut buf = Vec::new();
+            encode_record(&rec, &mut buf);
+            let back = decode_record(&buf).unwrap();
+            assert_eq!(back, rec);
+        }
+    }
+
+    #[test]
+    fn open_append_reopen() {
+        let path = tmpfile("roundtrip.mllg");
+        {
+            let mut l = Ledger::open(&path).unwrap();
+            assert_eq!(l.stats().records, 0);
+            l.append(sample(1)).unwrap();
+            l.append(sample(2)).unwrap();
+        }
+        let l = Ledger::open(&path).unwrap();
+        assert_eq!(l.stats().records, 2);
+        assert_eq!(l.stats().recovered_tail_bytes, 0);
+        let rec = l.get(Fingerprint { version: 1, hash: 0xABCD_0001 }).unwrap();
+        assert_eq!(rec.provenance.workload, "W1");
+        assert_eq!(rec.metrics, sample(1).metrics);
+        assert!(l.get(Fingerprint { version: 2, hash: 0xABCD_0001 }).is_none());
+    }
+
+    #[test]
+    fn duplicate_fingerprint_latest_wins_and_compacts() {
+        let path = tmpfile("dups.mllg");
+        let mut l = Ledger::open(&path).unwrap();
+        let mut a = sample(3);
+        l.append(a.clone()).unwrap();
+        a.metrics.instructions = 999_999;
+        l.append(a.clone()).unwrap();
+        assert_eq!(l.stats().records, 2);
+        assert_eq!(l.stats().unique, 1);
+        assert_eq!(l.get(a.fingerprint).unwrap().metrics.instructions, 999_999);
+
+        let report = l.compact().unwrap();
+        assert_eq!(report.records_before, 2);
+        assert_eq!(report.records_after, 1);
+        assert!(report.bytes_after < report.bytes_before);
+        assert_eq!(l.get(a.fingerprint).unwrap().metrics.instructions, 999_999);
+
+        // appends still work after compaction, and survive a reopen
+        l.append(sample(4)).unwrap();
+        drop(l);
+        let l = Ledger::open(&path).unwrap();
+        assert_eq!(l.stats().records, 2);
+        assert_eq!(l.get(a.fingerprint).unwrap().metrics.instructions, 999_999);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_appendable() {
+        let path = tmpfile("torn.mllg");
+        {
+            let mut l = Ledger::open(&path).unwrap();
+            l.append(sample(1)).unwrap();
+            l.append(sample(2)).unwrap();
+        }
+        // simulate a crash mid-append: chop 5 bytes off the last record
+        let len = std::fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len - 5).unwrap();
+        drop(f);
+
+        let mut l = Ledger::open(&path).unwrap();
+        assert_eq!(l.stats().records, 1, "record before the tear survives");
+        assert!(l.stats().recovered_tail_bytes > 0);
+        l.append(sample(5)).unwrap();
+        drop(l);
+        let l = Ledger::open(&path).unwrap();
+        assert_eq!(l.stats().records, 2);
+        assert_eq!(l.stats().recovered_tail_bytes, 0, "file is clean after recovery");
+    }
+
+    #[test]
+    fn corrupted_checksum_drops_tail_only() {
+        let path = tmpfile("bitrot.mllg");
+        {
+            let mut l = Ledger::open(&path).unwrap();
+            l.append(sample(1)).unwrap();
+            l.append(sample(2)).unwrap();
+            l.append(sample(3)).unwrap();
+        }
+        // flip one payload byte inside the second record
+        let mut bytes = std::fs::read(&path).unwrap();
+        let second_start = {
+            // first record starts at 8; walk one frame
+            let len1 = u32::from_le_bytes(bytes[9..13].try_into().unwrap()) as usize;
+            8 + 13 + len1
+        };
+        bytes[second_start + 20] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let l = Ledger::open(&path).unwrap();
+        // record 1 intact; records 2 and 3 dropped (append-only recovery
+        // cannot trust anything after the first bad frame)
+        assert_eq!(l.stats().records, 1);
+        assert_eq!(l.get(sample(1).fingerprint).unwrap().provenance.workload, "W1");
+        assert!(l.stats().recovered_tail_bytes > 0);
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_hard_errors() {
+        let path = tmpfile("notaledger.mllg");
+        std::fs::write(&path, b"NOPE....garbage").unwrap();
+        let err = Ledger::open(&path).unwrap_err().to_string();
+        assert!(err.contains("bad magic"), "{err}");
+
+        let path2 = tmpfile("futurever.mllg");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path2, &bytes).unwrap();
+        let err = Ledger::open(&path2).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+    }
+
+    #[test]
+    fn export_json_is_parseable() {
+        let path = tmpfile("export.mllg");
+        let mut l = Ledger::open(&path).unwrap();
+        l.append(sample(1)).unwrap();
+        l.append(sample(2)).unwrap();
+        let parsed = Json::parse(&l.export_json()).unwrap();
+        assert_eq!(parsed.get("unique").unwrap().as_f64().unwrap(), 2.0);
+        let cells = parsed.get("cells").unwrap().as_arr().unwrap();
+        assert_eq!(cells.len(), 2);
+        assert!(cells[0].get("metrics").unwrap().get("cpi").is_some());
+    }
+}

@@ -17,7 +17,11 @@
 //! - [`coordinator`] — the experiment registry mapping every figure and
 //!   table of the paper to a runnable experiment, plus the parallel
 //!   (workload × scenario) driver (`coordinator::driver`) with its
-//!   record-once/replay-many grid mode.
+//!   record-once/replay-many and ledger-gated grid modes.
+//! - [`ledger`] — the experiment ledger: content-addressed, append-only
+//!   result store (fingerprint → full metric set + provenance) that makes
+//!   grids incremental and runs diffable/gateable against committed
+//!   baselines.
 //! - [`trace`] — the batched columnar event pipeline ([`trace::block`])
 //!   connecting instrumented workloads to the simulators, and the
 //!   on-disk columnar trace store ([`trace::store`]) that makes one
@@ -33,6 +37,7 @@
 pub mod analysis;
 pub mod coordinator;
 pub mod data;
+pub mod ledger;
 pub mod runtime;
 pub mod reorder;
 pub mod workloads;

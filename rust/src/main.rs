@@ -12,10 +12,13 @@
 //! mlperf replay      --trace kmeans.mlt [--perfect-l2|--perfect-llc|--no-hw-prefetch|--ideal-rows]
 //! mlperf runtime     [--artifacts artifacts/]
 //! mlperf report      [--scale 0.2]     # every figure/table, slow
-//! mlperf grid        [--threads 0] [--direct]
+//! mlperf report      --baseline BENCH_grid_baseline.json --gate
+//! mlperf grid        [--threads 0] [--direct] [--ledger grid.mllg] [--json out.json]
+//! mlperf ledger      stats|gc|export --ledger grid.mllg [--out export.json]
 //! ```
 
 use mlperf::analysis::{pct, r2, r3, Table};
+use mlperf::ledger::{diff, GridResults, Ledger, DEFAULT_TOLERANCE};
 use mlperf::sim::Metrics;
 use mlperf::util::error::Result;
 use mlperf::{anyhow, bail};
@@ -90,6 +93,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("runtime") => cmd_runtime(args),
         Some("report") => cmd_report(args),
         Some("grid") => cmd_grid(args),
+        Some("ledger") => cmd_ledger(args),
         Some(other) => bail!("unknown subcommand {other:?}"),
         None => {
             println!("{}", HELP);
@@ -99,11 +103,16 @@ fn dispatch(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "mlperf — Performance Characterization of Traditional ML (repro)
-subcommands: list, characterize, prefetch, reorder, multicore, gen-data, record, replay, runtime, report, grid
+subcommands: list, characterize, prefetch, reorder, multicore, gen-data, record, replay, runtime, report, grid, ledger
 common flags: --workload <name> --scale <f> --iterations <n> --profile sklearn|mlpack --seed <n>
 record flags: --out <file.mlt> --sw-prefetch       (execute once, persist the columnar trace)
 replay flags: --trace <file.mlt> [--perfect-l2 --perfect-llc --no-hw-prefetch --ideal-rows]
-grid flags:   --threads <n> (0 = one per core) --full (all scenario columns) --direct (re-execute per cell)";
+grid flags:   --threads <n> (0 = one per core) --full (all scenario columns) --direct (re-execute per cell)
+              --ledger <file.mllg> (skip cells already simulated) --json <out.json> (results artifact)
+              --assert-cached (fail if anything executed) --baseline <base.json> --gate --tolerance <f>
+report flags: --baseline <base.json> (re-run its cells and diff) --gate (non-zero exit on drift)
+              --tolerance <f> (relative band, default 0.01) --ledger <file.mllg>
+ledger usage: mlperf ledger stats|gc|export --ledger <file.mllg> [--out <file.json>]";
 
 fn cmd_list() -> Result<()> {
     let mut t = Table::new("workloads", "Table I — workloads and categories", &[
@@ -118,7 +127,88 @@ fn cmd_list() -> Result<()> {
         ]);
     }
     println!("{}", t.render());
+
+    let mut t = Table::new(
+        "reorder_methods",
+        "Table VIII — reordering methods (`mlperf reorder --method <cli name>`)",
+        &["cli name", "paper label", "kind", "phase", "applicable to"],
+    );
+    let workloads = registry();
+    for k in ReorderKind::ALL {
+        let applicable = workloads.iter().filter(|w| k.applicable_to(w.as_ref())).count();
+        t.row(vec![
+            cli_method_name(k).into(),
+            k.name().into(),
+            if k.is_data_layout() { "data layout" } else { "computation" }.into(),
+            if k.is_offline() { "offline" } else { "runtime" }.into(),
+            format!("{applicable}/{} workloads", workloads.len()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut t = Table::new(
+        "profiles",
+        "library profiles (`--profile <name>`)",
+        &["profile", "models", "workloads", "missing"],
+    );
+    for (flag, profile) in [("sklearn", LibraryProfile::Sklearn), ("mlpack", LibraryProfile::Mlpack)]
+    {
+        let supported = supported_names(profile);
+        let missing: Vec<&str> = registry()
+            .iter()
+            .filter(|w| !profile.implements(w.as_ref()))
+            .map(|w| w.name())
+            .collect();
+        t.row(vec![
+            flag.into(),
+            format!("{profile:?}-like library behaviour"),
+            format!("{}", supported.len()),
+            if missing.is_empty() { "-".into() } else { missing.join(", ") },
+        ]);
+    }
+    println!("{}", t.render());
+
+    let mut t = Table::new(
+        "grid_scenarios",
+        "grid scenario columns (replayable cells share one recording per workload)",
+        &["scenario", "grid", "replayable", "models"],
+    );
+    let rows: [(Scenario, &str, &str); 8] = [
+        (Scenario::Baseline, "standard+full", "Figs. 1-10 baseline characterization"),
+        (Scenario::SwPrefetch, "full", "Figs. 14-18 software prefetching"),
+        (Scenario::PerfectL2, "full", "Fig. 12 perfect (always-hit) L2"),
+        (Scenario::PerfectLlc, "full", "Fig. 12 perfect (always-hit) LLC"),
+        (Scenario::NoHwPrefetch, "full", "Fig. 13 hardware prefetchers off"),
+        (Scenario::DramIdealRows, "full", "Table VII ideal row-buffer DRAM"),
+        (Scenario::Multicore(4), "standard+full", "Tables III/IV sharded cores"),
+        (
+            Scenario::Reorder(ReorderKind::ZOrder),
+            "via `mlperf reorder`",
+            "Figs. 20-24 reordering optimizations",
+        ),
+    ];
+    for (s, grids, what) in rows {
+        t.row(vec![
+            s.to_string(),
+            grids.into(),
+            if s.trace_variant().is_some() { "yes" } else { "no (direct)" }.into(),
+            what.into(),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(())
+}
+
+/// The `--method` spelling [`parse_kind`] accepts for each kind.
+fn cli_method_name(k: ReorderKind) -> &'static str {
+    match k {
+        ReorderKind::FirstTouch => "first-touch",
+        ReorderKind::Rcb => "rcb",
+        ReorderKind::Hilbert => "hilbert",
+        ReorderKind::ZOrder => "zorder",
+        ReorderKind::LocalityBlocking => "blocking",
+        ReorderKind::ZOrderComp => "zorder-comp",
+    }
 }
 
 /// The full single-run metric rows shared by `characterize`, `record`,
@@ -308,14 +398,21 @@ fn cmd_reorder(args: &Args) -> Result<()> {
 }
 
 pub fn parse_kind(s: &str) -> Result<ReorderKind> {
-    Ok(match s.to_lowercase().replace(['-', '_'], "").as_str() {
-        "firsttouch" | "ft" => ReorderKind::FirstTouch,
-        "rcb" => ReorderKind::Rcb,
-        "hilbert" => ReorderKind::Hilbert,
-        "zorder" | "morton" => ReorderKind::ZOrder,
-        "blocking" | "localityblocking" => ReorderKind::LocalityBlocking,
-        "zordercomp" | "zorderc" => ReorderKind::ZOrderComp,
-        other => bail!("unknown reorder method {other:?}"),
+    let norm = s.to_lowercase().replace(['-', '_'], "");
+    // the names `mlperf list` advertises are accepted by construction —
+    // the two can never drift apart
+    if let Some(k) = ReorderKind::ALL
+        .into_iter()
+        .find(|&k| cli_method_name(k).replace('-', "") == norm)
+    {
+        return Ok(k);
+    }
+    Ok(match norm.as_str() {
+        "ft" => ReorderKind::FirstTouch,
+        "morton" => ReorderKind::ZOrder,
+        "localityblocking" => ReorderKind::LocalityBlocking,
+        "zorderc" => ReorderKind::ZOrderComp,
+        other => bail!("unknown reorder method {other:?} (see `mlperf list`)"),
     })
 }
 
@@ -369,24 +466,39 @@ fn cmd_grid(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let threads: usize = args.get_parsed_or("threads", 0usize);
     let direct = args.has("direct");
+    let ledger_path = args.get("ledger");
     let jobs = if args.has("full") { full_grid(&cfg) } else { standard_grid(&cfg) };
     println!(
         "running {} jobs at scale {} in {} mode …",
         jobs.len(),
         cfg.scale,
-        if direct { "direct" } else { "record-once/replay-many" }
+        match (ledger_path, direct) {
+            (Some(_), _) => "ledgered (simulate-once/query-many)",
+            (None, true) => "direct",
+            (None, false) => "record-once/replay-many",
+        }
     );
-    let report = if direct {
-        run_jobs(&cfg, &jobs, threads)
-    } else {
-        run_jobs_replayed(&cfg, &jobs, threads)
+    let report = match ledger_path {
+        Some(lp) => {
+            if direct {
+                eprintln!(
+                    "warning: --direct is ignored with --ledger (misses run in replay mode); \
+                     drop --ledger to force per-cell re-execution"
+                );
+            }
+            let mut ledger = Ledger::open(std::path::Path::new(lp))?;
+            run_jobs_ledgered(&cfg, &jobs, threads, &mut ledger)?
+        }
+        None if direct => run_jobs(&cfg, &jobs, threads),
+        None => run_jobs_replayed(&cfg, &jobs, threads),
     };
     let mut t = Table::new(
         "grid",
         &format!(
-            "parallel experiment grid ({} jobs, {} workload executions, {} threads, {:.1}s wall)",
+            "parallel experiment grid ({} jobs, {} workload executions, {} cached, {} threads, {:.1}s wall)",
             report.outputs.len(),
             report.workload_executions,
+            report.cached_cells,
             report.threads_used,
             report.wall_seconds
         ),
@@ -406,11 +518,137 @@ fn cmd_grid(args: &Args) -> Result<()> {
         ]);
     }
     t.emit();
+
+    let current = GridResults::from_outputs(&cfg, &report.outputs);
+    if let Some(jp) = args.get("json") {
+        current.save(std::path::Path::new(jp))?;
+        println!("wrote grid results JSON to {jp}");
+    }
+    if args.has("assert-cached") && report.workload_executions > 0 {
+        bail!(
+            "--assert-cached: {} workload execution(s) occurred ({} of {} cells cached) — \
+             the ledger did not fully cover this grid",
+            report.workload_executions,
+            report.cached_cells,
+            report.outputs.len()
+        );
+    }
+    if let Some(bp) = args.get("baseline") {
+        gate_against_baseline(&current, bp, tolerance_from(args), args.has("gate"))?;
+    }
+    Ok(())
+}
+
+fn tolerance_from(args: &Args) -> f64 {
+    args.get_parsed_or("tolerance", DEFAULT_TOLERANCE)
+}
+
+/// Diff `current` against the baseline file, emit the delta table and
+/// the machine-readable verdict, and (when `gate`) fail on drift.
+fn gate_against_baseline(
+    current: &GridResults,
+    baseline_path: &str,
+    tolerance: f64,
+    gate: bool,
+) -> Result<()> {
+    let baseline = GridResults::load(std::path::Path::new(baseline_path))?;
+    if baseline.cells.is_empty() {
+        println!(
+            "baseline {baseline_path} has no cells (bootstrap placeholder) — nothing to diff; \
+             regenerate it with `mlperf grid --json {baseline_path}`"
+        );
+        return Ok(());
+    }
+    let report = diff(current, &baseline, tolerance);
+    report.table().emit();
+    let verdict_path = std::path::Path::new("results").join("gate_verdict.json");
+    match std::fs::create_dir_all("results")
+        .and_then(|()| std::fs::write(&verdict_path, report.verdict_json()))
+    {
+        Ok(()) => println!("wrote gate verdict to {}", verdict_path.display()),
+        Err(e) => eprintln!(
+            "warning: gate verdict not persisted to {}: {e}",
+            verdict_path.display()
+        ),
+    }
+    if report.pass() {
+        println!(
+            "gate vs {baseline_path}: PASS ({} metrics compared, tolerance ±{:.2}%)",
+            report.rows.len(),
+            tolerance * 100.0
+        );
+        Ok(())
+    } else if gate {
+        bail!(
+            "regression gate vs {baseline_path} FAILED: {} metric(s) drifted beyond ±{:.2}% \
+             and {} baseline cell(s) are missing",
+            report.drifted(),
+            tolerance * 100.0,
+            report.missing.len()
+        )
+    } else {
+        println!(
+            "gate vs {baseline_path}: FAIL (advisory — pass --gate to turn this into a non-zero exit)"
+        );
+        Ok(())
+    }
+}
+
+fn cmd_ledger(args: &Args) -> Result<()> {
+    let action = args.positional.first().map(String::as_str).unwrap_or("stats");
+    let path = args
+        .get("ledger")
+        .ok_or_else(|| anyhow!("--ledger <file.mllg> required (see `mlperf grid --ledger`)"))?;
+    let mut ledger = Ledger::open(std::path::Path::new(path))?;
+    match action {
+        "stats" => {
+            let s = ledger.stats();
+            let mut t = Table::new(
+                "ledger_stats",
+                &format!("experiment ledger {path}"),
+                &["metric", "value"],
+            );
+            t.row(vec!["records".into(), format!("{}", s.records)]);
+            t.row(vec!["unique cells".into(), format!("{}", s.unique)]);
+            t.row(vec!["superseded".into(), format!("{}", s.superseded)]);
+            t.row(vec!["file bytes".into(), format!("{}", s.file_bytes)]);
+            t.row(vec![
+                "recovered tail bytes".into(),
+                format!("{}", s.recovered_tail_bytes),
+            ]);
+            println!("{}", t.render());
+        }
+        "gc" => {
+            let r = ledger.compact()?;
+            println!(
+                "compacted {path}: {} -> {} records, {} -> {} bytes",
+                r.records_before, r.records_after, r.bytes_before, r.bytes_after
+            );
+        }
+        "export" => {
+            let json = ledger.export_json();
+            match args.get("out") {
+                Some(out) => {
+                    std::fs::write(out, &json)
+                        .map_err(|e| anyhow!("writing {out}: {e}"))?;
+                    println!(
+                        "exported {} cells to {out}",
+                        ledger.stats().unique
+                    );
+                }
+                None => println!("{json}"),
+            }
+        }
+        other => bail!("unknown ledger action {other:?} (stats|gc|export)"),
+    }
     Ok(())
 }
 
 fn cmd_report(args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
+    let mut cfg = config_from(args)?;
+    if let Some(bp) = args.get("baseline") {
+        return cmd_report_baseline(args, &mut cfg, bp);
+    }
     println!("running the full figure/table suite at scale {} …", cfg.scale);
     let mut t = Table::new(
         "fig01_10",
@@ -436,4 +674,73 @@ fn cmd_report(args: &Args) -> Result<()> {
     }
     t.emit();
     Ok(())
+}
+
+/// `mlperf report --baseline <file.json> [--gate]`: re-run exactly the
+/// cells the baseline tracks (at the baseline's recorded scale/profile
+/// unless overridden) and diff the tracked metrics against it.
+fn cmd_report_baseline(args: &Args, cfg: &mut ExperimentConfig, baseline_path: &str) -> Result<()> {
+    let baseline = GridResults::load(std::path::Path::new(baseline_path))?;
+    if baseline.cells.is_empty() {
+        println!(
+            "baseline {baseline_path} has no cells (bootstrap placeholder) — nothing to gate; \
+             regenerate it with `mlperf grid --json {baseline_path}`"
+        );
+        return Ok(());
+    }
+    // default to the baseline's recorded run parameters so the diff
+    // compares like with like; explicit flags still win
+    if args.get("scale").is_none() && baseline.scale > 0.0 {
+        cfg.scale = baseline.scale;
+    }
+    if args.get("seed").is_none() {
+        cfg.seed = baseline.seed;
+    }
+    if args.get("iterations").is_none() && baseline.iterations > 0 {
+        cfg.iterations = baseline.iterations;
+    }
+    if args.get("features").is_none() && baseline.features > 0 {
+        cfg.features = baseline.features;
+    }
+    if !args.has("no-hw-prefetch") {
+        cfg.cpu.cache.hw_prefetch = baseline.hw_prefetch;
+    }
+    if args.get("profile").is_none() {
+        match baseline.profile.as_str() {
+            "Sklearn" => cfg.profile = LibraryProfile::Sklearn,
+            "Mlpack" => cfg.profile = LibraryProfile::Mlpack,
+            other => bail!("baseline {baseline_path} names unknown profile {other:?}"),
+        }
+    }
+    let jobs = baseline
+        .cells
+        .iter()
+        .map(|c| {
+            Scenario::parse(&c.scenario)
+                .map(|s| Job::new(c.workload.clone(), s))
+                .ok_or_else(|| {
+                    anyhow!("baseline cell {}/{:?}: unknown scenario", c.workload, c.scenario)
+                })
+        })
+        .collect::<Result<Vec<Job>>>()?;
+    println!(
+        "re-running the {} baseline cells at scale {} ({:?}) …",
+        jobs.len(),
+        cfg.scale,
+        cfg.profile
+    );
+    let threads: usize = args.get_parsed_or("threads", 0usize);
+    let report = match args.get("ledger") {
+        Some(lp) => {
+            let mut ledger = Ledger::open(std::path::Path::new(lp))?;
+            run_jobs_ledgered(cfg, &jobs, threads, &mut ledger)?
+        }
+        None => run_jobs_replayed(cfg, &jobs, threads),
+    };
+    println!(
+        "{} executed, {} cached, {:.1}s wall",
+        report.workload_executions, report.cached_cells, report.wall_seconds
+    );
+    let current = GridResults::from_outputs(cfg, &report.outputs);
+    gate_against_baseline(&current, baseline_path, tolerance_from(args), args.has("gate"))
 }

@@ -1,0 +1,403 @@
+//! Minimal JSON tree: emitter + recursive-descent parser.
+//!
+//! The offline build has no `serde`, so the crate's JSON boundaries — the
+//! [`analysis::Table`](crate::analysis::Table) JSON emitter, the
+//! experiment-ledger export, and the `BENCH_grid_baseline.json` gate file
+//! — share this ~200-line substitute. Numbers are `f64` and are emitted
+//! with Rust's shortest-roundtrip formatting, so a value written by
+//! [`Json::render`] and read back by [`Json::parse`] is bit-identical;
+//! that exactness is what lets the regression gate distinguish "same
+//! simulation" from "drift" without fuzzy thresholds.
+
+use crate::bail;
+use crate::util::error::Result;
+
+/// One JSON value. Objects keep insertion order (a `Vec`, not a map), so
+/// rendering is deterministic and diff-friendly.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Number constructor that maps non-finite values (which JSON cannot
+    /// represent) to `null` instead of emitting invalid output.
+    pub fn num(v: f64) -> Json {
+        if v.is_finite() {
+            Json::Num(v)
+        } else {
+            Json::Null
+        }
+    }
+
+    /// Object field lookup (first match).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Compact rendering (no whitespace outside strings).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.render_into(&mut out);
+        out
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                // shortest roundtrip; integers print without ".0"
+                out.push_str(&format!("{v}"));
+            }
+            Json::Str(s) => render_string(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(fields) => {
+                out.push('{');
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    render_string(k, out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Parse a complete JSON document; trailing non-whitespace is an error.
+    pub fn parse(s: &str) -> Result<Json> {
+        let b = s.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(b, &mut pos)?;
+        skip_ws(b, &mut pos);
+        if pos != b.len() {
+            bail!("trailing bytes after JSON value at offset {pos}");
+        }
+        Ok(v)
+    }
+}
+
+fn render_string(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while let Some(&c) = b.get(*pos) {
+        if c == b' ' || c == b'\t' || c == b'\n' || c == b'\r' {
+            *pos += 1;
+        } else {
+            break;
+        }
+    }
+}
+
+fn expect(b: &[u8], pos: &mut usize, lit: &str) -> Result<()> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Ok(())
+    } else {
+        bail!("expected {lit:?} at offset {}", *pos)
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        None => bail!("unexpected end of JSON input"),
+        Some(&b'n') => {
+            expect(b, pos, "null")?;
+            Ok(Json::Null)
+        }
+        Some(&b't') => {
+            expect(b, pos, "true")?;
+            Ok(Json::Bool(true))
+        }
+        Some(&b'f') => {
+            expect(b, pos, "false")?;
+            Ok(Json::Bool(false))
+        }
+        Some(&b'"') => Ok(Json::Str(parse_string(b, pos)?)),
+        Some(&b'[') => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => bail!("expected ',' or ']' at offset {}", *pos),
+                }
+            }
+        }
+        Some(&b'{') => {
+            *pos += 1;
+            let mut fields = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Ok(Json::Obj(fields));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                expect(b, pos, ":")?;
+                let val = parse_value(b, pos)?;
+                fields.push((key, val));
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(&b',') => *pos += 1,
+                    Some(&b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(fields));
+                    }
+                    _ => bail!("expected ',' or '}}' at offset {}", *pos),
+                }
+            }
+        }
+        Some(_) => parse_number(b, pos),
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Result<String> {
+    if b.get(*pos) != Some(&b'"') {
+        bail!("expected string at offset {}", *pos);
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        let Some(&c) = b.get(*pos) else {
+            bail!("unterminated JSON string");
+        };
+        *pos += 1;
+        match c {
+            b'"' => return Ok(out),
+            b'\\' => {
+                let Some(&esc) = b.get(*pos) else {
+                    bail!("unterminated escape in JSON string");
+                };
+                *pos += 1;
+                match esc {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b't' => out.push('\t'),
+                    b'r' => out.push('\r'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let hi = parse_hex4(b, pos)?;
+                        // combine a surrogate pair when present
+                        let cp = if (0xD800..0xDC00).contains(&hi)
+                            && b[*pos..].starts_with(b"\\u")
+                        {
+                            *pos += 2;
+                            let lo = parse_hex4(b, pos)?;
+                            0x10000 + ((hi - 0xD800) << 10) + (lo.wrapping_sub(0xDC00) & 0x3FF)
+                        } else {
+                            hi
+                        };
+                        out.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                    }
+                    other => bail!("invalid escape \\{} in JSON string", other as char),
+                }
+            }
+            c if c < 0x80 => out.push(c as char),
+            _ => {
+                // multi-byte UTF-8: re-decode from the original slice
+                let start = *pos - 1;
+                let len = utf8_len(c);
+                let end = start + len;
+                let Some(chunk) = b.get(start..end) else {
+                    bail!("truncated UTF-8 in JSON string");
+                };
+                let s = std::str::from_utf8(chunk)
+                    .map_err(|_| crate::anyhow!("invalid UTF-8 in JSON string"))?;
+                out.push_str(s);
+                *pos = end;
+            }
+        }
+    }
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+fn parse_hex4(b: &[u8], pos: &mut usize) -> Result<u32> {
+    let Some(chunk) = b.get(*pos..*pos + 4) else {
+        bail!("truncated \\u escape");
+    };
+    let s = std::str::from_utf8(chunk).map_err(|_| crate::anyhow!("bad \\u escape"))?;
+    let v = u32::from_str_radix(s, 16).map_err(|_| crate::anyhow!("bad \\u escape {s:?}"))?;
+    *pos += 4;
+    Ok(v)
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while let Some(&c) = b.get(*pos) {
+        if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+            *pos += 1;
+        } else {
+            break;
+        }
+    }
+    if *pos == start {
+        bail!("expected JSON value at offset {start}");
+    }
+    let s = std::str::from_utf8(&b[start..*pos]).unwrap();
+    let v: f64 = s
+        .parse()
+        .map_err(|_| crate::anyhow!("invalid JSON number {s:?} at offset {start}"))?;
+    Ok(Json::Num(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_structures() {
+        let v = Json::Obj(vec![
+            ("name".into(), Json::Str("KMeans".into())),
+            ("cpi".into(), Json::Num(1.2345678901234567)),
+            ("n".into(), Json::Num(42.0)),
+            ("ok".into(), Json::Bool(true)),
+            ("none".into(), Json::Null),
+            (
+                "rows".into(),
+                Json::Arr(vec![Json::Num(1.0), Json::Str("a,b\"c".into())]),
+            ),
+        ]);
+        let s = v.render();
+        assert_eq!(Json::parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn floats_roundtrip_exactly() {
+        for v in [0.1, 1.0 / 3.0, 1e-300, 6.02214076e23, -0.0, 123456789.125] {
+            let s = Json::Num(v).render();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} rendered as {s}");
+        }
+    }
+
+    #[test]
+    fn integers_render_without_fraction() {
+        assert_eq!(Json::Num(42.0).render(), "42");
+        assert_eq!(Json::Num(-7.0).render(), "-7");
+    }
+
+    #[test]
+    fn non_finite_becomes_null() {
+        assert_eq!(Json::num(f64::NAN), Json::Null);
+        assert_eq!(Json::num(f64::INFINITY), Json::Null);
+        assert_eq!(Json::num(1.5), Json::Num(1.5));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let v = Json::Str("a\"b\\c\nd\te\u{1}".into());
+        let s = v.render();
+        assert_eq!(Json::parse(&s).unwrap(), v);
+        assert!(s.contains("\\u0001"));
+    }
+
+    #[test]
+    fn unicode_and_surrogates() {
+        let v = Json::parse(r#""é😀é""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "é😀é");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("\"abc").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("").is_err());
+    }
+
+    #[test]
+    fn whitespace_tolerant() {
+        let v = Json::parse(" { \"a\" : [ 1 , 2 ] , \"b\" : null } ").unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("b"), Some(&Json::Null));
+    }
+}

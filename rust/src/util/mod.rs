@@ -5,11 +5,13 @@
 pub mod binio;
 pub mod cli;
 pub mod error;
+pub mod json;
 pub mod matrix;
 pub mod rng;
 pub mod stats;
 
 pub use cli::Args;
 pub use error::{Context, Error, Result};
+pub use json::Json;
 pub use matrix::{solve_spd, Matrix};
 pub use rng::Pcg64;

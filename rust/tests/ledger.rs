@@ -1,0 +1,254 @@
+//! Experiment-ledger integration tests: simulate-once/query-many.
+//!
+//! The contract under test is the acceptance bar of the ledger
+//! subsystem: running the same grid twice against one ledger executes
+//! every cell exactly once (the second run is answered entirely from
+//! disk, bit-identically), fingerprints are stable for identical
+//! configurations and change for *any* config perturbation, and a
+//! corrupted ledger tail loses only the records after the first bad
+//! byte.
+
+use mlperf::coordinator::{
+    full_grid, run_jobs_ledgered, run_jobs_replayed, ExperimentConfig, Job, Scenario,
+};
+use mlperf::ledger::{cell_fingerprint, diff, GridResults, Ledger};
+use mlperf::workloads::LibraryProfile;
+
+fn tiny() -> ExperimentConfig {
+    ExperimentConfig { scale: 0.02, iterations: 1, ..Default::default() }
+}
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("mlperf-ledger-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(name);
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+fn scenario_jobs() -> Vec<Job> {
+    vec![
+        Job::new("KMeans", Scenario::Baseline),
+        Job::new("KMeans", Scenario::PerfectL2),
+        Job::new("KMeans", Scenario::PerfectLlc),
+        Job::new("KMeans", Scenario::NoHwPrefetch),
+        Job::new("KNN", Scenario::SwPrefetch),
+        Job::new("GMM", Scenario::Multicore(2)),
+    ]
+}
+
+#[test]
+fn second_ledgered_run_executes_nothing_and_is_bit_identical() {
+    let cfg = tiny();
+    let jobs = scenario_jobs();
+    let path = tmpfile("twice.mllg");
+
+    let first = {
+        let mut ledger = Ledger::open(&path).unwrap();
+        run_jobs_ledgered(&cfg, &jobs, 2, &mut ledger).unwrap()
+    };
+    assert_eq!(first.cached_cells, 0, "cold ledger has nothing to offer");
+    assert!(first.workload_executions > 0);
+    assert_eq!(first.outputs.len(), jobs.len());
+
+    // reopen from disk: the cache must survive the process boundary the
+    // ledger file represents
+    let second = {
+        let mut ledger = Ledger::open(&path).unwrap();
+        run_jobs_ledgered(&cfg, &jobs, 2, &mut ledger).unwrap()
+    };
+    assert_eq!(second.workload_executions, 0, "warm ledger must execute nothing");
+    assert_eq!(second.cached_cells, jobs.len());
+    for (a, b) in first.outputs.iter().zip(&second.outputs) {
+        assert_eq!(a.job, b.job);
+        assert_eq!(a.metrics, b.metrics, "cached metrics diverged for {:?}", a.job);
+        assert_eq!(a.quality, b.quality);
+    }
+}
+
+#[test]
+fn ledgered_outputs_match_replayed_mode() {
+    let cfg = tiny();
+    let jobs = scenario_jobs();
+    let path = tmpfile("parity.mllg");
+    let mut ledger = Ledger::open(&path).unwrap();
+    let ledgered = run_jobs_ledgered(&cfg, &jobs, 2, &mut ledger).unwrap();
+    let replayed = run_jobs_replayed(&cfg, &jobs, 2);
+    for (a, b) in ledgered.outputs.iter().zip(&replayed.outputs) {
+        assert_eq!(a.job, b.job);
+        assert_eq!(a.metrics, b.metrics, "ledgered diverged for {:?}", a.job);
+        assert_eq!(a.quality, b.quality);
+    }
+}
+
+#[test]
+fn partial_warm_ledger_executes_only_the_new_cells() {
+    let cfg = tiny();
+    let path = tmpfile("incremental.mllg");
+    let warm = vec![
+        Job::new("KMeans", Scenario::Baseline),
+        Job::new("KMeans", Scenario::PerfectL2),
+    ];
+    {
+        let mut ledger = Ledger::open(&path).unwrap();
+        run_jobs_ledgered(&cfg, &warm, 2, &mut ledger).unwrap();
+    }
+    let grown = vec![
+        Job::new("KMeans", Scenario::Baseline),
+        Job::new("KMeans", Scenario::PerfectL2),
+        Job::new("KMeans", Scenario::PerfectLlc),
+    ];
+    let mut ledger = Ledger::open(&path).unwrap();
+    let report = run_jobs_ledgered(&cfg, &grown, 2, &mut ledger).unwrap();
+    assert_eq!(report.cached_cells, 2);
+    assert_eq!(report.workload_executions, 1, "only the new scenario cell runs");
+}
+
+#[test]
+fn any_config_change_invalidates_the_cache() {
+    let base = tiny();
+    let jobs = vec![Job::new("KMeans", Scenario::Baseline)];
+    let path = tmpfile("invalidate.mllg");
+    {
+        let mut ledger = Ledger::open(&path).unwrap();
+        run_jobs_ledgered(&base, &jobs, 1, &mut ledger).unwrap();
+    }
+    let variants: Vec<(&str, ExperimentConfig)> = vec![
+        ("seed", ExperimentConfig { seed: 1, ..tiny() }),
+        ("scale", ExperimentConfig { scale: 0.03, ..tiny() }),
+        ("iterations", ExperimentConfig { iterations: 2, ..tiny() }),
+        ("profile", ExperimentConfig { profile: LibraryProfile::Mlpack, ..tiny() }),
+        (
+            "mshrs",
+            {
+                let mut c = tiny();
+                c.cpu.mshrs += 2;
+                c
+            },
+        ),
+        (
+            "l3_bytes",
+            {
+                let mut c = tiny();
+                c.cpu.cache.l3_bytes /= 2;
+                c
+            },
+        ),
+        (
+            "dram timing",
+            {
+                let mut c = tiny();
+                c.cpu.dram.t_cl += 1.0;
+                c
+            },
+        ),
+    ];
+    for (name, cfg) in variants {
+        let mut ledger = Ledger::open(&path).unwrap();
+        let report = run_jobs_ledgered(&cfg, &jobs, 1, &mut ledger).unwrap();
+        assert_eq!(
+            report.cached_cells, 0,
+            "changing {name} must miss the cache (fingerprint collision)"
+        );
+        assert_eq!(report.workload_executions, 1, "{name}");
+    }
+    // and the original config still hits
+    let mut ledger = Ledger::open(&path).unwrap();
+    let report = run_jobs_ledgered(&base, &jobs, 1, &mut ledger).unwrap();
+    assert_eq!(report.cached_cells, 1);
+}
+
+#[test]
+fn fingerprints_are_stable_across_ledger_reopen() {
+    // The fingerprint stored in the file must equal one recomputed by a
+    // fresh in-process canonicalization — the on-disk index survives
+    // struct re-instantiation (the single-process stand-in for "across
+    // process runs"; determinism has no hidden state to vary).
+    let cfg = tiny();
+    let job = Job::new("Ridge", Scenario::Baseline);
+    let path = tmpfile("stable.mllg");
+    {
+        let mut ledger = Ledger::open(&path).unwrap();
+        run_jobs_ledgered(&cfg, &[job.clone()], 1, &mut ledger).unwrap();
+    }
+    let ledger = Ledger::open(&path).unwrap();
+    let fp = cell_fingerprint(&tiny(), &Job::new("Ridge", Scenario::Baseline));
+    let rec = ledger.get(fp).expect("recomputed fingerprint must hit the stored record");
+    assert_eq!(rec.provenance.workload, "Ridge");
+    assert_eq!(rec.provenance.scenario, "baseline");
+    assert!(rec.provenance.rows > 0);
+    assert!(rec.metrics.instructions > 0);
+}
+
+#[test]
+fn corrupted_tail_recovers_and_only_reexecutes_lost_cells() {
+    let cfg = tiny();
+    let jobs = vec![
+        Job::new("KMeans", Scenario::Baseline),
+        Job::new("KMeans", Scenario::PerfectL2),
+        Job::new("KMeans", Scenario::PerfectLlc),
+    ];
+    let path = tmpfile("recover.mllg");
+    {
+        let mut ledger = Ledger::open(&path).unwrap();
+        run_jobs_ledgered(&cfg, &jobs, 1, &mut ledger).unwrap();
+        assert_eq!(ledger.stats().records, 3);
+    }
+    // tear the last record like a crashed append
+    let len = std::fs::metadata(&path).unwrap().len();
+    let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+    f.set_len(len - 7).unwrap();
+    drop(f);
+
+    let mut ledger = Ledger::open(&path).unwrap();
+    assert_eq!(ledger.stats().records, 2, "two intact records survive the tear");
+    assert!(ledger.stats().recovered_tail_bytes > 0);
+    let report = run_jobs_ledgered(&cfg, &jobs, 1, &mut ledger).unwrap();
+    assert_eq!(report.cached_cells, 2);
+    assert_eq!(report.workload_executions, 1, "only the torn cell re-runs");
+    drop(ledger);
+    let ledger = Ledger::open(&path).unwrap();
+    assert_eq!(ledger.stats().records, 3, "the re-run was appended durably");
+    assert_eq!(ledger.stats().recovered_tail_bytes, 0);
+}
+
+#[test]
+fn grid_results_roundtrip_and_self_diff_is_exact() {
+    let cfg = tiny();
+    let jobs = scenario_jobs();
+    let report = run_jobs_replayed(&cfg, &jobs, 2);
+    let current = GridResults::from_outputs(&cfg, &report.outputs);
+    assert_eq!(current.cells.len(), jobs.len());
+
+    let path = tmpfile("results.json");
+    current.save(&path).unwrap();
+    let loaded = GridResults::load(&path).unwrap();
+    assert_eq!(loaded.scale, cfg.scale);
+    assert_eq!(loaded.cells.len(), current.cells.len());
+
+    // zero tolerance: JSON round-trips f64 shortest-form exactly, so a
+    // diff of a run against its own serialization is *exactly* clean
+    let report = diff(&current, &loaded, 0.0);
+    assert!(report.pass(), "self-diff drifted: {:?}", report.rows.iter().find(|r| !r.within));
+    assert_eq!(report.missing.len(), 0);
+
+    // and a perturbed baseline is caught
+    let mut drifted = loaded.clone();
+    drifted.cells[0].metrics[0].1 *= 1.2;
+    assert!(!diff(&current, &drifted, 0.01).pass());
+}
+
+#[test]
+fn baseline_cells_parse_back_into_runnable_jobs() {
+    // `mlperf report --baseline` rebuilds jobs from serialized scenario
+    // strings — every scenario the full grid emits must round-trip
+    let cfg = tiny();
+    for job in full_grid(&cfg) {
+        let rendered = job.scenario.to_string();
+        assert_eq!(
+            Scenario::parse(&rendered),
+            Some(job.scenario),
+            "scenario {rendered:?} does not round-trip"
+        );
+    }
+}
