@@ -1,19 +1,40 @@
-//! Record-once/replay-many grid benchmark: the same 4-scenario ×
-//! N-workload grid run in direct mode (every cell re-executes its
-//! workload) and in replay mode (one capture per workload, replays for
-//! every cell), printing wall clocks, workload-execution counts, a
-//! parity checksum, and the speedup.
+//! Record-once/replay-many grid benchmark, in three acts:
 //!
-//! Replay mode must be bit-identical — the checksum proves it on every
-//! run — so the speedup is pure win: scenario count stops multiplying
-//! workload execution time, which is what lets the grid grow toward the
-//! paper's full 14-workload × many-configuration sweeps.
+//! 1. **direct vs replay** — the same 4-scenario × 4-workload grid run
+//!    with per-cell re-execution and in record-once/replay-many mode,
+//!    with a parity checksum proving replay is bit-identical.
+//! 2. **grouped vs fan-out scheduling** — a few-workload × many-scenario
+//!    grid (the shape that convoys: one worker per capture group) run
+//!    under the pre-fan-out scheduler (`run_jobs_replayed_grouped`,
+//!    "synchronous") and the intra-capture fan-out scheduler
+//!    (`run_jobs_replayed`, "pipelined"), same checksum discipline.
+//! 3. **file-ingest throughput** — each workload's `.mlt` trace replayed
+//!    through `PipelineSim` with synchronous ingest (`--ingest-threads
+//!    1`) and staged/overlapped ingest (auto threads), asserting metric
+//!    parity and reporting events/sec.
+//!
+//! ```bash
+//! cargo bench --bench grid_replay                       # tables only
+//! cargo bench --bench grid_replay -- --json             # + BENCH_replay_ingest.json
+//! cargo bench --bench grid_replay -- --json --assert-speedup 1.3
+//! ```
+//!
+//! `--json` writes `BENCH_replay_ingest.json` at the repository root
+//! (override with `--json-out <path>`); CI uploads it as an artifact and
+//! gates on `--assert-speedup`: the fan-out grid must beat the grouped
+//! grid by at least the given factor on a multi-scenario grid.
 
 #[path = "common.rs"]
 mod common;
 
 use mlperf::analysis::{r2, Table};
-use mlperf::coordinator::{run_jobs, run_jobs_replayed, DriverReport, Job, Scenario};
+use mlperf::coordinator::{
+    replay_file, run_jobs, run_jobs_replayed, run_jobs_replayed_grouped, DriverReport,
+    ExperimentConfig, Job, Scenario,
+};
+use mlperf::util::json::Json;
+use mlperf::workloads::by_name;
+use std::time::Instant;
 
 fn checksum(report: &DriverReport) -> u64 {
     // integer event/instruction counts fold into a stable parity witness
@@ -23,10 +44,8 @@ fn checksum(report: &DriverReport) -> u64 {
         .fold(0u64, |h, o| h.wrapping_mul(31).wrapping_add(o.metrics.instructions))
 }
 
-fn main() {
-    common::banner("grid replay: record-once/replay-many vs direct re-execution");
-    let cfg = common::config();
-
+/// Act 1: direct re-execution vs record-once/replay-many, with parity.
+fn direct_vs_replay(cfg: &ExperimentConfig) {
     let scenarios = [
         Scenario::Baseline,
         Scenario::PerfectL2,
@@ -39,8 +58,8 @@ fn main() {
         .flat_map(|w| scenarios.iter().map(move |s| Job::new(*w, *s)))
         .collect();
 
-    let direct = common::timed("direct grid", || run_jobs(&cfg, &jobs, 0));
-    let replayed = common::timed("replay grid", || run_jobs_replayed(&cfg, &jobs, 0));
+    let direct = common::timed("direct grid", || run_jobs(cfg, &jobs, 0));
+    let replayed = common::timed("replay grid", || run_jobs_replayed(cfg, &jobs, 0));
 
     assert_eq!(
         checksum(&direct),
@@ -72,4 +91,282 @@ fn main() {
         r2(direct.wall_seconds / replayed.wall_seconds.max(1e-9)),
     ]);
     t.emit();
+}
+
+struct GridResult {
+    workloads: usize,
+    cells: usize,
+    events: u64,
+    grouped_wall: f64,
+    fanout_wall: f64,
+}
+
+impl GridResult {
+    fn speedup(&self) -> f64 {
+        self.grouped_wall / self.fanout_wall.max(1e-9)
+    }
+}
+
+/// Act 2: the convoy-shaped grid (few workloads × many scenario
+/// columns) under grouped ("synchronous") vs fan-out ("pipelined")
+/// scheduling. One workload is the purest convoy — the grouped
+/// scheduler pins the capture *and all five* scenario replays on a
+/// single thread while every other core idles, so on an N-core machine
+/// fan-out approaches (capture + 5·replay) / (capture + ⌈5/N⌉·replay)
+/// and the 1.3× gate has margin even when capture costs several
+/// replays. Events counted once per workload so throughput is
+/// comparable across modes.
+fn grouped_vs_fanout(cfg: &ExperimentConfig) -> GridResult {
+    let workloads = ["KMeans"];
+    let scenarios = [
+        Scenario::Baseline,
+        Scenario::PerfectL2,
+        Scenario::PerfectLlc,
+        Scenario::NoHwPrefetch,
+        Scenario::DramIdealRows,
+    ];
+    let jobs: Vec<Job> = workloads
+        .iter()
+        .flat_map(|w| scenarios.iter().map(move |s| Job::new(*w, *s)))
+        .collect();
+
+    // events per workload (counted outside the timed region)
+    let events: u64 = workloads
+        .iter()
+        .map(|name| {
+            let w = by_name(name).unwrap();
+            mlperf::coordinator::capture_trace(w.as_ref(), cfg, false).trace.events()
+                * scenarios.len() as u64
+        })
+        .sum();
+
+    // best-of-2 per scheduler: a single wall sample on a shared/noisy
+    // machine could sink the CI gate on an unchanged tree; every run's
+    // checksum must agree (parity is per-run, not best-effort)
+    let time2 = |label: &str, run: &dyn Fn() -> DriverReport| {
+        let a = run();
+        let b = run();
+        assert_eq!(checksum(&a), checksum(&b), "{label}: nondeterministic grid");
+        let wall = a.wall_seconds.min(b.wall_seconds);
+        println!("[{label}: {:.2}s best-of-2]", wall);
+        (b, wall)
+    };
+    let (grouped, grouped_wall) =
+        time2("grouped replay grid (synchronous)", &|| {
+            run_jobs_replayed_grouped(cfg, &jobs, 0)
+        });
+    let (fanout, fanout_wall) =
+        time2("fan-out replay grid (pipelined)", &|| run_jobs_replayed(cfg, &jobs, 0));
+    assert_eq!(
+        checksum(&grouped),
+        checksum(&fanout),
+        "fan-out scheduling diverged from grouped scheduling"
+    );
+    assert_eq!(grouped.workload_executions, fanout.workload_executions);
+
+    let r = GridResult {
+        workloads: workloads.len(),
+        cells: jobs.len(),
+        events,
+        grouped_wall,
+        fanout_wall,
+    };
+    let mut t = Table::new(
+        "grid_fanout",
+        &format!(
+            "{} cells ({} workloads x {} scenario columns), {} replayed events",
+            r.cells,
+            r.workloads,
+            scenarios.len(),
+            r.events
+        ),
+        &["scheduling", "wall (s)", "M events/s", "speedup"],
+    );
+    t.row(vec![
+        "grouped (convoy)".into(),
+        format!("{:.2}", r.grouped_wall),
+        format!("{:.1}", r.events as f64 / r.grouped_wall.max(1e-9) / 1e6),
+        "1.00".into(),
+    ]);
+    t.row(vec![
+        "fan-out".into(),
+        format!("{:.2}", r.fanout_wall),
+        format!("{:.1}", r.events as f64 / r.fanout_wall.max(1e-9) / 1e6),
+        r2(r.speedup()),
+    ]);
+    t.emit();
+    r
+}
+
+struct IngestRow {
+    name: &'static str,
+    events: u64,
+    sync_eps: f64,
+    pipelined_eps: f64,
+}
+
+/// Best-of-2 wall seconds of `f`.
+fn best_wall(mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Act 3: per-workload file-ingest throughput, synchronous vs staged.
+fn ingest_rows(cfg: &ExperimentConfig) -> Vec<IngestRow> {
+    let dir = std::env::temp_dir().join("mlperf-bench-ingest");
+    std::fs::create_dir_all(&dir).expect("create bench temp dir");
+    let sync_cfg = ExperimentConfig { ingest_threads: 1, ..cfg.clone() };
+    let pipe_cfg = ExperimentConfig { ingest_threads: 0, ..cfg.clone() };
+
+    let mut rows = Vec::new();
+    for name in ["KMeans", "KNN", "DBSCAN"] {
+        let w = by_name(name).unwrap();
+        let path = dir.join(format!("{}.mlt", name.to_lowercase()));
+        let recorded = mlperf::coordinator::capture_trace(w.as_ref(), cfg, false);
+        recorded.trace.write_to(&path, &recorded.meta).expect("write bench trace");
+
+        // parity is asserted on the first timed sample of each mode —
+        // no dedicated (untimed) replay pair needed
+        let mut sync_out = None;
+        let sync_wall = best_wall(|| {
+            let (_, m, stats) = replay_file(&path, &sync_cfg, |_| {}).unwrap();
+            sync_out.get_or_insert((m, stats));
+        });
+        let (sync_metrics, stats) = sync_out.expect("best_wall runs at least once");
+        let mut pipe_out = None;
+        let pipe_wall = best_wall(|| {
+            let (_, m, _) = replay_file(&path, &pipe_cfg, |_| {}).unwrap();
+            pipe_out.get_or_insert(m);
+        });
+        assert_eq!(
+            sync_metrics,
+            pipe_out.expect("best_wall runs at least once"),
+            "{name}: pipelined ingest diverged from synchronous"
+        );
+
+        let events = stats.events;
+        rows.push(IngestRow {
+            name,
+            events,
+            sync_eps: events as f64 / sync_wall.max(1e-9),
+            pipelined_eps: events as f64 / pipe_wall.max(1e-9),
+        });
+    }
+
+    let mut t = Table::new(
+        "replay_ingest",
+        "file-trace ingest into PipelineSim: synchronous vs staged I/O/decode overlap",
+        &["workload", "events", "sync M events/s", "pipelined M events/s", "speedup"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.into(),
+            format!("{}", r.events),
+            format!("{:.1}", r.sync_eps / 1e6),
+            format!("{:.1}", r.pipelined_eps / 1e6),
+            r2(r.pipelined_eps / r.sync_eps.max(1e-9)),
+        ]);
+    }
+    t.emit();
+    rows
+}
+
+fn write_json(path: &str, cfg: &ExperimentConfig, grid: &GridResult, rows: &[IngestRow]) {
+    // built on util/json.rs (the ledger's serializer) — deterministic
+    // field order, correct escaping, no hand-rolled braces
+    let field = |k: &str, v: Json| (k.to_string(), v);
+    let doc = Json::Obj(vec![
+        field("bench", Json::Str("replay_ingest".into())),
+        field("scale", Json::num(cfg.scale)),
+        field(
+            "ingest_threads_auto",
+            Json::num(mlperf::trace::resolve_ingest_threads(0) as f64),
+        ),
+        field(
+            "workloads",
+            Json::Arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::Obj(vec![
+                            field("name", Json::Str(r.name.into())),
+                            field("events", Json::num(r.events as f64)),
+                            field("synchronous_eps", Json::num(r.sync_eps)),
+                            field("pipelined_eps", Json::num(r.pipelined_eps)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        field(
+            "grid",
+            Json::Obj(vec![
+                field("workloads", Json::num(grid.workloads as f64)),
+                field("cells", Json::num(grid.cells as f64)),
+                field("events", Json::num(grid.events as f64)),
+                field("synchronous_wall_s", Json::num(grid.grouped_wall)),
+                field("pipelined_wall_s", Json::num(grid.fanout_wall)),
+                field(
+                    "synchronous_eps",
+                    Json::num(grid.events as f64 / grid.grouped_wall.max(1e-9)),
+                ),
+                field(
+                    "pipelined_eps",
+                    Json::num(grid.events as f64 / grid.fanout_wall.max(1e-9)),
+                ),
+                field("speedup", Json::num(grid.speedup())),
+            ]),
+        ),
+    ]);
+    std::fs::write(path, doc.render())
+        .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
+    println!("\nwrote {path}");
+}
+
+fn main() {
+    common::banner("grid replay: record-once/replay-many, scheduling, and staged ingest");
+    let cfg = common::config();
+    let args = common::args();
+
+    direct_vs_replay(&cfg);
+    let grid = grouped_vs_fanout(&cfg);
+    let rows = ingest_rows(&cfg);
+
+    println!(
+        "\nmulti-scenario grid speedup (fan-out / grouped): {:.2}x",
+        grid.speedup()
+    );
+
+    if args.has("json") {
+        let default_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_replay_ingest.json");
+        let path = args.get_or("json-out", default_path);
+        write_json(&path, &cfg, &grid, &rows);
+    }
+
+    if let Some(min) = args.get("assert-speedup") {
+        let min: f64 = min.parse().expect("--assert-speedup expects a number");
+        // The convoy only exists when workers outnumber capture groups:
+        // on <= 2 cores the grouped scheduler already keeps every core
+        // busy (2 groups), so the gate is only meaningful with >= 4
+        // cores (CI's ubuntu-latest runners have 4).
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if cores < 4 {
+            println!(
+                "speedup gate skipped: {cores} core(s) cannot expose the convoy \
+                 (measured {:.2}x, floor {min}x)",
+                grid.speedup()
+            );
+        } else {
+            assert!(
+                grid.speedup() >= min,
+                "fan-out replay grid speedup {:.2}x is below the acceptance floor {min}x",
+                grid.speedup()
+            );
+            println!("speedup gate passed: {:.2}x >= {min}x", grid.speedup());
+        }
+    }
 }

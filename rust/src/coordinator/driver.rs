@@ -18,26 +18,32 @@
 //!   scenario only varies the *simulator* configuration (perfect caches,
 //!   prefetcher toggles, ideal DRAM rows — see
 //!   [`Scenario::trace_variant`]) are grouped per (workload, prefetch
-//!   variant); a worker claims a whole group, executes the workload once
-//!   into an in-memory [`CapturedTrace`], then replays that capture into
-//!   a fresh `PipelineSim` per cell. Replay delivers the identical block
+//!   variant); the workload executes once into an in-memory
+//!   [`CapturedTrace`], which is then shared via `Arc` and replayed into
+//!   a fresh `PipelineSim` per cell, with each (capture ×
+//!   scenario-cell) unit scheduled independently across the worker pool
+//!   (intra-capture fan-out — a few-workload × many-scenario grid no
+//!   longer convoys behind one thread per group; at most `threads`
+//!   captures stay resident). Replay delivers the identical block
 //!   stream the recording produced, so every cell's `Metrics` are
 //!   bit-identical to direct mode — scenario count no longer multiplies
 //!   workload execution time, which is what lets the grid grow toward
 //!   the paper's full 14-workload × many-configuration sweeps.
 //!   Scenarios that change execution itself (multicore sharding,
 //!   reordering) fall back to direct cells inside the same run.
+//!   [`run_jobs_replayed_grouped`] keeps the pre-fan-out group-at-a-time
+//!   scheduler as the bench baseline and parity witness.
 //!
 //! [`by_name`]: crate::workloads::by_name
 //! [`CapturedTrace`]: crate::trace::CapturedTrace
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
 
 use super::{
     capture_trace, characterize_with, multicore_characterize, reorder_study, replay_characterize,
-    ExperimentConfig,
+    ExperimentConfig, RecordedRun,
 };
 use crate::ledger::{cell_fingerprint, Fingerprint, Ledger, LedgerRecord, Provenance};
 use crate::reorder::ReorderKind;
@@ -317,77 +323,258 @@ pub fn run_jobs(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverR
     }
 }
 
-/// Run `jobs` in record-once/replay-many mode: execute each (workload ×
-/// trace-variant) once, then satisfy every CPU-config-only scenario cell
-/// by replaying the captured trace; non-replayable cells — and groups
-/// whose capture would serve only a single cell, where buffering the
-/// trace saves nothing — run directly. Results are bit-identical to
-/// [`run_jobs`] and come back in input order; only `workload_executions`
-/// (and the wall clock) differ.
-///
-/// Work is claimed group-at-a-time (a group = one capture plus all the
-/// cells it serves, or one direct cell), so at most `threads` captures
-/// are resident in memory at once.
-pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverReport {
-    let t0 = std::time::Instant::now();
+/// Replay-mode work plan: capture groups (a workload × trace-variant
+/// execution serving ≥ 2 scenario cells) plus the cells that run
+/// directly (non-replayable scenarios and single-cell groups, where
+/// buffering a whole trace would cost RAM and save nothing).
+struct ReplayPlan<'j> {
+    captures: Vec<((&'j str, bool), Vec<usize>)>,
+    direct: Vec<usize>,
+}
 
-    struct Group<'j> {
-        /// `(workload, sw_prefetch)` to capture, or `None` for a direct cell.
-        capture: Option<(&'j str, bool)>,
-        idxs: Vec<usize>,
-    }
-    let mut groups: Vec<Group> = Vec::new();
+fn plan_replay(jobs: &[Job]) -> ReplayPlan<'_> {
+    let mut captures: Vec<((&str, bool), Vec<usize>)> = Vec::new();
+    let mut direct: Vec<usize> = Vec::new();
     let mut by_key: BTreeMap<(&str, bool), usize> = BTreeMap::new();
     for (i, job) in jobs.iter().enumerate() {
         match job.scenario.trace_variant() {
             Some(pf) => {
                 let key = (job.workload.as_str(), pf);
                 let gi = *by_key.entry(key).or_insert_with(|| {
-                    groups.push(Group { capture: Some(key), idxs: Vec::new() });
-                    groups.len() - 1
+                    captures.push((key, Vec::new()));
+                    captures.len() - 1
                 });
-                groups[gi].idxs.push(i);
+                captures[gi].1.push(i);
             }
-            None => groups.push(Group { capture: None, idxs: vec![i] }),
+            None => direct.push(i),
         }
     }
+    // A capture only pays off when it serves several cells; a
+    // single-cell group streams block-by-block directly (O(one block)
+    // memory) to the identical Metrics.
+    captures.retain_mut(|(_, idxs)| {
+        if idxs.len() == 1 {
+            direct.push(idxs[0]);
+            false
+        } else {
+            true
+        }
+    });
+    ReplayPlan { captures, direct }
+}
+
+/// Run `jobs` in record-once/replay-many mode: execute each (workload ×
+/// trace-variant) once, then satisfy every CPU-config-only scenario cell
+/// by replaying the captured trace; non-replayable cells — and groups
+/// whose capture would serve only a single cell — run directly. Results
+/// are bit-identical to [`run_jobs`] and come back in input order; only
+/// `workload_executions` (and the wall clock) differ.
+///
+/// Scheduling is **intra-capture fan-out**: a finished capture is shared
+/// via `Arc` and its (capture × scenario-cell) replay units are claimed
+/// independently by any idle worker, so a grid with few workloads × many
+/// scenario columns no longer convoys behind one thread per capture
+/// group (the scheduling [`run_jobs_replayed_grouped`] retains). The
+/// bounded-memory guarantee is unchanged: at most `threads` captures are
+/// resident at once — a capture may only start while fewer than that
+/// many are live, and a capture is dropped the moment its last cell
+/// completes.
+pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverReport {
+    let t0 = std::time::Instant::now();
+    let plan = plan_replay(jobs);
+
+    let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let requested = if threads == 0 { auto } else { threads };
+    let threads_used = requested.min(jobs.len()).max(1);
+    let resident_cap = threads_used;
 
     let executions = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<JobOutput>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
 
-    let threads_used = fan_out(groups.len(), threads, |g| {
-        let group = &groups[g];
-        match group.capture {
-            // A capture only pays off when it serves several cells; for a
-            // single-cell group direct execution streams block-by-block
-            // (O(one block) memory) to the identical Metrics, so buffering
-            // the whole trace would cost RAM and save nothing.
-            Some(_) if group.idxs.len() == 1 => {
-                executions.fetch_add(1, Ordering::Relaxed);
-                let i = group.idxs[0];
-                *slots[i].lock().unwrap() = Some(run_job(cfg, &jobs[i]));
-            }
-            Some((name, sw_prefetch)) => {
-                let w = by_name(name)
-                    .unwrap_or_else(|| panic!("driver: unknown workload {name:?}"));
-                let recorded = capture_trace(w.as_ref(), cfg, sw_prefetch);
-                executions.fetch_add(1, Ordering::Relaxed);
-                for &i in &group.idxs {
-                    let job = &jobs[i];
-                    let metrics =
-                        replay_characterize(&recorded, cfg, |c| job.scenario.apply_cpu(c));
-                    *slots[i].lock().unwrap() = Some(JobOutput {
-                        job: job.clone(),
-                        metrics,
-                        quality: Some(recorded.result.quality),
-                    });
+    /// Scheduler state: claim cursors, the ready-cell queue, and the
+    /// resident captures. Guarded by one mutex; workers park on the
+    /// condvar when captures are pending but the residency cap is hit.
+    struct Sched {
+        next_capture: usize,
+        next_direct: usize,
+        /// `(group, job index)` replay cells whose capture is resident.
+        ready: VecDeque<(usize, usize)>,
+        recorded: Vec<Option<Arc<RecordedRun>>>,
+        /// Unfinished cells per capture group (drop the capture at 0).
+        remaining: Vec<usize>,
+        resident: usize,
+        completed: usize,
+        /// A worker panicked: peers must stop waiting and exit so the
+        /// panic can propagate out of `thread::scope` instead of the
+        /// process wedging on a `Condvar` that will never be notified.
+        aborted: bool,
+    }
+    let state = Mutex::new(Sched {
+        next_capture: 0,
+        next_direct: 0,
+        ready: VecDeque::new(),
+        recorded: vec![None; plan.captures.len()],
+        remaining: plan.captures.iter().map(|(_, idxs)| idxs.len()).collect(),
+        resident: 0,
+        completed: 0,
+        aborted: false,
+    });
+    let cv = Condvar::new();
+    let total_cells = jobs.len();
+
+    /// Raises `Sched::aborted` if the owning worker unwinds (workload
+    /// panics surface through `capture_trace`/`run_job`); disarmed on a
+    /// normal exit.
+    struct AbortOnPanic<'a> {
+        state: &'a Mutex<Sched>,
+        cv: &'a Condvar,
+        armed: bool,
+    }
+    impl Drop for AbortOnPanic<'_> {
+        fn drop(&mut self) {
+            if self.armed {
+                // ignore poisoning: if the lock is poisoned every peer's
+                // own lock().unwrap() already terminates it
+                if let Ok(mut st) = self.state.lock() {
+                    st.aborted = true;
                 }
+                self.cv.notify_all();
             }
-            None => {
-                executions.fetch_add(1, Ordering::Relaxed);
-                let i = group.idxs[0];
-                *slots[i].lock().unwrap() = Some(run_job(cfg, &jobs[i]));
+        }
+    }
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads_used {
+            scope.spawn(|| {
+                let mut guard = AbortOnPanic { state: &state, cv: &cv, armed: true };
+                let mut st = state.lock().unwrap();
+                loop {
+                    if st.aborted {
+                        break;
+                    }
+                    // 1. replay cells first: they retire resident
+                    //    captures, which is what frees residency slots
+                    if let Some((g, i)) = st.ready.pop_front() {
+                        let rec =
+                            st.recorded[g].clone().expect("ready cell implies resident capture");
+                        drop(st);
+                        let job = &jobs[i];
+                        let metrics =
+                            replay_characterize(&rec, cfg, |c| job.scenario.apply_cpu(c));
+                        *slots[i].lock().unwrap() = Some(JobOutput {
+                            job: job.clone(),
+                            metrics,
+                            quality: Some(rec.result.quality),
+                        });
+                        drop(rec);
+                        st = state.lock().unwrap();
+                        st.completed += 1;
+                        st.remaining[g] -= 1;
+                        if st.remaining[g] == 0 {
+                            st.recorded[g] = None;
+                            st.resident -= 1;
+                            cv.notify_all();
+                        }
+                        if st.completed == total_cells {
+                            cv.notify_all();
+                        }
+                        continue;
+                    }
+                    // 2. captures next: each unlocks a batch of cells
+                    if st.next_capture < plan.captures.len() && st.resident < resident_cap {
+                        let g = st.next_capture;
+                        st.next_capture += 1;
+                        st.resident += 1;
+                        drop(st);
+                        let (name, sw_prefetch) = plan.captures[g].0;
+                        let w = by_name(name)
+                            .unwrap_or_else(|| panic!("driver: unknown workload {name:?}"));
+                        let rec = Arc::new(capture_trace(w.as_ref(), cfg, sw_prefetch));
+                        executions.fetch_add(1, Ordering::Relaxed);
+                        st = state.lock().unwrap();
+                        st.recorded[g] = Some(rec);
+                        for &i in &plan.captures[g].1 {
+                            st.ready.push_back((g, i));
+                        }
+                        cv.notify_all();
+                        continue;
+                    }
+                    // 3. direct cells last: independent, unlock nothing
+                    if st.next_direct < plan.direct.len() {
+                        let i = plan.direct[st.next_direct];
+                        st.next_direct += 1;
+                        drop(st);
+                        executions.fetch_add(1, Ordering::Relaxed);
+                        *slots[i].lock().unwrap() = Some(run_job(cfg, &jobs[i]));
+                        st = state.lock().unwrap();
+                        st.completed += 1;
+                        if st.completed == total_cells {
+                            cv.notify_all();
+                        }
+                        continue;
+                    }
+                    if st.completed == total_cells {
+                        break;
+                    }
+                    // captures pending behind the residency cap, or
+                    // in-flight work that will enqueue more cells
+                    st = cv.wait(st).unwrap();
+                }
+                drop(st);
+                guard.armed = false;
+            });
+        }
+    });
+
+    DriverReport {
+        outputs: collect_slots(slots),
+        threads_used,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        workload_executions: executions.into_inner(),
+        cached_cells: 0,
+    }
+}
+
+/// The pre-fan-out replay scheduler: work is claimed group-at-a-time (a
+/// group = one capture plus **all** the cells it serves, executed by the
+/// one worker that claimed it). Kept as the scheduling baseline for
+/// `benches/grid_replay.rs` — the convoy it forms on few-workload ×
+/// many-scenario grids is exactly what [`run_jobs_replayed`] removes —
+/// and as a parity witness: both schedulers must produce bit-identical
+/// outputs.
+pub fn run_jobs_replayed_grouped(
+    cfg: &ExperimentConfig,
+    jobs: &[Job],
+    threads: usize,
+) -> DriverReport {
+    let t0 = std::time::Instant::now();
+    let plan = plan_replay(jobs);
+
+    // one unit per capture group, then one per direct cell
+    let units = plan.captures.len() + plan.direct.len();
+    let executions = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<JobOutput>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+
+    let threads_used = fan_out(units, threads, |u| {
+        if let Some((key, idxs)) = plan.captures.get(u) {
+            let (name, sw_prefetch) = *key;
+            let w =
+                by_name(name).unwrap_or_else(|| panic!("driver: unknown workload {name:?}"));
+            let recorded = capture_trace(w.as_ref(), cfg, sw_prefetch);
+            executions.fetch_add(1, Ordering::Relaxed);
+            for &i in idxs {
+                let job = &jobs[i];
+                let metrics = replay_characterize(&recorded, cfg, |c| job.scenario.apply_cpu(c));
+                *slots[i].lock().unwrap() = Some(JobOutput {
+                    job: job.clone(),
+                    metrics,
+                    quality: Some(recorded.result.quality),
+                });
             }
+        } else {
+            let i = plan.direct[u - plan.captures.len()];
+            executions.fetch_add(1, Ordering::Relaxed);
+            *slots[i].lock().unwrap() = Some(run_job(cfg, &jobs[i]));
         }
     });
 

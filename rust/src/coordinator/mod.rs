@@ -10,16 +10,16 @@
 pub mod driver;
 
 pub use driver::{
-    full_grid, run_job, run_jobs, run_jobs_ledgered, run_jobs_replayed, standard_grid,
-    DriverReport, Job, JobOutput, Scenario,
+    full_grid, run_job, run_jobs, run_jobs_ledgered, run_jobs_replayed,
+    run_jobs_replayed_grouped, standard_grid, DriverReport, Job, JobOutput, Scenario,
 };
 
 use crate::data::Dataset;
 use crate::reorder::{compute_plan, ReorderKind, ReorderPlan};
 use crate::sim::{run_multicore, CpuConfig, Metrics, PipelineSim};
 use crate::trace::{
-    BlockTee, CapturedTrace, NullSink, Recorder, ReplaySource, ReplayStats, TraceMeta,
-    TraceSummary, TraceWriter,
+    resolve_ingest_threads, BlockTee, CapturedTrace, NullSink, PipelinedIngest, Recorder,
+    ReplaySource, ReplayStats, TraceMeta, TraceSummary, TraceWriter,
 };
 use crate::util::error::Result;
 use crate::workloads::{LibraryProfile, RunContext, RunResult, Workload};
@@ -44,6 +44,13 @@ pub struct ExperimentConfig {
     /// which preserves the miss-rate shape (DESIGN.md "Reduced default
     /// scale"). Disable to simulate the full Table V hierarchy.
     pub auto_shrink: bool,
+    /// Total threads for file-trace ingest (`--ingest-threads`): `0` =
+    /// auto, `1` = synchronous, `N ≥ 2` = one I/O thread + `N-1`
+    /// decoders ([`crate::trace::PipelinedIngest`]). Pure execution
+    /// policy: pipelined ingest delivers the bit-identical block stream,
+    /// so this knob can never change results and is deliberately
+    /// **excluded** from ledger fingerprints (asserted by a test).
+    pub ingest_threads: usize,
 }
 
 impl Default for ExperimentConfig {
@@ -56,6 +63,7 @@ impl Default for ExperimentConfig {
             profile: LibraryProfile::Sklearn,
             cpu: CpuConfig::default(),
             auto_shrink: true,
+            ingest_threads: 0,
         }
     }
 }
@@ -261,20 +269,43 @@ pub fn record_characterize(
 /// with `mutate` applied to the CPU config, never constructing the
 /// workload. `auto_shrink` uses the dataset footprint recorded in the
 /// trace header, matching the recording run's hierarchy exactly.
+///
+/// Ingest is staged per `cfg.ingest_threads` (0 = auto): with ≥ 2
+/// effective threads, [`PipelinedIngest`] overlaps file I/O and columnar
+/// decode with the simulation; with 1, the synchronous [`ReplaySource`]
+/// path runs. Both deliver the identical block stream, so the `Metrics`
+/// are bit-identical either way (`rust/tests/ingest.rs` asserts it).
 pub fn replay_file(
     path: &Path,
     cfg: &ExperimentConfig,
     mutate: impl FnOnce(&mut CpuConfig),
 ) -> Result<(TraceMeta, Metrics, ReplayStats)> {
-    let src = ReplaySource::open(path)?;
-    let meta = src.meta().clone();
+    // the two sources share every step but the final pump, so the
+    // config discipline (mutate, then auto_shrink against the recorded
+    // footprint) cannot drift between the ingest modes
+    enum Src {
+        Sync(ReplaySource),
+        Pipelined(PipelinedIngest),
+    }
+    let src = if resolve_ingest_threads(cfg.ingest_threads) > 1 {
+        Src::Pipelined(PipelinedIngest::open(path, cfg.ingest_threads)?)
+    } else {
+        Src::Sync(ReplaySource::open(path)?)
+    };
+    let meta = match &src {
+        Src::Sync(s) => s.meta().clone(),
+        Src::Pipelined(s) => s.meta().clone(),
+    };
     let mut cpu = cfg.cpu.clone();
     mutate(&mut cpu);
     if cfg.auto_shrink {
         shrink_hierarchy(&mut cpu, meta.dataset_bytes);
     }
     let mut sim = PipelineSim::new(cpu);
-    let stats = src.replay_into(&mut sim)?;
+    let stats = match src {
+        Src::Sync(s) => s.replay_into(&mut sim)?,
+        Src::Pipelined(s) => s.replay_into(&mut sim)?,
+    };
     Ok((meta, sim.metrics(), stats))
 }
 

@@ -166,6 +166,12 @@ pub fn fingerprint_cpu(b: &mut FingerprintBuilder, cpu: &CpuConfig) {
 /// applied before hashing, so a cell cached under `perfect-L2` can never
 /// satisfy a `baseline` lookup even if the scenario labels were
 /// mangled).
+///
+/// Pure *execution-policy* knobs — thread counts, ingest parallelism
+/// (`ExperimentConfig::ingest_threads`) — are deliberately **not**
+/// hashed: they cannot change results (the replay stream is bit-
+/// identical at any parallelism), so hashing them would only split the
+/// cache. `ingest_threads_is_invisible` locks this in.
 pub fn cell_fingerprint(cfg: &ExperimentConfig, job: &Job) -> Fingerprint {
     let mut b = FingerprintBuilder::new();
     // Configuration alone cannot see *simulator behavior* changes, so the
@@ -262,6 +268,20 @@ mod tests {
             let mut c = cfg();
             m(&mut c);
             assert_ne!(base, cell_fingerprint(&c, &job), "mutating {name} did not change fp");
+        }
+    }
+
+    #[test]
+    fn ingest_threads_is_invisible() {
+        // ingest parallelism is execution policy, not configuration: any
+        // value must land on the same cell (pipelined ingest is
+        // bit-identical, so caching per-thread-count would only split
+        // the ledger)
+        let job = Job::new("KMeans", Scenario::Baseline);
+        let base = cell_fingerprint(&cfg(), &job);
+        for threads in [0usize, 1, 2, 8, 64] {
+            let c = ExperimentConfig { ingest_threads: threads, ..cfg() };
+            assert_eq!(base, cell_fingerprint(&c, &job), "ingest_threads={threads}");
         }
     }
 

@@ -10,6 +10,7 @@
 //! mlperf gen-data    --rows 100000 --features 20 --out data.bin
 //! mlperf record      --workload kmeans [--out kmeans.mlt] [--sw-prefetch]
 //! mlperf replay      --trace kmeans.mlt [--perfect-l2|--perfect-llc|--no-hw-prefetch|--ideal-rows]
+//!                    [--ingest-threads 0]
 //! mlperf runtime     [--artifacts artifacts/]
 //! mlperf report      [--scale 0.2]     # every figure/table, slow
 //! mlperf report      --baseline BENCH_grid_baseline.json --gate
@@ -44,6 +45,7 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
         scale: args.get_parsed_or("scale", 1.0),
         iterations: args.get_parsed_or("iterations", 2),
         seed: args.get_parsed_or("seed", 0xDA7Au64),
+        ingest_threads: args.get_parsed_or("ingest-threads", 0usize),
         ..Default::default()
     };
     cfg.profile = match args.get_or("profile", "sklearn").as_str() {
@@ -107,6 +109,7 @@ subcommands: list, characterize, prefetch, reorder, multicore, gen-data, record,
 common flags: --workload <name> --scale <f> --iterations <n> --profile sklearn|mlpack --seed <n>
 record flags: --out <file.mlt> --sw-prefetch       (execute once, persist the columnar trace)
 replay flags: --trace <file.mlt> [--perfect-l2 --perfect-llc --no-hw-prefetch --ideal-rows]
+              --ingest-threads <n> (0 = auto, 1 = synchronous; staged I/O/decode ingest, bit-identical)
 grid flags:   --threads <n> (0 = one per core) --full (all scenario columns) --direct (re-execute per cell)
               --ledger <file.mllg> (skip cells already simulated) --json <out.json> (results artifact)
               --assert-cached (fail if anything executed) --baseline <base.json> --gate --tolerance <f>

@@ -162,16 +162,72 @@ struct Bank {
     consecutive_hits: u32,
 }
 
+/// One field of the precomputed address decomposition:
+/// `value = (line >> shift) & mask`.
+#[derive(Debug, Clone, Copy)]
+struct Field {
+    shift: u32,
+    mask: u64,
+}
+
+impl Field {
+    #[inline]
+    fn extract(self, line: u64) -> u64 {
+        // checked_shr so a degenerate geometry whose fields sum past 64
+        // bits extracts 0, exactly as the sequential reference (which
+        // shifted in < 64-bit steps) would
+        line.checked_shr(self.shift).unwrap_or(0) & self.mask
+    }
+}
+
+/// Precomputed shift/mask decomposition of a line address for one
+/// `(AddrMap, DramConfig)` pair. The seed implementation walked a chain
+/// of `take()` calls — each one a shift + mask serially dependent on the
+/// previous — per request; here every field extracts independently from
+/// the original line address (instruction-level parallel, branch-free),
+/// which a parity test locks against the sequential reference.
+///
+/// `row` is special-cased: under RoBaRaCoCh the row takes **all**
+/// remaining high bits modulo `rows_per_bank` (which therefore need not
+/// be a power of two), so its mask stays `u64::MAX` and [`Dram::map`]
+/// applies the modulo; under ChRaBaRoCo it is a plain masked field (the
+/// constructor rejects a non-power-of-two `rows_per_bank` for that map).
+#[derive(Debug, Clone, Copy)]
+struct AddrFields {
+    channel: Field,
+    rank: Field,
+    bank: Field,
+    row: Field,
+}
+
+/// Low `bits` set. Well-defined for the full `0..=64` range (the seed's
+/// `(1u64 << bits) - 1` overflowed in debug builds at `bits == 64`).
+#[inline]
+fn low_mask(bits: u32) -> u64 {
+    if bits == 0 {
+        0
+    } else {
+        u64::MAX >> (64 - bits)
+    }
+}
+
+/// `log2` of a config field that must be an exact power of two — a hard
+/// error instead of the seed's `debug_assert` (which vanished in release
+/// builds and let a bad config silently mis-map every address).
+fn checked_ilog2(x: u64, what: &str) -> crate::util::error::Result<u32> {
+    if !x.is_power_of_two() {
+        crate::bail!("dram config: {what} = {x} must be a power of two");
+    }
+    Ok(x.trailing_zeros())
+}
+
 /// The DRAM device + controller model.
 pub struct Dram {
     cfg: DramConfig,
     banks: Vec<Bank>,
     bus_free_at: f64,
     pub stats: DramStats,
-    col_bits: u32,
-    bank_bits: u32,
-    rank_bits: u32,
-    chan_bits: u32,
+    fields: AddrFields,
 }
 
 /// Decomposed DRAM coordinates of a request.
@@ -184,13 +240,57 @@ pub struct DramCoord {
 }
 
 impl Dram {
-    pub fn new(cfg: DramConfig) -> Self {
+    /// Build the model, validating the geometry: channels, ranks, banks,
+    /// and columns-per-row must be powers of two (and `rows_per_bank`
+    /// too under ChRaBaRoCo, where the row is a masked bit field).
+    pub fn try_new(cfg: DramConfig) -> crate::util::error::Result<Self> {
         let nbanks = (cfg.channels * cfg.ranks * cfg.banks) as usize;
-        let col_bits = ilog2(cfg.row_bytes / crate::trace::LINE_SIZE);
-        let bank_bits = ilog2(cfg.banks);
-        let rank_bits = ilog2(cfg.ranks);
-        let chan_bits = ilog2(cfg.channels);
-        Self {
+        if cfg.row_bytes < crate::trace::LINE_SIZE {
+            crate::bail!(
+                "dram config: row_bytes = {} is smaller than a {}-byte cache line",
+                cfg.row_bytes,
+                crate::trace::LINE_SIZE
+            );
+        }
+        if cfg.rows_per_bank == 0 {
+            crate::bail!("dram config: rows_per_bank must be nonzero");
+        }
+        let col_bits = checked_ilog2(cfg.row_bytes / crate::trace::LINE_SIZE, "columns per row")?;
+        let bank_bits = checked_ilog2(cfg.banks, "banks")?;
+        let rank_bits = checked_ilog2(cfg.ranks, "ranks")?;
+        let chan_bits = checked_ilog2(cfg.channels, "channels")?;
+        let fields = match cfg.addr_map {
+            // LSB→MSB: channel, column, rank, bank, row
+            AddrMap::RoBaRaCoCh => {
+                let rank_shift = chan_bits + col_bits;
+                let bank_shift = rank_shift + rank_bits;
+                AddrFields {
+                    channel: Field { shift: 0, mask: low_mask(chan_bits) },
+                    rank: Field { shift: rank_shift, mask: low_mask(rank_bits) },
+                    bank: Field { shift: bank_shift, mask: low_mask(bank_bits) },
+                    // all remaining high bits, reduced mod rows_per_bank
+                    // in map() (need not be a power of two)
+                    row: Field { shift: bank_shift + bank_bits, mask: u64::MAX },
+                }
+            }
+            // LSB→MSB: column, row, bank, rank, channel
+            AddrMap::ChRaBaRoCo => {
+                let row_bits =
+                    checked_ilog2(cfg.rows_per_bank, "rows_per_bank (ChRaBaRoCo)")?;
+                let bank_shift = col_bits + row_bits;
+                let rank_shift = bank_shift + bank_bits;
+                AddrFields {
+                    channel: Field {
+                        shift: rank_shift + rank_bits,
+                        mask: low_mask(chan_bits),
+                    },
+                    rank: Field { shift: rank_shift, mask: low_mask(rank_bits) },
+                    bank: Field { shift: bank_shift, mask: low_mask(bank_bits) },
+                    row: Field { shift: col_bits, mask: low_mask(row_bits) },
+                }
+            }
+        };
+        Ok(Self {
             banks: vec![
                 Bank { open_row: None, busy_until: 0.0, consecutive_hits: 0 };
                 nbanks
@@ -198,36 +298,34 @@ impl Dram {
             bus_free_at: 0.0,
             stats: DramStats::default(),
             cfg,
-            col_bits,
-            bank_bits,
-            rank_bits,
-            chan_bits,
-        }
+            fields,
+        })
     }
 
-    /// Map a byte address to DRAM coordinates under the configured scheme.
+    /// Infallible constructor for the well-formed configs the simulator
+    /// stack builds internally; panics with the validation message on a
+    /// malformed geometry (see [`Dram::try_new`] for the `Result` form).
+    pub fn new(cfg: DramConfig) -> Self {
+        Self::try_new(cfg).unwrap_or_else(|e| panic!("{e:#}"))
+    }
+
+    /// Map a byte address to DRAM coordinates under the configured
+    /// scheme: four independent shift-and-mask extracts precomputed per
+    /// config (plus one modulo for the RoBaRaCoCh row), instead of the
+    /// serially dependent `take()` chain the seed walked per request.
     pub fn map(&self, addr: u64) -> DramCoord {
         // operate at cache-line granularity
-        let mut a = addr / crate::trace::LINE_SIZE;
-        match self.cfg.addr_map {
-            AddrMap::RoBaRaCoCh => {
-                // LSB→MSB: channel, column, rank, bank, row
-                let channel = take(&mut a, self.chan_bits);
-                let _col = take(&mut a, self.col_bits);
-                let rank = take(&mut a, self.rank_bits);
-                let bank = take(&mut a, self.bank_bits);
-                let row = a % self.cfg.rows_per_bank;
-                DramCoord { channel, rank, bank, row }
-            }
-            AddrMap::ChRaBaRoCo => {
-                // LSB→MSB: column, row, bank, rank, channel
-                let _col = take(&mut a, self.col_bits);
-                let row = take(&mut a, ilog2(self.cfg.rows_per_bank));
-                let bank = take(&mut a, self.bank_bits);
-                let rank = take(&mut a, self.rank_bits);
-                let channel = take(&mut a, self.chan_bits);
-                DramCoord { channel, rank, bank, row }
-            }
+        let line = addr / crate::trace::LINE_SIZE;
+        let f = &self.fields;
+        let row = match self.cfg.addr_map {
+            AddrMap::RoBaRaCoCh => f.row.extract(line) % self.cfg.rows_per_bank,
+            AddrMap::ChRaBaRoCo => f.row.extract(line),
+        };
+        DramCoord {
+            channel: f.channel.extract(line),
+            rank: f.rank.extract(line),
+            bank: f.bank.extract(line),
+            row,
         }
     }
 
@@ -323,26 +421,114 @@ impl Dram {
     }
 }
 
-#[inline]
-fn take(a: &mut u64, bits: u32) -> u64 {
-    let v = *a & ((1u64 << bits) - 1).max(0);
-    *a >>= bits;
-    if bits == 0 {
-        0
-    } else {
-        v
-    }
-}
-
-#[inline]
-fn ilog2(x: u64) -> u32 {
-    debug_assert!(x.is_power_of_two(), "{x} must be a power of two");
-    x.trailing_zeros()
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// The seed's sequential field extractor, kept verbatim as the
+    /// parity reference for the precomputed mapper (with the latent
+    /// `1 << 64` overflow replaced by [`low_mask`], which is what the
+    /// seed computed for every reachable `bits`).
+    fn take(a: &mut u64, bits: u32) -> u64 {
+        let v = *a & low_mask(bits);
+        *a >>= bits;
+        v
+    }
+
+    /// Seed mapper logic, field by field, for parity locking.
+    fn reference_map(cfg: &DramConfig, addr: u64) -> DramCoord {
+        let ilog2 = |x: u64| {
+            assert!(x.is_power_of_two(), "{x} must be a power of two");
+            x.trailing_zeros()
+        };
+        let mut a = addr / crate::trace::LINE_SIZE;
+        let col_bits = ilog2(cfg.row_bytes / crate::trace::LINE_SIZE);
+        match cfg.addr_map {
+            AddrMap::RoBaRaCoCh => {
+                let channel = take(&mut a, ilog2(cfg.channels));
+                let _col = take(&mut a, col_bits);
+                let rank = take(&mut a, ilog2(cfg.ranks));
+                let bank = take(&mut a, ilog2(cfg.banks));
+                let row = a % cfg.rows_per_bank;
+                DramCoord { channel, rank, bank, row }
+            }
+            AddrMap::ChRaBaRoCo => {
+                let _col = take(&mut a, col_bits);
+                let row = take(&mut a, ilog2(cfg.rows_per_bank));
+                let bank = take(&mut a, ilog2(cfg.banks));
+                let rank = take(&mut a, ilog2(cfg.ranks));
+                let channel = take(&mut a, ilog2(cfg.channels));
+                DramCoord { channel, rank, bank, row }
+            }
+        }
+    }
+
+    #[test]
+    fn precomputed_map_matches_sequential_reference() {
+        let configs = [
+            DramConfig::default(),
+            DramConfig { addr_map: AddrMap::ChRaBaRoCo, ..Default::default() },
+            DramConfig { channels: 2, ranks: 2, banks: 8, ..Default::default() },
+            DramConfig {
+                channels: 4,
+                ranks: 2,
+                banks: 8,
+                row_bytes: 2 * 1024,
+                rows_per_bank: 64 * 1024,
+                addr_map: AddrMap::ChRaBaRoCo,
+                ..Default::default()
+            },
+            DramConfig { row_bytes: 64, rows_per_bank: 1, ..Default::default() },
+        ];
+        let mut rng = crate::util::Pcg64::new(0xD12A);
+        for cfg in &configs {
+            let d = Dram::new(cfg.clone());
+            for _ in 0..20_000 {
+                let addr = rng.below(1 << 40);
+                assert_eq!(
+                    d.map(addr),
+                    reference_map(cfg, addr),
+                    "mapper diverged for addr {addr:#x} under {cfg:?}"
+                );
+            }
+            // boundary addresses
+            for addr in [0, 63, 64, u64::MAX, u64::MAX - 63, 1 << 33] {
+                assert_eq!(d.map(addr), reference_map(cfg, addr), "{addr:#x} under {cfg:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn non_power_of_two_geometry_is_an_error_not_a_silent_mismap() {
+        let bad = DramConfig { banks: 12, ..Default::default() };
+        let err = Dram::try_new(bad).unwrap_err().to_string();
+        assert!(err.contains("power of two"), "{err}");
+
+        let bad = DramConfig {
+            rows_per_bank: 3000,
+            addr_map: AddrMap::ChRaBaRoCo,
+            ..Default::default()
+        };
+        let err = Dram::try_new(bad).unwrap_err().to_string();
+        assert!(err.contains("rows_per_bank"), "{err}");
+
+        // ...but a non-power-of-two rows_per_bank is fine under
+        // RoBaRaCoCh, where the row is a modulo, not a bit field
+        let ok = DramConfig { rows_per_bank: 3000, ..Default::default() };
+        let d = Dram::try_new(ok.clone()).unwrap();
+        assert_eq!(d.map(1 << 38), reference_map(&ok, 1 << 38));
+
+        assert!(Dram::try_new(DramConfig { rows_per_bank: 0, ..Default::default() }).is_err());
+        assert!(Dram::try_new(DramConfig { row_bytes: 32, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn low_mask_is_total_over_bit_widths() {
+        assert_eq!(low_mask(0), 0);
+        assert_eq!(low_mask(1), 1);
+        assert_eq!(low_mask(7), 0x7F);
+        assert_eq!(low_mask(64), u64::MAX);
+    }
 
     fn dram() -> Dram {
         Dram::new(DramConfig::default())

@@ -220,17 +220,30 @@ impl EventBlock {
         }
     }
 
+    /// Append `run` copies of `kind` to the tag lane **only** — the bulk
+    /// materialization step of the trace-store decoder, which replays an
+    /// RLE run as one `resize` fill instead of `run` per-event pushes.
+    /// The caller owns keeping the payload lanes consistent (the decoder
+    /// fills each lane to the tag-lane counts before handing the block
+    /// out).
+    #[inline]
+    pub fn extend_kind_run(&mut self, kind: EventKind, run: usize) {
+        self.kinds.resize(self.kinds.len() + run, kind);
+    }
+
     /// Reconstruct the interleaved event stream in emission order.
     pub fn iter(&self) -> EventBlockIter<'_> {
         EventBlockIter { block: self, pos: 0, cur: LaneCursors::default() }
     }
 
-    /// Reassemble a block from already-separated lanes (the trace-store
-    /// decode path, which materializes each lane from its on-disk
-    /// encoding and must not pay a per-event re-dispatch through
-    /// [`EventBlock::push_event`]). The per-kind counts in `kinds` must
-    /// match the lane lengths; this is debug-asserted, and a decoder
-    /// validates it before calling.
+    /// Reassemble a block from already-separated lanes without paying a
+    /// per-event re-dispatch through [`EventBlock::push_event`]. (The
+    /// trace-store decoder once built blocks this way; it now decodes
+    /// into an existing block's lanes in place — see
+    /// [`decode_block`](crate::trace::store::decode_block) — so this
+    /// remains for adapters and tests that assemble lanes wholesale.)
+    /// The per-kind counts in `kinds` must match the lane lengths; this
+    /// is debug-asserted.
     #[allow(clippy::too_many_arguments)] // one parameter per lane, by design
     pub fn from_lanes(
         kinds: Vec<EventKind>,

@@ -11,11 +11,16 @@
 //! stream to a compact columnar file (record once) and [`ReplaySource`] /
 //! [`CapturedTrace`] feed it back into any [`BlockSink`] (replay many) —
 //! the foundation of the grid driver's record-once/replay-many mode.
+//! [`pipeline`] overlaps that ingest: an I/O thread and a decoder pool
+//! feed the consuming sink in recorded order ([`PipelinedIngest`]), with
+//! scratch recycled through a [`BlockPool`], for the same bit-identical
+//! block stream at multi-threaded throughput.
 
 pub mod addr;
 pub mod block;
 pub mod event;
 pub mod mix;
+pub mod pipeline;
 pub mod recorder;
 pub mod store;
 
@@ -26,6 +31,7 @@ pub use block::{
 };
 pub use event::{Event, NullSink, Sink, Tee, VecSink};
 pub use mix::InstructionMix;
+pub use pipeline::{resolve_ingest_threads, BlockPool, PipelinedIngest};
 pub use recorder::Recorder;
 pub use store::{
     CapturedTrace, ReplaySource, ReplayStats, TraceMeta, TraceReader, TraceSummary, TraceWriter,

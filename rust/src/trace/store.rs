@@ -59,8 +59,8 @@
 
 use super::block::{BlockSink, BranchRec, EventBlock, EventKind, LoadRec, StoreRec, BLOCK_EVENTS};
 use crate::util::binio::{
-    fnv1a64, get_ivarint, get_uvarint, put_ivarint, put_uvarint, read_u16, read_u32, read_u64,
-    read_u8, write_u64,
+    fnv1a64, put_ivarint, put_uvarint, read_u16, read_u32, read_u64, read_u8, write_u64,
+    ByteCursor,
 };
 use crate::util::error::{Context, Result};
 use crate::workloads::LibraryProfile;
@@ -168,18 +168,16 @@ pub fn encode_block(block: &EventBlock, buf: &mut Vec<u8>) {
     // Tag lane, run-length encoded: inner loops emit long runs of the
     // same kind (a counted loop is one LoopBranch run; a row scan is a
     // Load/Compute alternation), so runs compress the order information
-    // far below one byte per event.
+    // far below one byte per event. Run detection scans a subslice per
+    // run (one bounds check up front, not one per element).
     let kinds = block.kinds();
     let mut i = 0;
     while i < kinds.len() {
         let k = kinds[i];
-        let mut j = i + 1;
-        while j < kinds.len() && kinds[j] == k {
-            j += 1;
-        }
+        let run = 1 + kinds[i + 1..].iter().take_while(|&&x| x == k).count();
         buf.push(k as u8);
-        put_uvarint(buf, (j - i) as u64);
-        i = j;
+        put_uvarint(buf, run as u64);
+        i += run;
     }
 
     for &(int_ops, fp_ops) in &block.compute {
@@ -220,108 +218,112 @@ pub fn encode_block(block: &EventBlock, buf: &mut Vec<u8>) {
     }
 }
 
-fn get_u32_field(buf: &[u8], pos: &mut usize, what: &str) -> Result<u32> {
-    let v = get_uvarint(buf, pos)?;
+fn u32_field(cur: &mut ByteCursor<'_>, what: &str) -> Result<u32> {
+    let v = cur.uvarint()?;
     u32::try_from(v).map_err(|_| anyhow!("{what} {v} overflows u32"))
 }
 
-fn get_delta_base(buf: &[u8], pos: &mut usize, prev: &mut u64) -> Result<u64> {
-    *prev = prev.wrapping_add(get_ivarint(buf, pos)? as u64);
+fn delta_base(cur: &mut ByteCursor<'_>, prev: &mut u64) -> Result<u64> {
+    *prev = prev.wrapping_add(cur.ivarint()? as u64);
     Ok(*prev)
 }
 
 /// Decode one payload (as produced by [`encode_block`]) into `out`,
-/// replacing its contents. Every field is validated; a malformed payload
-/// yields an error, never a panic or a silently wrong block.
+/// replacing its contents **in place**: `out`'s lane buffers are cleared
+/// and refilled, so a caller that reuses one block (or a
+/// [`BlockPool`](super::pipeline::BlockPool)-recycled one) decodes an
+/// entire trace without any steady-state allocation. Every field is
+/// validated; a malformed payload yields an error, never a panic or a
+/// silently wrong block — on error `out` is left partially filled and
+/// must not be read.
 pub fn decode_block(buf: &[u8], out: &mut EventBlock) -> Result<()> {
-    let pos = &mut 0usize;
-    let n = get_uvarint(buf, pos)? as usize;
+    out.clear();
+    let cur = &mut ByteCursor::new(buf);
+    let n = cur.uvarint()? as usize;
     if n > BLOCK_EVENTS {
         bail!("block claims {n} events (format max {BLOCK_EVENTS})");
     }
 
-    let mut kinds: Vec<EventKind> = Vec::with_capacity(n);
+    // Tag lane: each RLE run materializes as one bulk fill.
     let mut counts = [0usize; 7];
-    while kinds.len() < n {
-        let Some(&kb) = buf.get(*pos) else {
-            bail!("truncated tag lane");
-        };
-        *pos += 1;
+    while out.len() < n {
+        let kb = cur.u8().map_err(|_| anyhow!("truncated tag lane"))?;
         let kind =
             EventKind::from_u8(kb).ok_or_else(|| anyhow!("invalid event kind byte {kb}"))?;
-        let run = get_uvarint(buf, pos)? as usize;
-        if run == 0 || kinds.len() + run > n {
+        let run = cur.uvarint()? as usize;
+        if run == 0 || run > n - out.len() {
             bail!("tag-lane run of {run} inconsistent with event count {n}");
         }
         counts[kb as usize] += run;
-        kinds.resize(kinds.len() + run, kind);
+        out.extend_kind_run(kind, run);
     }
 
-    let mut compute = Vec::with_capacity(counts[EventKind::Compute as usize]);
-    for _ in 0..counts[EventKind::Compute as usize] {
-        let int_ops = get_u32_field(buf, pos, "int_ops")?;
-        let fp_ops = get_u32_field(buf, pos, "fp_ops")?;
-        compute.push((int_ops, fp_ops));
+    let n_compute = counts[EventKind::Compute as usize];
+    out.compute.reserve(n_compute);
+    for _ in 0..n_compute {
+        let int_ops = u32_field(cur, "int_ops")?;
+        let fp_ops = u32_field(cur, "fp_ops")?;
+        out.compute.push((int_ops, fp_ops));
     }
 
-    let mut serial = Vec::with_capacity(counts[EventKind::Serial as usize]);
-    for _ in 0..counts[EventKind::Serial as usize] {
-        serial.push(get_u32_field(buf, pos, "serial ops")?);
+    let n_serial = counts[EventKind::Serial as usize];
+    out.serial.reserve(n_serial);
+    for _ in 0..n_serial {
+        out.serial.push(u32_field(cur, "serial ops")?);
     }
 
-    let mut loads = Vec::with_capacity(counts[EventKind::Load as usize]);
+    let n_loads = counts[EventKind::Load as usize];
+    out.loads.reserve(n_loads);
     let mut prev = 0u64;
-    for _ in 0..counts[EventKind::Load as usize] {
-        let addr = get_delta_base(buf, pos, &mut prev)?;
-        let raw = get_uvarint(buf, pos)?;
+    for _ in 0..n_loads {
+        let addr = delta_base(cur, &mut prev)?;
+        let raw = cur.uvarint()?;
         let size = u32::try_from(raw >> 1).map_err(|_| anyhow!("load size overflows u32"))?;
-        loads.push(LoadRec { addr, size, feeds_branch: raw & 1 != 0 });
+        out.loads.push(LoadRec { addr, size, feeds_branch: raw & 1 != 0 });
     }
 
-    let mut stores = Vec::with_capacity(counts[EventKind::Store as usize]);
+    let n_stores = counts[EventKind::Store as usize];
+    out.stores.reserve(n_stores);
     let mut prev = 0u64;
-    for _ in 0..counts[EventKind::Store as usize] {
-        let addr = get_delta_base(buf, pos, &mut prev)?;
-        let size = get_u32_field(buf, pos, "store size")?;
-        stores.push(StoreRec { addr, size });
+    for _ in 0..n_stores {
+        let addr = delta_base(cur, &mut prev)?;
+        let size = u32_field(cur, "store size")?;
+        out.stores.push(StoreRec { addr, size });
     }
 
-    let mut branches = Vec::with_capacity(counts[EventKind::Branch as usize]);
+    let n_branches = counts[EventKind::Branch as usize];
+    out.branches.reserve(n_branches);
     let mut prev = 0u64;
-    for _ in 0..counts[EventKind::Branch as usize] {
-        let site_w = get_delta_base(buf, pos, &mut prev)?;
+    for _ in 0..n_branches {
+        let site_w = delta_base(cur, &mut prev)?;
         let site = u32::try_from(site_w).map_err(|_| anyhow!("branch site overflows u32"))?;
-        let Some(&flags) = buf.get(*pos) else {
-            bail!("truncated branch flags");
-        };
-        *pos += 1;
+        let flags = cur.u8().map_err(|_| anyhow!("truncated branch flags"))?;
         if flags > 0b11 {
             bail!("invalid branch flags byte {flags:#x}");
         }
-        branches.push(BranchRec { site, taken: flags & 1 != 0, conditional: flags & 2 != 0 });
+        out.branches.push(BranchRec { site, taken: flags & 1 != 0, conditional: flags & 2 != 0 });
     }
 
-    let mut loop_branches = Vec::with_capacity(counts[EventKind::LoopBranch as usize]);
+    let n_loops = counts[EventKind::LoopBranch as usize];
+    out.loop_branches.reserve(n_loops);
     let mut prev = 0u64;
-    for _ in 0..counts[EventKind::LoopBranch as usize] {
-        let site_w = get_delta_base(buf, pos, &mut prev)?;
+    for _ in 0..n_loops {
+        let site_w = delta_base(cur, &mut prev)?;
         let site = u32::try_from(site_w).map_err(|_| anyhow!("loop site overflows u32"))?;
-        let count = get_u32_field(buf, pos, "loop count")?;
-        loop_branches.push((site, count));
+        let count = u32_field(cur, "loop count")?;
+        out.loop_branches.push((site, count));
     }
 
-    let mut prefetches = Vec::with_capacity(counts[EventKind::SwPrefetch as usize]);
+    let n_prefetches = counts[EventKind::SwPrefetch as usize];
+    out.prefetches.reserve(n_prefetches);
     let mut prev = 0u64;
-    for _ in 0..counts[EventKind::SwPrefetch as usize] {
-        prefetches.push(get_delta_base(buf, pos, &mut prev)?);
+    for _ in 0..n_prefetches {
+        out.prefetches.push(delta_base(cur, &mut prev)?);
     }
 
-    if *pos != buf.len() {
-        bail!("{} trailing bytes after block payload", buf.len() - *pos);
+    if !cur.is_empty() {
+        bail!("{} trailing bytes after block payload", cur.remaining());
     }
-    *out = EventBlock::from_lanes(
-        kinds, compute, serial, loads, stores, branches, loop_branches, prefetches,
-    );
     Ok(())
 }
 
@@ -371,15 +373,20 @@ impl TraceWriter {
     }
 
     fn try_consume(&mut self, block: &EventBlock) -> Result<()> {
+        // one scratch buffer reused across every block (cleared, never
+        // reallocated at steady state), one write for the whole 13-byte
+        // frame header instead of three
         self.scratch.clear();
         encode_block(block, &mut self.scratch);
-        self.out.write_all(&[BLOCK_MARKER])?;
-        self.out.write_all(&(self.scratch.len() as u32).to_le_bytes())?;
-        write_u64(&mut self.out, fnv1a64(&self.scratch))?;
+        let mut head = [0u8; 13];
+        head[0] = BLOCK_MARKER;
+        head[1..5].copy_from_slice(&(self.scratch.len() as u32).to_le_bytes());
+        head[5..13].copy_from_slice(&fnv1a64(&self.scratch).to_le_bytes());
+        self.out.write_all(&head)?;
         self.out.write_all(&self.scratch)?;
         self.blocks += 1;
         self.events += block.len() as u64;
-        self.bytes += 1 + 4 + 8 + self.scratch.len() as u64;
+        self.bytes += head.len() as u64 + self.scratch.len() as u64;
         Ok(())
     }
 
@@ -486,13 +493,14 @@ impl TraceReader {
         self.events_read
     }
 
-    /// Decode the next block into `block` (replacing its contents).
-    /// Returns `Ok(false)` once the validated end-of-trace trailer has
-    /// been consumed; every error path names what was inconsistent.
-    pub fn next_block(&mut self, block: &mut EventBlock) -> Result<bool> {
-        if self.done {
-            return Ok(false);
-        }
+    /// Read the next frame into `payload` (replacing its contents),
+    /// verifying the per-block checksum but **not** decoding — the split
+    /// that lets the pipelined ingest's I/O thread read and checksum
+    /// while a decoder pool does the columnar work
+    /// ([`super::pipeline::PipelinedIngest`]). Validates the trailer's
+    /// block count; the caller owns checking the trailer's event total
+    /// against what it decodes.
+    pub(crate) fn next_frame_into(&mut self, payload: &mut Vec<u8>) -> Result<Frame> {
         let marker = read_u8(&mut self.inp).context("reading block marker")?;
         match marker {
             BLOCK_MARKER => {
@@ -501,36 +509,72 @@ impl TraceReader {
                     bail!("block {}: payload length {len} exceeds format cap", self.blocks_read);
                 }
                 let checksum = read_u64(&mut self.inp)?;
-                self.payload.resize(len, 0);
+                // reuse the buffer's capacity: resize only zero-fills a
+                // grown region, and read_exact overwrites it anyway
+                payload.resize(len, 0);
                 self.inp
-                    .read_exact(&mut self.payload)
+                    .read_exact(payload)
                     .with_context(|| format!("block {}: truncated payload", self.blocks_read))?;
-                if fnv1a64(&self.payload) != checksum {
+                if fnv1a64(payload) != checksum {
                     bail!("block {}: checksum mismatch (corrupted trace)", self.blocks_read);
                 }
-                decode_block(&self.payload, block)
-                    .with_context(|| format!("decoding block {}", self.blocks_read))?;
                 self.blocks_read += 1;
-                self.events_read += block.len() as u64;
-                Ok(true)
+                Ok(Frame::Block)
             }
             END_MARKER => {
                 let events = read_u64(&mut self.inp)?;
                 let blocks = read_u64(&mut self.inp)?;
-                if events != self.events_read || blocks != self.blocks_read {
+                if blocks != self.blocks_read {
                     bail!(
-                        "trace trailer mismatch: trailer says {blocks} blocks / {events} \
-                         events, stream held {} / {}",
-                        self.blocks_read,
-                        self.events_read
+                        "trace trailer mismatch: trailer says {blocks} blocks, stream held {}",
+                        self.blocks_read
                     );
                 }
                 self.done = true;
-                Ok(false)
+                Ok(Frame::End { events, blocks })
             }
             other => bail!("corrupt trace: unexpected marker byte {other:#04x}"),
         }
     }
+
+    /// Decode the next block into `block` (replacing its contents).
+    /// Returns `Ok(false)` once the validated end-of-trace trailer has
+    /// been consumed; every error path names what was inconsistent.
+    pub fn next_block(&mut self, block: &mut EventBlock) -> Result<bool> {
+        if self.done {
+            return Ok(false);
+        }
+        let mut payload = std::mem::take(&mut self.payload);
+        let frame = self.next_frame_into(&mut payload);
+        self.payload = payload;
+        match frame? {
+            Frame::Block => {
+                decode_block(&self.payload, block)
+                    .with_context(|| format!("decoding block {}", self.blocks_read - 1))?;
+                self.events_read += block.len() as u64;
+                Ok(true)
+            }
+            Frame::End { events, .. } => {
+                if events != self.events_read {
+                    bail!(
+                        "trace trailer mismatch: trailer says {events} events, stream held {}",
+                        self.events_read
+                    );
+                }
+                Ok(false)
+            }
+        }
+    }
+}
+
+/// One framed record of the on-disk stream, as surfaced by
+/// [`TraceReader::next_frame_into`].
+pub(crate) enum Frame {
+    /// A checksum-verified block payload now sits in the caller's buffer.
+    Block,
+    /// The end-of-trace trailer (totals as written; block count already
+    /// validated against the stream).
+    End { events: u64, blocks: u64 },
 }
 
 /// Outcome of one replay pump.

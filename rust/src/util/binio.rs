@@ -86,6 +86,80 @@ pub fn get_uvarint(buf: &[u8], pos: &mut usize) -> Result<u64> {
     }
 }
 
+/// Borrowed slice cursor over an encoded buffer: the hot-path decode API.
+///
+/// [`get_uvarint`]-style free functions re-check `buf.get(*pos)` once per
+/// byte inside a generic loop; the per-record decode loops in
+/// [`crate::trace::store`] spend most of their time there. The cursor
+/// keeps `(buf, pos)` together and gives varint decoding an unrolled
+/// fast path for the 1–2-byte encodings (sizes, flags, small deltas —
+/// the overwhelming majority of trace fields), falling back to the
+/// reference loop only for wider values and for every error path, so the
+/// two can never disagree (a property test pits them against each other
+/// on random and adversarial inputs).
+#[derive(Debug)]
+pub struct ByteCursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteCursor<'a> {
+    #[inline]
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes consumed so far.
+    #[inline]
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Bytes left unread.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.pos >= self.buf.len()
+    }
+
+    /// Read one raw byte.
+    #[inline]
+    pub fn u8(&mut self) -> Result<u8> {
+        let Some(&b) = self.buf.get(self.pos) else {
+            bail!("truncated field at byte {}", self.pos);
+        };
+        self.pos += 1;
+        Ok(b)
+    }
+
+    /// Decode a LEB128 unsigned varint. Identical semantics to
+    /// [`get_uvarint`]; the 1–2-byte encodings take the unrolled path.
+    #[inline]
+    pub fn uvarint(&mut self) -> Result<u64> {
+        match &self.buf[self.pos..] {
+            [b0, ..] if *b0 < 0x80 => {
+                self.pos += 1;
+                Ok(u64::from(*b0))
+            }
+            [b0, b1, ..] if *b1 < 0x80 => {
+                self.pos += 2;
+                Ok(u64::from(*b0 & 0x7F) | (u64::from(*b1) << 7))
+            }
+            _ => get_uvarint(self.buf, &mut self.pos),
+        }
+    }
+
+    /// Decode a zigzag-varint signed delta (see [`get_ivarint`]).
+    #[inline]
+    pub fn ivarint(&mut self) -> Result<i64> {
+        Ok(unzigzag(self.uvarint()?))
+    }
+}
+
 /// Zigzag-map a signed delta so small magnitudes of either sign encode to
 /// short varints (0 → 0, -1 → 1, 1 → 2, -2 → 3, ...).
 pub fn zigzag(v: i64) -> u64 {
@@ -190,6 +264,51 @@ mod tests {
             let mut pos = 0;
             assert_eq!(get_ivarint(&buf, &mut pos).unwrap(), v);
         }
+    }
+
+    #[test]
+    fn cursor_matches_reference_decoder() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 300, 16_383, 16_384, 1 << 21, u32::MAX as u64, u64::MAX];
+        for &v in &vals {
+            put_uvarint(&mut buf, v);
+        }
+        let mut cur = ByteCursor::new(&buf);
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(cur.uvarint().unwrap(), v);
+            assert_eq!(get_uvarint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(cur.pos(), pos, "cursor and reference diverged after {v}");
+        }
+        assert!(cur.is_empty());
+        assert_eq!(cur.remaining(), 0);
+    }
+
+    #[test]
+    fn cursor_signed_and_raw_bytes() {
+        let mut buf = Vec::new();
+        put_ivarint(&mut buf, -77);
+        buf.push(0xAB);
+        put_ivarint(&mut buf, i64::MIN);
+        let mut cur = ByteCursor::new(&buf);
+        assert_eq!(cur.ivarint().unwrap(), -77);
+        assert_eq!(cur.u8().unwrap(), 0xAB);
+        assert_eq!(cur.ivarint().unwrap(), i64::MIN);
+        assert!(cur.u8().is_err(), "reading past the end must error");
+    }
+
+    #[test]
+    fn cursor_rejects_truncation_without_advancing_past_end() {
+        // continuation bit set on the final byte: 1-byte and 2-byte
+        // truncations exercise both unrolled arms' fallbacks
+        for bad in [&[0x80u8][..], &[0x80, 0x80][..]] {
+            let mut cur = ByteCursor::new(bad);
+            assert!(cur.uvarint().is_err(), "{bad:?} decoded");
+        }
+        let mut eleven = vec![0x80u8; 10];
+        eleven.push(0x01);
+        let mut cur = ByteCursor::new(&eleven);
+        assert!(cur.uvarint().is_err(), "11-byte varint must overflow");
     }
 
     #[test]

@@ -1,0 +1,181 @@
+//! Staged-ingest and fan-out-scheduling parity tests: the pipelined
+//! trace reader must deliver the *identical block sequence* (and
+//! therefore bit-identical `Metrics`) as the synchronous path for real
+//! workload traces under scenario mutations, and the intra-capture
+//! fan-out grid scheduler must be output-identical to the grouped
+//! scheduler and to direct execution.
+
+use mlperf::coordinator::{
+    characterize_with, record_characterize, replay_file, run_jobs, run_jobs_replayed,
+    run_jobs_replayed_grouped, ExperimentConfig, Job, Scenario,
+};
+use mlperf::sim::CpuConfig;
+use mlperf::trace::{BlockPool, BlockSink, EventBlock, PipelinedIngest, ReplaySource};
+use mlperf::workloads::by_name;
+
+fn tiny() -> ExperimentConfig {
+    ExperimentConfig { scale: 0.02, iterations: 1, ..Default::default() }
+}
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("mlperf-ingest-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Sink cloning every delivered block: the strongest parity witness —
+/// same blocks, same boundaries, same order.
+#[derive(Default)]
+struct BlockLog {
+    blocks: Vec<EventBlock>,
+    finalized: bool,
+}
+
+impl BlockSink for BlockLog {
+    fn consume(&mut self, block: &EventBlock) {
+        self.blocks.push(block.clone());
+    }
+    fn finalize(&mut self) {
+        self.finalized = true;
+    }
+}
+
+#[test]
+fn pipelined_ingest_is_bit_identical_for_real_workloads_and_scenarios() {
+    let cfg = tiny();
+    let scenarios: [(&str, fn(&mut CpuConfig)); 2] = [
+        ("perfect-l2", |c| c.cache.perfect_l2 = true),
+        ("no-hw-prefetch", |c| c.cache.hw_prefetch = false),
+    ];
+    for name in ["KMeans", "KNN", "Decision Tree"] {
+        let w = by_name(name).unwrap();
+        let path = tmpfile(&format!("{}.mlt", name.replace(' ', "_")));
+        record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
+
+        // block-sequence parity, independent of any simulator
+        let mut sync_log = BlockLog::default();
+        ReplaySource::open(&path).unwrap().replay_into(&mut sync_log).unwrap();
+        let mut pipe_log = BlockLog::default();
+        let stats =
+            PipelinedIngest::open(&path, 3).unwrap().replay_into(&mut pipe_log).unwrap();
+        assert!(!sync_log.blocks.is_empty(), "{name}: trivial trace");
+        assert_eq!(
+            sync_log.blocks, pipe_log.blocks,
+            "{name}: pipelined ingest altered the block sequence"
+        );
+        assert_eq!(stats.blocks as usize, pipe_log.blocks.len());
+        assert!(sync_log.finalized && pipe_log.finalized);
+
+        // Metrics parity under scenario mutations, vs direct execution
+        for (scenario, mutate) in scenarios {
+            let direct = characterize_with(w.as_ref(), &cfg, false, None, None, mutate);
+            let sync_cfg = ExperimentConfig { ingest_threads: 1, ..tiny() };
+            let (_, sync_m, _) = replay_file(&path, &sync_cfg, mutate).unwrap();
+            for threads in [0usize, 2, 4] {
+                let pipe_cfg = ExperimentConfig { ingest_threads: threads, ..tiny() };
+                let (_, pipe_m, _) = replay_file(&path, &pipe_cfg, mutate).unwrap();
+                assert_eq!(
+                    pipe_m, sync_m,
+                    "{name}/{scenario}: pipelined ({threads} threads) != synchronous"
+                );
+            }
+            assert_eq!(
+                sync_m, direct.metrics,
+                "{name}/{scenario}: replay != direct execution"
+            );
+        }
+    }
+}
+
+#[test]
+fn block_pool_recycles_cleared() {
+    let pool = BlockPool::new();
+    let mut b = pool.get_block();
+    b.push_load(0x40, 8, false);
+    b.push_store(0x80, 16);
+    b.push_prefetch(0x1000);
+    pool.put_block(b);
+    let b = pool.get_block();
+    assert!(b.is_empty(), "recycled block must be cleared");
+    assert!(
+        b.loads.is_empty() && b.stores.is_empty() && b.prefetches.is_empty(),
+        "every lane must be cleared"
+    );
+    assert_eq!(b.iter().count(), 0);
+}
+
+#[test]
+fn fanout_scheduler_matches_grouped_and_direct() {
+    let cfg = tiny();
+    // few workloads × many scenario columns (the convoy shape), plus a
+    // prefetch-variant cell and a non-replayable multicore cell
+    let mut jobs: Vec<Job> = Vec::new();
+    for w in ["KMeans", "KNN"] {
+        for s in [
+            Scenario::Baseline,
+            Scenario::PerfectL2,
+            Scenario::PerfectLlc,
+            Scenario::NoHwPrefetch,
+            Scenario::DramIdealRows,
+        ] {
+            jobs.push(Job::new(w, s));
+        }
+    }
+    jobs.push(Job::new("KMeans", Scenario::SwPrefetch));
+    jobs.push(Job::new("GMM", Scenario::Multicore(2)));
+
+    let direct = run_jobs(&cfg, &jobs, 2);
+    let grouped = run_jobs_replayed_grouped(&cfg, &jobs, 3);
+    let fanout = run_jobs_replayed(&cfg, &jobs, 4);
+
+    // 2 captures (5 cells each) + SwPrefetch single-cell direct +
+    // multicore direct = 4 executions in both replay modes
+    assert_eq!(grouped.workload_executions, 4);
+    assert_eq!(fanout.workload_executions, 4);
+    assert_eq!(fanout.outputs.len(), jobs.len());
+
+    for ((d, g), f) in direct.outputs.iter().zip(&grouped.outputs).zip(&fanout.outputs) {
+        assert_eq!(d.job, g.job);
+        assert_eq!(d.job, f.job, "output order must equal input order");
+        assert_eq!(d.metrics, g.metrics, "grouped diverged for {:?}", d.job);
+        assert_eq!(d.metrics, f.metrics, "fan-out diverged for {:?}", d.job);
+        assert_eq!(d.quality, f.quality);
+    }
+}
+
+#[test]
+fn fanout_scheduler_handles_single_thread_and_many_threads() {
+    let cfg = tiny();
+    let jobs = vec![
+        Job::new("KMeans", Scenario::Baseline),
+        Job::new("KMeans", Scenario::PerfectL2),
+        Job::new("KMeans", Scenario::PerfectLlc),
+        Job::new("KMeans", Scenario::DramIdealRows),
+    ];
+    let one = run_jobs_replayed(&cfg, &jobs, 1);
+    assert_eq!(one.workload_executions, 1);
+    let many = run_jobs_replayed(&cfg, &jobs, 16);
+    assert_eq!(many.workload_executions, 1);
+    for (a, b) in one.outputs.iter().zip(&many.outputs) {
+        assert_eq!(a.job, b.job);
+        assert_eq!(a.metrics, b.metrics);
+    }
+}
+
+#[test]
+fn ingest_threads_knob_never_changes_replay_results() {
+    let cfg = tiny();
+    let w = by_name("GMM").unwrap();
+    let path = tmpfile("gmm_knob.mlt");
+    record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
+    let mut reference = None;
+    for threads in [1usize, 2, 3, 8] {
+        let c = ExperimentConfig { ingest_threads: threads, ..tiny() };
+        let (_, m, stats) = replay_file(&path, &c, |_| {}).unwrap();
+        assert!(stats.events > 0);
+        match &reference {
+            None => reference = Some(m),
+            Some(r) => assert_eq!(&m, r, "ingest_threads={threads} changed Metrics"),
+        }
+    }
+}

@@ -9,6 +9,7 @@ use mlperf::data::make_blobs;
 use mlperf::reorder::{compute_plan, sfc, ReorderKind};
 use mlperf::sim::{AddrMap, CpuConfig, Dram, DramConfig, Hierarchy, HierarchyConfig, PipelineSim};
 use mlperf::trace::{Event, Recorder, Sink};
+use mlperf::util::binio::{get_ivarint, get_uvarint, put_ivarint, put_uvarint, ByteCursor};
 use mlperf::util::Pcg64;
 use mlperf::workloads::{by_name, RunContext};
 
@@ -215,4 +216,95 @@ fn prop_workload_traces_deterministic() {
         };
         assert_eq!(run(), run(), "{name} trace must be deterministic");
     });
+}
+
+/// Codec invariant: the `ByteCursor` unrolled varint fast path agrees
+/// with the reference `get_uvarint`/`get_ivarint` decoders on *every*
+/// input — encoded values across the full width spectrum, random byte
+/// soup, and adversarial cases (max-width, overlong, truncated). Both
+/// must produce the same value and end position, or both must error.
+#[test]
+fn prop_varint_fast_path_matches_reference() {
+    // 1. round-trips of random values, biased toward the 1–2-byte range
+    //    the fast path covers
+    sweep("varint-roundtrip", 8, |rng, _| {
+        let mut buf = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..500 {
+            // pick an encoded width first so 1–2-byte values (the fast
+            // path) and 9–10-byte values (the slow path) both get dense
+            // coverage
+            let bits = 7 * (1 + rng.index(10) as u32);
+            let v = rng.below(u64::MAX >> (64 - bits.min(64)));
+            vals.push(v);
+            put_uvarint(&mut buf, v);
+            let s = v as i64;
+            vals.push(s as u64);
+            put_ivarint(&mut buf, s);
+        }
+        let mut cur = ByteCursor::new(&buf);
+        let mut pos = 0usize;
+        for (i, &v) in vals.iter().enumerate() {
+            if i % 2 == 0 {
+                assert_eq!(cur.uvarint().unwrap(), v);
+                assert_eq!(get_uvarint(&buf, &mut pos).unwrap(), v);
+            } else {
+                assert_eq!(cur.ivarint().unwrap(), v as i64);
+                assert_eq!(get_ivarint(&buf, &mut pos).unwrap(), v as i64);
+            }
+            assert_eq!(cur.pos(), pos, "positions diverged at value {i}");
+        }
+        assert!(cur.is_empty());
+    });
+
+    // 2. random byte soup: at every start offset, fast path and
+    //    reference must agree on (value, end) or both reject
+    sweep("varint-soup", 8, |rng, seed| {
+        let bytes: Vec<u8> = (0..200).map(|_| rng.below(256) as u8).collect();
+        for start in 0..bytes.len() {
+            let mut cur = ByteCursor::new(&bytes[start..]);
+            let mut pos = 0usize;
+            let fast = cur.uvarint();
+            let reference = get_uvarint(&bytes[start..], &mut pos);
+            match (fast, reference) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a, b, "seed {seed:#x} offset {start}");
+                    assert_eq!(cur.pos(), pos, "seed {seed:#x} offset {start}");
+                }
+                (Err(_), Err(_)) => {}
+                (f, r) => panic!(
+                    "seed {seed:#x} offset {start}: fast {f:?} vs reference {r:?}"
+                ),
+            }
+        }
+    });
+
+    // 3. adversarial fixtures: max-width, overlong, truncated
+    let fixtures: &[&[u8]] = &[
+        &[],
+        &[0x80],
+        &[0x80, 0x80],
+        &[0xFF; 9],
+        b"\xFF\xFF\xFF\xFF\xFF\xFF\xFF\xFF\xFF\x01", // u64::MAX
+        b"\x80\x80\x80\x80\x80\x80\x80\x80\x80\x7E", // 10th byte too wide
+        b"\x80\x80\x80\x80\x80\x80\x80\x80\x80\x80\x01", // 11 bytes
+        &[0x00],
+        &[0x7F],
+        &[0x80, 0x01],
+        &[0x80, 0x80, 0x01],
+    ];
+    for &fx in fixtures {
+        let mut cur = ByteCursor::new(fx);
+        let mut pos = 0usize;
+        let fast = cur.uvarint();
+        let reference = get_uvarint(fx, &mut pos);
+        match (&fast, &reference) {
+            (Ok(a), Ok(b)) => {
+                assert_eq!(a, b, "{fx:?}");
+                assert_eq!(cur.pos(), pos, "{fx:?}");
+            }
+            (Err(_), Err(_)) => {}
+            _ => panic!("{fx:?}: fast {fast:?} vs reference {reference:?}"),
+        }
+    }
 }
