@@ -24,7 +24,12 @@
 //!   scenario-cell) unit scheduled independently across the worker pool
 //!   (intra-capture fan-out — a few-workload × many-scenario grid no
 //!   longer convoys behind one thread per group; at most `threads`
-//!   captures stay resident). Replay delivers the identical block
+//!   captures stay resident). When ready cells outnumber the pool,
+//!   same-capture cells are claimed as [`Broadcast`] batches — one walk
+//!   of the captured stream feeds several simulators
+//!   ([`super::replay_characterize_many`]) — so scenario columns beyond
+//!   the core count cost a fan-out, not a re-walk, per cell. Replay
+//!   delivers the identical block
 //!   stream the recording produced, so every cell's `Metrics` are
 //!   bit-identical to direct mode — scenario count no longer multiplies
 //!   workload execution time, which is what lets the grid grow toward
@@ -36,6 +41,7 @@
 //!
 //! [`by_name`]: crate::workloads::by_name
 //! [`CapturedTrace`]: crate::trace::CapturedTrace
+//! [`Broadcast`]: crate::trace::Broadcast
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -43,7 +49,7 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use super::{
     capture_trace, characterize_with, multicore_characterize, reorder_study, replay_characterize,
-    ExperimentConfig, RecordedRun,
+    replay_characterize_many, ExperimentConfig, RecordedRun,
 };
 use crate::ledger::{cell_fingerprint, Fingerprint, Ledger, LedgerRecord, Provenance};
 use crate::reorder::ReorderKind;
@@ -274,12 +280,12 @@ pub fn run_job(cfg: &ExperimentConfig, job: &Job) -> JobOutput {
     JobOutput { job: job.clone(), metrics, quality }
 }
 
-/// Shared worker-pool skeleton of both driver modes: claim unit indices
-/// `0..units` from an atomic cursor (work stealing by index, so long
-/// units do not convoy behind short ones) across up to `threads` OS
-/// threads (`0` = one per available core, capped at the unit count).
-/// Returns the thread count actually used.
-fn fan_out(units: usize, threads: usize, work: impl Fn(usize) + Sync) -> usize {
+/// Shared worker-pool skeleton of both driver modes (and the cache-sweep
+/// runner): claim unit indices `0..units` from an atomic cursor (work
+/// stealing by index, so long units do not convoy behind short ones)
+/// across up to `threads` OS threads (`0` = one per available core,
+/// capped at the unit count). Returns the thread count actually used.
+pub(crate) fn fan_out(units: usize, threads: usize, work: impl Fn(usize) + Sync) -> usize {
     let auto = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let requested = if threads == 0 { auto } else { threads };
     let threads_used = requested.min(units).max(1);
@@ -453,23 +459,48 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                         break;
                     }
                     // 1. replay cells first: they retire resident
-                    //    captures, which is what frees residency slots
+                    //    captures, which is what frees residency slots.
+                    //    Same-capture cells are claimed as a *broadcast
+                    //    batch* sized so the ready backlog spreads over
+                    //    the pool: with at least one worker per ready
+                    //    cell the batch is a single cell (pure
+                    //    intra-capture fan-out, the pre-broadcast
+                    //    scheduling), while a many-cells-per-worker
+                    //    backlog widens it so one walk of the captured
+                    //    stream feeds a whole bank of simulators.
                     if let Some((g, i)) = st.ready.pop_front() {
                         let rec =
                             st.recorded[g].clone().expect("ready cell implies resident capture");
+                        let mut batch = vec![i];
+                        // cells enqueue in one per-capture burst, so the
+                        // group's remaining cells sit contiguously at the
+                        // front of the queue
+                        let ready_in_group =
+                            1 + st.ready.iter().take_while(|&&(g2, _)| g2 == g).count();
+                        let take = ready_in_group.div_ceil(threads_used);
+                        while batch.len() < take {
+                            match st.ready.front() {
+                                Some(&(g2, _)) if g2 == g => {
+                                    batch.push(st.ready.pop_front().unwrap().1);
+                                }
+                                _ => break,
+                            }
+                        }
                         drop(st);
-                        let job = &jobs[i];
-                        let metrics =
-                            replay_characterize(&rec, cfg, |c| job.scenario.apply_cpu(c));
-                        *slots[i].lock().unwrap() = Some(JobOutput {
-                            job: job.clone(),
-                            metrics,
-                            quality: Some(rec.result.quality),
-                        });
+                        let scenarios: Vec<Scenario> =
+                            batch.iter().map(|&i| jobs[i].scenario).collect();
+                        let metrics = replay_characterize_many(&rec, cfg, &scenarios);
+                        for (&i, m) in batch.iter().zip(metrics) {
+                            *slots[i].lock().unwrap() = Some(JobOutput {
+                                job: jobs[i].clone(),
+                                metrics: m,
+                                quality: Some(rec.result.quality),
+                            });
+                        }
                         drop(rec);
                         st = state.lock().unwrap();
-                        st.completed += 1;
-                        st.remaining[g] -= 1;
+                        st.completed += batch.len();
+                        st.remaining[g] -= batch.len();
                         if st.remaining[g] == 0 {
                             st.recorded[g] = None;
                             st.resident -= 1;
@@ -762,6 +793,30 @@ mod tests {
         for (a, b) in direct.outputs.iter().zip(&replayed.outputs) {
             assert_eq!(a.job, b.job);
             assert_eq!(a.metrics, b.metrics, "replay diverged for {:?}", a.job);
+            assert_eq!(a.quality, b.quality);
+        }
+    }
+
+    #[test]
+    fn broadcast_batches_match_direct_on_one_thread() {
+        // threads = 1 with five ready cells per capture forces the widest
+        // broadcast batch — every cell of the group satisfied from one
+        // walk of the captured stream — which must stay bit-identical to
+        // direct per-cell execution
+        let cfg = tiny();
+        let jobs = vec![
+            Job::new("KNN", Scenario::Baseline),
+            Job::new("KNN", Scenario::PerfectL2),
+            Job::new("KNN", Scenario::PerfectLlc),
+            Job::new("KNN", Scenario::NoHwPrefetch),
+            Job::new("KNN", Scenario::DramIdealRows),
+        ];
+        let direct = run_jobs(&cfg, &jobs, 1);
+        let replayed = run_jobs_replayed(&cfg, &jobs, 1);
+        assert_eq!(replayed.workload_executions, 1, "five cells, one execution");
+        for (a, b) in direct.outputs.iter().zip(&replayed.outputs) {
+            assert_eq!(a.job, b.job);
+            assert_eq!(a.metrics, b.metrics, "broadcast batch diverged for {:?}", a.job);
             assert_eq!(a.quality, b.quality);
         }
     }

@@ -8,18 +8,20 @@
 //! are thin wrappers that format the results.
 
 pub mod driver;
+pub mod sweep;
 
 pub use driver::{
     full_grid, run_job, run_jobs, run_jobs_ledgered, run_jobs_replayed,
     run_jobs_replayed_grouped, standard_grid, DriverReport, Job, JobOutput, Scenario,
 };
+pub use sweep::{run_cache_sweep, SweepCell, SweepReport};
 
 use crate::data::Dataset;
 use crate::reorder::{compute_plan, ReorderKind, ReorderPlan};
 use crate::sim::{run_multicore, CpuConfig, Metrics, PipelineSim};
 use crate::trace::{
-    resolve_ingest_threads, BlockTee, CapturedTrace, NullSink, PipelinedIngest, Recorder,
-    ReplaySource, ReplayStats, TraceMeta, TraceSummary, TraceWriter,
+    resolve_ingest_threads, BlockSink, BlockTee, Broadcast, CapturedTrace, NullSink,
+    PipelinedIngest, Recorder, ReplaySource, ReplayStats, TraceMeta, TraceSummary, TraceWriter,
 };
 use crate::util::error::Result;
 use crate::workloads::{LibraryProfile, RunContext, RunResult, Workload};
@@ -234,6 +236,40 @@ pub fn replay_characterize(
     sim.metrics()
 }
 
+/// Broadcast counterpart of [`replay_characterize`]: satisfy every
+/// scenario in `scenarios` from **one** pass over the captured block
+/// stream — a [`Broadcast`] sink fans each block out to one fresh
+/// `PipelineSim` per scenario. Each simulator observes the identical
+/// stream it would see replayed alone, and each cell's CPU config goes
+/// through the exact [`replay_characterize`] discipline (scenario
+/// mutation first, then `auto_shrink` against the recorded footprint),
+/// so the returned `Metrics` are bit-identical to per-cell replay
+/// (`tests/broadcast.rs` gates this), in `scenarios` order.
+pub fn replay_characterize_many(
+    recorded: &RecordedRun,
+    cfg: &ExperimentConfig,
+    scenarios: &[Scenario],
+) -> Vec<Metrics> {
+    let mut sims: Vec<PipelineSim> = scenarios
+        .iter()
+        .map(|s| {
+            let mut cpu = cfg.cpu.clone();
+            s.apply_cpu(&mut cpu);
+            if cfg.auto_shrink {
+                shrink_hierarchy(&mut cpu, recorded.meta.dataset_bytes);
+            }
+            PipelineSim::new(cpu)
+        })
+        .collect();
+    {
+        let sinks: Vec<&mut dyn BlockSink> =
+            sims.iter_mut().map(|s| s as &mut dyn BlockSink).collect();
+        let mut bc = Broadcast::new(sinks);
+        recorded.trace.replay_into(&mut bc);
+    }
+    sims.iter().map(PipelineSim::metrics).collect()
+}
+
 /// `mlperf record`: run `w` once, streaming its trace to `path` while
 /// simultaneously simulating it (one execution yields both the trace
 /// artifact and the baseline metric table).
@@ -307,6 +343,55 @@ pub fn replay_file(
         Src::Pipelined(s) => s.replay_into(&mut sim)?,
     };
     Ok((meta, sim.metrics(), stats))
+}
+
+/// Broadcast counterpart of [`replay_file`]: one pass over the stored
+/// trace — one read, one checksum verification, one columnar decode —
+/// feeds a fresh `PipelineSim` per scenario through a [`Broadcast`]
+/// sink, returning per-scenario `Metrics` in `scenarios` order. The
+/// `ReplayStats` count the single shared decode, so `stats.blocks`
+/// equals the file's block count no matter how wide the fan-out
+/// (`tests/broadcast.rs` asserts it). Ingest staging follows
+/// `cfg.ingest_threads` exactly like [`replay_file`].
+pub fn replay_file_many(
+    path: &Path,
+    cfg: &ExperimentConfig,
+    scenarios: &[Scenario],
+) -> Result<(TraceMeta, Vec<Metrics>, ReplayStats)> {
+    enum Src {
+        Sync(ReplaySource),
+        Pipelined(PipelinedIngest),
+    }
+    let src = if resolve_ingest_threads(cfg.ingest_threads) > 1 {
+        Src::Pipelined(PipelinedIngest::open(path, cfg.ingest_threads)?)
+    } else {
+        Src::Sync(ReplaySource::open(path)?)
+    };
+    let meta = match &src {
+        Src::Sync(s) => s.meta().clone(),
+        Src::Pipelined(s) => s.meta().clone(),
+    };
+    let mut sims: Vec<PipelineSim> = scenarios
+        .iter()
+        .map(|s| {
+            let mut cpu = cfg.cpu.clone();
+            s.apply_cpu(&mut cpu);
+            if cfg.auto_shrink {
+                shrink_hierarchy(&mut cpu, meta.dataset_bytes);
+            }
+            PipelineSim::new(cpu)
+        })
+        .collect();
+    let stats = {
+        let sinks: Vec<&mut dyn BlockSink> =
+            sims.iter_mut().map(|s| s as &mut dyn BlockSink).collect();
+        let mut bc = Broadcast::new(sinks);
+        match src {
+            Src::Sync(s) => s.replay_into(&mut bc)?,
+            Src::Pipelined(s) => s.replay_into(&mut bc)?,
+        }
+    };
+    Ok((meta, sims.iter().map(PipelineSim::metrics).collect(), stats))
 }
 
 fn workload_ns(w: &dyn Workload) -> u32 {

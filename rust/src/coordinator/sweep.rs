@@ -1,0 +1,317 @@
+//! Cache-geometry sweep runner: `mlperf grid --sweep cache`.
+//!
+//! A conventional geometry sweep replays the trace once per (size ×
+//! associativity) cell. The [`StackProfiler`] collapses that to **one
+//! trace pass per workload**: each workload streams its demand-line
+//! stream through the reuse-distance profiler exactly once, and every
+//! geometry's exact-LRU miss count falls out of the per-set-class
+//! histograms in closed form (`sim::stack` module docs). This runner
+//! adds the grid plumbing: a worker pool over workloads
+//! ([`driver::fan_out`]), per-(workload × geometry) content addressing
+//! through the experiment ledger ([`sweep_cell_fingerprint`]), and the
+//! report the CLI renders as the miss-curve table / JSON artifact.
+//!
+//! Ledger granularity is per cell, but execution granularity is per
+//! workload: the single pass prices *all* geometries at once, so a
+//! workload re-runs iff **any** of its swept cells is missing — the
+//! still-cached cells are answered from the ledger and only the missing
+//! ones are appended.
+//!
+//! [`StackProfiler`]: crate::sim::StackProfiler
+//! [`driver::fan_out`]: super::driver::fan_out
+//! [`sweep_cell_fingerprint`]: crate::ledger::sweep_cell_fingerprint
+
+use std::sync::Mutex;
+
+use super::{driver::fan_out, workload_ns, ExperimentConfig};
+use crate::ledger::{sweep_cell_fingerprint, Fingerprint, Ledger, LedgerRecord, Provenance};
+use crate::sim::{Metrics, StackProfiler, SweepCurve, SweepGeometry};
+use crate::trace::{InstructionMix, Recorder};
+use crate::util::error::Result;
+use crate::workloads::by_name;
+
+/// One (workload × geometry) point of the sweep grid.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub workload: String,
+    pub geometry: SweepGeometry,
+    /// Demand line accesses — identical for every geometry of a workload
+    /// (one shared trace pass).
+    pub accesses: u64,
+    /// Exact-LRU demand misses at this geometry.
+    pub misses: u64,
+    pub fingerprint: Fingerprint,
+    /// Answered from the ledger without executing the workload.
+    pub cached: bool,
+}
+
+impl SweepCell {
+    pub fn miss_ratio(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// What [`run_cache_sweep`] hands back.
+#[derive(Debug)]
+pub struct SweepReport {
+    /// Workload-major, geometry order preserved — deterministic
+    /// regardless of worker interleaving.
+    pub cells: Vec<SweepCell>,
+    /// Workloads that actually executed (0 on a fully warmed ledger).
+    pub workload_executions: usize,
+    /// Cells answered straight from the ledger.
+    pub cached_cells: usize,
+    pub threads_used: usize,
+    pub wall_seconds: f64,
+}
+
+/// Resolve the full (workloads × geometries) miss-curve grid, executing
+/// each workload at most once (see the module docs). With a ledger,
+/// cached cells are served from disk bit-identically (`u64` counts
+/// round-trip exactly) and fresh cells are appended under
+/// `scenario = "sweep:<geometry>"` provenance.
+pub fn run_cache_sweep(
+    cfg: &ExperimentConfig,
+    workloads: &[String],
+    geometries: &[SweepGeometry],
+    threads: usize,
+    mut ledger: Option<&mut Ledger>,
+) -> Result<SweepReport> {
+    let t0 = std::time::Instant::now();
+    if workloads.is_empty() || geometries.is_empty() {
+        return Ok(SweepReport {
+            cells: Vec::new(),
+            workload_executions: 0,
+            cached_cells: 0,
+            threads_used: 1,
+            wall_seconds: t0.elapsed().as_secs_f64(),
+        });
+    }
+
+    // per-workload fingerprint row + which cells the ledger already holds
+    let fps: Vec<Vec<Fingerprint>> = workloads
+        .iter()
+        .map(|w| geometries.iter().map(|&g| sweep_cell_fingerprint(cfg, w, g)).collect())
+        .collect();
+    let cached_rows: Vec<Vec<Option<(u64, u64)>>> = fps
+        .iter()
+        .map(|row| {
+            row.iter()
+                .map(|&fp| {
+                    ledger.as_deref().and_then(|l| l.get(fp)).map(|rec| {
+                        // sweep cells pack (accesses, misses) into the
+                        // u64 metric slots — see the append below
+                        (rec.metrics.instructions, rec.metrics.mix.loads)
+                    })
+                })
+                .collect()
+        })
+        .collect();
+
+    // a workload executes iff any of its swept cells is missing
+    let need_run: Vec<usize> = (0..workloads.len())
+        .filter(|&wi| cached_rows[wi].iter().any(|c| c.is_none()))
+        .collect();
+    let curves: Vec<Mutex<Option<Vec<SweepCurve>>>> =
+        need_run.iter().map(|_| Mutex::new(None)).collect();
+
+    let threads_used = if need_run.is_empty() {
+        1
+    } else {
+        fan_out(need_run.len(), threads, |u| {
+            let name = &workloads[need_run[u]];
+            let w = by_name(name)
+                .unwrap_or_else(|| panic!("sweep: unknown workload {name:?}"));
+            let w = w.as_ref();
+            let ds = w.make_dataset(cfg.rows_for(w), cfg.features, cfg.seed);
+            let ctx = cfg.run_ctx();
+            let mut prof = StackProfiler::new(geometries);
+            {
+                let mut rec = Recorder::new(&mut prof, workload_ns(w));
+                rec.sw_prefetch_enabled = false;
+                rec.profile_overhead = ctx.profile.loop_overhead_uops();
+                w.run(&ds, &ctx, &mut rec);
+                rec.finish();
+            }
+            *curves[u].lock().unwrap() = Some(prof.curves());
+        })
+    };
+
+    // assemble cells in deterministic order; append fresh results
+    let unix_secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let wall_nanos = (t0.elapsed().as_nanos() as u64)
+        / (need_run.len().max(1) as u64 * geometries.len() as u64);
+    let mut cells = Vec::with_capacity(workloads.len() * geometries.len());
+    let mut cached_cells = 0;
+    for (wi, name) in workloads.iter().enumerate() {
+        let fresh: Option<Vec<SweepCurve>> = need_run
+            .iter()
+            .position(|&r| r == wi)
+            .map(|u| curves[u].lock().unwrap().take().expect("sweep worker filled its slot"));
+        for (gi, &g) in geometries.iter().enumerate() {
+            let fp = fps[wi][gi];
+            let (accesses, misses, cached) = match (cached_rows[wi][gi], &fresh) {
+                // a cached cell is served from the ledger even when the
+                // workload re-ran for a sibling geometry (equal by
+                // determinism; the test asserts it)
+                (Some((a, m)), _) => (a, m, true),
+                (None, Some(cs)) => {
+                    let c = cs[gi];
+                    debug_assert_eq!(c.geometry, g);
+                    (c.accesses, c.misses, false)
+                }
+                (None, None) => unreachable!("missing cell implies executed workload"),
+            };
+            if cached {
+                cached_cells += 1;
+            } else if let Some(l) = ledger.as_deref_mut() {
+                // pack the curve point into the u64 metric slots so it
+                // round-trips bit-exactly: instructions = accesses,
+                // mix.loads = misses (llc_miss_ratio doubles as the
+                // human-readable ratio in `mlperf ledger show`)
+                let metrics = Metrics {
+                    instructions: accesses,
+                    mix: InstructionMix { loads: misses, ..Default::default() },
+                    llc_miss_ratio: if accesses == 0 {
+                        0.0
+                    } else {
+                        misses as f64 / accesses as f64
+                    },
+                    ..Default::default()
+                };
+                let rows = by_name(name).map(|w| cfg.rows_for(w.as_ref()) as u64).unwrap_or(0);
+                l.append(LedgerRecord {
+                    fingerprint: fp,
+                    provenance: Provenance {
+                        workload: name.clone(),
+                        scenario: format!("sweep:{}", g.label()),
+                        profile: format!("{:?}", cfg.profile),
+                        rows,
+                        features: cfg.features as u64,
+                        iterations: cfg.iterations as u64,
+                        seed: cfg.seed,
+                        dataset_bytes: rows * cfg.features as u64 * 8,
+                        wall_nanos,
+                        unix_secs,
+                    },
+                    metrics,
+                    quality: None,
+                })?;
+            }
+            cells.push(SweepCell {
+                workload: name.clone(),
+                geometry: g,
+                accesses,
+                misses,
+                fingerprint: fp,
+                cached,
+            });
+        }
+    }
+
+    Ok(SweepReport {
+        cells,
+        workload_executions: need_run.len(),
+        cached_cells,
+        threads_used,
+        wall_seconds: t0.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tiny() -> ExperimentConfig {
+        ExperimentConfig { scale: 0.02, iterations: 1, ..Default::default() }
+    }
+
+    fn small_sweep() -> Vec<SweepGeometry> {
+        vec![
+            SweepGeometry::new(32 * 1024, 4),
+            SweepGeometry::new(64 * 1024, 4),
+            SweepGeometry::new(64 * 1024, 8),
+        ]
+    }
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("mlperf-sweep-unit");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    #[test]
+    fn sweep_fills_every_cell_deterministically() {
+        let cfg = tiny();
+        let wls = vec!["KMeans".to_string(), "KNN".to_string()];
+        let a = run_cache_sweep(&cfg, &wls, &small_sweep(), 2, None).unwrap();
+        assert_eq!(a.cells.len(), 2 * 3);
+        assert_eq!(a.workload_executions, 2);
+        assert_eq!(a.cached_cells, 0);
+        for chunk in a.cells.chunks(3) {
+            // one pass per workload: every geometry shares its accesses
+            assert!(chunk[0].accesses > 0);
+            assert!(chunk.iter().all(|c| c.accesses == chunk[0].accesses));
+            for c in chunk {
+                assert!(c.misses <= c.accesses, "{} @ {}", c.workload, c.geometry);
+            }
+            // 32KiB/4w and 64KiB/8w share a set class (128 sets), so
+            // stack inclusion orders them: more ways, fewer misses
+            assert!(chunk[2].misses <= chunk[0].misses);
+        }
+        let b = run_cache_sweep(&cfg, &wls, &small_sweep(), 1, None).unwrap();
+        for (x, y) in a.cells.iter().zip(&b.cells) {
+            assert_eq!((x.accesses, x.misses), (y.accesses, y.misses), "{}", x.geometry);
+        }
+    }
+
+    #[test]
+    fn ledger_serves_warm_sweep_without_execution() {
+        let cfg = tiny();
+        let wls = vec!["DBSCAN".to_string()];
+        let path = tmpfile("warm_sweep.ledger");
+        let mut ledger = Ledger::open(&path).unwrap();
+        let cold = run_cache_sweep(&cfg, &wls, &small_sweep(), 1, Some(&mut ledger)).unwrap();
+        assert_eq!(cold.workload_executions, 1);
+        assert_eq!(cold.cached_cells, 0);
+        drop(ledger);
+
+        let mut ledger = Ledger::open(&path).unwrap();
+        let warm = run_cache_sweep(&cfg, &wls, &small_sweep(), 1, Some(&mut ledger)).unwrap();
+        assert_eq!(warm.workload_executions, 0, "fully warmed sweep executes nothing");
+        assert_eq!(warm.cached_cells, warm.cells.len());
+        for (c, w) in cold.cells.iter().zip(&warm.cells) {
+            assert_eq!((c.accesses, c.misses), (w.accesses, w.misses), "bit-exact round-trip");
+            assert!(w.cached);
+        }
+    }
+
+    #[test]
+    fn new_geometry_reruns_but_keeps_cached_cells() {
+        let cfg = tiny();
+        let wls = vec!["Ridge".to_string()];
+        let path = tmpfile("partial_sweep.ledger");
+        let mut ledger = Ledger::open(&path).unwrap();
+        let two = small_sweep()[..2].to_vec();
+        run_cache_sweep(&cfg, &wls, &two, 1, Some(&mut ledger)).unwrap();
+
+        // widening the sweep re-runs the workload (one pass prices all
+        // geometries) but the old cells still answer from the ledger
+        let mixed = run_cache_sweep(&cfg, &wls, &small_sweep(), 1, Some(&mut ledger)).unwrap();
+        assert_eq!(mixed.workload_executions, 1);
+        assert_eq!(mixed.cached_cells, 2);
+        assert!(mixed.cells[0].cached && mixed.cells[1].cached && !mixed.cells[2].cached);
+        // cached and fresh agree: same accesses for every geometry
+        assert_eq!(mixed.cells[0].accesses, mixed.cells[2].accesses);
+    }
+}

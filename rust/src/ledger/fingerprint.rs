@@ -194,6 +194,40 @@ pub fn cell_fingerprint(cfg: &ExperimentConfig, job: &Job) -> Fingerprint {
     b.finish()
 }
 
+/// Fingerprint one cache-sweep cell: a (workload, geometry) point of
+/// `mlperf grid --sweep cache`. The trace-identity fields (workload,
+/// profile, scale/features/iterations/seed — everything that fixes the
+/// recorded demand stream) are hashed together with the sweep geometry
+/// itself, so changing `--sweep` sizes or associativities invalidates
+/// exactly the cells whose geometry changed. A `sweep.kind`
+/// discriminator keeps the domain disjoint from [`cell_fingerprint`]
+/// even if field sets ever coincide.
+///
+/// Deliberately **not** hashed: the simulator `CpuConfig`, `auto_shrink`,
+/// and hardware-prefetch settings. A miss curve is a property of the
+/// demand reference stream and the candidate geometry alone — the stack
+/// profiler never consults the configured hierarchy — so hashing the CPU
+/// config would split the cache across settings that cannot change the
+/// result (the sweep analogue of the `ingest_threads` rule above).
+pub fn sweep_cell_fingerprint(
+    cfg: &ExperimentConfig,
+    workload: &str,
+    geometry: crate::sim::SweepGeometry,
+) -> Fingerprint {
+    let mut b = FingerprintBuilder::new();
+    b.str("code.crate_version", env!("CARGO_PKG_VERSION"));
+    b.str("sweep.kind", "cache-miss-curve");
+    b.str("cell.workload", workload);
+    b.str("cell.profile", &format!("{:?}", cfg.profile));
+    b.f64("cell.scale", cfg.scale);
+    b.usize("cell.features", cfg.features);
+    b.usize("cell.iterations", cfg.iterations);
+    b.u64("cell.seed", cfg.seed);
+    b.u64("sweep.bytes", geometry.bytes);
+    b.usize("sweep.ways", geometry.ways);
+    b.finish()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,6 +362,56 @@ mod tests {
             let fp = cell_fingerprint(&c, &job);
             assert_ne!(base, fp, "mutating {name} did not change the fingerprint");
             assert!(seen.insert(fp.hash), "{name} collided with another single-field mutation");
+        }
+    }
+
+    #[test]
+    fn sweep_fingerprint_covers_geometry_and_trace_identity() {
+        use crate::sim::SweepGeometry;
+        let g = SweepGeometry::new(256 * 1024, 8);
+        let base = sweep_cell_fingerprint(&cfg(), "KMeans", g);
+        assert_eq!(base, sweep_cell_fingerprint(&cfg(), "KMeans", g), "deterministic");
+        // geometry changes invalidate
+        assert_ne!(base, sweep_cell_fingerprint(&cfg(), "KMeans", SweepGeometry::new(512 * 1024, 8)));
+        assert_ne!(base, sweep_cell_fingerprint(&cfg(), "KMeans", SweepGeometry::new(256 * 1024, 4)));
+        // trace-identity changes invalidate
+        assert_ne!(base, sweep_cell_fingerprint(&cfg(), "KNN", g));
+        let muts: &[(&str, fn(&mut ExperimentConfig))] = &[
+            ("scale", |c| c.scale = 0.03),
+            ("features", |c| c.features += 1),
+            ("iterations", |c| c.iterations += 1),
+            ("seed", |c| c.seed ^= 1),
+            ("profile", |c| c.profile = crate::workloads::LibraryProfile::Mlpack),
+        ];
+        for (name, m) in muts {
+            let mut c = cfg();
+            m(&mut c);
+            assert_ne!(base, sweep_cell_fingerprint(&c, "KMeans", g), "mutating {name}");
+        }
+    }
+
+    #[test]
+    fn sweep_fingerprint_ignores_simulator_config() {
+        // miss curves depend only on the demand stream + geometry: the
+        // configured hierarchy, auto_shrink, and ingest policy must all
+        // land on the same sweep cell
+        use crate::sim::SweepGeometry;
+        let g = SweepGeometry::new(1024 * 1024, 16);
+        let base = sweep_cell_fingerprint(&cfg(), "DBSCAN", g);
+        let mut c = cfg();
+        c.cpu.cache.l3_bytes *= 2;
+        c.cpu.cache.hw_prefetch = false;
+        c.auto_shrink = !c.auto_shrink;
+        c.ingest_threads = 8;
+        assert_eq!(base, sweep_cell_fingerprint(&c, "DBSCAN", g));
+    }
+
+    #[test]
+    fn sweep_domain_is_disjoint_from_cell_domain() {
+        let job = Job::new("KMeans", Scenario::Baseline);
+        let cell = cell_fingerprint(&cfg(), &job);
+        for g in crate::sim::default_sweep() {
+            assert_ne!(cell, sweep_cell_fingerprint(&cfg(), "KMeans", g));
         }
     }
 

@@ -21,7 +21,8 @@ pub mod store;
 
 pub use diff::{diff, DiffReport, DiffRow, GridCell, GridResults, DEFAULT_TOLERANCE, TRACKED};
 pub use fingerprint::{
-    cell_fingerprint, fingerprint_cpu, Fingerprint, FingerprintBuilder, FINGERPRINT_VERSION,
+    cell_fingerprint, fingerprint_cpu, sweep_cell_fingerprint, Fingerprint, FingerprintBuilder,
+    FINGERPRINT_VERSION,
 };
 pub use store::{
     CompactionReport, Ledger, LedgerRecord, LedgerStats, Provenance, LEDGER_VERSION,

@@ -15,12 +15,14 @@
 //! mlperf report      [--scale 0.2]     # every figure/table, slow
 //! mlperf report      --baseline BENCH_grid_baseline.json --gate
 //! mlperf grid        [--threads 0] [--direct] [--ledger grid.mllg] [--json out.json]
+//! mlperf grid        --sweep cache [--workload knn] [--ledger grid.mllg] [--json sweep.json]
 //! mlperf ledger      stats|gc|export --ledger grid.mllg [--out export.json]
 //! ```
 
 use mlperf::analysis::{pct, r2, r3, Table};
 use mlperf::ledger::{diff, GridResults, Ledger, DEFAULT_TOLERANCE};
-use mlperf::sim::Metrics;
+use mlperf::sim::{default_sweep, Metrics};
+use mlperf::util::Json;
 use mlperf::util::error::Result;
 use mlperf::{anyhow, bail};
 use mlperf::coordinator::*;
@@ -113,6 +115,8 @@ replay flags: --trace <file.mlt> [--perfect-l2 --perfect-llc --no-hw-prefetch --
 grid flags:   --threads <n> (0 = one per core) --full (all scenario columns) --direct (re-execute per cell)
               --ledger <file.mllg> (skip cells already simulated) --json <out.json> (results artifact)
               --assert-cached (fail if anything executed) --baseline <base.json> --gate --tolerance <f>
+sweep flags:  grid --sweep cache (exact-LRU miss curves for every geometry from ONE trace pass per
+              workload) [--workload <name>] [--ledger <file.mllg>] [--json <out.json>] [--assert-cached]
 report flags: --baseline <base.json> (re-run its cells and diff) --gate (non-zero exit on drift)
               --tolerance <f> (relative band, default 0.01) --ledger <file.mllg>
 ledger usage: mlperf ledger stats|gc|export --ledger <file.mllg> [--out <file.json>]";
@@ -197,6 +201,34 @@ fn cmd_list() -> Result<()> {
             if s.trace_variant().is_some() { "yes" } else { "no (direct)" }.into(),
             what.into(),
         ]);
+    }
+    println!("{}", t.render());
+
+    let sweep = default_sweep();
+    let mut t = Table::new(
+        "sweeps",
+        &format!(
+            "cache sweep grid — {} geometries per workload, one trace pass (`mlperf grid --sweep cache`)",
+            sweep.len()
+        ),
+        &["capacity", "ways swept", "sets per geometry"],
+    );
+    let mut i = 0;
+    while i < sweep.len() {
+        let bytes = sweep[i].bytes;
+        let (mut ways, mut sets) = (Vec::new(), Vec::new());
+        while i < sweep.len() && sweep[i].bytes == bytes {
+            ways.push(sweep[i].ways.to_string());
+            sets.push(sweep[i].sets().to_string());
+            i += 1;
+        }
+        const MIB: u64 = 1024 * 1024;
+        let cap = if bytes >= MIB && bytes % MIB == 0 {
+            format!("{}MiB", bytes / MIB)
+        } else {
+            format!("{}KiB", bytes / 1024)
+        };
+        t.row(vec![cap, ways.join(", "), sets.join(", ")]);
     }
     println!("{}", t.render());
     Ok(())
@@ -466,6 +498,19 @@ fn cmd_runtime(args: &Args) -> Result<()> {
 }
 
 fn cmd_grid(args: &Args) -> Result<()> {
+    // grid work is simulated from in-memory captures (and the sweep
+    // streams workloads straight into the profiler) — nothing is decoded
+    // from disk, so silently accepting the ingest knob would be a lie
+    if args.get("ingest-threads").is_some() {
+        eprintln!(
+            "warning: --ingest-threads has no effect on `mlperf grid` — grid replay broadcasts \
+             in-memory captures and decodes nothing from disk; the knob staged-ingests file \
+             traces (`mlperf replay --trace`)"
+        );
+    }
+    if let Some(kind) = args.get("sweep") {
+        return cmd_grid_sweep(args, kind);
+    }
     let cfg = config_from(args)?;
     let threads: usize = args.get_parsed_or("threads", 0usize);
     let direct = args.has("direct");
@@ -542,6 +587,118 @@ fn cmd_grid(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `mlperf grid --sweep cache`: resolve the whole (workloads × cache
+/// geometries) miss-curve grid with **one trace pass per workload** —
+/// the reuse-distance stack profiler prices every exact-LRU geometry
+/// from a single walk of the demand stream, instead of one replay per
+/// (size × ways) cell.
+fn cmd_grid_sweep(args: &Args, kind: &str) -> Result<()> {
+    if kind != "cache" {
+        bail!("unknown --sweep kind {kind:?} (supported: cache)");
+    }
+    let cfg = config_from(args)?;
+    let threads: usize = args.get_parsed_or("threads", 0usize);
+    let workloads: Vec<String> = match args.get("workload") {
+        Some(name) => {
+            let w = by_name(name)
+                .ok_or_else(|| anyhow!("unknown workload {name:?} (see `mlperf list`)"))?;
+            require_profile_support(w.as_ref(), cfg.profile)?;
+            vec![w.name().to_string()]
+        }
+        None => registry()
+            .iter()
+            .filter(|w| cfg.profile.implements(w.as_ref()))
+            .map(|w| w.name().to_string())
+            .collect(),
+    };
+    let geometries = default_sweep();
+    println!(
+        "sweeping {} workload(s) × {} cache geometries (one trace pass per workload) …",
+        workloads.len(),
+        geometries.len()
+    );
+    let mut ledger = match args.get("ledger") {
+        Some(lp) => Some(Ledger::open(std::path::Path::new(lp))?),
+        None => None,
+    };
+    let report = run_cache_sweep(&cfg, &workloads, &geometries, threads, ledger.as_mut())?;
+    let mut t = Table::new(
+        "cache_sweep",
+        &format!(
+            "exact-LRU miss curves ({} cells, {} workload executions, {} cached, {} threads, {:.1}s wall)",
+            report.cells.len(),
+            report.workload_executions,
+            report.cached_cells,
+            report.threads_used,
+            report.wall_seconds
+        ),
+        &["workload", "geometry", "sets", "accesses", "misses", "miss-ratio", "cached"],
+    );
+    for c in &report.cells {
+        t.row(vec![
+            c.workload.clone(),
+            c.geometry.label(),
+            format!("{}", c.geometry.sets()),
+            format!("{}", c.accesses),
+            format!("{}", c.misses),
+            r3(c.miss_ratio()),
+            if c.cached { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t.emit();
+    if let Some(jp) = args.get("json") {
+        std::fs::write(jp, sweep_json(&cfg, &report)).map_err(|e| anyhow!("writing {jp}: {e}"))?;
+        println!("wrote cache sweep JSON to {jp}");
+    }
+    if args.has("assert-cached") && report.workload_executions > 0 {
+        bail!(
+            "--assert-cached: {} workload execution(s) occurred ({} of {} sweep cells cached) — \
+             the ledger did not fully cover this sweep",
+            report.workload_executions,
+            report.cached_cells,
+            report.cells.len()
+        );
+    }
+    Ok(())
+}
+
+/// The `mlperf-cache-sweep/v1` results artifact (`grid --sweep cache
+/// --json`): run parameters + one record per (workload × geometry) cell,
+/// fingerprints included so artifacts can be joined against ledgers.
+fn sweep_json(cfg: &ExperimentConfig, report: &SweepReport) -> String {
+    let cells: Vec<Json> = report
+        .cells
+        .iter()
+        .map(|c| {
+            Json::Obj(vec![
+                ("workload".to_string(), Json::Str(c.workload.clone())),
+                ("geometry".to_string(), Json::Str(c.geometry.label())),
+                ("bytes".to_string(), Json::num(c.geometry.bytes as f64)),
+                ("ways".to_string(), Json::num(c.geometry.ways as f64)),
+                ("sets".to_string(), Json::num(c.geometry.sets() as f64)),
+                ("accesses".to_string(), Json::num(c.accesses as f64)),
+                ("misses".to_string(), Json::num(c.misses as f64)),
+                ("miss_ratio".to_string(), Json::num(c.miss_ratio())),
+                ("fingerprint".to_string(), Json::Str(c.fingerprint.to_string())),
+                ("cached".to_string(), Json::Bool(c.cached)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".to_string(), Json::Str("mlperf-cache-sweep/v1".to_string())),
+        ("scale".to_string(), Json::num(cfg.scale)),
+        ("profile".to_string(), Json::Str(format!("{:?}", cfg.profile))),
+        ("seed".to_string(), Json::Str(cfg.seed.to_string())),
+        ("iterations".to_string(), Json::num(cfg.iterations as f64)),
+        ("features".to_string(), Json::num(cfg.features as f64)),
+        ("workload_executions".to_string(), Json::num(report.workload_executions as f64)),
+        ("cached_cells".to_string(), Json::num(report.cached_cells as f64)),
+        ("wall_seconds".to_string(), Json::num(report.wall_seconds)),
+        ("cells".to_string(), Json::Arr(cells)),
+    ])
+    .render()
+}
+
 fn tolerance_from(args: &Args) -> f64 {
     args.get_parsed_or("tolerance", DEFAULT_TOLERANCE)
 }
@@ -560,6 +717,13 @@ fn gate_against_baseline(
             "baseline {baseline_path} has no cells (bootstrap placeholder) — nothing to diff; \
              regenerate it with `mlperf grid --json {baseline_path}`"
         );
+        if gate {
+            eprintln!(
+                "warning: --gate against the empty baseline is VACUOUS — zero metrics were \
+                 compared, so this exit code certifies nothing; populate {baseline_path} to arm \
+                 the gate"
+            );
+        }
         return Ok(());
     }
     let report = diff(current, &baseline, tolerance);
@@ -689,6 +853,13 @@ fn cmd_report_baseline(args: &Args, cfg: &mut ExperimentConfig, baseline_path: &
             "baseline {baseline_path} has no cells (bootstrap placeholder) — nothing to gate; \
              regenerate it with `mlperf grid --json {baseline_path}`"
         );
+        if args.has("gate") {
+            eprintln!(
+                "warning: --gate against the empty baseline is VACUOUS — no cell was re-run or \
+                 compared, so this exit code certifies nothing; populate {baseline_path} to arm \
+                 the gate"
+            );
+        }
         return Ok(());
     }
     // default to the baseline's recorded run parameters so the diff

@@ -13,6 +13,9 @@
 //! - [`multicore`] — shared-LLC/-bandwidth composition (Tables III/IV).
 //! - [`reference`] — the seed cache layout, frozen as the bit-parity
 //!   reference and performance baseline of the packed hot path.
+//! - [`stack`] — single-pass reuse-distance (Mattson stack) profiler:
+//!   exact-LRU miss curves for a whole sizes × ways sweep from one trace
+//!   walk (`mlperf grid --sweep cache`).
 
 pub mod branch;
 pub mod cache;
@@ -21,6 +24,7 @@ pub mod dram;
 pub mod multicore;
 pub mod prefetch;
 pub mod reference;
+pub mod stack;
 
 pub use branch::{BranchStats, Gshare};
 pub use cache::{
@@ -31,3 +35,4 @@ pub use dram::{AddrMap, Dram, DramConfig, DramStats, RowOutcome};
 pub use multicore::{aggregate, percore_config, run_multicore, run_multicore_with_model};
 pub use prefetch::{AdjacentLinePrefetcher, PrefetchStats, StreamPrefetcher};
 pub use reference::{RefCache, RefHierarchy, RefPipelineSim};
+pub use stack::{default_sweep, demand_lines, StackProfiler, SweepCurve, SweepGeometry};

@@ -1,0 +1,609 @@
+//! Single-pass reuse-distance (Mattson stack) profiler: exact-LRU miss
+//! counts for **every** swept cache geometry from one walk of the trace.
+//!
+//! The classical observation (Mattson et al. 1970): under true LRU, an
+//! access to line `L` hits a `W`-way set-associative cache iff the number
+//! of *distinct* same-set lines touched since the previous access to `L`
+//! — its per-set reuse distance `d` — satisfies `d < W`. LRU stacks are
+//! inclusive across associativities, so one per-set distance histogram
+//! answers the hit/miss question for every way count at once:
+//!
+//! ```text
+//! misses(S sets, W ways) = accesses − Σ_{d < W} hist_S[d]
+//! ```
+//!
+//! (cold accesses and distances beyond the deepest tracked way always
+//! miss and therefore never enter the histogram). Geometries sharing a
+//! set count `S = bytes / (64 · ways)` share one histogram, so a sizes ×
+//! ways sweep costs one distance structure per distinct *set-index
+//! class*, not one simulation per geometry.
+//!
+//! # Hot path
+//!
+//! The distance query is order-statistics based (Bennett–Kruskal), not a
+//! linear stack scan: each set keeps a Fenwick tree over access-sequence
+//! slots in which the most-recent slot of every tracked line carries a
+//! mark. The reuse distance of an access is then the count of marks
+//! *after* the line's previous slot — two `O(log cap)` tree operations —
+//! instead of an `O(depth)` move-to-front walk. Slots are recycled by an
+//! amortized-`O(1)` compaction when the slot clock reaches capacity.
+//!
+//! Tracking is bounded by the deepest way count the sweep asks about:
+//! once a set tracks `max_ways` lines, the coldest tracked line (found by
+//! Fenwick descent, also `O(log cap)`) is dropped — a line deeper than
+//! every swept associativity misses everywhere, so nothing is lost.
+//!
+//! # Parity domain
+//!
+//! The profiler models a *standalone* demand-only exact-LRU cache — the
+//! same replacement the packed [`Cache`](super::Cache) implements for
+//! `demand_probe`/`fill` — and walks the block's demand lanes (loads and
+//! stores, in recorded order, expanded to touched lines exactly like
+//! [`Hierarchy::access_block`](super::Hierarchy::access_block) does).
+//! Hierarchy-level effects (inclusive back-invalidation, prefetch fills)
+//! are outside the model, which is precisely why `tests/stack_parity.rs`
+//! can gate the predicted miss counts **bit-exactly** against a real
+//! [`Cache`](super::Cache) driven by the same line stream.
+
+use crate::trace::{BlockSink, EventBlock, EventKind, LINE_SIZE};
+use std::collections::HashMap;
+
+/// One swept cache geometry: capacity in bytes and associativity, with
+/// the crate-wide 64-byte lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SweepGeometry {
+    pub bytes: u64,
+    pub ways: usize,
+}
+
+impl SweepGeometry {
+    pub fn new(bytes: u64, ways: usize) -> Self {
+        Self { bytes, ways }
+    }
+
+    /// Number of sets: `bytes / (64 · ways)`.
+    pub fn sets(&self) -> u64 {
+        self.bytes / (LINE_SIZE * self.ways as u64)
+    }
+
+    /// Human label, e.g. `64KiB/8w`.
+    pub fn label(&self) -> String {
+        format!("{}/{}w", fmt_bytes(self.bytes), self.ways)
+    }
+}
+
+impl std::fmt::Display for SweepGeometry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.label())
+    }
+}
+
+fn fmt_bytes(b: u64) -> String {
+    const MIB: u64 = 1024 * 1024;
+    if b >= MIB && b % MIB == 0 {
+        format!("{}MiB", b / MIB)
+    } else {
+        format!("{}KiB", b / 1024)
+    }
+}
+
+/// The standard `mlperf grid --sweep cache` geometry grid: 16 KiB …
+/// 8 MiB × {2, 4, 8, 16} ways — 40 geometries spanning the paper's L1
+/// through LLC capacities, every one an exact-LRU configuration the
+/// profiler resolves from a single trace pass.
+pub fn default_sweep() -> Vec<SweepGeometry> {
+    let mut out = Vec::new();
+    let mut bytes = 16 * 1024u64;
+    while bytes <= 8 * 1024 * 1024 {
+        for ways in [2usize, 4, 8, 16] {
+            out.push(SweepGeometry::new(bytes, ways));
+        }
+        bytes *= 2;
+    }
+    out
+}
+
+/// One geometry's resolved point on the miss curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SweepCurve {
+    pub geometry: SweepGeometry,
+    /// Demand line accesses (shared by every geometry — one trace pass).
+    pub accesses: u64,
+    /// Exact-LRU demand misses for this geometry.
+    pub misses: u64,
+}
+
+impl SweepCurve {
+    pub fn miss_ratio(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// Fenwick (binary indexed) tree over `cap` slots, 1-based internally.
+/// Marks are 0/1 per slot; `prefix` and `first_marked` are `O(log cap)`.
+#[derive(Debug)]
+struct Fenwick {
+    tree: Vec<u32>,
+}
+
+impl Fenwick {
+    fn new(cap: usize) -> Self {
+        Self { tree: vec![0; cap + 1] }
+    }
+
+    fn cap(&self) -> usize {
+        self.tree.len() - 1
+    }
+
+    /// Add `delta` (±1) at 1-based index `i`.
+    fn add(&mut self, mut i: usize, delta: u32) {
+        while i < self.tree.len() {
+            self.tree[i] = self.tree[i].wrapping_add(delta);
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum of marks at 1-based indices `1..=i`.
+    fn prefix(&self, mut i: usize) -> u32 {
+        let mut s = 0u32;
+        while i > 0 {
+            s += self.tree[i];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+
+    /// Smallest 1-based index carrying a mark (standard top-down binary
+    /// descent for the first index with prefix ≥ 1). Caller guarantees at
+    /// least one mark exists.
+    fn first_marked(&self) -> usize {
+        let mut idx = 0usize;
+        let mut remaining = 1u32;
+        let mut step = self.cap().next_power_of_two();
+        while step > 0 {
+            let next = idx + step;
+            if next < self.tree.len() && self.tree[next] < remaining {
+                idx = next;
+                remaining -= self.tree[next];
+            }
+            step >>= 1;
+        }
+        idx + 1
+    }
+
+    fn clear(&mut self) {
+        self.tree.iter_mut().for_each(|v| *v = 0);
+    }
+}
+
+/// One cache set's bounded recency structure: marks over access-sequence
+/// slots plus the line ↔ slot maps the queries need.
+#[derive(Debug)]
+struct SetStack {
+    bit: Fenwick,
+    /// Line occupying each 0-based slot (meaningful only where marked).
+    slot_line: Vec<u64>,
+    /// line → 0-based slot of its most recent access.
+    pos: HashMap<u64, u32>,
+    /// Next 0-based slot to assign; compaction rewinds it.
+    clock: u32,
+}
+
+impl SetStack {
+    fn new(slot_cap: usize) -> Self {
+        Self {
+            bit: Fenwick::new(slot_cap),
+            slot_line: vec![0; slot_cap],
+            pos: HashMap::new(),
+            clock: 0,
+        }
+    }
+
+    /// Record an access to `line`, tracking at most `depth_cap` lines.
+    /// Returns the per-set reuse distance, or `None` for an access that
+    /// misses every swept geometry (cold, or deeper than `depth_cap`).
+    fn access(&mut self, line: u64, depth_cap: u32) -> Option<u32> {
+        let live = self.pos.len() as u32;
+        let dist = match self.pos.get(&line).copied() {
+            Some(p) => {
+                // distance = tracked lines touched after p = marks at
+                // slots strictly greater than p
+                let d = live - self.bit.prefix(p as usize + 1);
+                self.bit.add(p as usize + 1, 1u32.wrapping_neg());
+                Some(d)
+            }
+            None => {
+                if live >= depth_cap {
+                    // drop the coldest tracked line: at depth ≥ depth_cap
+                    // it misses every swept associativity anyway
+                    let oldest = self.bit.first_marked();
+                    self.bit.add(oldest, 1u32.wrapping_neg());
+                    let evicted = self.slot_line[oldest - 1];
+                    self.pos.remove(&evicted);
+                }
+                None
+            }
+        };
+        self.place(line);
+        dist
+    }
+
+    /// Put `line` at the freshest slot, compacting first if the slot
+    /// clock hit capacity.
+    fn place(&mut self, line: u64) {
+        if self.clock as usize == self.bit.cap() {
+            self.compact();
+        }
+        let p = self.clock;
+        self.bit.add(p as usize + 1, 1);
+        self.slot_line[p as usize] = line;
+        self.pos.insert(line, p);
+        self.clock += 1;
+    }
+
+    /// Reassign the tracked lines to slots `0..live` preserving recency
+    /// order. Tracked depth is bounded well below the slot capacity, so
+    /// every compaction buys ≥ 3× depth_cap cheap accesses — amortized
+    /// `O(1)` per access.
+    fn compact(&mut self) {
+        let mut entries: Vec<(u32, u64)> =
+            self.pos.iter().map(|(&line, &p)| (p, line)).collect();
+        entries.sort_unstable();
+        self.bit.clear();
+        for (new_p, &(_, line)) in entries.iter().enumerate() {
+            self.bit.add(new_p + 1, 1);
+            self.slot_line[new_p] = line;
+            self.pos.insert(line, new_p as u32);
+        }
+        self.clock = entries.len() as u32;
+    }
+}
+
+/// All geometries sharing one set count: one histogram, `sets` stacks.
+#[derive(Debug)]
+struct SetClass {
+    sets: u64,
+    /// Deepest way count any geometry of this class asks about.
+    depth_cap: u32,
+    /// `hist[d]` = accesses whose per-set reuse distance was exactly `d`
+    /// (`d < depth_cap`; deeper/cold accesses are misses everywhere and
+    /// are counted only through the access total).
+    hist: Vec<u64>,
+    stacks: Vec<SetStack>,
+}
+
+impl SetClass {
+    fn new(sets: u64, depth_cap: u32) -> Self {
+        // 4× headroom over the tracked depth keeps compactions rare;
+        // floor of 64 slots keeps tiny depth caps out of thrash territory
+        let slot_cap = (depth_cap as usize * 4).max(64);
+        Self {
+            sets,
+            depth_cap,
+            hist: vec![0; depth_cap as usize],
+            stacks: (0..sets).map(|_| SetStack::new(slot_cap)).collect(),
+        }
+    }
+
+    #[inline]
+    fn access(&mut self, line: u64) {
+        let s = (line & (self.sets - 1)) as usize;
+        if let Some(d) = self.stacks[s].access(line, self.depth_cap) {
+            self.hist[d as usize] += 1;
+        }
+    }
+}
+
+/// The single-pass sweep profiler. Construct with every geometry the
+/// sweep will ask about, stream the trace in (it is a [`BlockSink`]),
+/// then read exact-LRU miss counts per geometry in closed form.
+#[derive(Debug)]
+pub struct StackProfiler {
+    geometries: Vec<SweepGeometry>,
+    classes: Vec<SetClass>,
+    accesses: u64,
+}
+
+impl StackProfiler {
+    /// Panics on a geometry the exact-LRU model cannot represent (zero
+    /// ways, capacity not divisible into whole sets, or a set count that
+    /// is not a power of two — the same constraints
+    /// [`Cache::new`](super::Cache::new) asserts).
+    pub fn new(geometries: &[SweepGeometry]) -> Self {
+        assert!(!geometries.is_empty(), "sweep needs at least one geometry");
+        let mut by_sets: Vec<(u64, u32)> = Vec::new();
+        for g in geometries {
+            assert!(g.ways > 0, "geometry {g:?} has zero ways");
+            assert!(
+                g.bytes % (LINE_SIZE * g.ways as u64) == 0,
+                "geometry {g:?}: size/ways mismatch"
+            );
+            let sets = g.sets();
+            assert!(
+                sets > 0 && sets.is_power_of_two(),
+                "geometry {g:?}: sets must be a power of two"
+            );
+            match by_sets.iter_mut().find(|(s, _)| *s == sets) {
+                Some((_, cap)) => *cap = (*cap).max(g.ways as u32),
+                None => by_sets.push((sets, g.ways as u32)),
+            }
+        }
+        by_sets.sort_unstable();
+        Self {
+            geometries: geometries.to_vec(),
+            classes: by_sets.iter().map(|&(s, cap)| SetClass::new(s, cap)).collect(),
+            accesses: 0,
+        }
+    }
+
+    /// The geometries this profiler was built for.
+    pub fn geometries(&self) -> &[SweepGeometry] {
+        &self.geometries
+    }
+
+    /// Number of distinct set-index classes (one distance structure each).
+    pub fn classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Record one demand line access against every set-index class.
+    #[inline]
+    pub fn access_line(&mut self, line: u64) {
+        self.accesses += 1;
+        for class in &mut self.classes {
+            class.access(line);
+        }
+    }
+
+    /// Total demand line accesses profiled.
+    pub fn accesses(&self) -> u64 {
+        self.accesses
+    }
+
+    /// Closed-form exact-LRU demand miss count for `g`:
+    /// `accesses − Σ_{d < ways} hist[d]` over `g`'s set-index class.
+    /// Panics if `g`'s class was not registered at construction.
+    pub fn misses_for(&self, g: SweepGeometry) -> u64 {
+        let sets = g.sets();
+        let class = self
+            .classes
+            .iter()
+            .find(|c| c.sets == sets)
+            .unwrap_or_else(|| panic!("geometry {g} was not in the swept set"));
+        assert!(
+            g.ways as u32 <= class.depth_cap,
+            "geometry {g} is deeper than the tracked depth"
+        );
+        let hits: u64 = class.hist[..g.ways].iter().sum();
+        self.accesses - hits
+    }
+
+    /// The full miss curve, one point per constructed geometry.
+    pub fn curves(&self) -> Vec<SweepCurve> {
+        self.geometries
+            .iter()
+            .map(|&g| SweepCurve {
+                geometry: g,
+                accesses: self.accesses,
+                misses: self.misses_for(g),
+            })
+            .collect()
+    }
+}
+
+/// Append the demand line stream of `block` to `out` — loads and stores
+/// in recorded order, each expanded to its touched lines, exactly the
+/// walk [`Hierarchy::access_block`](super::Hierarchy::access_block)
+/// performs for demand traffic (prefetches excluded: the profiler models
+/// a demand-only cache). `StackProfiler::consume` and the parity tests
+/// share this definition so the two streams cannot drift.
+pub fn demand_lines(block: &EventBlock, out: &mut Vec<u64>) {
+    let (mut li, mut sti) = (0usize, 0usize);
+    for &kind in block.kinds() {
+        match kind {
+            EventKind::Load => {
+                let (first, last) = block.loads[li].line_span();
+                li += 1;
+                out.extend(first..=last);
+            }
+            EventKind::Store => {
+                let (first, last) = block.stores[sti].line_span();
+                sti += 1;
+                out.extend(first..=last);
+            }
+            _ => {}
+        }
+    }
+}
+
+impl BlockSink for StackProfiler {
+    fn consume(&mut self, block: &EventBlock) {
+        let (mut li, mut sti) = (0usize, 0usize);
+        for &kind in block.kinds() {
+            match kind {
+                EventKind::Load => {
+                    let (first, last) = block.loads[li].line_span();
+                    li += 1;
+                    for line in first..=last {
+                        self.access_line(line);
+                    }
+                }
+                EventKind::Store => {
+                    let (first, last) = block.stores[sti].line_span();
+                    sti += 1;
+                    for line in first..=last {
+                        self.access_line(line);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Cache;
+    use crate::util::Pcg64;
+
+    /// Infinite-stack LRU reference: hit iff the line's depth among
+    /// distinct same-set lines is < ways. O(n²) — test-only oracle.
+    fn naive_misses(lines: &[u64], sets: u64, ways: usize) -> u64 {
+        let mut stacks: Vec<Vec<u64>> = vec![Vec::new(); sets as usize];
+        let mut misses = 0u64;
+        for &l in lines {
+            let st = &mut stacks[(l & (sets - 1)) as usize];
+            match st.iter().rposition(|&x| x == l) {
+                Some(i) => {
+                    let depth = st.len() - 1 - i;
+                    if depth >= ways {
+                        misses += 1;
+                    }
+                    st.remove(i);
+                    st.push(l);
+                }
+                None => {
+                    misses += 1;
+                    st.push(l);
+                }
+            }
+        }
+        misses
+    }
+
+    fn packed_cache_misses(lines: &[u64], g: SweepGeometry) -> (u64, u64) {
+        let mut c = Cache::new(g.bytes, g.ways);
+        for &l in lines {
+            let (hit, _, _) = c.demand_probe(l, false);
+            if !hit {
+                c.fill(l, false, false, false);
+            }
+        }
+        (c.stats.accesses, c.stats.misses)
+    }
+
+    #[test]
+    fn hand_checked_single_set() {
+        // sets=1 geometries: bytes = 64 * ways
+        let gs = [SweepGeometry::new(64, 1), SweepGeometry::new(128, 2), SweepGeometry::new(256, 4)];
+        let mut p = StackProfiler::new(&gs);
+        for l in [10u64, 11, 10, 12, 11, 10] {
+            p.access_line(l);
+        }
+        // distances: 10 cold, 11 cold, 10 d=1, 12 cold, 11 d=1, 10 d=2
+        assert_eq!(p.accesses(), 6);
+        assert_eq!(p.misses_for(gs[0]), 6, "direct-mapped-equivalent: every distance ≥ 1 misses");
+        assert_eq!(p.misses_for(gs[1]), 4, "2-way: the two d=1 accesses hit");
+        assert_eq!(p.misses_for(gs[2]), 3, "4-way: d=1,1,2 all hit");
+        assert_eq!(p.classes(), 1, "all three geometries share sets=1");
+    }
+
+    #[test]
+    fn eviction_and_compaction_match_naive_reference() {
+        // depth cap 2 with a working set far beyond it, plus enough
+        // accesses to force slot compaction many times over
+        let g = SweepGeometry::new(256, 2); // sets=2, ways=2
+        let mut p = StackProfiler::new(&[g]);
+        let mut rng = Pcg64::new(7);
+        let lines: Vec<u64> = (0..5000).map(|_| rng.next_u64() % 37).collect();
+        for &l in &lines {
+            p.access_line(l);
+        }
+        assert_eq!(p.misses_for(g), naive_misses(&lines, 2, 2));
+    }
+
+    #[test]
+    fn random_stream_parity_with_packed_cache() {
+        let gs = [
+            SweepGeometry::new(4 * 1024, 1),
+            SweepGeometry::new(8 * 1024, 2),
+            SweepGeometry::new(16 * 1024, 4),
+            SweepGeometry::new(64 * 1024, 8),
+            SweepGeometry::new(128 * 1024, 16),
+        ];
+        let mut p = StackProfiler::new(&gs);
+        let mut rng = Pcg64::new(0xDA7A);
+        // skewed stream: hot region with occasional cold sweeps
+        let lines: Vec<u64> = (0..30_000)
+            .map(|i| {
+                if i % 7 == 0 {
+                    rng.next_u64() % 100_000
+                } else {
+                    rng.next_u64() % 600
+                }
+            })
+            .collect();
+        for &l in &lines {
+            p.access_line(l);
+        }
+        for g in gs {
+            let (acc, misses) = packed_cache_misses(&lines, g);
+            assert_eq!(acc, p.accesses());
+            assert_eq!(misses, p.misses_for(g), "geometry {g}");
+        }
+    }
+
+    #[test]
+    fn curves_cover_every_geometry_and_are_monotone_in_ways() {
+        let gs = default_sweep();
+        assert!(gs.len() >= 32, "sweep must span ≥ 32 geometries");
+        let mut p = StackProfiler::new(&gs);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..20_000 {
+            p.access_line(rng.next_u64() % 50_000);
+        }
+        let curves = p.curves();
+        assert_eq!(curves.len(), gs.len());
+        // more ways at equal sets can only hit more (stack inclusion)
+        for a in &curves {
+            for b in &curves {
+                if a.geometry.sets() == b.geometry.sets() && a.geometry.ways < b.geometry.ways {
+                    assert!(a.misses >= b.misses, "{} vs {}", a.geometry, b.geometry);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn consume_matches_demand_lines_walk() {
+        use crate::trace::EventBlock;
+        let mut block = EventBlock::with_capacity();
+        block.push_compute(1, 2);
+        block.push_load(1000, 8, false);
+        block.push_store(64 * 50, 160); // spans 3 lines
+        block.push_serial(1);
+        block.push_load(64 * 51 + 60, 8, true); // straddles 2 lines
+        block.push_prefetch(4096); // excluded from the demand walk
+        let mut want = Vec::new();
+        demand_lines(&block, &mut want);
+        assert_eq!(want, vec![15, 50, 51, 52, 51, 52]);
+
+        let g = SweepGeometry::new(128, 2);
+        let mut via_consume = StackProfiler::new(&[g]);
+        via_consume.consume(&block);
+        let mut via_lines = StackProfiler::new(&[g]);
+        for &l in &want {
+            via_lines.access_line(l);
+        }
+        assert_eq!(via_consume.accesses(), via_lines.accesses());
+        assert_eq!(via_consume.misses_for(g), via_lines.misses_for(g));
+    }
+
+    #[test]
+    fn labels_render_sizes() {
+        assert_eq!(SweepGeometry::new(16 * 1024, 2).label(), "16KiB/2w");
+        assert_eq!(SweepGeometry::new(8 * 1024 * 1024, 16).label(), "8MiB/16w");
+    }
+
+    #[test]
+    #[should_panic(expected = "sets must be a power of two")]
+    fn invalid_geometry_is_rejected() {
+        // 192 KiB / 2 ways → 1536 sets: not a power of two
+        let _ = StackProfiler::new(&[SweepGeometry::new(192 * 1024, 2)]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Broadcast replay: decode a block stream once, feed N sinks.
+//!
+//! Per-cell replay pays the block-stream walk (and, for file traces, the
+//! full read + checksum + columnar decode) once per simulator
+//! configuration. [`Broadcast`] collapses that to once per *capture*: it
+//! is a [`BlockSink`] that forwards every consumed block to each of its
+//! inner sinks in order, so one pass over a [`CapturedTrace`] or one
+//! [`PipelinedIngest`] stream drives any number of simulator instances.
+//! Each inner sink still observes the exact block sequence it would have
+//! seen alone, so per-sink results are bit-identical to per-cell replay
+//! (`tests/broadcast.rs` gates this).
+//!
+//! The n-ary generalization of [`BlockTee`](super::BlockTee), plus the
+//! consume counters the one-decode assertions need: after a replay,
+//! [`Broadcast::blocks_broadcast`] equals the number of blocks decoded —
+//! independent of the fan-out width.
+//!
+//! [`CapturedTrace`]: super::CapturedTrace
+//! [`PipelinedIngest`]: super::PipelinedIngest
+
+use super::block::{BlockSink, EventBlock};
+
+/// Fan one consumed block stream out to N sinks (see the module docs).
+pub struct Broadcast<'a> {
+    sinks: Vec<&'a mut dyn BlockSink>,
+    blocks: u64,
+    events: u64,
+}
+
+impl<'a> Broadcast<'a> {
+    pub fn new(sinks: Vec<&'a mut dyn BlockSink>) -> Self {
+        Self { sinks, blocks: 0, events: 0 }
+    }
+
+    /// Number of inner sinks.
+    pub fn fan_out(&self) -> usize {
+        self.sinks.len()
+    }
+
+    /// Blocks consumed so far — the stream was walked this many times in
+    /// total, regardless of how many sinks it fed.
+    pub fn blocks_broadcast(&self) -> u64 {
+        self.blocks
+    }
+
+    /// Events carried by the consumed blocks.
+    pub fn events_broadcast(&self) -> u64 {
+        self.events
+    }
+}
+
+impl BlockSink for Broadcast<'_> {
+    fn consume(&mut self, block: &EventBlock) {
+        self.blocks += 1;
+        self.events += block.len() as u64;
+        for sink in &mut self.sinks {
+            sink.consume(block);
+        }
+    }
+
+    fn finalize(&mut self) {
+        for sink in &mut self.sinks {
+            sink.finalize();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{CapturedTrace, VecSink};
+
+    fn sample_trace() -> CapturedTrace {
+        let mut t = CapturedTrace::default();
+        for i in 0..3u64 {
+            let mut b = EventBlock::with_capacity();
+            b.push_compute(2, 1);
+            b.push_load(i * 4096, 8, false);
+            b.push_store(i * 4096 + 64, 8);
+            t.consume(&b);
+        }
+        t.finalize();
+        t
+    }
+
+    #[test]
+    fn every_sink_sees_the_identical_stream() {
+        let trace = sample_trace();
+        let mut solo = VecSink::default();
+        trace.replay_into(&mut solo);
+
+        let mut a = VecSink::default();
+        let mut b = VecSink::default();
+        let mut c = VecSink::default();
+        let mut bc = Broadcast::new(vec![&mut a, &mut b, &mut c]);
+        trace.replay_into(&mut bc);
+        assert_eq!(bc.fan_out(), 3);
+        assert_eq!(bc.blocks_broadcast(), 3, "one consume per block, not per sink");
+        assert_eq!(bc.events_broadcast(), 9);
+        for fanned in [&a, &b, &c] {
+            assert_eq!(fanned.events, solo.events);
+        }
+    }
+
+    #[test]
+    fn zero_sinks_still_counts() {
+        let trace = sample_trace();
+        let mut bc = Broadcast::new(Vec::new());
+        trace.replay_into(&mut bc);
+        assert_eq!(bc.blocks_broadcast(), 3);
+    }
+}

@@ -15,9 +15,15 @@
 //! feed the consuming sink in recorded order ([`PipelinedIngest`]), with
 //! scratch recycled through a [`BlockPool`], for the same bit-identical
 //! block stream at multi-threaded throughput.
+//!
+//! [`broadcast`] fans one decoded stream out to N sinks (decode once,
+//! simulate many): the grid driver batches scenario cells that share a
+//! capture into a single [`Broadcast`] replay, and file traces reach the
+//! same fan-out through [`PipelinedIngest`].
 
 pub mod addr;
 pub mod block;
+pub mod broadcast;
 pub mod event;
 pub mod mix;
 pub mod pipeline;
@@ -29,6 +35,7 @@ pub use block::{
     BlockSink, BlockTee, BranchRec, EventBlock, EventKind, LaneCursors, LoadRec, PerEvent,
     StoreRec, BLOCK_EVENTS,
 };
+pub use broadcast::Broadcast;
 pub use event::{Event, NullSink, Sink, Tee, VecSink};
 pub use mix::InstructionMix;
 pub use pipeline::{resolve_ingest_threads, BlockPool, PipelinedIngest};

@@ -1,0 +1,116 @@
+//! Reuse-distance stack profiler parity gate: for every swept geometry,
+//! the miss count the single-pass [`StackProfiler`] derives from its
+//! per-set-class reuse-distance histograms must equal — bit-exactly —
+//! what the packed [`Cache`] reports when the identical demand line
+//! stream is driven through it in exact-LRU mode (`demand_probe` + plain
+//! `fill`). One trace pass versus one full simulation per geometry,
+//! same numbers.
+
+use mlperf::coordinator::{capture_trace, ExperimentConfig};
+use mlperf::sim::{default_sweep, demand_lines, Cache, StackProfiler, SweepGeometry};
+use mlperf::trace::{BlockSink, EventBlock};
+use mlperf::util::Pcg64;
+use mlperf::workloads::by_name;
+
+/// Extracts the demand line stream exactly as the profiler consumes it.
+#[derive(Default)]
+struct DemandLog {
+    lines: Vec<u64>,
+}
+
+impl BlockSink for DemandLog {
+    fn consume(&mut self, block: &EventBlock) {
+        demand_lines(block, &mut self.lines);
+    }
+    fn finalize(&mut self) {}
+}
+
+/// Drive `lines` through a standalone packed cache as exact LRU:
+/// demand probes only, plain demand fills on miss.
+fn packed_cache_misses(lines: &[u64], g: SweepGeometry) -> (u64, u64) {
+    let mut cache = Cache::new(g.bytes, g.ways);
+    for &l in lines {
+        let (hit, _, _) = cache.demand_probe(l, false);
+        if !hit {
+            cache.fill(l, false, false, false);
+        }
+    }
+    (cache.stats.accesses, cache.stats.misses)
+}
+
+#[test]
+fn profiler_matches_packed_cache_on_real_workload_traces() {
+    let cfg = ExperimentConfig { scale: 0.01, iterations: 1, ..Default::default() };
+    // a spread of the default sweep (both extremes included) keeps the
+    // per-geometry cache simulations affordable; the synthetic test
+    // below covers every geometry
+    let all = default_sweep();
+    let mut geometries: Vec<SweepGeometry> = all.iter().copied().step_by(4).collect();
+    geometries.push(all[all.len() - 1]);
+    for name in ["KMeans", "KNN"] {
+        let w = by_name(name).unwrap();
+        let recorded = capture_trace(w.as_ref(), &cfg, false);
+
+        let mut prof = StackProfiler::new(&geometries);
+        recorded.trace.replay_into(&mut prof);
+
+        let mut log = DemandLog::default();
+        recorded.trace.replay_into(&mut log);
+        assert!(!log.lines.is_empty(), "{name}: trivial demand stream");
+        assert_eq!(prof.accesses(), log.lines.len() as u64, "{name}: access count");
+
+        for &g in &geometries {
+            let (accesses, misses) = packed_cache_misses(&log.lines, g);
+            assert_eq!(accesses, prof.accesses(), "{name} @ {g}");
+            assert_eq!(
+                misses,
+                prof.misses_for(g),
+                "{name} @ {g}: stack-derived misses != simulated exact-LRU misses"
+            );
+        }
+    }
+}
+
+#[test]
+fn profiler_matches_packed_cache_on_every_default_geometry() {
+    // synthetic stream mixing dense sequential reuse (stack distances
+    // around the working-set size), a strided scan, and random far
+    // accesses — exercises cold misses, deep reuse, eviction, and the
+    // slot-compaction path at every set-class depth
+    let mut rng = Pcg64::new(7);
+    let mut lines: Vec<u64> = Vec::new();
+    for _ in 0..3 {
+        for i in 0..20_000u64 {
+            lines.push(i % 9_000);
+        }
+    }
+    for i in 0..15_000u64 {
+        lines.push(10_000 + i * 17 % 12_000);
+    }
+    for _ in 0..40_000 {
+        lines.push(rng.next_u64() % 30_000);
+    }
+
+    // every default geometry plus a direct-mapped and a 3-way oddball
+    // (128 sets — legal: sets must be a power of two, ways need not be)
+    let mut geometries = default_sweep();
+    geometries.push(SweepGeometry::new(4 * 1024, 1));
+    geometries.push(SweepGeometry::new(24 * 1024, 3));
+
+    let mut prof = StackProfiler::new(&geometries);
+    for &l in &lines {
+        prof.access_line(l);
+    }
+
+    for &g in &geometries {
+        let (accesses, misses) = packed_cache_misses(&lines, g);
+        assert_eq!(accesses, prof.accesses());
+        assert_eq!(misses, prof.misses_for(g), "synthetic stream @ {g}");
+    }
+
+    // and the derived curves agree with the point queries
+    for c in prof.curves() {
+        assert_eq!(c.misses, prof.misses_for(c.geometry));
+        assert_eq!(c.accesses, prof.accesses());
+    }
+}
