@@ -1,0 +1,243 @@
+//! Sampled-replay benchmark: periodic detailed windows + functional
+//! warming (`--sample`) versus full detailed replay, per cell.
+//!
+//! Each memory-bound workload is captured once in memory, then replayed
+//! twice: full `PipelineSim` (ground truth) and `SampledSim` at the
+//! given `--sample <detail>:<period>` (default 2:256, 0.78% detail).
+//! Correctness is hard-asserted on every run — the CPI truth must fall
+//! inside the estimate's own 95% interval and every state-derived
+//! metric (miss ratios, branch stats, prefetch stats, mix) must be
+//! bit-exact — while the wall-clock ratio is the reported/gated number.
+//!
+//! ```bash
+//! cargo bench --bench sample                        # table only
+//! cargo bench --bench sample -- --json              # + BENCH_sample.json
+//! cargo bench --bench sample -- --sample 4:512 \
+//!     --json --assert-sample-speedup 10
+//! ```
+//!
+//! `--json` writes `BENCH_sample.json` at the repository root (override
+//! with `--json-out`); CI uploads it and gates `--assert-sample-speedup`
+//! on the *minimum* per-cell speedup (the ISSUE's bar is per cell, not
+//! an average that a single fast cell could carry).
+
+#[path = "common.rs"]
+mod common;
+
+use mlperf::analysis::{r2, Table};
+use mlperf::coordinator::{
+    capture_trace, replay_characterize, replay_characterize_sampled, ExperimentConfig,
+};
+use mlperf::sim::SampleConfig;
+use mlperf::util::json::Json;
+use mlperf::workloads::by_name;
+use std::time::Instant;
+
+/// The paper's memory-bound set: large strided working sets where the
+/// detailed timeline (MSHR occupancy, DRAM queueing) dominates replay
+/// cost and functional warming has the most to skip. Cache-resident
+/// workloads sample too, but their speedup ceiling is the much smaller
+/// detailed/warm cost ratio of a hit-dominated stream.
+const WORKLOADS: [&str; 3] = ["KMeans", "KNN", "GMM"];
+
+struct CellResult {
+    name: &'static str,
+    events: u64,
+    full_wall: f64,
+    sampled_wall: f64,
+    cpi_full: f64,
+    cpi_est: f64,
+    cpi_ci95: f64,
+    windows: usize,
+    blocks_total: u64,
+    blocks_detailed: u64,
+}
+
+impl CellResult {
+    fn speedup(&self) -> f64 {
+        self.full_wall / self.sampled_wall.max(1e-9)
+    }
+}
+
+/// Best-of-2 wall seconds of `f` (shared-runner noise protection).
+fn best_wall(mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..2 {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn run_cell(name: &'static str, cfg: &ExperimentConfig, sample: SampleConfig) -> CellResult {
+    let w = by_name(name).unwrap();
+    let rec = common::timed(&format!("{name} capture"), || {
+        capture_trace(w.as_ref(), cfg, false)
+    });
+    let events = rec.trace.events();
+
+    let mut full = None;
+    let full_wall = best_wall(|| {
+        let m = replay_characterize(&rec, cfg, |_| {});
+        full.get_or_insert(m);
+    });
+    let full = full.expect("best_wall runs at least once");
+
+    let mut rep = None;
+    let sampled_wall = best_wall(|| {
+        let r = replay_characterize_sampled(&rec, cfg, sample, |_| {});
+        rep.get_or_insert(r);
+    });
+    let rep = rep.expect("best_wall runs at least once");
+
+    // correctness gates run unconditionally — a fast wrong answer is
+    // not a benchmark result
+    assert!(
+        rep.cpi_within_ci(full.cpi),
+        "{name}: estimate {} ± {} does not cover true CPI {}",
+        rep.estimate.cpi,
+        rep.cpi_ci95,
+        full.cpi
+    );
+    assert_eq!(rep.estimate.instructions, full.instructions, "{name}: instructions");
+    assert_eq!(rep.estimate.mix, full.mix, "{name}: instruction mix");
+    assert_eq!(rep.estimate.branch, full.branch, "{name}: branch stats");
+    assert_eq!(rep.estimate.prefetch, full.prefetch, "{name}: prefetch stats");
+    assert_eq!(rep.estimate.l1_miss_ratio, full.l1_miss_ratio, "{name}: L1");
+    assert_eq!(rep.estimate.l2_miss_ratio, full.l2_miss_ratio, "{name}: L2");
+    assert_eq!(rep.estimate.llc_miss_ratio, full.llc_miss_ratio, "{name}: LLC");
+
+    CellResult {
+        name,
+        events,
+        full_wall,
+        sampled_wall,
+        cpi_full: full.cpi,
+        cpi_est: rep.estimate.cpi,
+        cpi_ci95: rep.cpi_ci95,
+        windows: rep.windows,
+        blocks_total: rep.blocks_total,
+        blocks_detailed: rep.blocks_detailed,
+    }
+}
+
+fn write_json(path: &str, cfg: &ExperimentConfig, sample: SampleConfig, cells: &[CellResult]) {
+    let field = |k: &str, v: Json| (k.to_string(), v);
+    let min_speedup = cells.iter().map(CellResult::speedup).fold(f64::INFINITY, f64::min);
+    let doc = Json::Obj(vec![
+        field("bench", Json::Str("sample".into())),
+        field("scale", Json::num(cfg.scale)),
+        field("sample", Json::Str(sample.to_string())),
+        field("detailed_fraction", Json::num(sample.detailed_fraction())),
+        field("min_speedup", Json::num(min_speedup)),
+        field(
+            "cells",
+            Json::Arr(
+                cells
+                    .iter()
+                    .map(|c| {
+                        Json::Obj(vec![
+                            field("name", Json::Str(c.name.into())),
+                            field("events", Json::num(c.events as f64)),
+                            field("blocks_total", Json::num(c.blocks_total as f64)),
+                            field("blocks_detailed", Json::num(c.blocks_detailed as f64)),
+                            field("windows", Json::num(c.windows as f64)),
+                            field("full_wall_s", Json::num(c.full_wall)),
+                            field("sampled_wall_s", Json::num(c.sampled_wall)),
+                            field("speedup", Json::num(c.speedup())),
+                            field("cpi_full", Json::num(c.cpi_full)),
+                            field("cpi_estimate", Json::num(c.cpi_est)),
+                            field("cpi_ci95", Json::num(c.cpi_ci95)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+    std::fs::write(path, doc.render())
+        .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
+    println!("\nwrote {path}");
+}
+
+fn main() {
+    common::banner("sampled replay: detailed windows + functional warming vs full replay");
+    let cfg = common::config();
+    let args = common::args();
+    let sample = match args.get("sample") {
+        Some(spec) => SampleConfig::parse(&spec)
+            .unwrap_or_else(|| panic!("--sample expects <detail>:<period>, got {spec:?}")),
+        None => SampleConfig::default(),
+    };
+
+    let cells: Vec<CellResult> =
+        WORKLOADS.iter().map(|name| run_cell(name, &cfg, sample)).collect();
+
+    let mut t = Table::new(
+        "sample",
+        &format!(
+            "sampled replay at {sample} ({:.2}% detail) vs full replay",
+            sample.detailed_fraction() * 100.0
+        ),
+        &[
+            "workload",
+            "events",
+            "windows",
+            "full (s)",
+            "sampled (s)",
+            "speedup",
+            "CPI true",
+            "CPI est",
+            "+-CI95",
+        ],
+    );
+    for c in &cells {
+        t.row(vec![
+            c.name.into(),
+            format!("{}", c.events),
+            format!("{}", c.windows),
+            format!("{:.2}", c.full_wall),
+            format!("{:.2}", c.sampled_wall),
+            r2(c.speedup()),
+            format!("{:.3}", c.cpi_full),
+            format!("{:.3}", c.cpi_est),
+            format!("{:.3}", c.cpi_ci95),
+        ]);
+    }
+    t.emit();
+
+    let min_speedup = cells.iter().map(CellResult::speedup).fold(f64::INFINITY, f64::min);
+    println!(
+        "\nper-cell sampled-replay speedup: min {:.2}x over {} cells at {sample}",
+        min_speedup,
+        cells.len()
+    );
+
+    if args.has("json") {
+        let default_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sample.json");
+        let path = args.get_or("json-out", default_path);
+        write_json(&path, &cfg, sample, &cells);
+    }
+
+    if let Some(min) = args.get("assert-sample-speedup") {
+        let min: f64 = min.parse().expect("--assert-sample-speedup expects a number");
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        // both sides are serial, but sub-4-core runners are the small
+        // shared boxes whose wall clocks are too noisy to gate on —
+        // same policy as grid_replay's gates (correctness asserts above
+        // already ran regardless)
+        if cores < 4 {
+            println!(
+                "sample speedup gate skipped on {cores} core(s) \
+                 (measured min {min_speedup:.2}x, floor {min}x)"
+            );
+        } else {
+            assert!(
+                min_speedup >= min,
+                "sampled replay min speedup {min_speedup:.2}x is below the \
+                 acceptance floor {min}x",
+            );
+            println!("sample speedup gate passed: min {min_speedup:.2}x >= {min}x");
+        }
+    }
+}

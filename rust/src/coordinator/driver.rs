@@ -49,11 +49,11 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use super::{
     capture_trace, characterize_with, multicore_characterize, reorder_study, replay_characterize,
-    replay_characterize_many, ExperimentConfig, RecordedRun,
+    replay_characterize_many, replay_characterize_many_sampled, ExperimentConfig, RecordedRun,
 };
 use crate::ledger::{cell_fingerprint, Fingerprint, Ledger, LedgerRecord, Provenance};
 use crate::reorder::ReorderKind;
-use crate::sim::{CpuConfig, Metrics};
+use crate::sim::{CpuConfig, Metrics, SampleReport};
 use crate::util::error::Result;
 use crate::workloads::{by_name, multicore_names, registry};
 
@@ -170,6 +170,31 @@ impl Job {
     }
 }
 
+/// Sampling diagnostics attached to a cell that ran under `--sample`
+/// (the estimate itself lives in [`JobOutput::metrics`]). A run-time
+/// artifact, not part of the ledgered result: cells answered from a warm
+/// ledger report `None` here even when the stored metrics came from a
+/// sampled run (the fingerprint keys sampled and full cells apart).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SampleStat {
+    pub windows: usize,
+    pub blocks_total: u64,
+    pub blocks_detailed: u64,
+    /// 95% half-width on the estimated CPI.
+    pub cpi_ci95: f64,
+}
+
+impl From<&SampleReport> for SampleStat {
+    fn from(r: &SampleReport) -> Self {
+        Self {
+            windows: r.windows,
+            blocks_total: r.blocks_total,
+            blocks_detailed: r.blocks_detailed,
+            cpi_ci95: r.cpi_ci95,
+        }
+    }
+}
+
 /// Result slot for one job, in input order.
 #[derive(Debug, Clone)]
 pub struct JobOutput {
@@ -178,6 +203,8 @@ pub struct JobOutput {
     /// Workload quality scalar where the scenario produces one
     /// (multicore aggregation does not).
     pub quality: Option<f64>,
+    /// Present when this cell's metrics are a sampled-replay estimate.
+    pub sample: Option<SampleStat>,
 }
 
 /// What [`run_jobs`] / [`run_jobs_replayed`] hand back.
@@ -277,7 +304,7 @@ pub fn run_job(cfg: &ExperimentConfig, job: &Job) -> JobOutput {
             (c.metrics, Some(c.result.quality))
         }
     };
-    JobOutput { job: job.clone(), metrics, quality }
+    JobOutput { job: job.clone(), metrics, quality, sample: None }
 }
 
 /// Shared worker-pool skeleton of both driver modes (and the cache-sweep
@@ -489,12 +516,27 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                         drop(st);
                         let scenarios: Vec<Scenario> =
                             batch.iter().map(|&i| jobs[i].scenario).collect();
-                        let metrics = replay_characterize_many(&rec, cfg, &scenarios);
-                        for (&i, m) in batch.iter().zip(metrics) {
+                        // sampled replay swaps the estimator in per-cell;
+                        // scheduling and broadcast batching are identical
+                        let cells: Vec<(Metrics, Option<SampleStat>)> = match cfg.sample {
+                            Some(sc) => replay_characterize_many_sampled(&rec, cfg, &scenarios, sc)
+                                .into_iter()
+                                .map(|r| {
+                                    let stat = SampleStat::from(&r);
+                                    (r.estimate, Some(stat))
+                                })
+                                .collect(),
+                            None => replay_characterize_many(&rec, cfg, &scenarios)
+                                .into_iter()
+                                .map(|m| (m, None))
+                                .collect(),
+                        };
+                        for (&i, (m, stat)) in batch.iter().zip(cells) {
                             *slots[i].lock().unwrap() = Some(JobOutput {
                                 job: jobs[i].clone(),
                                 metrics: m,
                                 quality: Some(rec.result.quality),
+                                sample: stat,
                             });
                         }
                         drop(rec);
@@ -595,11 +637,23 @@ pub fn run_jobs_replayed_grouped(
             executions.fetch_add(1, Ordering::Relaxed);
             for &i in idxs {
                 let job = &jobs[i];
-                let metrics = replay_characterize(&recorded, cfg, |c| job.scenario.apply_cpu(c));
+                let (metrics, stat) = match cfg.sample {
+                    Some(sc) => {
+                        let r = super::replay_characterize_sampled(&recorded, cfg, sc, |c| {
+                            job.scenario.apply_cpu(c)
+                        });
+                        let stat = SampleStat::from(&r);
+                        (r.estimate, Some(stat))
+                    }
+                    None => {
+                        (replay_characterize(&recorded, cfg, |c| job.scenario.apply_cpu(c)), None)
+                    }
+                };
                 *slots[i].lock().unwrap() = Some(JobOutput {
                     job: job.clone(),
                     metrics,
                     quality: Some(recorded.result.quality),
+                    sample: stat,
                 });
             }
         } else {
@@ -644,6 +698,11 @@ pub fn run_jobs_ledgered(
                     job: job.clone(),
                     metrics: rec.metrics.clone(),
                     quality: rec.quality,
+                    // the CI is a run-time diagnostic, not a ledgered
+                    // result; the fingerprint already keys sampled and
+                    // full cells apart so the metrics themselves are
+                    // never cross-served
+                    sample: None,
                 });
             }
             None => miss_idx.push(i),
@@ -839,6 +898,48 @@ mod tests {
             assert_eq!(a.job, b.job);
             assert_eq!(a.metrics, b.metrics, "replay diverged for {:?}", a.job);
             assert_eq!(a.quality, b.quality);
+        }
+    }
+
+    #[test]
+    fn sampled_replay_grid_is_deterministic_and_reports_ci() {
+        // the window schedule is positional over each capture's block
+        // stream, and every broadcast batch replays the capture from
+        // block 0 — so cell results cannot depend on thread count or
+        // batch composition
+        let cfg = ExperimentConfig {
+            sample: Some(crate::sim::SampleConfig { detail: 2, period: 16 }),
+            ..tiny()
+        };
+        let jobs = vec![
+            Job::new("KMeans", Scenario::Baseline),
+            Job::new("KMeans", Scenario::PerfectLlc),
+            Job::new("KMeans", Scenario::NoHwPrefetch),
+            Job::new("GMM", Scenario::Multicore(2)),
+        ];
+        let a = run_jobs_replayed(&cfg, &jobs, 1);
+        let b = run_jobs_replayed(&cfg, &jobs, 3);
+        for (x, y) in a.outputs.iter().zip(&b.outputs) {
+            assert_eq!(x.job, y.job);
+            assert_eq!(x.metrics, y.metrics, "sampled replay nondeterministic: {:?}", x.job);
+            assert_eq!(x.sample, y.sample);
+        }
+        // replayable cells carry the CI; the direct multicore cell is full
+        for out in &a.outputs {
+            match out.job.scenario {
+                Scenario::Multicore(_) => assert!(out.sample.is_none()),
+                _ => {
+                    let s = out.sample.expect("replay cell must report sampling stats");
+                    assert!(s.cpi_ci95 > 0.0);
+                    assert!(s.blocks_detailed < s.blocks_total, "{s:?}");
+                }
+            }
+        }
+        // and the grouped scheduler agrees bit-for-bit
+        let g = run_jobs_replayed_grouped(&cfg, &jobs, 2);
+        for (x, y) in a.outputs.iter().zip(&g.outputs) {
+            assert_eq!(x.metrics, y.metrics, "grouped sampled replay diverged: {:?}", x.job);
+            assert_eq!(x.sample, y.sample);
         }
     }
 

@@ -12,13 +12,15 @@ pub mod sweep;
 
 pub use driver::{
     full_grid, run_job, run_jobs, run_jobs_ledgered, run_jobs_replayed,
-    run_jobs_replayed_grouped, standard_grid, DriverReport, Job, JobOutput, Scenario,
+    run_jobs_replayed_grouped, standard_grid, DriverReport, Job, JobOutput, SampleStat, Scenario,
 };
 pub use sweep::{run_cache_sweep, SweepCell, SweepReport};
 
 use crate::data::Dataset;
 use crate::reorder::{compute_plan, ReorderKind, ReorderPlan};
-use crate::sim::{run_multicore, CpuConfig, Metrics, PipelineSim};
+use crate::sim::{
+    run_multicore, CpuConfig, Metrics, PipelineSim, SampleConfig, SampleReport, SampledSim,
+};
 use crate::trace::{
     resolve_ingest_threads, BlockSink, BlockTee, Broadcast, CapturedTrace, NullSink,
     PipelinedIngest, Recorder, ReplaySource, ReplayStats, TraceMeta, TraceSummary, TraceWriter,
@@ -53,6 +55,14 @@ pub struct ExperimentConfig {
     /// so this knob can never change results and is deliberately
     /// **excluded** from ledger fingerprints (asserted by a test).
     pub ingest_threads: usize,
+    /// SMARTS-style sampled replay (`--sample <detail>:<period>`):
+    /// `Some` runs replay cells through [`crate::sim::SampledSim`] —
+    /// periodic detailed windows + exact functional warming — reporting
+    /// estimated timeline metrics with a 95% CI instead of simulating
+    /// every block in detail. `None` (default) is full simulation.
+    /// Unlike `ingest_threads` this **changes results**, so it enters
+    /// ledger fingerprints: sampled and full cells never alias.
+    pub sample: Option<SampleConfig>,
 }
 
 impl Default for ExperimentConfig {
@@ -66,6 +76,7 @@ impl Default for ExperimentConfig {
             cpu: CpuConfig::default(),
             auto_shrink: true,
             ingest_threads: 0,
+            sample: None,
         }
     }
 }
@@ -270,6 +281,60 @@ pub fn replay_characterize_many(
     sims.iter().map(PipelineSim::metrics).collect()
 }
 
+/// Sampled counterpart of [`replay_characterize`]: the identical config
+/// discipline (`mutate` first, then `auto_shrink` against the recorded
+/// footprint), but the block stream runs through a [`SampledSim`] —
+/// detailed windows + functional warming per `sample` — and the result
+/// is a [`SampleReport`] whose estimate carries a CPI confidence
+/// interval. With a degenerate `sample` (detail ≥ period) the estimate
+/// equals [`replay_characterize`] bit-for-bit.
+pub fn replay_characterize_sampled(
+    recorded: &RecordedRun,
+    cfg: &ExperimentConfig,
+    sample: SampleConfig,
+    mutate: impl FnOnce(&mut CpuConfig),
+) -> SampleReport {
+    let mut cpu = cfg.cpu.clone();
+    mutate(&mut cpu);
+    if cfg.auto_shrink {
+        shrink_hierarchy(&mut cpu, recorded.meta.dataset_bytes);
+    }
+    let mut sim = SampledSim::new(PipelineSim::new(cpu), sample);
+    recorded.trace.replay_into(&mut sim);
+    sim.into_report()
+}
+
+/// Sampled counterpart of [`replay_characterize_many`]: one pass over
+/// the captured stream fans out to one [`SampledSim`] per scenario via
+/// [`Broadcast`]. The window schedule is positional over the shared
+/// block stream, so every scenario samples the *same* windows — their
+/// estimates stay comparable cell-to-cell.
+pub fn replay_characterize_many_sampled(
+    recorded: &RecordedRun,
+    cfg: &ExperimentConfig,
+    scenarios: &[Scenario],
+    sample: SampleConfig,
+) -> Vec<SampleReport> {
+    let mut sims: Vec<SampledSim> = scenarios
+        .iter()
+        .map(|s| {
+            let mut cpu = cfg.cpu.clone();
+            s.apply_cpu(&mut cpu);
+            if cfg.auto_shrink {
+                shrink_hierarchy(&mut cpu, recorded.meta.dataset_bytes);
+            }
+            SampledSim::new(PipelineSim::new(cpu), sample)
+        })
+        .collect();
+    {
+        let sinks: Vec<&mut dyn BlockSink> =
+            sims.iter_mut().map(|s| s as &mut dyn BlockSink).collect();
+        let mut bc = Broadcast::new(sinks);
+        recorded.trace.replay_into(&mut bc);
+    }
+    sims.into_iter().map(SampledSim::into_report).collect()
+}
+
 /// `mlperf record`: run `w` once, streaming its trace to `path` while
 /// simultaneously simulating it (one execution yields both the trace
 /// artifact and the baseline metric table).
@@ -392,6 +457,42 @@ pub fn replay_file_many(
         }
     };
     Ok((meta, sims.iter().map(PipelineSim::metrics).collect(), stats))
+}
+
+/// Sampled counterpart of [`replay_file`]: stream a stored trace through
+/// a [`SampledSim`]. Ingest staging (`cfg.ingest_threads`) is honoured
+/// exactly as in full replay — sampling is downstream of delivery, so
+/// pipelined and synchronous ingest produce the identical report.
+pub fn replay_file_sampled(
+    path: &Path,
+    cfg: &ExperimentConfig,
+    sample: SampleConfig,
+    mutate: impl FnOnce(&mut CpuConfig),
+) -> Result<(TraceMeta, SampleReport, ReplayStats)> {
+    enum Src {
+        Sync(ReplaySource),
+        Pipelined(PipelinedIngest),
+    }
+    let src = if resolve_ingest_threads(cfg.ingest_threads) > 1 {
+        Src::Pipelined(PipelinedIngest::open(path, cfg.ingest_threads)?)
+    } else {
+        Src::Sync(ReplaySource::open(path)?)
+    };
+    let meta = match &src {
+        Src::Sync(s) => s.meta().clone(),
+        Src::Pipelined(s) => s.meta().clone(),
+    };
+    let mut cpu = cfg.cpu.clone();
+    mutate(&mut cpu);
+    if cfg.auto_shrink {
+        shrink_hierarchy(&mut cpu, meta.dataset_bytes);
+    }
+    let mut sim = SampledSim::new(PipelineSim::new(cpu), sample);
+    let stats = match src {
+        Src::Sync(s) => s.replay_into(&mut sim)?,
+        Src::Pipelined(s) => s.replay_into(&mut sim)?,
+    };
+    Ok((meta, sim.into_report(), stats))
 }
 
 fn workload_ns(w: &dyn Workload) -> u32 {
@@ -638,6 +739,40 @@ mod tests {
             characterize_with(w.as_ref(), &cfg, false, None, None, |c| c.cache.perfect_l2 = true);
         let replayed_l2 = replay_characterize(&recorded, &cfg, |c| c.cache.perfect_l2 = true);
         assert_eq!(replayed_l2, direct_l2.metrics);
+    }
+
+    #[test]
+    fn sampled_replay_smoke() {
+        let w = by_name("kmeans").unwrap();
+        let cfg = tiny();
+        let recorded = capture_trace(w.as_ref(), &cfg, false);
+        let full = replay_characterize(&recorded, &cfg, |_| {});
+        let rep = replay_characterize_sampled(
+            &recorded,
+            &cfg,
+            SampleConfig { detail: 2, period: 16 },
+            |_| {},
+        );
+        assert!(!rep.degenerate);
+        assert!(rep.blocks_detailed < rep.blocks_total);
+        assert!(
+            rep.cpi_within_ci(full.cpi),
+            "estimate {} ± {} vs truth {}",
+            rep.estimate.cpi,
+            rep.cpi_ci95,
+            full.cpi
+        );
+        // state-derived metrics are exact, not estimated
+        assert_eq!(rep.estimate.mix, full.mix);
+        assert_eq!(rep.estimate.llc_miss_ratio, full.llc_miss_ratio);
+        // degenerate sampling is full replay bit-for-bit
+        let deg = replay_characterize_sampled(
+            &recorded,
+            &cfg,
+            SampleConfig { detail: 4, period: 4 },
+            |_| {},
+        );
+        assert_eq!(deg.estimate, full);
     }
 
     #[test]

@@ -16,7 +16,7 @@
 use super::fingerprint::Fingerprint;
 use crate::analysis::Table;
 use crate::coordinator::{ExperimentConfig, JobOutput};
-use crate::sim::Metrics;
+use crate::sim::{Metrics, SampleConfig};
 use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 use crate::{anyhow, bail};
@@ -49,6 +49,11 @@ pub struct GridCell {
     pub scenario: String,
     pub fingerprint: Option<Fingerprint>,
     pub quality: Option<f64>,
+    /// Half-width of the 95% CPI confidence interval when the cell was
+    /// produced by sampled replay (`--sample`); `None` for exact cells.
+    /// Informational — the diff never compares it (it is a property of
+    /// the estimator, not of the simulated machine).
+    pub cpi_ci95: Option<f64>,
     /// `(metric name, value)` in [`TRACKED`] order.
     pub metrics: Vec<(String, f64)>,
 }
@@ -69,6 +74,11 @@ pub struct GridResults {
     /// without it a baseline recorded with prefetchers off could not be
     /// reproduced by the gate.
     pub hw_prefetch: bool,
+    /// Sampling parameters when the grid ran under `--sample`; `None`
+    /// for a full (exact) run. Rides along so a gate re-run reproduces
+    /// the producing mode — comparing a sampled run against a full
+    /// baseline is possible but the reader should know it happened.
+    pub sample: Option<SampleConfig>,
     pub cells: Vec<GridCell>,
 }
 
@@ -84,6 +94,7 @@ impl GridResults {
                 scenario: out.job.scenario.to_string(),
                 fingerprint: Some(super::fingerprint::cell_fingerprint(cfg, &out.job)),
                 quality: out.quality,
+                cpi_ci95: out.sample.map(|s| s.cpi_ci95),
                 metrics: TRACKED
                     .iter()
                     .map(|(name, get)| ((*name).to_string(), get(&out.metrics)))
@@ -97,6 +108,7 @@ impl GridResults {
             iterations: cfg.iterations,
             features: cfg.features,
             hw_prefetch: cfg.cpu.cache.hw_prefetch,
+            sample: cfg.sample,
             cells,
         }
     }
@@ -117,6 +129,9 @@ impl GridResults {
                     "quality".to_string(),
                     c.quality.map(Json::num).unwrap_or(Json::Null),
                 ));
+                if let Some(ci) = c.cpi_ci95 {
+                    fields.push(("cpi_ci95".to_string(), Json::num(ci)));
+                }
                 fields.push((
                     "metrics".to_string(),
                     Json::Obj(
@@ -139,6 +154,12 @@ impl GridResults {
             ("iterations".to_string(), Json::num(self.iterations as f64)),
             ("features".to_string(), Json::num(self.features as f64)),
             ("hw_prefetch".to_string(), Json::Bool(self.hw_prefetch)),
+            (
+                "sample".to_string(),
+                self.sample
+                    .map(|s| Json::Str(s.to_string()))
+                    .unwrap_or(Json::Null),
+            ),
             ("cells".to_string(), Json::Arr(cells)),
         ])
         .render()
@@ -185,6 +206,16 @@ impl GridResults {
             Some(Json::Bool(b)) => *b,
             Some(other) => bail!("results JSON has malformed hw_prefetch {:?}", other),
         };
+        // absent in pre-sampling files → exact run; present but
+        // unparseable is an error like every other run parameter
+        let sample = match v.get("sample") {
+            None | Some(Json::Null) => None,
+            Some(Json::Str(s)) => Some(
+                SampleConfig::parse(s)
+                    .ok_or_else(|| anyhow!("results JSON has malformed sample {s:?}"))?,
+            ),
+            Some(other) => bail!("results JSON has malformed sample {:?}", other),
+        };
         let mut cells = Vec::new();
         for cell in v
             .get("cells")
@@ -202,6 +233,7 @@ impl GridResults {
                 .ok_or_else(|| anyhow!("cell missing \"scenario\""))?
                 .to_string();
             let quality = cell.get("quality").and_then(Json::as_f64);
+            let cpi_ci95 = cell.get("cpi_ci95").and_then(Json::as_f64);
             let mut metrics = Vec::new();
             if let Some(Json::Obj(fields)) = cell.get("metrics") {
                 for (k, v) in fields {
@@ -216,10 +248,11 @@ impl GridResults {
                 scenario,
                 fingerprint: None, // informational; not needed for diffing
                 quality,
+                cpi_ci95,
                 metrics,
             });
         }
-        Ok(GridResults { scale, profile, seed, iterations, features, hw_prefetch, cells })
+        Ok(GridResults { scale, profile, seed, iterations, features, hw_prefetch, sample, cells })
     }
 
     pub fn save(&self, path: &Path) -> Result<()> {
@@ -445,12 +478,14 @@ mod tests {
             iterations: 1,
             features: 20,
             hw_prefetch: false,
+            sample: Some(SampleConfig { detail: 2, period: 256 }),
             cells: vec![
                 GridCell {
                     workload: "KMeans".into(),
                     scenario: "baseline".into(),
                     fingerprint: Some(Fingerprint { version: 1, hash: 0x1234 }),
                     quality: Some(0.87),
+                    cpi_ci95: Some(0.031),
                     metrics: vec![("cpi".into(), 1.25), ("llc_miss_ratio".into(), 0.4)],
                 },
                 GridCell {
@@ -458,6 +493,7 @@ mod tests {
                     scenario: "perfect-L2".into(),
                     fingerprint: None,
                     quality: None,
+                    cpi_ci95: None,
                     metrics: vec![("cpi".into(), 0.75)],
                 },
             ],
@@ -474,11 +510,14 @@ mod tests {
         assert_eq!(back.iterations, r.iterations);
         assert_eq!(back.features, r.features);
         assert!(!back.hw_prefetch, "the --no-hw-prefetch knob must ride along");
+        assert_eq!(back.sample, r.sample, "sampling params must round-trip");
         assert_eq!(back.cells.len(), 2);
         assert_eq!(back.cells[0].workload, "KMeans");
         assert_eq!(back.cells[0].quality, Some(0.87));
+        assert_eq!(back.cells[0].cpi_ci95, Some(0.031));
         assert_eq!(back.cells[0].metrics, r.cells[0].metrics);
         assert_eq!(back.cells[1].quality, None);
+        assert_eq!(back.cells[1].cpi_ci95, None);
     }
 
     #[test]
@@ -502,9 +541,19 @@ mod tests {
             r#"{"schema":"mlperf-grid/v1","scale":1,"profile":"Sklearn","seed":"x","cells":[]}"#,
             r#"{"schema":"mlperf-grid/v1","scale":1,"profile":"Sklearn","iterations":"two","cells":[]}"#,
             r#"{"schema":"mlperf-grid/v1","scale":1,"profile":"Sklearn","hw_prefetch":1,"cells":[]}"#,
+            r#"{"schema":"mlperf-grid/v1","scale":1,"profile":"Sklearn","sample":"0:8","cells":[]}"#,
+            r#"{"schema":"mlperf-grid/v1","scale":1,"profile":"Sklearn","sample":7,"cells":[]}"#,
         ] {
             assert!(GridResults::from_json(bad).is_err(), "{bad}");
         }
+
+        // absent sample → full run; well-formed sample parses
+        assert_eq!(GridResults::from_json(legacy).unwrap().sample, None);
+        let sampled = r#"{"schema":"mlperf-grid/v1","scale":1,"profile":"Sklearn","sample":"4:128","cells":[]}"#;
+        assert_eq!(
+            GridResults::from_json(sampled).unwrap().sample,
+            Some(SampleConfig { detail: 4, period: 128 })
+        );
     }
 
     #[test]
@@ -544,6 +593,7 @@ mod tests {
             scenario: "baseline".into(),
             fingerprint: None,
             quality: None,
+            cpi_ci95: None,
             metrics: vec![("cpi".into(), 2.0)],
         });
         let report = diff(&cur, &base, 0.01);
@@ -605,6 +655,7 @@ mod tests {
             iterations: 1,
             features: 20,
             hw_prefetch: true,
+            sample: None,
             cells: vec![],
         };
         let report = diff(&cur, &empty, 0.01);

@@ -188,6 +188,17 @@ pub fn cell_fingerprint(cfg: &ExperimentConfig, job: &Job) -> Fingerprint {
     b.usize("cell.iterations", cfg.iterations);
     b.u64("cell.seed", cfg.seed);
     b.bool("cell.auto_shrink", cfg.auto_shrink);
+    // Sampled simulation changes what the cell *contains* (an estimate
+    // with estimator error, not the exact Metrics), so the sampling
+    // parameters are configuration, not execution policy: a sampled cell
+    // must never answer a full-replay lookup or vice versa. Pushing the
+    // fields only when sampling is on means every pre-sampling ledger
+    // entry keeps its hash — field *presence* already separates the two
+    // domains, because adding a field changes the sorted-name digest.
+    if let Some(s) = cfg.sample {
+        b.u64("sample.detail", s.detail);
+        b.u64("sample.period", s.period);
+    }
     let mut cpu = cfg.cpu.clone();
     job.scenario.apply_cpu(&mut cpu);
     fingerprint_cpu(&mut b, &cpu);
@@ -317,6 +328,38 @@ mod tests {
             let c = ExperimentConfig { ingest_threads: threads, ..cfg() };
             assert_eq!(base, cell_fingerprint(&c, &job), "ingest_threads={threads}");
         }
+    }
+
+    #[test]
+    fn sampling_params_enter_the_fingerprint() {
+        use crate::sim::SampleConfig;
+        let job = Job::new("KMeans", Scenario::Baseline);
+        let full = cell_fingerprint(&cfg(), &job);
+
+        // a sampled cell never aliases a full-replay cell, even at the
+        // degenerate detail == period setting that reproduces full
+        // metrics bit-exactly (the *contract* differs: estimate vs exact)
+        let sampled = |detail, period| {
+            let c = ExperimentConfig {
+                sample: Some(SampleConfig { detail, period }),
+                ..cfg()
+            };
+            cell_fingerprint(&c, &job)
+        };
+        let base = sampled(2, 256);
+        assert_ne!(full, base, "sampled cell aliased a full-replay cell");
+        assert_ne!(full, sampled(4, 4), "degenerate sampled cell aliased full");
+
+        // every sampling parameter invalidates independently
+        assert_ne!(base, sampled(1, 256), "mutating detail did not change fp");
+        assert_ne!(base, sampled(4, 256), "mutating detail did not change fp");
+        assert_ne!(base, sampled(2, 128), "mutating period did not change fp");
+        assert_ne!(base, sampled(2, 512), "mutating period did not change fp");
+        // and the two parameters don't collide with each other
+        assert_ne!(sampled(2, 128), sampled(128, 2));
+
+        // deterministic: same params, same cell
+        assert_eq!(base, sampled(2, 256));
     }
 
     #[test]

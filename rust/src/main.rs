@@ -10,10 +10,11 @@
 //! mlperf gen-data    --rows 100000 --features 20 --out data.bin
 //! mlperf record      --workload kmeans [--out kmeans.mlt] [--sw-prefetch]
 //! mlperf replay      --trace kmeans.mlt [--perfect-l2|--perfect-llc|--no-hw-prefetch|--ideal-rows]
-//!                    [--ingest-threads 0]
+//!                    [--ingest-threads 0] [--sample 2:256]
 //! mlperf runtime     [--artifacts artifacts/]
 //! mlperf report      [--scale 0.2]     # every figure/table, slow
 //! mlperf report      --baseline BENCH_grid_baseline.json --gate
+//! mlperf report      --baseline BENCH_grid_baseline.json --bless   # refresh/bootstrap the baseline
 //! mlperf grid        [--threads 0] [--direct] [--ledger grid.mllg] [--json out.json]
 //! mlperf grid        --sweep cache [--workload knn] [--ledger grid.mllg] [--json sweep.json]
 //! mlperf ledger      stats|gc|export --ledger grid.mllg [--out export.json]
@@ -21,7 +22,7 @@
 
 use mlperf::analysis::{pct, r2, r3, Table};
 use mlperf::ledger::{diff, GridResults, Ledger, DEFAULT_TOLERANCE};
-use mlperf::sim::{default_sweep, Metrics};
+use mlperf::sim::{default_sweep, Metrics, SampleConfig};
 use mlperf::util::Json;
 use mlperf::util::error::Result;
 use mlperf::{anyhow, bail};
@@ -57,6 +58,15 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     };
     if args.has("no-hw-prefetch") {
         cfg.cpu.cache.hw_prefetch = false;
+    }
+    if let Some(spec) = args.get("sample") {
+        cfg.sample = Some(SampleConfig::parse(spec).ok_or_else(|| {
+            anyhow!(
+                "malformed --sample {spec:?} (expected <detail>:<period> with both > 0, \
+                 e.g. --sample {})",
+                SampleConfig::default()
+            )
+        })?);
     }
     Ok(cfg)
 }
@@ -112,13 +122,18 @@ common flags: --workload <name> --scale <f> --iterations <n> --profile sklearn|m
 record flags: --out <file.mlt> --sw-prefetch       (execute once, persist the columnar trace)
 replay flags: --trace <file.mlt> [--perfect-l2 --perfect-llc --no-hw-prefetch --ideal-rows]
               --ingest-threads <n> (0 = auto, 1 = synchronous; staged I/O/decode ingest, bit-identical)
+              --sample <detail>:<period> (SMARTS sampled simulation: detailed windows + functional
+              warming; CPI estimate with a 95% CI; try --sample 2:256)
 grid flags:   --threads <n> (0 = one per core) --full (all scenario columns) --direct (re-execute per cell)
               --ledger <file.mllg> (skip cells already simulated) --json <out.json> (results artifact)
               --assert-cached (fail if anything executed) --baseline <base.json> --gate --tolerance <f>
+              --sample <detail>:<period> (sampled replay cells; adds a CPI +-CI column)
 sweep flags:  grid --sweep cache (exact-LRU miss curves for every geometry from ONE trace pass per
               workload) [--workload <name>] [--ledger <file.mllg>] [--json <out.json>] [--assert-cached]
 report flags: --baseline <base.json> (re-run its cells and diff) --gate (non-zero exit on drift)
               --tolerance <f> (relative band, default 0.01) --ledger <file.mllg>
+              --bless (overwrite <base.json> with the freshly computed results — documented
+              refresh flow; an empty/missing baseline is blessed from the standard grid)
 ledger usage: mlperf ledger stats|gc|export --ledger <file.mllg> [--out <file.json>]";
 
 fn cmd_list() -> Result<()> {
@@ -330,7 +345,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
     let path = args.get("trace").ok_or_else(|| {
         anyhow!("--trace <file.mlt> required (create one with `mlperf record`)")
     })?;
-    let (meta, m, stats) = replay_file(std::path::Path::new(path), &cfg, |c| {
+    let mutate = |c: &mut mlperf::sim::CpuConfig| {
         if args.has("perfect-l2") {
             c.cache.perfect_l2 = true;
         }
@@ -343,7 +358,39 @@ fn cmd_replay(args: &Args) -> Result<()> {
         if args.has("ideal-rows") {
             c.dram.ideal_row_hits = true;
         }
-    })?;
+    };
+    if let Some(sc) = cfg.sample {
+        let (meta, report, stats) =
+            replay_file_sampled(std::path::Path::new(path), &cfg, sc, mutate)?;
+        let mut t = Table::new(
+            "replay_sampled",
+            &format!(
+                "sampled replay {} ({:?}, rows={}, sw_prefetch={}, {} events in {} blocks, sample {})",
+                meta.workload, meta.profile, meta.rows, meta.sw_prefetch, stats.events,
+                stats.blocks, sc
+            ),
+            &["metric", "value (estimate)"],
+        );
+        for (k, v) in metric_rows(&report.estimate) {
+            t.row(vec![k.into(), v]);
+        }
+        t.row(vec!["CPI 95% CI (±)".into(), format!("{:.4}", report.cpi_ci95)]);
+        t.row(vec!["detailed windows".into(), format!("{}", report.windows)]);
+        t.row(vec![
+            "blocks detailed/total".into(),
+            format!("{}/{}", report.blocks_detailed, report.blocks_total),
+        ]);
+        t.row(vec![
+            "instr detailed/total".into(),
+            format!("{}/{}", report.instructions_detailed, report.instructions),
+        ]);
+        if report.degenerate {
+            t.row(vec!["mode".into(), "degenerate (detail >= period): exact full run".into()]);
+        }
+        println!("{}", t.render());
+        return Ok(());
+    }
+    let (meta, m, stats) = replay_file(std::path::Path::new(path), &cfg, mutate)?;
     let mut t = Table::new(
         "replay",
         &format!(
@@ -511,9 +558,17 @@ fn cmd_grid(args: &Args) -> Result<()> {
     if let Some(kind) = args.get("sweep") {
         return cmd_grid_sweep(args, kind);
     }
-    let cfg = config_from(args)?;
+    let mut cfg = config_from(args)?;
     let threads: usize = args.get_parsed_or("threads", 0usize);
     let direct = args.has("direct");
+    if direct && cfg.sample.is_some() {
+        eprintln!(
+            "warning: --sample has no effect on `mlperf grid --direct` — direct cells re-execute \
+             the workload through the full simulator; dropping the sampling request so the \
+             results artifact does not claim estimates it did not make"
+        );
+        cfg.sample = None;
+    }
     let ledger_path = args.get("ledger");
     let jobs = if args.has("full") { full_grid(&cfg) } else { standard_grid(&cfg) };
     println!(
@@ -540,30 +595,51 @@ fn cmd_grid(args: &Args) -> Result<()> {
         None if direct => run_jobs(&cfg, &jobs, threads),
         None => run_jobs_replayed(&cfg, &jobs, threads),
     };
+    let sampled = cfg.sample.is_some();
+    let mut headers = vec!["workload", "scenario", "CPI"];
+    if sampled {
+        headers.push("+-CI95");
+    }
+    headers.extend(["ret%", "bspec%", "dram%", "core%", "quality"]);
     let mut t = Table::new(
         "grid",
         &format!(
-            "parallel experiment grid ({} jobs, {} workload executions, {} cached, {} threads, {:.1}s wall)",
+            "parallel experiment grid ({} jobs, {} workload executions, {} cached, {} threads, {:.1}s wall{})",
             report.outputs.len(),
             report.workload_executions,
             report.cached_cells,
             report.threads_used,
-            report.wall_seconds
+            report.wall_seconds,
+            cfg.sample
+                .map(|s| format!(", sampled {s}"))
+                .unwrap_or_default()
         ),
-        &["workload", "scenario", "CPI", "ret%", "bspec%", "dram%", "core%", "quality"],
+        &headers,
     );
     for out in &report.outputs {
         let m = &out.metrics;
-        t.row(vec![
+        let mut cells = vec![
             out.job.workload.clone(),
             out.job.scenario.to_string(),
             r2(m.cpi),
+        ];
+        if sampled {
+            // "-" marks cells the sampler cannot serve (direct scenarios
+            // like multicore) or that came exact out of the ledger
+            cells.push(
+                out.sample
+                    .map(|s| format!("{:.3}", s.cpi_ci95))
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        cells.extend([
             pct(m.retiring_pct),
             pct(m.bad_spec_pct),
             pct(m.dram_bound_pct),
             pct(m.core_bound_pct),
             out.quality.map(|q| format!("{q:.4}")).unwrap_or_else(|| "-".into()),
         ]);
+        t.row(cells);
     }
     t.emit();
 
@@ -843,62 +919,91 @@ fn cmd_report(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `mlperf report --baseline <file.json> [--gate]`: re-run exactly the
-/// cells the baseline tracks (at the baseline's recorded scale/profile
-/// unless overridden) and diff the tracked metrics against it.
+/// `mlperf report --baseline <file.json> [--gate|--bless]`: re-run
+/// exactly the cells the baseline tracks (at the baseline's recorded
+/// scale/profile unless overridden) and diff the tracked metrics
+/// against it — or, with `--bless`, overwrite the baseline file with
+/// the freshly computed results. Blessing an empty or missing baseline
+/// bootstraps it from the standard grid (`--full` for every scenario
+/// column), which is the documented replacement for committing a
+/// placeholder `BENCH_grid_baseline.json` by hand.
 fn cmd_report_baseline(args: &Args, cfg: &mut ExperimentConfig, baseline_path: &str) -> Result<()> {
-    let baseline = GridResults::load(std::path::Path::new(baseline_path))?;
-    if baseline.cells.is_empty() {
+    let bless = args.has("bless");
+    let baseline = match GridResults::load(std::path::Path::new(baseline_path)) {
+        Ok(b) => Some(b),
+        Err(e) if bless => {
+            println!("baseline {baseline_path} not loadable ({e:#}) — blessing from scratch");
+            None
+        }
+        Err(e) => return Err(e),
+    };
+    let is_empty = baseline.as_ref().map(|b| b.cells.is_empty()).unwrap_or(true);
+    if is_empty && !bless {
         println!(
             "baseline {baseline_path} has no cells (bootstrap placeholder) — nothing to gate; \
-             regenerate it with `mlperf grid --json {baseline_path}`"
+             regenerate it with `mlperf report --baseline {baseline_path} --bless`"
         );
         if args.has("gate") {
             eprintln!(
                 "warning: --gate against the empty baseline is VACUOUS — no cell was re-run or \
-                 compared, so this exit code certifies nothing; populate {baseline_path} to arm \
+                 compared, so this exit code certifies nothing; bless {baseline_path} to arm \
                  the gate"
             );
         }
         return Ok(());
     }
-    // default to the baseline's recorded run parameters so the diff
-    // compares like with like; explicit flags still win
-    if args.get("scale").is_none() && baseline.scale > 0.0 {
-        cfg.scale = baseline.scale;
-    }
-    if args.get("seed").is_none() {
-        cfg.seed = baseline.seed;
-    }
-    if args.get("iterations").is_none() && baseline.iterations > 0 {
-        cfg.iterations = baseline.iterations;
-    }
-    if args.get("features").is_none() && baseline.features > 0 {
-        cfg.features = baseline.features;
-    }
-    if !args.has("no-hw-prefetch") {
-        cfg.cpu.cache.hw_prefetch = baseline.hw_prefetch;
-    }
-    if args.get("profile").is_none() {
-        match baseline.profile.as_str() {
-            "Sklearn" => cfg.profile = LibraryProfile::Sklearn,
-            "Mlpack" => cfg.profile = LibraryProfile::Mlpack,
-            other => bail!("baseline {baseline_path} names unknown profile {other:?}"),
+    if let Some(baseline) = baseline.as_ref().filter(|b| !b.cells.is_empty()) {
+        // default to the baseline's recorded run parameters so the diff
+        // compares like with like; explicit flags still win
+        if args.get("scale").is_none() && baseline.scale > 0.0 {
+            cfg.scale = baseline.scale;
+        }
+        if args.get("seed").is_none() {
+            cfg.seed = baseline.seed;
+        }
+        if args.get("iterations").is_none() && baseline.iterations > 0 {
+            cfg.iterations = baseline.iterations;
+        }
+        if args.get("features").is_none() && baseline.features > 0 {
+            cfg.features = baseline.features;
+        }
+        if !args.has("no-hw-prefetch") {
+            cfg.cpu.cache.hw_prefetch = baseline.hw_prefetch;
+        }
+        if args.get("sample").is_none() {
+            cfg.sample = baseline.sample;
+        }
+        if args.get("profile").is_none() {
+            match baseline.profile.as_str() {
+                "Sklearn" => cfg.profile = LibraryProfile::Sklearn,
+                "Mlpack" => cfg.profile = LibraryProfile::Mlpack,
+                other => bail!("baseline {baseline_path} names unknown profile {other:?}"),
+            }
         }
     }
-    let jobs = baseline
-        .cells
-        .iter()
-        .map(|c| {
-            Scenario::parse(&c.scenario)
-                .map(|s| Job::new(c.workload.clone(), s))
-                .ok_or_else(|| {
-                    anyhow!("baseline cell {}/{:?}: unknown scenario", c.workload, c.scenario)
-                })
-        })
-        .collect::<Result<Vec<Job>>>()?;
+    let jobs = match baseline.as_ref().filter(|b| !b.cells.is_empty()) {
+        Some(baseline) => baseline
+            .cells
+            .iter()
+            .map(|c| {
+                Scenario::parse(&c.scenario)
+                    .map(|s| Job::new(c.workload.clone(), s))
+                    .ok_or_else(|| {
+                        anyhow!("baseline cell {}/{:?}: unknown scenario", c.workload, c.scenario)
+                    })
+            })
+            .collect::<Result<Vec<Job>>>()?,
+        None => {
+            if args.has("full") {
+                full_grid(cfg)
+            } else {
+                standard_grid(cfg)
+            }
+        }
+    };
     println!(
-        "re-running the {} baseline cells at scale {} ({:?}) …",
+        "{} the {} cells at scale {} ({:?}) …",
+        if bless { "blessing" } else { "re-running" },
         jobs.len(),
         cfg.scale,
         cfg.profile
@@ -916,5 +1021,16 @@ fn cmd_report_baseline(args: &Args, cfg: &mut ExperimentConfig, baseline_path: &
         report.workload_executions, report.cached_cells, report.wall_seconds
     );
     let current = GridResults::from_outputs(cfg, &report.outputs);
+    if bless {
+        current.save(std::path::Path::new(baseline_path))?;
+        println!(
+            "blessed {} cells (scale {}, {:?}{}) to {baseline_path} — commit it to arm the gate",
+            current.cells.len(),
+            current.scale,
+            cfg.profile,
+            cfg.sample.map(|s| format!(", sampled {s}")).unwrap_or_default()
+        );
+        return Ok(());
+    }
     gate_against_baseline(&current, baseline_path, tolerance_from(args), args.has("gate"))
 }

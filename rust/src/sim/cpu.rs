@@ -63,6 +63,22 @@ struct Outstanding {
     level: Level,
 }
 
+/// Read-only snapshot of the timeline accumulators — the quantities the
+/// sampled-simulation estimator ([`super::sample`]) extrapolates from
+/// detailed windows. Everything else the simulator tracks (instruction
+/// mix, branch counters, cache/prefetch statistics) is timing-independent
+/// and therefore *exact* under functional warming.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct TimelineSnapshot {
+    pub uops: f64,
+    pub cycle: f64,
+    pub bad_spec_cycles: f64,
+    pub l2_stall: f64,
+    pub l3_stall: f64,
+    pub dram_stall: f64,
+    pub instructions: u64,
+}
+
 /// Full metric set for one characterized run.
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Metrics {
@@ -379,6 +395,121 @@ impl<C: CacheModel> PipelineSim<C> {
             prefetch: self.hierarchy.pf_stats,
             sim_time_ns: total / self.cfg.freq_ghz,
         }
+    }
+
+    /// Current timeline accumulators (sampling-window bookkeeping).
+    pub fn timeline(&self) -> TimelineSnapshot {
+        TimelineSnapshot {
+            uops: self.uops,
+            cycle: self.cycle,
+            bad_spec_cycles: self.bad_spec_cycles,
+            l2_stall: self.l2_stall,
+            l3_stall: self.l3_stall,
+            dram_stall: self.dram_stall,
+            instructions: self.mix.instructions(),
+        }
+    }
+
+    /// The core configuration this simulator runs under.
+    pub fn config(&self) -> &CpuConfig {
+        &self.cfg
+    }
+
+    /// The (exact, lane-accumulated) instruction mix so far.
+    pub fn mix(&self) -> &InstructionMix {
+        &self.mix
+    }
+
+    /// Branch counters so far (exact under functional warming too).
+    pub fn branch_stats(&self) -> BranchStats {
+        self.branch_stats
+    }
+
+    /// Functional warming: replay a block's *state* effects without the
+    /// timeline model. Cache tag arrays (all three levels, via the same
+    /// `demand_probe`/`fill` path as detailed simulation, hardware
+    /// prefetchers included), branch-predictor state, the instruction
+    /// mix, branch counters, and the uop count evolve exactly as under
+    /// [`BlockSink::consume`] — none of them consult the timeline —
+    /// while cycles, stalls, the ROB/MSHR window, and the DRAM model are
+    /// skipped entirely.
+    ///
+    /// `cycles_per_uop` advances the clock at an estimated rate so the
+    /// DRAM model's notion of time keeps moving across warmed gaps
+    /// (request arrival spacing in the next detailed window depends on
+    /// it; state correctness does not).
+    pub fn warm_block(&mut self, block: &EventBlock, cycles_per_uop: f64) {
+        self.mix.add_block(block);
+        // order-insensitive lanes reduce lane-wise: only the memory lanes
+        // (cache state) and the branch lane (gshare history) are
+        // order-sensitive, and each only relative to its own kind
+        let mut uops = 0u64;
+        for &(int_ops, fp_ops) in &block.compute {
+            uops += (int_ops + fp_ops) as u64;
+        }
+        for &ops in &block.serial {
+            uops += ops as u64;
+        }
+        for b in &block.branches {
+            uops += 1;
+            if b.conditional {
+                self.branch_stats.conditional += 1;
+                if !self.predictor.predict_update(b.site, b.taken) {
+                    self.branch_stats.mispredicts += 1;
+                }
+            } else {
+                self.branch_stats.unconditional += 1;
+            }
+        }
+        for &(_site, count) in &block.loop_branches {
+            uops += count as u64;
+            self.branch_stats.conditional += count as u64;
+            if count as u64 > 14 {
+                self.branch_stats.mispredicts += 1;
+            }
+        }
+        uops += block.prefetches.len() as u64;
+        // loads/stores/prefetches must interleave exactly as emitted
+        // (cache state is order-sensitive across the three memory kinds):
+        // walk the tag lane dispatching memory ops only
+        let (mut li, mut sti, mut pi) = (0, 0, 0);
+        for &kind in block.kinds() {
+            match kind {
+                EventKind::Load => {
+                    let (first, last) = block.loads[li].line_span();
+                    li += 1;
+                    uops += last - first + 1;
+                    self.hierarchy.access_span(first, last, false, &mut self.dram_scratch);
+                }
+                EventKind::Store => {
+                    let (first, last) = block.stores[sti].line_span();
+                    sti += 1;
+                    uops += last - first + 1;
+                    self.hierarchy.access_span(first, last, true, &mut self.dram_scratch);
+                }
+                EventKind::SwPrefetch => {
+                    let addr = block.prefetches[pi];
+                    pi += 1;
+                    self.hierarchy.sw_prefetch(addr, &mut self.dram_scratch);
+                }
+                _ => {}
+            }
+        }
+        // warmed traffic bypasses the DRAM timing model by design
+        self.dram_scratch.clear();
+        self.uops += uops as f64;
+        self.cycle += uops as f64 * cycles_per_uop;
+    }
+
+    /// Close a detailed sampling window: complete every in-flight load
+    /// without charging stall cycles — the exact policy [`Sink::finish`]
+    /// applies to the end-of-trace tail — and drop any pending
+    /// load→branch feeding edge so no timeline dependency crosses the
+    /// warmed gap that follows.
+    pub fn close_sample_window(&mut self) {
+        self.outstanding.clear();
+        self.feeding_load_completion = 0.0;
+        self.feeding_load_level = Level::L1;
     }
 }
 
@@ -747,5 +878,67 @@ mod tests {
         BlockSink::finalize(&mut batched);
 
         assert_eq!(per_event.metrics(), batched.metrics());
+    }
+
+    /// Functional warming must evolve every timing-independent quantity
+    /// — instruction mix, branch counters (gshare state included), uop
+    /// count, and all cache/prefetch statistics — exactly as detailed
+    /// simulation does: warm the first half of a stream, simulate the
+    /// second half detailed, and compare against a fully detailed run.
+    #[test]
+    fn warm_block_evolves_state_exactly() {
+        let mut rng = crate::util::Pcg64::new(2024);
+        let mut blocks: Vec<EventBlock> = Vec::new();
+        let mut block = EventBlock::with_capacity();
+        for _ in 0..40_000 {
+            let ev = match rng.below(7) {
+                0 => Event::Compute { int_ops: rng.below(6) as u32, fp_ops: rng.below(6) as u32 },
+                1 => Event::Serial { ops: 1 + rng.below(4) as u32 },
+                2 => Event::Load {
+                    addr: rng.below(1 << 26),
+                    size: 1 + rng.below(256) as u32,
+                    feeds_branch: rng.next_f64() < 0.2,
+                },
+                3 => Event::Store { addr: rng.below(1 << 26), size: 8 },
+                4 => Event::Branch {
+                    site: rng.below(64) as u32,
+                    taken: rng.next_f64() < 0.5,
+                    conditional: rng.next_f64() < 0.9,
+                },
+                5 => Event::LoopBranch { site: rng.below(32) as u32, count: 1 + rng.below(30) as u32 },
+                _ => Event::SwPrefetch { addr: rng.below(1 << 26) },
+            };
+            block.push_event(ev);
+            if block.is_full() {
+                blocks.push(std::mem::replace(&mut block, EventBlock::with_capacity()));
+            }
+        }
+        if !block.is_empty() {
+            blocks.push(block);
+        }
+
+        let mut full = sim();
+        for b in &blocks {
+            full.consume(b);
+        }
+        BlockSink::finalize(&mut full);
+
+        let mut sampled = sim();
+        let half = blocks.len() / 2;
+        for b in &blocks[..half] {
+            sampled.warm_block(b, 0.4);
+        }
+        for b in &blocks[half..] {
+            sampled.consume(b);
+        }
+        BlockSink::finalize(&mut sampled);
+
+        assert_eq!(full.mix, sampled.mix, "instruction mix diverged under warming");
+        assert_eq!(full.branch_stats, sampled.branch_stats, "branch state diverged");
+        assert_eq!(full.timeline().uops, sampled.timeline().uops, "uop count diverged");
+        assert_eq!(full.hierarchy.l1.stats(), sampled.hierarchy.l1.stats());
+        assert_eq!(full.hierarchy.l2.stats(), sampled.hierarchy.l2.stats());
+        assert_eq!(full.hierarchy.l3.stats(), sampled.hierarchy.l3.stats());
+        assert_eq!(full.hierarchy.pf_stats, sampled.hierarchy.pf_stats);
     }
 }

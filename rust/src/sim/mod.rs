@@ -16,6 +16,9 @@
 //! - [`stack`] — single-pass reuse-distance (Mattson stack) profiler:
 //!   exact-LRU miss curves for a whole sizes × ways sweep from one trace
 //!   walk (`mlperf grid --sweep cache`).
+//! - [`sample`] — SMARTS-style sampled simulation: periodic detailed
+//!   windows + exact functional warming, CPI confidence intervals from
+//!   inter-window variance (`--sample <detail>:<period>`).
 
 pub mod branch;
 pub mod cache;
@@ -24,15 +27,17 @@ pub mod dram;
 pub mod multicore;
 pub mod prefetch;
 pub mod reference;
+pub mod sample;
 pub mod stack;
 
 pub use branch::{BranchStats, Gshare};
 pub use cache::{
     BlockAccess, Cache, CacheModel, CacheStats, DramRequest, Hierarchy, HierarchyConfig, Level,
 };
-pub use cpu::{CpuConfig, Metrics, PipelineSim};
+pub use cpu::{CpuConfig, Metrics, PipelineSim, TimelineSnapshot};
 pub use dram::{AddrMap, Dram, DramConfig, DramStats, RowOutcome};
 pub use multicore::{aggregate, percore_config, run_multicore, run_multicore_with_model};
 pub use prefetch::{AdjacentLinePrefetcher, PrefetchStats, StreamPrefetcher};
 pub use reference::{RefCache, RefHierarchy, RefPipelineSim};
+pub use sample::{SampleConfig, SampleReport, SampledSim};
 pub use stack::{default_sweep, demand_lines, StackProfiler, SweepCurve, SweepGeometry};

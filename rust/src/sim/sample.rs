@@ -1,0 +1,578 @@
+//! SMARTS-style sampled simulation: periodic detailed windows + functional
+//! warming, with confidence intervals from inter-window variance.
+//!
+//! Full replay of billions of trace events is the floor on grid latency.
+//! [`SampledSim`] wraps a [`PipelineSim`] and schedules its input block
+//! stream into two regimes (Wunderlich et al., *SMARTS: Accelerating
+//! Microarchitecture Simulation via Rigorous Statistical Sampling*,
+//! ISCA 2003):
+//!
+//! - **Detailed windows** — `detail` consecutive [`EventBlock`]s out of
+//!   every `period` run through the full timeline model
+//!   ([`BlockSink::consume`]): ROB/MSHR window, stall attribution, branch
+//!   flush costs, and the DDR4 row-buffer model.
+//! - **Functional warming** — the remaining `period − detail` blocks run
+//!   through [`PipelineSim::warm_block`]: cache tag arrays (all levels,
+//!   hardware prefetchers included), branch-predictor state, instruction
+//!   mix, and the uop count evolve *exactly* as under detailed
+//!   simulation — none of those consult the timeline — while cycles,
+//!   stalls and DRAM timing are skipped.
+//!
+//! Because warming is exact, every *state-derived* metric in the produced
+//! [`Metrics`] — cache miss ratios, prefetch stats, branch mispredict
+//! ratio, instruction mix — equals the full run bit-for-bit (the
+//! `warm_block_evolves_state_exactly` test in [`super::cpu`] locks this).
+//! Only *timeline* quantities (cycles, stall decomposition, DRAM request
+//! timing) are estimated, by scaling the detailed-window sums with
+//! `S = total_instructions / detailed_instructions`; their uncertainty is
+//! reported as a 95% confidence interval on CPI derived from the
+//! inter-window variance of per-window CPI (Student-t, n−1 df), widened
+//! by a relative floor that absorbs window-boundary cold-start bias.
+//!
+//! The degenerate configuration `detail >= period` disables sampling
+//! entirely: every block is consumed detailed and the report's estimate
+//! is the full-run [`PipelineSim::metrics`] bit-exactly with a zero-width
+//! interval (the CLI's `--sample N:N` escape hatch, also the anchor for
+//! the `tests/sampling.rs` degenerate-case gate).
+
+use super::cache::{Cache, CacheModel};
+use super::cpu::{Metrics, PipelineSim, TimelineSnapshot};
+use super::dram::DramStats;
+use crate::trace::{BlockSink, EventBlock};
+use crate::util::stats::{sample_stddev, t95};
+use std::fmt;
+
+/// Sampling schedule: out of every `period` event blocks, the first
+/// `detail` are simulated in detail and the rest are functionally warmed.
+///
+/// Granularity is the [`EventBlock`] (4096 events), so the default
+/// `2:256` means detailed windows of ~8k events every ~1M events — a
+/// 0.78% detailed fraction, which puts the wall-clock floor at the cost
+/// of the warming path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SampleConfig {
+    /// Detailed blocks per period (window length).
+    pub detail: u64,
+    /// Schedule period in blocks.
+    pub period: u64,
+}
+
+impl SampleConfig {
+    pub const DEFAULT_DETAIL: u64 = 2;
+    pub const DEFAULT_PERIOD: u64 = 256;
+
+    /// Parse `"<detail>:<period>"` (both nonzero). Returns `None` on any
+    /// malformed input so the CLI can report the expected shape.
+    pub fn parse(s: &str) -> Option<Self> {
+        let (d, p) = s.split_once(':')?;
+        let detail: u64 = d.trim().parse().ok()?;
+        let period: u64 = p.trim().parse().ok()?;
+        if detail == 0 || period == 0 {
+            return None;
+        }
+        Some(Self { detail, period })
+    }
+
+    /// `detail >= period`: every block is detailed, sampling is a
+    /// pass-through and the estimate is exact.
+    pub fn is_degenerate(&self) -> bool {
+        self.detail >= self.period
+    }
+
+    /// Fraction of blocks simulated in detail (1.0 when degenerate).
+    pub fn detailed_fraction(&self) -> f64 {
+        (self.detail as f64 / self.period as f64).min(1.0)
+    }
+}
+
+impl Default for SampleConfig {
+    fn default() -> Self {
+        Self { detail: Self::DEFAULT_DETAIL, period: Self::DEFAULT_PERIOD }
+    }
+}
+
+impl fmt::Display for SampleConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.detail, self.period)
+    }
+}
+
+/// One closed detailed window's timeline contribution.
+#[derive(Debug, Clone, Copy)]
+struct WindowStat {
+    instructions: u64,
+    cycles: f64,
+}
+
+/// Result of a sampled run: the estimated metric set plus the sampling
+/// diagnostics needed to judge it.
+#[derive(Debug, Clone)]
+pub struct SampleReport {
+    pub sample: SampleConfig,
+    /// Closed detailed windows that contributed to the estimate.
+    pub windows: usize,
+    pub blocks_total: u64,
+    pub blocks_detailed: u64,
+    /// Exact instruction count of the whole stream (warming counts too).
+    pub instructions: u64,
+    /// Instructions retired inside detailed windows.
+    pub instructions_detailed: u64,
+    /// The estimated metric set. State-derived metrics (miss ratios,
+    /// prefetch, branch ratios, mix) are **exact**; timeline metrics
+    /// (cycles, CPI, stall percentages, DRAM stats) are extrapolated.
+    pub estimate: Metrics,
+    /// 95% half-width on `estimate.cpi` from inter-window variance.
+    /// Zero when degenerate. Because the core-bound add-on is computed
+    /// exactly from the full mix, the timeline half-width carries over
+    /// to the final CPI unchanged.
+    pub cpi_ci95: f64,
+    /// `detail >= period`: `estimate` is the full-run metrics bit-exactly.
+    pub degenerate: bool,
+}
+
+impl SampleReport {
+    /// Does `truth` (a full-run CPI) fall inside the reported interval?
+    pub fn cpi_within_ci(&self, truth: f64) -> bool {
+        (truth - self.estimate.cpi).abs() <= self.cpi_ci95
+    }
+}
+
+/// Relative CI floor: the interval never narrows below ±5% of the
+/// estimate (±50% with a single window). Inter-window variance measures
+/// sampling noise but not the small systematic biases of windowing —
+/// MSHR/ROB state is discarded at window close ([`PipelineSim::
+/// close_sample_window`]) so each window starts cold, and warmed gaps
+/// advance the DRAM clock at an estimated rate — and the floor keeps the
+/// reported interval honest about them.
+const REL_CI_FLOOR: f64 = 0.05;
+const SINGLE_WINDOW_REL_CI: f64 = 0.5;
+
+/// A [`BlockSink`] that samples its input stream: detailed windows via
+/// the wrapped [`PipelineSim`], functional warming in between. Drop-in
+/// wherever a simulator sinks blocks (`ReplaySource`, `PipelinedIngest`,
+/// `Broadcast` fan-out) — the scheduling is purely positional, so the
+/// delivery mechanism is irrelevant as long as blocks arrive in order.
+pub struct SampledSim<C: CacheModel = Cache> {
+    sim: PipelineSim<C>,
+    cfg: SampleConfig,
+    blocks_total: u64,
+    blocks_detailed: u64,
+    /// Timeline snapshot at the open window's start, if inside one.
+    window_open: Option<TimelineSnapshot>,
+    windows: Vec<WindowStat>,
+    /// Cycles-per-uop rate for the warm clock, refreshed from each
+    /// closed window. Block 0 is always detailed, so the placeholder is
+    /// replaced before the first warmed block on any nonempty stream.
+    warm_rate: f64,
+    report: Option<SampleReport>,
+}
+
+impl SampledSim<Cache> {
+    /// Sampled simulator over the packed hot-path cache model.
+    pub fn new(sim: PipelineSim<Cache>, cfg: SampleConfig) -> Self {
+        Self::with_model(sim, cfg)
+    }
+}
+
+impl<C: CacheModel> SampledSim<C> {
+    /// Sampled simulator over an explicit cache model.
+    pub fn with_model(sim: PipelineSim<C>, cfg: SampleConfig) -> Self {
+        Self {
+            sim,
+            cfg,
+            blocks_total: 0,
+            blocks_detailed: 0,
+            window_open: None,
+            windows: Vec::new(),
+            warm_rate: 0.3,
+            report: None,
+        }
+    }
+
+    /// The wrapped simulator (tests compare its state to a full run).
+    pub fn inner(&self) -> &PipelineSim<C> {
+        &self.sim
+    }
+
+    /// The report; available after `finalize()`.
+    pub fn try_report(&self) -> Option<&SampleReport> {
+        self.report.as_ref()
+    }
+
+    /// The report; panics before `finalize()`.
+    pub fn report(&self) -> &SampleReport {
+        self.try_report().expect("finalize() the sampled stream before report()")
+    }
+
+    /// Consume the simulator, yielding the report. Panics before
+    /// `finalize()`.
+    pub fn into_report(self) -> SampleReport {
+        self.report.expect("finalize() the sampled stream before into_report()")
+    }
+
+    fn close_window(&mut self) {
+        let open = self.window_open.take().expect("no open window to close");
+        let now = self.sim.timeline();
+        let instructions = now.instructions - open.instructions;
+        let cycles = now.cycle - open.cycle;
+        if instructions > 0 {
+            let uops = (now.uops - open.uops).max(1.0);
+            self.warm_rate = (cycles / uops).max(0.0);
+            self.windows.push(WindowStat { instructions, cycles });
+        }
+        self.sim.close_sample_window();
+    }
+
+    /// Scale the DRAM model's counters to the whole stream. Counts and
+    /// time *sums* scale by `S`; the arrival/completion timestamps stay —
+    /// the warm clock keeps simulated time advancing across gaps, so the
+    /// activity span already covers the run and bandwidth utilization
+    /// (busy ns over span) comes out right once `bus_busy_ns` is scaled.
+    fn scale_dram(d: &DramStats, s: f64) -> DramStats {
+        let c = |x: u64| (x as f64 * s).round() as u64;
+        DramStats {
+            requests: c(d.requests),
+            reads: c(d.reads),
+            writes: c(d.writes),
+            prefetch_reads: c(d.prefetch_reads),
+            row_hits: c(d.row_hits),
+            row_misses: c(d.row_misses),
+            row_conflicts: c(d.row_conflicts),
+            demand_row_hits: c(d.demand_row_hits),
+            total_latency_ns: d.total_latency_ns * s,
+            demand_requests: c(d.demand_requests),
+            demand_latency_ns: d.demand_latency_ns * s,
+            bus_busy_ns: d.bus_busy_ns * s,
+            last_completion_ns: d.last_completion_ns,
+            first_arrival_ns: d.first_arrival_ns,
+        }
+    }
+
+    /// Mirror of [`PipelineSim::metrics`] with the timeline components
+    /// replaced by their scaled estimates. Everything fed from the mix,
+    /// branch counters, cache stats, or the uop count is computed from
+    /// the *exact* full-stream values.
+    fn estimated_metrics(&self, s: f64, det_cycles: f64) -> Metrics {
+        let cfg = self.sim.config();
+        let tl = self.sim.timeline();
+        let mix = self.sim.mix();
+        let branch = self.sim.branch_stats();
+
+        // timeline estimates: stalls only accrue inside detailed windows,
+        // so the accumulators are already pure detailed sums
+        let cycle_hat = det_cycles * s;
+        let bad_spec = tl.bad_spec_cycles * s;
+        let l2_stall = tl.l2_stall * s;
+        let l3_stall = tl.l3_stall * s;
+        let dram_stall = tl.dram_stall * s;
+
+        // exact components (uop count and mix are exact under warming)
+        let base_cycles = tl.uops / cfg.width;
+        let fp_cycles = mix.fp_ops as f64 / cfg.fp_ports;
+        let int_cycles = mix.int_ops as f64 / cfg.int_ports;
+        let mem_cycles = (mix.loads + mix.stores) as f64 / cfg.mem_ports;
+        let port_limit = fp_cycles.max(int_cycles).max(mem_cycles);
+        let core_bound = (port_limit - base_cycles).max(0.0);
+        let total = cycle_hat + core_bound;
+
+        let mem_stall = l2_stall + l3_stall + dram_stall;
+        let instructions = tl.instructions;
+        let pct = |x: f64| 100.0 * x / total.max(1e-9);
+
+        let stall = (bad_spec + mem_stall).min(total);
+        let busy = (total - stall - core_bound).max(0.0);
+        let busy_ipc = if busy > 0.0 { tl.uops / busy } else { 0.0 };
+        let (p2, p3) = if busy_ipc >= 3.0 {
+            (0.25, 0.75)
+        } else if busy_ipc >= 2.0 {
+            let t = busy_ipc - 2.0;
+            (1.0 - t * 0.75, t * 0.75)
+        } else {
+            (busy_ipc / 2.0, 0.0)
+        };
+        let port_dist = [
+            stall / total.max(1e-9),
+            core_bound / total.max(1e-9) + busy / total.max(1e-9) * (1.0 - p2 - p3).max(0.0),
+            busy / total.max(1e-9) * p2,
+            busy / total.max(1e-9) * p3,
+        ];
+
+        Metrics {
+            instructions,
+            cycles: total,
+            cpi: total / instructions.max(1) as f64,
+            ipc: instructions as f64 / total.max(1e-9),
+            retiring_pct: pct(base_cycles),
+            bad_spec_pct: pct(bad_spec),
+            core_bound_pct: pct(core_bound),
+            mem_bound_pct: pct(mem_stall),
+            dram_bound_pct: pct(dram_stall),
+            l2_bound_pct: pct(l2_stall),
+            l3_bound_pct: pct(l3_stall),
+            branch_mispredict_ratio: branch.mispredict_ratio(),
+            branch_fraction: mix.branch_fraction(),
+            cond_branch_fraction: mix.conditional_branch_fraction(),
+            l1_miss_ratio: self.sim.hierarchy.l1.stats().miss_ratio(),
+            l2_miss_ratio: self.sim.hierarchy.l2.stats().miss_ratio(),
+            llc_miss_ratio: self.sim.hierarchy.l3.stats().miss_ratio(),
+            port_dist,
+            mix: mix.clone(),
+            branch,
+            dram: Self::scale_dram(&self.sim.dram.stats, s),
+            prefetch: self.sim.hierarchy.pf_stats,
+            sim_time_ns: total / cfg.freq_ghz,
+        }
+    }
+
+    fn build_report(&self) -> SampleReport {
+        if self.cfg.is_degenerate() {
+            let m = self.sim.metrics();
+            return SampleReport {
+                sample: self.cfg,
+                windows: 0,
+                blocks_total: self.blocks_total,
+                blocks_detailed: self.blocks_detailed,
+                instructions: m.instructions,
+                instructions_detailed: m.instructions,
+                estimate: m,
+                cpi_ci95: 0.0,
+                degenerate: true,
+            };
+        }
+        let tl = self.sim.timeline();
+        let det_instr: u64 = self.windows.iter().map(|w| w.instructions).sum();
+        let det_cycles: f64 = self.windows.iter().map(|w| w.cycles).sum();
+        let s = if det_instr > 0 { tl.instructions as f64 / det_instr as f64 } else { 1.0 };
+        let estimate = self.estimated_metrics(s, det_cycles);
+
+        // CI on CPI from per-window CPI variance (ratio estimator noise):
+        // Student-t half-width over n windows, widened by the relative
+        // floor that absorbs windowing bias (see REL_CI_FLOOR).
+        let cpis: Vec<f64> =
+            self.windows.iter().map(|w| w.cycles / w.instructions as f64).collect();
+        let n = cpis.len();
+        let cpi_ci95 = match n {
+            0 => 0.0,
+            1 => SINGLE_WINDOW_REL_CI * estimate.cpi,
+            _ => {
+                let hw = t95(n - 1) * sample_stddev(&cpis) / (n as f64).sqrt();
+                hw.max(REL_CI_FLOOR * estimate.cpi)
+            }
+        };
+
+        SampleReport {
+            sample: self.cfg,
+            windows: n,
+            blocks_total: self.blocks_total,
+            blocks_detailed: self.blocks_detailed,
+            instructions: tl.instructions,
+            instructions_detailed: det_instr,
+            estimate,
+            cpi_ci95,
+            degenerate: false,
+        }
+    }
+}
+
+impl<C: CacheModel> BlockSink for SampledSim<C> {
+    fn consume(&mut self, block: &EventBlock) {
+        let pos = self.blocks_total % self.cfg.period;
+        self.blocks_total += 1;
+        if self.cfg.is_degenerate() {
+            // pure pass-through: no window bookkeeping may touch the
+            // simulator (close_sample_window would drop in-flight loads
+            // and change the timeline vs an unwrapped run)
+            self.blocks_detailed += 1;
+            self.sim.consume(block);
+            return;
+        }
+        if pos < self.cfg.detail {
+            if self.window_open.is_none() {
+                self.window_open = Some(self.sim.timeline());
+            }
+            self.sim.consume(block);
+            self.blocks_detailed += 1;
+            if pos + 1 == self.cfg.detail {
+                self.close_window();
+            }
+        } else {
+            self.sim.warm_block(block, self.warm_rate);
+        }
+    }
+
+    fn finalize(&mut self) {
+        // stream may end mid-window
+        if self.window_open.is_some() {
+            self.close_window();
+        }
+        self.sim.finalize();
+        self.report = Some(self.build_report());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::cpu::CpuConfig;
+    use crate::trace::Event;
+
+    fn random_blocks(n_events: usize, seed: u64) -> Vec<EventBlock> {
+        let mut rng = crate::util::Pcg64::new(seed);
+        let mut blocks = Vec::new();
+        let mut block = EventBlock::with_capacity();
+        for _ in 0..n_events {
+            let ev = match rng.below(7) {
+                0 => Event::Compute { int_ops: rng.below(6) as u32, fp_ops: rng.below(6) as u32 },
+                1 => Event::Serial { ops: 1 + rng.below(4) as u32 },
+                2 => Event::Load {
+                    addr: rng.below(1 << 27),
+                    size: 1 + rng.below(128) as u32,
+                    feeds_branch: rng.next_f64() < 0.2,
+                },
+                3 => Event::Store { addr: rng.below(1 << 27), size: 8 },
+                4 => Event::Branch {
+                    site: rng.below(64) as u32,
+                    taken: rng.next_f64() < 0.5,
+                    conditional: rng.next_f64() < 0.9,
+                },
+                5 => Event::LoopBranch { site: rng.below(32) as u32, count: 1 + rng.below(30) as u32 },
+                _ => Event::SwPrefetch { addr: rng.below(1 << 27) },
+            };
+            block.push_event(ev);
+            if block.is_full() {
+                blocks.push(std::mem::replace(&mut block, EventBlock::with_capacity()));
+            }
+        }
+        if !block.is_empty() {
+            blocks.push(block);
+        }
+        blocks
+    }
+
+    fn run_full(blocks: &[EventBlock]) -> Metrics {
+        let mut sim = PipelineSim::new(CpuConfig::default());
+        for b in blocks {
+            sim.consume(b);
+        }
+        BlockSink::finalize(&mut sim);
+        sim.metrics()
+    }
+
+    fn run_sampled(blocks: &[EventBlock], cfg: SampleConfig) -> SampleReport {
+        let mut s = SampledSim::new(PipelineSim::new(CpuConfig::default()), cfg);
+        for b in blocks {
+            s.consume(b);
+        }
+        BlockSink::finalize(&mut s);
+        s.into_report()
+    }
+
+    #[test]
+    fn parse_and_display_roundtrip() {
+        let c = SampleConfig::parse("3:97").unwrap();
+        assert_eq!(c, SampleConfig { detail: 3, period: 97 });
+        assert_eq!(c.to_string(), "3:97");
+        assert_eq!(SampleConfig::parse(" 2 : 256 "), Some(SampleConfig::default()));
+        for bad in ["", "3", ":", "0:5", "5:0", "a:b", "1:2:3", "-1:4"] {
+            assert!(SampleConfig::parse(bad).is_none(), "{bad:?} must not parse");
+        }
+        assert!(!SampleConfig::default().is_degenerate());
+        assert!(SampleConfig { detail: 8, period: 8 }.is_degenerate());
+        assert!(SampleConfig { detail: 9, period: 8 }.is_degenerate());
+        assert!((SampleConfig::default().detailed_fraction() - 2.0 / 256.0).abs() < 1e-12);
+    }
+
+    /// `detail == period` must reproduce the unwrapped simulator
+    /// bit-for-bit — the whole Metrics struct, not just headline numbers.
+    #[test]
+    fn degenerate_config_is_bit_exact() {
+        let blocks = random_blocks(60_000, 41);
+        let full = run_full(&blocks);
+        for cfg in [SampleConfig { detail: 4, period: 4 }, SampleConfig { detail: 7, period: 3 }] {
+            let rep = run_sampled(&blocks, cfg);
+            assert!(rep.degenerate);
+            assert_eq!(rep.cpi_ci95, 0.0);
+            assert_eq!(rep.estimate, full, "degenerate {cfg} must be the full run");
+            assert_eq!(rep.blocks_detailed, rep.blocks_total);
+            assert_eq!(rep.instructions_detailed, rep.instructions);
+        }
+    }
+
+    /// The headline sampling contract: state-derived metrics exact, CPI
+    /// inside its own reported interval.
+    #[test]
+    fn sampled_estimate_is_exact_where_promised_and_close_elsewhere() {
+        let blocks = random_blocks(300_000, 7);
+        let full = run_full(&blocks);
+        let rep = run_sampled(&blocks, SampleConfig { detail: 2, period: 16 });
+
+        assert!(!rep.degenerate);
+        assert!(rep.windows >= 4, "expected several windows, got {}", rep.windows);
+        assert!(rep.blocks_detailed < rep.blocks_total);
+        let e = &rep.estimate;
+
+        // exact under warming: everything not fed by the timeline
+        assert_eq!(e.instructions, full.instructions);
+        assert_eq!(e.mix, full.mix);
+        assert_eq!(e.branch, full.branch);
+        assert_eq!(e.prefetch, full.prefetch);
+        assert_eq!(e.l1_miss_ratio, full.l1_miss_ratio);
+        assert_eq!(e.l2_miss_ratio, full.l2_miss_ratio);
+        assert_eq!(e.llc_miss_ratio, full.llc_miss_ratio);
+        assert_eq!(e.branch_mispredict_ratio, full.branch_mispredict_ratio);
+
+        // estimated: CPI inside the interval the report itself claims
+        assert!(rep.cpi_ci95 > 0.0);
+        assert!(
+            rep.cpi_within_ci(full.cpi),
+            "cpi {} ± {} must cover truth {}",
+            e.cpi,
+            rep.cpi_ci95,
+            full.cpi
+        );
+        // and the interval is not absurdly wide on a homogeneous stream
+        assert!(rep.cpi_ci95 < 0.5 * full.cpi, "ci {} vs cpi {}", rep.cpi_ci95, full.cpi);
+    }
+
+    /// DRAM counter scaling preserves the ratios the paper reports.
+    #[test]
+    fn scaled_dram_ratios_track_full_run() {
+        let blocks = random_blocks(300_000, 7);
+        let full = run_full(&blocks);
+        let rep = run_sampled(&blocks, SampleConfig { detail: 2, period: 16 });
+        let (e, f) = (&rep.estimate.dram, &full.dram);
+        assert!(f.requests > 0, "stream must generate DRAM traffic");
+        // demand-read row-hit ratio: the sampled windows see a subset of
+        // the same access pattern, so the ratio lands near the full run
+        assert!(
+            (e.row_hit_ratio() - f.row_hit_ratio()).abs() < 0.15,
+            "row hit ratio {} vs {}",
+            e.row_hit_ratio(),
+            f.row_hit_ratio()
+        );
+        // scaled request count lands within the CI-floor band
+        let ratio = e.requests as f64 / f.requests as f64;
+        assert!((0.5..2.0).contains(&ratio), "request scaling off: {ratio}");
+    }
+
+    #[test]
+    fn report_before_finalize_is_none() {
+        let s = SampledSim::new(PipelineSim::new(CpuConfig::default()), SampleConfig::default());
+        assert!(s.try_report().is_none());
+    }
+
+    /// A stream shorter than one full period still produces a report
+    /// (single window, wide interval).
+    #[test]
+    fn short_stream_single_window() {
+        let blocks = random_blocks(6_000, 13); // 2 blocks
+        let full = run_full(&blocks);
+        let rep = run_sampled(&blocks, SampleConfig { detail: 2, period: 1024 });
+        assert_eq!(rep.windows, 1);
+        // the whole stream was detailed, so the estimate is the full
+        // timeline (S == 1) up to the close_sample_window tail policy,
+        // which matches finish() exactly: bit-equal CPI
+        assert_eq!(rep.estimate.cpi, full.cpi);
+        assert!((rep.cpi_ci95 - SINGLE_WINDOW_REL_CI * rep.estimate.cpi).abs() < 1e-12);
+    }
+}

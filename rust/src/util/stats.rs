@@ -31,6 +31,69 @@ pub fn stddev(xs: &[f64]) -> f64 {
     variance(xs).sqrt()
 }
 
+/// Sample (Bessel-corrected, n−1) variance; 0.0 for slices shorter
+/// than 2. This is the estimator the sampled-simulation confidence
+/// intervals use: the detailed windows are a sample of the run, not
+/// the population.
+pub fn sample_variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Sample standard deviation (n−1 denominator).
+pub fn sample_stddev(xs: &[f64]) -> f64 {
+    sample_variance(xs).sqrt()
+}
+
+/// Two-sided 95% Student-t critical value for `df` degrees of freedom
+/// (table lookup, linearly interpolated between tabulated rows; the
+/// asymptotic 1.960 beyond df = 60). `df == 0` returns +inf — a single
+/// observation carries no variance information.
+pub fn t95(df: usize) -> f64 {
+    const TABLE: [(usize, f64); 16] = [
+        (1, 12.706),
+        (2, 4.303),
+        (3, 3.182),
+        (4, 2.776),
+        (5, 2.571),
+        (6, 2.447),
+        (7, 2.365),
+        (8, 2.306),
+        (9, 2.262),
+        (10, 2.228),
+        (12, 2.179),
+        (15, 2.131),
+        (20, 2.086),
+        (30, 2.042),
+        (60, 2.000),
+        (usize::MAX, 1.960),
+    ];
+    if df == 0 {
+        return f64::INFINITY;
+    }
+    let mut prev = TABLE[0];
+    for &(d, t) in &TABLE {
+        if df == d {
+            return t;
+        }
+        if df < d {
+            // linear interpolation between the bracketing rows (the last
+            // row's df is a sentinel: clamp to the asymptotic value)
+            if d == usize::MAX {
+                return t;
+            }
+            let (d0, t0) = prev;
+            let frac = (df - d0) as f64 / (d - d0) as f64;
+            return t0 + frac * (t - t0);
+        }
+        prev = (d, t);
+    }
+    1.960
+}
+
 /// Pearson correlation coefficient; 0.0 when either side is constant.
 pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
     assert_eq!(xs.len(), ys.len());
@@ -120,6 +183,39 @@ mod tests {
         assert_eq!(mean(&xs), 2.5);
         assert!((variance(&xs) - 1.25).abs() < 1e-12);
         assert!((stddev(&xs) - 1.25f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_variance_uses_bessel_correction() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        // population variance 1.25 → sample variance 1.25 * 4/3
+        assert!((sample_variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+        assert!((sample_stddev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(sample_variance(&[7.0]), 0.0);
+        assert_eq!(sample_variance(&[]), 0.0);
+    }
+
+    #[test]
+    fn t95_table_and_interpolation() {
+        assert_eq!(t95(1), 12.706);
+        assert_eq!(t95(4), 2.776);
+        assert_eq!(t95(30), 2.042);
+        assert_eq!(t95(60), 2.000);
+        // beyond the table: asymptotic normal quantile
+        assert_eq!(t95(61), 1.960);
+        assert_eq!(t95(10_000), 1.960);
+        // interpolated between df=10 (2.228) and df=12 (2.179)
+        let t11 = t95(11);
+        assert!(t11 < 2.228 && t11 > 2.179, "t95(11) = {t11}");
+        // df=0: no variance information
+        assert!(t95(0).is_infinite());
+        // monotone non-increasing over a sweep
+        let mut last = f64::INFINITY;
+        for df in 1..100 {
+            let t = t95(df);
+            assert!(t <= last + 1e-12, "t95 must not increase: df={df}");
+            last = t;
+        }
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Baseline blessing flow (`mlperf report --bless`) at the library
+//! level: a blessed results file must gate a bit-identical re-run
+//! cleanly, catch any perturbation, flag vanished cells, and round-trip
+//! sampled-grid provenance. Also pins the semantics of the committed
+//! placeholder baseline: an empty cell list parses and gates vacuously.
+
+use mlperf::coordinator::{run_jobs_replayed, ExperimentConfig};
+use mlperf::ledger::{diff, GridResults};
+use mlperf::sim::SampleConfig;
+
+mod common;
+
+/// The exact flow `report --bless` runs: execute the grid, serialize,
+/// commit. Gating is then `diff(current, blessed, tol)`.
+fn bless(cfg: &ExperimentConfig, name: &str) -> (GridResults, std::path::PathBuf) {
+    let jobs = common::scenario_jobs();
+    let report = run_jobs_replayed(cfg, &jobs, 2);
+    let current = GridResults::from_outputs(cfg, &report.outputs);
+    let path = common::tmpfile("bless", name);
+    current.save(&path).unwrap();
+    (current, path)
+}
+
+#[test]
+fn gating_against_a_blessed_baseline_passes_and_perturbed_copies_fail() {
+    let cfg = common::tiny();
+    let (_, path) = bless(&cfg, "blessed.json");
+    let blessed = GridResults::load(&path).unwrap();
+    assert_eq!(blessed.cells.len(), common::scenario_jobs().len());
+
+    // an independent re-run of the same grid must gate cleanly at zero
+    // tolerance: the simulation is deterministic and JSON round-trips
+    // f64 shortest-form exactly
+    let rerun = run_jobs_replayed(&cfg, &common::scenario_jobs(), 4);
+    let current = GridResults::from_outputs(&cfg, &rerun.outputs);
+    let report = diff(&current, &blessed, 0.0);
+    assert!(
+        report.pass(),
+        "re-run drifted from its own blessed baseline: {:?}",
+        report.rows.iter().find(|r| !r.within)
+    );
+    assert!(report.missing.is_empty());
+
+    // any numeric perturbation of the blessed file must fail the gate
+    let mut perturbed = blessed.clone();
+    perturbed.cells[0].metrics[0].1 *= 1.05;
+    let report = diff(&current, &perturbed, 0.01);
+    assert!(!report.pass(), "5% drift slipped through a 1% gate");
+    assert!(report.drifted() >= 1);
+
+    // a cell vanishing from the current run is a regression, not a skip
+    let mut shrunk = current.clone();
+    shrunk.cells.pop();
+    let report = diff(&shrunk, &blessed, 0.01);
+    assert!(!report.pass(), "a vanished cell must fail the gate");
+    assert_eq!(report.missing.len(), 1);
+}
+
+#[test]
+fn blessing_a_sampled_grid_round_trips_sampling_provenance() {
+    let sample = SampleConfig { detail: 2, period: 16 };
+    let cfg = ExperimentConfig { sample: Some(sample), ..common::tiny() };
+    let (current, path) = bless(&cfg, "blessed_sampled.json");
+    let blessed = GridResults::load(&path).unwrap();
+
+    assert_eq!(blessed.sample, Some(sample), "sampling params must survive blessing");
+    // broadcast-replayed cells carry their interval; cells that ran
+    // direct (the multicore column, single-cell capture groups) must
+    // not pretend to be estimates
+    let kmeans_baseline = blessed
+        .cells
+        .iter()
+        .find(|c| c.workload == "KMeans" && c.scenario == "baseline")
+        .expect("grid must contain KMeans/baseline");
+    assert!(kmeans_baseline.cpi_ci95.is_some(), "sampled cell lost its CI");
+    let multicore = blessed
+        .cells
+        .iter()
+        .find(|c| c.scenario == "2-core")
+        .expect("grid must contain the multicore cell");
+    assert!(
+        multicore.cpi_ci95.is_none(),
+        "a direct-executed cell claims a confidence interval"
+    );
+
+    // the blessed file gates its own run exactly
+    assert!(diff(&current, &blessed, 0.0).pass());
+
+    // and a sampled baseline is still a *different machine contract*
+    // than a full one: same grid run unsampled shares no fingerprints
+    let full_cfg = common::tiny();
+    let rerun = run_jobs_replayed(&full_cfg, &common::scenario_jobs(), 2);
+    let full = GridResults::from_outputs(&full_cfg, &rerun.outputs);
+    for (a, b) in full.cells.iter().zip(&blessed.cells) {
+        assert_ne!(
+            a.fingerprint, b.fingerprint,
+            "{}/{}: sampled and full cells must never share a fingerprint",
+            a.workload, a.scenario
+        );
+    }
+}
+
+#[test]
+fn committed_placeholder_baseline_parses_and_gates_vacuously() {
+    // the repo ships an empty baseline until someone runs
+    // `report --bless`; it must parse and pass every run (no cells to
+    // compare) while counting everything as untracked
+    let path = std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../BENCH_grid_baseline.json"
+    ));
+    let baseline = GridResults::load(path).expect("committed baseline must always parse");
+
+    let cfg = common::tiny();
+    let rerun = run_jobs_replayed(&cfg, &common::scenario_jobs(), 2);
+    let current = GridResults::from_outputs(&cfg, &rerun.outputs);
+    let report = diff(&current, &baseline, 0.01);
+    if baseline.cells.is_empty() {
+        assert!(report.pass(), "an empty baseline must gate vacuously");
+        assert_eq!(report.rows.len(), 0);
+        assert_eq!(report.untracked, current.cells.len());
+    } else {
+        // once a real baseline is blessed (different scale/profile than
+        // the tiny test grid), it must at minimum keep parsing and
+        // carry fingerprints for every cell
+        assert!(baseline.cells.iter().all(|c| c.fingerprint.is_some()));
+    }
+}

@@ -7,20 +7,19 @@
 //! equal the trace's block count no matter how wide the fan-out.
 
 use mlperf::coordinator::{
-    capture_trace, record_characterize, replay_characterize, replay_characterize_many,
-    replay_file, replay_file_many, run_jobs, run_jobs_replayed, ExperimentConfig, Job, Scenario,
+    record_characterize, replay_characterize, replay_characterize_many, replay_file,
+    replay_file_many, run_jobs, run_jobs_replayed, ExperimentConfig, Job, Scenario,
 };
 use mlperf::trace::{BlockSink, Broadcast, EventBlock, NullSink};
-use mlperf::workloads::by_name;
+
+mod common;
 
 fn tiny() -> ExperimentConfig {
-    ExperimentConfig { scale: 0.02, iterations: 1, ..Default::default() }
+    common::tiny()
 }
 
 fn tmpfile(name: &str) -> std::path::PathBuf {
-    let dir = std::env::temp_dir().join("mlperf-broadcast-tests");
-    std::fs::create_dir_all(&dir).unwrap();
-    dir.join(name)
+    common::tmpfile("broadcast", name)
 }
 
 #[test]
@@ -66,8 +65,7 @@ fn broadcast_grid_is_bit_identical_to_per_cell_execution() {
 #[test]
 fn replay_characterize_many_matches_singles() {
     let cfg = tiny();
-    let w = by_name("KNN").unwrap();
-    let rec = capture_trace(w.as_ref(), &cfg, false);
+    let rec = common::capture("KNN", &cfg, false);
     let scenarios = [
         Scenario::Baseline,
         Scenario::PerfectL2,
@@ -85,8 +83,7 @@ fn replay_characterize_many_matches_singles() {
 #[test]
 fn in_memory_broadcast_walks_the_stream_once() {
     let cfg = tiny();
-    let w = by_name("Ridge").unwrap();
-    let rec = capture_trace(w.as_ref(), &cfg, false);
+    let rec = common::capture("Ridge", &cfg, false);
 
     struct Count(u64);
     impl BlockSink for Count {
@@ -113,7 +110,7 @@ fn in_memory_broadcast_walks_the_stream_once() {
 #[test]
 fn file_broadcast_decodes_once_and_matches_singles() {
     let cfg = tiny();
-    let w = by_name("KMeans").unwrap();
+    let w = common::workload("KMeans");
     let path = tmpfile("bc_kmeans.mlt");
     let (_, summary) = record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
     let scenarios = [

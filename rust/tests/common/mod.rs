@@ -1,0 +1,82 @@
+//! Shared scaffolding for the integration-test suites: seeded capture
+//! builders, tiny experiment configs, per-suite temp files, scenario
+//! fixtures, and `Metrics` comparison helpers. Lives in
+//! `tests/common/mod.rs` (not `tests/common.rs`) so cargo does not
+//! compile it as a test crate of its own; each suite pulls it in with
+//! `mod common;`.
+#![allow(dead_code)]
+
+use mlperf::coordinator::{capture_trace, ExperimentConfig, Job, RecordedRun, Scenario};
+use mlperf::sim::Metrics;
+use mlperf::workloads::{by_name, LibraryProfile, RunContext, Workload};
+
+/// The standard integration-test config: small enough for debug-build
+/// `cargo test`, large enough that every workload emits a non-trivial
+/// trace (the suites assert event counts to guard against silently
+/// simulating nothing).
+pub fn tiny() -> ExperimentConfig {
+    ExperimentConfig { scale: 0.02, iterations: 1, ..Default::default() }
+}
+
+/// [`tiny`] pinned to a specific library profile.
+pub fn tiny_profile(profile: LibraryProfile) -> ExperimentConfig {
+    ExperimentConfig { profile, ..tiny() }
+}
+
+/// The single-iteration run context direct `Workload::run` harnesses use.
+pub fn run_ctx() -> RunContext {
+    RunContext { iterations: 1, ..Default::default() }
+}
+
+/// A fresh path under a per-suite temp directory. Any stale file from a
+/// previous run is removed so tests never read leftovers.
+pub fn tmpfile(suite: &str, name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlperf-{suite}-tests"));
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join(name);
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// Look a workload up by name, panicking with the name on failure.
+pub fn workload(name: &str) -> Box<dyn Workload> {
+    by_name(name).unwrap_or_else(|| panic!("unknown workload {name:?}"))
+}
+
+/// Record an in-memory capture of `name` under `cfg` — the seeded
+/// builder every replay/broadcast/sampling suite starts from.
+pub fn capture(name: &str, cfg: &ExperimentConfig, sw_prefetch: bool) -> RecordedRun {
+    capture_trace(workload(name).as_ref(), cfg, sw_prefetch)
+}
+
+/// The mixed scenario fixture: replayable columns sharing one capture
+/// per workload, a prefetch-variant cell, and a non-replayable
+/// multicore cell — the shape the scheduler/ledger gates exercise.
+pub fn scenario_jobs() -> Vec<Job> {
+    vec![
+        Job::new("KMeans", Scenario::Baseline),
+        Job::new("KMeans", Scenario::PerfectL2),
+        Job::new("KMeans", Scenario::PerfectLlc),
+        Job::new("KMeans", Scenario::NoHwPrefetch),
+        Job::new("KNN", Scenario::SwPrefetch),
+        Job::new("GMM", Scenario::Multicore(2)),
+    ]
+}
+
+/// Bit-exact `Metrics` equality with a labelled panic. The simulator is
+/// deterministic, so parity gates compare whole structs — any field
+/// drifting is a real divergence, not noise.
+pub fn assert_metrics_eq(a: &Metrics, b: &Metrics, what: &str) {
+    assert_eq!(a, b, "{what}: Metrics diverged");
+}
+
+/// Relative closeness for estimator checks: |a - b| <= tol * max(|b|, eps).
+pub fn assert_rel_close(a: f64, b: f64, tol: f64, what: &str) {
+    let scale = b.abs().max(1e-12);
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "{what}: {a} vs {b} differ by more than {:.2}% (rel {:.4})",
+        tol * 100.0,
+        (a - b).abs() / scale
+    );
+}

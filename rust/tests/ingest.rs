@@ -11,16 +11,15 @@ use mlperf::coordinator::{
 };
 use mlperf::sim::CpuConfig;
 use mlperf::trace::{BlockPool, BlockSink, EventBlock, PipelinedIngest, ReplaySource};
-use mlperf::workloads::by_name;
+
+mod common;
 
 fn tiny() -> ExperimentConfig {
-    ExperimentConfig { scale: 0.02, iterations: 1, ..Default::default() }
+    common::tiny()
 }
 
 fn tmpfile(name: &str) -> std::path::PathBuf {
-    let dir = std::env::temp_dir().join("mlperf-ingest-tests");
-    std::fs::create_dir_all(&dir).unwrap();
-    dir.join(name)
+    common::tmpfile("ingest", name)
 }
 
 /// Sink cloning every delivered block: the strongest parity witness —
@@ -48,7 +47,7 @@ fn pipelined_ingest_is_bit_identical_for_real_workloads_and_scenarios() {
         ("no-hw-prefetch", |c| c.cache.hw_prefetch = false),
     ];
     for name in ["KMeans", "KNN", "Decision Tree"] {
-        let w = by_name(name).unwrap();
+        let w = common::workload(name);
         let path = tmpfile(&format!("{}.mlt", name.replace(' ', "_")));
         record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
 
@@ -165,7 +164,7 @@ fn fanout_scheduler_handles_single_thread_and_many_threads() {
 #[test]
 fn ingest_threads_knob_never_changes_replay_results() {
     let cfg = tiny();
-    let w = by_name("GMM").unwrap();
+    let w = common::workload("GMM");
     let path = tmpfile("gmm_knob.mlt");
     record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
     let mut reference = None;

@@ -14,27 +14,18 @@ use mlperf::coordinator::{
 use mlperf::ledger::{cell_fingerprint, diff, GridResults, Ledger};
 use mlperf::workloads::LibraryProfile;
 
+mod common;
+
 fn tiny() -> ExperimentConfig {
-    ExperimentConfig { scale: 0.02, iterations: 1, ..Default::default() }
+    common::tiny()
 }
 
 fn tmpfile(name: &str) -> std::path::PathBuf {
-    let dir = std::env::temp_dir().join("mlperf-ledger-tests");
-    std::fs::create_dir_all(&dir).unwrap();
-    let p = dir.join(name);
-    let _ = std::fs::remove_file(&p);
-    p
+    common::tmpfile("ledger", name)
 }
 
 fn scenario_jobs() -> Vec<Job> {
-    vec![
-        Job::new("KMeans", Scenario::Baseline),
-        Job::new("KMeans", Scenario::PerfectL2),
-        Job::new("KMeans", Scenario::PerfectLlc),
-        Job::new("KMeans", Scenario::NoHwPrefetch),
-        Job::new("KNN", Scenario::SwPrefetch),
-        Job::new("GMM", Scenario::Multicore(2)),
-    ]
+    common::scenario_jobs()
 }
 
 #[test]
@@ -156,6 +147,47 @@ fn any_config_change_invalidates_the_cache() {
     let mut ledger = Ledger::open(&path).unwrap();
     let report = run_jobs_ledgered(&base, &jobs, 1, &mut ledger).unwrap();
     assert_eq!(report.cached_cells, 1);
+}
+
+#[test]
+fn sampled_and_full_cells_never_cross_serve() {
+    use mlperf::sim::SampleConfig;
+    let full = tiny();
+    let sampled =
+        ExperimentConfig { sample: Some(SampleConfig { detail: 2, period: 16 }), ..tiny() };
+    let jobs = vec![Job::new("KMeans", Scenario::Baseline)];
+    let path = tmpfile("sampled.mllg");
+    {
+        let mut ledger = Ledger::open(&path).unwrap();
+        let r = run_jobs_ledgered(&full, &jobs, 1, &mut ledger).unwrap();
+        assert_eq!(r.cached_cells, 0);
+    }
+    // a sampled query must MISS the stored full-replay cell — an
+    // estimate and an exact result are different contracts even when
+    // the workload/scenario/config tuple is identical
+    {
+        let mut ledger = Ledger::open(&path).unwrap();
+        let r = run_jobs_ledgered(&sampled, &jobs, 1, &mut ledger).unwrap();
+        assert_eq!(r.cached_cells, 0, "sampled query served a full-replay cell");
+        assert_eq!(r.workload_executions, 1);
+        assert!(
+            r.outputs[0].sample.is_some(),
+            "freshly sampled cell must carry its CI diagnostics"
+        );
+    }
+    // once both are stored, each mode hits its own cell (and a cached
+    // sampled cell comes back without run-time CI diagnostics)
+    let mut ledger = Ledger::open(&path).unwrap();
+    let full_hit = run_jobs_ledgered(&full, &jobs, 1, &mut ledger).unwrap();
+    assert_eq!(full_hit.cached_cells, 1, "full query must still hit the full cell");
+    let sampled_hit = run_jobs_ledgered(&sampled, &jobs, 1, &mut ledger).unwrap();
+    assert_eq!(sampled_hit.cached_cells, 1, "sampled query must hit the sampled cell");
+    assert!(sampled_hit.outputs[0].sample.is_none(), "CI is run-time only, never ledgered");
+    // and different sampling parameters are their own cells again
+    let other =
+        ExperimentConfig { sample: Some(SampleConfig { detail: 4, period: 64 }), ..tiny() };
+    let r = run_jobs_ledgered(&other, &jobs, 1, &mut ledger).unwrap();
+    assert_eq!(r.cached_cells, 0, "different sampling params must not alias");
 }
 
 #[test]

@@ -6,10 +6,12 @@
 
 use mlperf::sim::{CpuConfig, Metrics, PipelineSim};
 use mlperf::trace::{PerEvent, Recorder};
-use mlperf::workloads::{by_name, RunContext, Workload};
+use mlperf::workloads::{RunContext, Workload};
+
+mod common;
 
 fn ctx() -> RunContext {
-    RunContext { iterations: 1, ..Default::default() }
+    common::run_ctx()
 }
 
 /// Native path: Recorder -> EventBlock -> PipelineSim::consume.
@@ -45,7 +47,7 @@ fn run_legacy_path(w: &dyn Workload, rows: usize) -> (Metrics, u64) {
 fn block_pipeline_matches_legacy_event_counts_and_metrics() {
     // one workload per paper category, plus the branch-heavy tree case
     for name in ["KMeans", "KNN", "Ridge", "Decision Tree"] {
-        let w = by_name(name).unwrap();
+        let w = common::workload(name);
         let (block_m, block_events) = run_block_path(w.as_ref(), 500);
         let (legacy_m, legacy_events) = run_legacy_path(w.as_ref(), 500);
         assert_eq!(block_events, legacy_events, "{name}: event counts diverge");
@@ -56,7 +58,7 @@ fn block_pipeline_matches_legacy_event_counts_and_metrics() {
 
 #[test]
 fn parity_holds_with_software_prefetching() {
-    let w = by_name("KNN").unwrap();
+    let w = common::workload("KNN");
     let ds = w.make_dataset(400, 8, 0x9A12);
 
     let run = |legacy: bool| -> (Metrics, u64) {
@@ -88,7 +90,7 @@ fn parity_holds_with_software_prefetching() {
 #[test]
 fn workload_quality_is_path_independent() {
     // the trace transport must not perturb the algorithm itself
-    let w = by_name("KMeans").unwrap();
+    let w = common::workload("KMeans");
     let ds = w.make_dataset(400, 6, 0x9A13);
     let mut sim_a = PipelineSim::new(CpuConfig::default());
     let mut sim_b = PipelineSim::new(CpuConfig::default());

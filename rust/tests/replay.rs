@@ -7,19 +7,19 @@
 //! once however many scenario cells it serves.
 
 use mlperf::coordinator::{
-    capture_trace, characterize, characterize_with, record_characterize, replay_characterize,
-    replay_file, run_jobs, run_jobs_replayed, ExperimentConfig, Job, Scenario,
+    characterize, characterize_with, record_characterize, replay_characterize, replay_file,
+    run_jobs, run_jobs_replayed, ExperimentConfig, Job, Scenario,
 };
-use mlperf::workloads::{by_name, LibraryProfile};
+use mlperf::workloads::LibraryProfile;
+
+mod common;
 
 fn tiny(profile: LibraryProfile) -> ExperimentConfig {
-    ExperimentConfig { scale: 0.02, iterations: 1, profile, ..Default::default() }
+    common::tiny_profile(profile)
 }
 
 fn tmpfile(name: &str) -> std::path::PathBuf {
-    let dir = std::env::temp_dir().join("mlperf-replay-tests");
-    std::fs::create_dir_all(&dir).unwrap();
-    dir.join(name)
+    common::tmpfile("replay", name)
 }
 
 #[test]
@@ -27,7 +27,7 @@ fn file_replay_matches_direct_execution_across_workloads_and_profiles() {
     for profile in [LibraryProfile::Sklearn, LibraryProfile::Mlpack] {
         for name in ["KMeans", "KNN", "Decision Tree"] {
             let cfg = tiny(profile);
-            let w = by_name(name).unwrap();
+            let w = common::workload(name);
             let direct = characterize(w.as_ref(), &cfg);
             let path = tmpfile(&format!("{}_{profile:?}.mlt", name.replace(' ', "_")));
             let (recorded, summary) =
@@ -51,7 +51,7 @@ fn file_replay_matches_direct_execution_across_workloads_and_profiles() {
 #[test]
 fn file_replay_honours_prefetch_variant_and_scenario_mutations() {
     let cfg = tiny(LibraryProfile::Sklearn);
-    let w = by_name("KNN").unwrap();
+    let w = common::workload("KNN");
 
     // prefetch-enabled recording is its own trace variant
     let pf_path = tmpfile("knn_pf.mlt");
@@ -75,8 +75,7 @@ fn file_replay_honours_prefetch_variant_and_scenario_mutations() {
 #[test]
 fn in_memory_capture_written_to_disk_replays_identically() {
     let cfg = tiny(LibraryProfile::Sklearn);
-    let w = by_name("GMM").unwrap();
-    let recorded = capture_trace(w.as_ref(), &cfg, false);
+    let recorded = common::capture("GMM", &cfg, false);
     let from_memory = replay_characterize(&recorded, &cfg, |_| {});
 
     let path = tmpfile("gmm_mem.mlt");
@@ -113,7 +112,7 @@ fn four_scenario_grid_replays_from_one_execution() {
 #[test]
 fn replay_file_reports_corruption_cleanly() {
     let cfg = tiny(LibraryProfile::Sklearn);
-    let w = by_name("Ridge").unwrap();
+    let w = common::workload("Ridge");
     let path = tmpfile("ridge_corrupt.mlt");
     record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
     let mut bytes = std::fs::read(&path).unwrap();

@@ -1,0 +1,237 @@
+//! Sampled-simulation statistical gates (`--sample`, [`SampledSim`]).
+//!
+//! Three contracts:
+//!
+//! 1. **Estimate-within-CI** — for every workload × profile × replayable
+//!    scenario column, the sampled CPI estimate must cover the full-run
+//!    ground truth inside its own reported 95% interval, and every
+//!    state-derived metric (miss ratios, branch stats, prefetch stats,
+//!    instruction mix) must equal the full run *bit-exactly*, because
+//!    functional warming evolves that state identically.
+//! 2. **Coverage** — over many seeds of a synthetic stream, the nominal
+//!    95% interval must contain the truth at (at least) the expected
+//!    rate.
+//! 3. **Degenerate escape hatch** — `detail == period` must reproduce
+//!    the full-run `Metrics` bit-exactly with a zero-width interval.
+
+use mlperf::coordinator::{
+    replay_characterize, replay_characterize_many, replay_characterize_many_sampled,
+    replay_characterize_sampled, Scenario,
+};
+use mlperf::sim::{CpuConfig, Metrics, PipelineSim, SampleConfig, SampleReport, SampledSim};
+use mlperf::trace::{BlockSink, Event, EventBlock};
+use mlperf::util::Pcg64;
+use mlperf::workloads::{supported_names, LibraryProfile};
+
+mod common;
+
+/// Dense enough windows for tiny integration traces: 2-block detailed
+/// windows every 16 blocks (12.5% detail) gives several windows even at
+/// scale 0.02 while still exercising the warm path hard.
+const SAMPLE: SampleConfig = SampleConfig { detail: 2, period: 16 };
+
+/// Everything functional warming promises to keep exact, in one place.
+fn assert_state_metrics_exact(est: &Metrics, full: &Metrics, what: &str) {
+    assert_eq!(est.instructions, full.instructions, "{what}: instructions");
+    assert_eq!(est.mix, full.mix, "{what}: instruction mix");
+    assert_eq!(est.branch, full.branch, "{what}: branch stats");
+    assert_eq!(est.prefetch, full.prefetch, "{what}: prefetch stats");
+    assert_eq!(est.l1_miss_ratio, full.l1_miss_ratio, "{what}: L1 miss ratio");
+    assert_eq!(est.l2_miss_ratio, full.l2_miss_ratio, "{what}: L2 miss ratio");
+    assert_eq!(est.llc_miss_ratio, full.llc_miss_ratio, "{what}: LLC miss ratio");
+    assert_eq!(
+        est.branch_mispredict_ratio, full.branch_mispredict_ratio,
+        "{what}: mispredict ratio"
+    );
+}
+
+fn assert_within_ci(rep: &SampleReport, full: &Metrics, what: &str) {
+    assert!(rep.cpi_ci95 > 0.0, "{what}: sampled run must report a nonzero interval");
+    assert!(
+        rep.cpi_within_ci(full.cpi),
+        "{what}: estimate {} ± {} does not cover truth {}",
+        rep.estimate.cpi,
+        rep.cpi_ci95,
+        full.cpi
+    );
+}
+
+/// Contract 1: every workload the profile implements, every replayable
+/// scenario column, one shared capture per workload — full-run truth vs
+/// sampled estimate.
+#[test]
+fn estimate_covers_truth_for_every_workload_profile_and_scenario() {
+    let scenarios = [
+        Scenario::Baseline,
+        Scenario::PerfectL2,
+        Scenario::PerfectLlc,
+        Scenario::NoHwPrefetch,
+        Scenario::DramIdealRows,
+    ];
+    for profile in [LibraryProfile::Sklearn, LibraryProfile::Mlpack] {
+        let cfg = common::tiny_profile(profile);
+        for name in supported_names(profile) {
+            let rec = common::capture(name, &cfg, false);
+            let fulls = replay_characterize_many(&rec, &cfg, &scenarios);
+            let reps = replay_characterize_many_sampled(&rec, &cfg, &scenarios, SAMPLE);
+            assert_eq!(fulls.len(), reps.len());
+            for ((s, full), rep) in scenarios.iter().zip(&fulls).zip(&reps) {
+                let what = format!("{name}/{profile:?}/{s}");
+                assert!(!rep.degenerate, "{what}");
+                // traces shorter than one period legitimately run fully
+                // detailed; past that, sampling must actually skip blocks
+                if rep.blocks_total > SAMPLE.period {
+                    assert!(
+                        rep.blocks_detailed < rep.blocks_total,
+                        "{what}: sampling must skip blocks ({} of {} detailed)",
+                        rep.blocks_detailed,
+                        rep.blocks_total
+                    );
+                }
+                assert_state_metrics_exact(&rep.estimate, full, &what);
+                assert_within_ci(rep, full, &what);
+            }
+        }
+    }
+}
+
+/// The software-prefetch column rides its own trace variant; the sampled
+/// contract must hold there too (prefetch lanes go through the warm
+/// path's tag walk like any other memory event).
+#[test]
+fn estimate_covers_truth_on_the_prefetch_trace_variant() {
+    let cfg = common::tiny();
+    let rec = common::capture("KNN", &cfg, true);
+    let full = replay_characterize(&rec, &cfg, |_| {});
+    assert!(full.mix.sw_prefetches > 0, "prefetch variant must carry prefetch events");
+    let rep = replay_characterize_sampled(&rec, &cfg, SAMPLE, |_| {});
+    assert_state_metrics_exact(&rep.estimate, &full, "KNN/sw-prefetch");
+    assert_within_ci(&rep, &full, "KNN/sw-prefetch");
+}
+
+/// Contract 3: `detail == period` (and any detail >= period) is a pure
+/// pass-through — the whole Metrics struct equals an unsampled replay,
+/// bit for bit, on a real workload trace.
+#[test]
+fn degenerate_period_equals_detail_is_bit_exact_on_real_traces() {
+    let cfg = common::tiny();
+    for name in ["KMeans", "Decision Tree"] {
+        let rec = common::capture(name, &cfg, false);
+        let full = replay_characterize(&rec, &cfg, |_| {});
+        for sc in [SampleConfig { detail: 4, period: 4 }, SampleConfig { detail: 9, period: 3 }] {
+            let rep = replay_characterize_sampled(&rec, &cfg, sc, |_| {});
+            assert!(rep.degenerate, "{name} {sc}");
+            assert_eq!(rep.cpi_ci95, 0.0, "{name} {sc}: degenerate interval must be zero");
+            assert_eq!(rep.estimate, full, "{name} {sc}: degenerate sampling drifted");
+            assert_eq!(rep.blocks_detailed, rep.blocks_total);
+        }
+    }
+}
+
+/// Synthetic stream with deliberate phase structure (block-scale
+/// behaviour changes) so the inter-window variance is real, not zero.
+fn phased_blocks(n_events: usize, seed: u64) -> Vec<EventBlock> {
+    let mut rng = Pcg64::new(seed);
+    let mut blocks = Vec::new();
+    let mut block = EventBlock::with_capacity();
+    for i in 0..n_events {
+        // alternate between a compute-heavy and a memory-heavy phase
+        // every ~3 blocks worth of events
+        let memory_phase = (i / 12_288) % 2 == 1;
+        let roll = rng.below(if memory_phase { 5 } else { 8 });
+        let ev = match roll {
+            0 | 1 => Event::Load {
+                addr: rng.below(1 << 26),
+                size: 1 + rng.below(64) as u32,
+                feeds_branch: rng.next_f64() < 0.15,
+            },
+            2 => Event::Store { addr: rng.below(1 << 26), size: 8 },
+            3 => Event::Branch {
+                site: rng.below(64) as u32,
+                taken: rng.next_f64() < 0.5,
+                conditional: true,
+            },
+            _ => Event::Compute {
+                int_ops: 1 + rng.below(4) as u32,
+                fp_ops: rng.below(4) as u32,
+            },
+        };
+        block.push_event(ev);
+        if block.is_full() {
+            blocks.push(std::mem::replace(&mut block, EventBlock::with_capacity()));
+        }
+    }
+    if !block.is_empty() {
+        blocks.push(block);
+    }
+    blocks
+}
+
+fn run_full(blocks: &[EventBlock]) -> Metrics {
+    let mut sim = PipelineSim::new(CpuConfig::default());
+    for b in blocks {
+        sim.consume(b);
+    }
+    BlockSink::finalize(&mut sim);
+    sim.metrics()
+}
+
+fn run_sampled(blocks: &[EventBlock], sc: SampleConfig) -> SampleReport {
+    let mut s = SampledSim::new(PipelineSim::new(CpuConfig::default()), sc);
+    for b in blocks {
+        s.consume(b);
+    }
+    BlockSink::finalize(&mut s);
+    s.into_report()
+}
+
+/// Contract 2: coverage of the nominal 95% interval over many seeds.
+/// The CI carries a relative floor for windowing bias, so empirical
+/// coverage should sit at or above nominal; gate at 90% to leave slack
+/// for the finite number of trials, and require that misses — if any —
+/// miss by little.
+#[test]
+fn nominal_95_interval_covers_truth_at_expected_rate() {
+    const TRIALS: u64 = 30;
+    let mut covered = 0usize;
+    let mut worst_excess = 0.0f64;
+    for seed in 0..TRIALS {
+        let blocks = phased_blocks(120_000, 1000 + seed);
+        let full = run_full(&blocks);
+        let rep = run_sampled(&blocks, SAMPLE);
+        assert!(rep.windows >= 2, "seed {seed}: want >= 2 windows, got {}", rep.windows);
+        assert_state_metrics_exact(&rep.estimate, &full, &format!("seed {seed}"));
+        if rep.cpi_within_ci(full.cpi) {
+            covered += 1;
+        } else {
+            let excess = (full.cpi - rep.estimate.cpi).abs() / rep.cpi_ci95.max(1e-12);
+            worst_excess = worst_excess.max(excess);
+        }
+    }
+    let rate = covered as f64 / TRIALS as f64;
+    assert!(
+        rate >= 0.9,
+        "95% interval covered truth in only {covered}/{TRIALS} trials ({rate:.2})"
+    );
+    if covered < TRIALS as usize {
+        assert!(
+            worst_excess < 2.0,
+            "an uncovered trial missed by {worst_excess:.2}x the interval — estimator bias, \
+             not sampling noise"
+        );
+    }
+}
+
+/// Sampling must be invariant to how blocks are delivered: the same
+/// schedule lands on the same blocks whether the stream comes from a
+/// trace replay or is pushed block by block (positional scheduling).
+#[test]
+fn sampled_estimates_are_deterministic_across_runs() {
+    let cfg = common::tiny();
+    let rec = common::capture("GMM", &cfg, false);
+    let a = replay_characterize_sampled(&rec, &cfg, SAMPLE, |_| {});
+    let b = replay_characterize_sampled(&rec, &cfg, SAMPLE, |_| {});
+    assert_eq!(a.estimate, b.estimate, "sampled replay is not deterministic");
+    assert_eq!(a.cpi_ci95, b.cpi_ci95);
+    assert_eq!(a.windows, b.windows);
+}

@@ -6,11 +6,12 @@
 //! `fill`). One trace pass versus one full simulation per geometry,
 //! same numbers.
 
-use mlperf::coordinator::{capture_trace, ExperimentConfig};
+use mlperf::coordinator::ExperimentConfig;
 use mlperf::sim::{default_sweep, demand_lines, Cache, StackProfiler, SweepGeometry};
 use mlperf::trace::{BlockSink, EventBlock};
 use mlperf::util::Pcg64;
-use mlperf::workloads::by_name;
+
+mod common;
 
 /// Extracts the demand line stream exactly as the profiler consumes it.
 #[derive(Default)]
@@ -40,7 +41,9 @@ fn packed_cache_misses(lines: &[u64], g: SweepGeometry) -> (u64, u64) {
 
 #[test]
 fn profiler_matches_packed_cache_on_real_workload_traces() {
-    let cfg = ExperimentConfig { scale: 0.01, iterations: 1, ..Default::default() };
+    // half the shared tiny scale: this gate simulates one full cache per
+    // geometry, so it pays for trace length several times over
+    let cfg = ExperimentConfig { scale: 0.01, ..common::tiny() };
     // a spread of the default sweep (both extremes included) keeps the
     // per-geometry cache simulations affordable; the synthetic test
     // below covers every geometry
@@ -48,8 +51,7 @@ fn profiler_matches_packed_cache_on_real_workload_traces() {
     let mut geometries: Vec<SweepGeometry> = all.iter().copied().step_by(4).collect();
     geometries.push(all[all.len() - 1]);
     for name in ["KMeans", "KNN"] {
-        let w = by_name(name).unwrap();
-        let recorded = capture_trace(w.as_ref(), &cfg, false);
+        let recorded = common::capture(name, &cfg, false);
 
         let mut prof = StackProfiler::new(&geometries);
         recorded.trace.replay_into(&mut prof);
