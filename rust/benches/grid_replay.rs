@@ -44,6 +44,14 @@ use mlperf::workloads::by_name;
 use std::time::Instant;
 
 fn checksum(report: &DriverReport) -> u64 {
+    // a bench grid must run clean — a quarantined cell would silently
+    // shrink the checksum domain and fake a parity pass
+    assert!(
+        report.failed.is_empty(),
+        "bench grid quarantined {} cell(s): {:?}",
+        report.failed.len(),
+        report.failed
+    );
     // integer event/instruction counts fold into a stable parity witness
     report
         .outputs

@@ -44,7 +44,8 @@
 //! [`Broadcast`]: crate::trace::Broadcast
 
 use std::collections::{BTreeMap, VecDeque};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use super::{
@@ -54,7 +55,8 @@ use super::{
 use crate::ledger::{cell_fingerprint, Fingerprint, Ledger, LedgerRecord, Provenance};
 use crate::reorder::ReorderKind;
 use crate::sim::{CpuConfig, Metrics, SampleReport};
-use crate::util::error::Result;
+use crate::util::error::{panic_message, Result};
+use crate::util::fault;
 use crate::workloads::{by_name, multicore_names, registry};
 
 /// One experiment scenario — the column dimension of the job grid.
@@ -207,11 +209,37 @@ pub struct JobOutput {
     pub sample: Option<SampleStat>,
 }
 
+/// One quarantined grid cell: a (workload × scenario) unit whose
+/// execution, capture, or replay failed. The rest of the grid completes
+/// unaffected (degrade-not-die); `--strict` restores fail-fast.
+#[derive(Debug, Clone)]
+pub struct FailedCell {
+    /// Position in the input job list — the stable join key, since
+    /// [`DriverReport::outputs`] only holds successes.
+    pub index: usize,
+    pub job: Job,
+    /// The cell's ledger fingerprint, for cross-referencing reports and
+    /// `failures.json`.
+    pub fingerprint: Fingerprint,
+    /// Stable failure-class tag (a [`TraceError::kind_str`] value, or
+    /// `"panic"` for a caught workload/simulator panic).
+    ///
+    /// [`TraceError::kind_str`]: crate::trace::TraceError::kind_str
+    pub kind: String,
+    /// One-line human-readable cause.
+    pub error: String,
+    /// Transient-I/O retries spent before the failure was declared
+    /// permanent (0 when the failure was not retryable I/O).
+    pub retries: u32,
+}
+
 /// What [`run_jobs`] / [`run_jobs_replayed`] hand back.
 #[derive(Debug)]
 pub struct DriverReport {
-    /// One output per input job, **in input order** (deterministic
-    /// regardless of thread interleaving).
+    /// One output per **successfully completed** input job, in input
+    /// order (deterministic regardless of thread interleaving). A clean
+    /// run has `outputs.len() == jobs.len()`; failures are quarantined
+    /// into [`DriverReport::failed`] instead of occupying a slot.
     pub outputs: Vec<JobOutput>,
     pub threads_used: usize,
     pub wall_seconds: f64,
@@ -225,6 +253,11 @@ pub struct DriverReport {
     /// modes. A fully warmed ledger reports `cached_cells ==
     /// outputs.len()` and `workload_executions == 0`.
     pub cached_cells: usize,
+    /// Quarantined cells, sorted by input index; empty on a clean run.
+    /// Under `--strict` ([`ExperimentConfig::strict`]) the first failure
+    /// aborts the run, so cells the abort skipped appear in *neither*
+    /// `outputs` nor here.
+    pub failed: Vec<FailedCell>,
 }
 
 /// The standard characterization grid for `cfg`'s profile: a baseline
@@ -307,6 +340,40 @@ pub fn run_job(cfg: &ExperimentConfig, job: &Job) -> JobOutput {
     JobOutput { job: job.clone(), metrics, quality, sample: None }
 }
 
+/// Failure of one cell before it is joined with its grid position.
+struct CellFailure {
+    kind: &'static str,
+    error: String,
+}
+
+impl CellFailure {
+    fn at(self, cfg: &ExperimentConfig, index: usize, job: &Job) -> FailedCell {
+        FailedCell {
+            index,
+            job: job.clone(),
+            fingerprint: cell_fingerprint(cfg, job),
+            kind: self.kind.into(),
+            error: self.error,
+            retries: 0,
+        }
+    }
+}
+
+/// [`run_job`] behind a panic boundary: a workload or simulator panic
+/// comes back as a typed [`CellFailure`] instead of unwinding through
+/// the worker pool. `sabotage` is the pre-claimed `cell-panic` fault
+/// decision (evaluated at claim time so the nth occurrence is
+/// deterministic under any thread count).
+fn run_cell(cfg: &ExperimentConfig, job: &Job, sabotage: bool) -> Result<JobOutput, CellFailure> {
+    catch_unwind(AssertUnwindSafe(|| {
+        if sabotage {
+            panic!("injected cell panic: {} / {}", job.workload, job.scenario);
+        }
+        run_job(cfg, job)
+    }))
+    .map_err(|p| CellFailure { kind: "panic", error: panic_message(p.as_ref()).to_string() })
+}
+
 /// Shared worker-pool skeleton of both driver modes (and the cache-sweep
 /// runner): claim unit indices `0..units` from an atomic cursor (work
 /// stealing by index, so long units do not convoy behind short ones)
@@ -331,21 +398,44 @@ pub(crate) fn fan_out(units: usize, threads: usize, work: impl Fn(usize) + Sync)
     threads_used
 }
 
-/// Unwrap the per-job result slots in input order.
+/// Unwrap the per-job result slots in input order. Unfilled slots
+/// belong to quarantined (or strict-aborted) cells and are skipped —
+/// the caller joins them back via [`FailedCell::index`].
 fn collect_slots(slots: Vec<Mutex<Option<JobOutput>>>) -> Vec<JobOutput> {
-    slots
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("every job slot filled"))
-        .collect()
+    slots.into_iter().filter_map(|m| m.into_inner().unwrap()).collect()
+}
+
+/// Unwrap the shared failure list, sorted by input index so the report
+/// is deterministic regardless of which worker recorded each failure.
+fn collect_failures(failures: Mutex<Vec<FailedCell>>) -> Vec<FailedCell> {
+    let mut failed = failures.into_inner().unwrap();
+    failed.sort_by_key(|f| f.index);
+    failed
 }
 
 /// Run `jobs` across up to `threads` OS threads (`0` = one per available
-/// core). Results land in per-job slots and come back in input order.
+/// core). Results land in per-job slots and come back in input order; a
+/// failing cell is quarantined into [`DriverReport::failed`] while the
+/// rest of the grid completes (or aborts the run under `--strict`).
 pub fn run_jobs(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverReport {
     let t0 = std::time::Instant::now();
     let slots: Vec<Mutex<Option<JobOutput>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    let failures: Mutex<Vec<FailedCell>> = Mutex::new(Vec::new());
+    let abort = AtomicBool::new(false);
     let threads_used = fan_out(jobs.len(), threads, |i| {
-        *slots[i].lock().unwrap() = Some(run_job(cfg, &jobs[i]));
+        if abort.load(Ordering::Relaxed) {
+            return;
+        }
+        let sabotage = fault::fired(fault::Site::CellPanic).is_some();
+        match run_cell(cfg, &jobs[i], sabotage) {
+            Ok(out) => *slots[i].lock().unwrap() = Some(out),
+            Err(f) => {
+                failures.lock().unwrap().push(f.at(cfg, i, &jobs[i]));
+                if cfg.strict {
+                    abort.store(true, Ordering::Relaxed);
+                }
+            }
+        }
     });
     DriverReport {
         outputs: collect_slots(slots),
@@ -353,6 +443,7 @@ pub fn run_jobs(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverR
         wall_seconds: t0.elapsed().as_secs_f64(),
         workload_executions: jobs.len(),
         cached_cells: 0,
+        failed: collect_failures(failures),
     }
 }
 
@@ -423,6 +514,7 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
 
     let executions = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<JobOutput>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
+    let failures: Mutex<Vec<FailedCell>> = Mutex::new(Vec::new());
 
     /// Scheduler state: claim cursors, the ready-cell queue, and the
     /// resident captures. Guarded by one mutex; workers park on the
@@ -513,34 +605,77 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                                 _ => break,
                             }
                         }
+                        // `cell-panic` is claimed under the lock — one
+                        // decision per batch — so the nth occurrence is
+                        // deterministic under any thread interleaving
+                        let sabotage = fault::fired(fault::Site::CellPanic).is_some();
                         drop(st);
                         let scenarios: Vec<Scenario> =
                             batch.iter().map(|&i| jobs[i].scenario).collect();
                         // sampled replay swaps the estimator in per-cell;
                         // scheduling and broadcast batching are identical
-                        let cells: Vec<(Metrics, Option<SampleStat>)> = match cfg.sample {
-                            Some(sc) => replay_characterize_many_sampled(&rec, cfg, &scenarios, sc)
-                                .into_iter()
-                                .map(|r| {
-                                    let stat = SampleStat::from(&r);
-                                    (r.estimate, Some(stat))
-                                })
-                                .collect(),
-                            None => replay_characterize_many(&rec, cfg, &scenarios)
-                                .into_iter()
-                                .map(|m| (m, None))
-                                .collect(),
-                        };
-                        for (&i, (m, stat)) in batch.iter().zip(cells) {
-                            *slots[i].lock().unwrap() = Some(JobOutput {
-                                job: jobs[i].clone(),
-                                metrics: m,
-                                quality: Some(rec.result.quality),
-                                sample: stat,
-                            });
+                        let cells = catch_unwind(AssertUnwindSafe(|| {
+                            if sabotage {
+                                panic!(
+                                    "injected cell panic replaying {} ({} cells)",
+                                    jobs[batch[0]].workload,
+                                    batch.len()
+                                );
+                            }
+                            let out: Vec<(Metrics, Option<SampleStat>)> = match cfg.sample {
+                                Some(sc) => {
+                                    replay_characterize_many_sampled(&rec, cfg, &scenarios, sc)
+                                        .into_iter()
+                                        .map(|r| {
+                                            let stat = SampleStat::from(&r);
+                                            (r.estimate, Some(stat))
+                                        })
+                                        .collect()
+                                }
+                                None => replay_characterize_many(&rec, cfg, &scenarios)
+                                    .into_iter()
+                                    .map(|m| (m, None))
+                                    .collect(),
+                            };
+                            out
+                        }));
+                        let mut batch_failed = false;
+                        match cells {
+                            Ok(cells) => {
+                                for (&i, (m, stat)) in batch.iter().zip(cells) {
+                                    *slots[i].lock().unwrap() = Some(JobOutput {
+                                        job: jobs[i].clone(),
+                                        metrics: m,
+                                        quality: Some(rec.result.quality),
+                                        sample: stat,
+                                    });
+                                }
+                            }
+                            Err(p) => {
+                                // quarantine exactly this batch: the
+                                // capture itself is immutable and keeps
+                                // serving the group's other cells
+                                batch_failed = true;
+                                let msg = panic_message(p.as_ref());
+                                let mut fl = failures.lock().unwrap();
+                                for &i in &batch {
+                                    fl.push(FailedCell {
+                                        index: i,
+                                        job: jobs[i].clone(),
+                                        fingerprint: cell_fingerprint(cfg, &jobs[i]),
+                                        kind: "panic".into(),
+                                        error: format!("replay failed: {msg}"),
+                                        retries: 0,
+                                    });
+                                }
+                            }
                         }
                         drop(rec);
                         st = state.lock().unwrap();
+                        if batch_failed && cfg.strict {
+                            st.aborted = true;
+                            cv.notify_all();
+                        }
                         st.completed += batch.len();
                         st.remaining[g] -= batch.len();
                         if st.remaining[g] == 0 {
@@ -558,16 +693,54 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                         let g = st.next_capture;
                         st.next_capture += 1;
                         st.resident += 1;
+                        // capture claims are sequential under the lock,
+                        // so the nth `capture-panic` occurrence lands on
+                        // a deterministic group at any thread count
+                        let sabotage = fault::fired(fault::Site::CapturePanic).is_some();
                         drop(st);
                         let (name, sw_prefetch) = plan.captures[g].0;
-                        let w = by_name(name)
-                            .unwrap_or_else(|| panic!("driver: unknown workload {name:?}"));
-                        let rec = Arc::new(capture_trace(w.as_ref(), cfg, sw_prefetch));
-                        executions.fetch_add(1, Ordering::Relaxed);
+                        let captured = catch_unwind(AssertUnwindSafe(|| {
+                            if sabotage {
+                                panic!("injected capture panic: {name}");
+                            }
+                            let w = by_name(name)
+                                .unwrap_or_else(|| panic!("driver: unknown workload {name:?}"));
+                            Arc::new(capture_trace(w.as_ref(), cfg, sw_prefetch))
+                        }));
                         st = state.lock().unwrap();
-                        st.recorded[g] = Some(rec);
-                        for &i in &plan.captures[g].1 {
-                            st.ready.push_back((g, i));
+                        match captured {
+                            Ok(rec) => {
+                                executions.fetch_add(1, Ordering::Relaxed);
+                                st.recorded[g] = Some(rec);
+                                for &i in &plan.captures[g].1 {
+                                    st.ready.push_back((g, i));
+                                }
+                            }
+                            Err(p) => {
+                                // a dead capture takes its whole group
+                                // with it: every cell waiting on this
+                                // recording is quarantined and the
+                                // residency slot is released
+                                let msg = panic_message(p.as_ref());
+                                let mut fl = failures.lock().unwrap();
+                                for &i in &plan.captures[g].1 {
+                                    fl.push(FailedCell {
+                                        index: i,
+                                        job: jobs[i].clone(),
+                                        fingerprint: cell_fingerprint(cfg, &jobs[i]),
+                                        kind: "panic".into(),
+                                        error: format!("capture failed: {msg}"),
+                                        retries: 0,
+                                    });
+                                }
+                                drop(fl);
+                                st.resident -= 1;
+                                st.remaining[g] = 0;
+                                st.completed += plan.captures[g].1.len();
+                                if cfg.strict {
+                                    st.aborted = true;
+                                }
+                            }
                         }
                         cv.notify_all();
                         continue;
@@ -576,10 +749,22 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                     if st.next_direct < plan.direct.len() {
                         let i = plan.direct[st.next_direct];
                         st.next_direct += 1;
+                        let sabotage = fault::fired(fault::Site::CellPanic).is_some();
                         drop(st);
-                        executions.fetch_add(1, Ordering::Relaxed);
-                        *slots[i].lock().unwrap() = Some(run_job(cfg, &jobs[i]));
+                        let result = run_cell(cfg, &jobs[i], sabotage);
+                        let cell_failed = result.is_err();
+                        match result {
+                            Ok(out) => {
+                                executions.fetch_add(1, Ordering::Relaxed);
+                                *slots[i].lock().unwrap() = Some(out);
+                            }
+                            Err(f) => failures.lock().unwrap().push(f.at(cfg, i, &jobs[i])),
+                        }
                         st = state.lock().unwrap();
+                        if cell_failed && cfg.strict {
+                            st.aborted = true;
+                            cv.notify_all();
+                        }
                         st.completed += 1;
                         if st.completed == total_cells {
                             cv.notify_all();
@@ -605,6 +790,7 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
         wall_seconds: t0.elapsed().as_secs_f64(),
         workload_executions: executions.into_inner(),
         cached_cells: 0,
+        failed: collect_failures(failures),
     }
 }
 
@@ -628,38 +814,66 @@ pub fn run_jobs_replayed_grouped(
     let executions = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<JobOutput>>> = jobs.iter().map(|_| Mutex::new(None)).collect();
 
+    let failures: Mutex<Vec<FailedCell>> = Mutex::new(Vec::new());
     let threads_used = fan_out(units, threads, |u| {
         if let Some((key, idxs)) = plan.captures.get(u) {
             let (name, sw_prefetch) = *key;
-            let w =
-                by_name(name).unwrap_or_else(|| panic!("driver: unknown workload {name:?}"));
-            let recorded = capture_trace(w.as_ref(), cfg, sw_prefetch);
-            executions.fetch_add(1, Ordering::Relaxed);
-            for &i in idxs {
-                let job = &jobs[i];
-                let (metrics, stat) = match cfg.sample {
-                    Some(sc) => {
-                        let r = super::replay_characterize_sampled(&recorded, cfg, sc, |c| {
-                            job.scenario.apply_cpu(c)
-                        });
-                        let stat = SampleStat::from(&r);
-                        (r.estimate, Some(stat))
-                    }
-                    None => {
-                        (replay_characterize(&recorded, cfg, |c| job.scenario.apply_cpu(c)), None)
-                    }
-                };
-                *slots[i].lock().unwrap() = Some(JobOutput {
-                    job: job.clone(),
-                    metrics,
-                    quality: Some(recorded.result.quality),
-                    sample: stat,
-                });
+            // the whole group shares one panic boundary: a capture or
+            // replay panic quarantines every cell the recording serves
+            let group = catch_unwind(AssertUnwindSafe(|| {
+                let w =
+                    by_name(name).unwrap_or_else(|| panic!("driver: unknown workload {name:?}"));
+                let recorded = capture_trace(w.as_ref(), cfg, sw_prefetch);
+                executions.fetch_add(1, Ordering::Relaxed);
+                for &i in idxs {
+                    let job = &jobs[i];
+                    let (metrics, stat) = match cfg.sample {
+                        Some(sc) => {
+                            let r = super::replay_characterize_sampled(&recorded, cfg, sc, |c| {
+                                job.scenario.apply_cpu(c)
+                            });
+                            let stat = SampleStat::from(&r);
+                            (r.estimate, Some(stat))
+                        }
+                        None => (
+                            replay_characterize(&recorded, cfg, |c| job.scenario.apply_cpu(c)),
+                            None,
+                        ),
+                    };
+                    *slots[i].lock().unwrap() = Some(JobOutput {
+                        job: job.clone(),
+                        metrics,
+                        quality: Some(recorded.result.quality),
+                        sample: stat,
+                    });
+                }
+            }));
+            if let Err(p) = group {
+                let msg = panic_message(p.as_ref());
+                let mut fl = failures.lock().unwrap();
+                for &i in idxs {
+                    // a cell filled before a mid-group panic must not
+                    // appear in both outputs and the quarantine list
+                    *slots[i].lock().unwrap() = None;
+                    fl.push(FailedCell {
+                        index: i,
+                        job: jobs[i].clone(),
+                        fingerprint: cell_fingerprint(cfg, &jobs[i]),
+                        kind: "panic".into(),
+                        error: format!("capture group failed: {msg}"),
+                        retries: 0,
+                    });
+                }
             }
         } else {
             let i = plan.direct[u - plan.captures.len()];
-            executions.fetch_add(1, Ordering::Relaxed);
-            *slots[i].lock().unwrap() = Some(run_job(cfg, &jobs[i]));
+            match run_cell(cfg, &jobs[i], false) {
+                Ok(out) => {
+                    executions.fetch_add(1, Ordering::Relaxed);
+                    *slots[i].lock().unwrap() = Some(out);
+                }
+                Err(f) => failures.lock().unwrap().push(f.at(cfg, i, &jobs[i])),
+            }
         }
     });
 
@@ -669,6 +883,7 @@ pub fn run_jobs_replayed_grouped(
         wall_seconds: t0.elapsed().as_secs_f64(),
         workload_executions: executions.into_inner(),
         cached_cells: 0,
+        failed: collect_failures(failures),
     }
 }
 
@@ -712,11 +927,39 @@ pub fn run_jobs_ledgered(
 
     let mut workload_executions = 0;
     let mut threads_used = 1;
+    let mut failed: Vec<FailedCell> = Vec::new();
     if !miss_idx.is_empty() {
         let missing: Vec<Job> = miss_idx.iter().map(|&i| jobs[i].clone()).collect();
         let sub = run_jobs_replayed(cfg, &missing, threads);
         workload_executions = sub.workload_executions;
         threads_used = sub.threads_used;
+        // remap quarantined cells from missing-list positions back to
+        // grid positions; failed cells are *not* appended to the ledger
+        // (a retry after the fault clears must re-execute them)
+        let failed_sub: std::collections::BTreeSet<usize> =
+            sub.failed.iter().map(|f| f.index).collect();
+        failed = sub
+            .failed
+            .into_iter()
+            .map(|mut f| {
+                f.index = miss_idx[f.index];
+                f
+            })
+            .collect();
+        if cfg.strict && !failed.is_empty() {
+            // fail-fast: the abort may have skipped cells that neither
+            // succeeded nor failed, making output positions ambiguous —
+            // return what the ledger already held plus the quarantine
+            // list, appending nothing from this aborted batch
+            return Ok(DriverReport {
+                outputs: outputs.into_iter().flatten().collect(),
+                threads_used,
+                wall_seconds: t0.elapsed().as_secs_f64(),
+                workload_executions,
+                cached_cells,
+                failed,
+            });
+        }
         // wall time is paid per batch, not per cell — amortize it so the
         // provenance stays order-of-magnitude honest
         let wall_nanos = (sub.wall_seconds * 1e9) as u64 / missing.len().max(1) as u64;
@@ -724,8 +967,15 @@ pub fn run_jobs_ledgered(
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs())
             .unwrap_or(0);
-        for (k, out) in sub.outputs.into_iter().enumerate() {
-            let i = miss_idx[k];
+        // sub.outputs holds the successes in missing-list order, so
+        // walking the misses and skipping the known failures lines the
+        // two back up index-for-index
+        let mut out_iter = sub.outputs.into_iter();
+        for (k, &i) in miss_idx.iter().enumerate() {
+            if failed_sub.contains(&k) {
+                continue;
+            }
+            let out = out_iter.next().expect("one output per non-failed miss");
             ledger.append(LedgerRecord {
                 fingerprint: fps[i],
                 provenance: cell_provenance(cfg, &out.job, wall_nanos, unix_secs),
@@ -737,11 +987,12 @@ pub fn run_jobs_ledgered(
     }
 
     Ok(DriverReport {
-        outputs: outputs.into_iter().map(|o| o.expect("every job slot filled")).collect(),
+        outputs: outputs.into_iter().flatten().collect(),
         threads_used,
         wall_seconds: t0.elapsed().as_secs_f64(),
         workload_executions,
         cached_cells,
+        failed,
     })
 }
 

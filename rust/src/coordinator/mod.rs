@@ -12,7 +12,8 @@ pub mod sweep;
 
 pub use driver::{
     full_grid, run_job, run_jobs, run_jobs_ledgered, run_jobs_replayed,
-    run_jobs_replayed_grouped, standard_grid, DriverReport, Job, JobOutput, SampleStat, Scenario,
+    run_jobs_replayed_grouped, standard_grid, DriverReport, FailedCell, Job, JobOutput, SampleStat,
+    Scenario,
 };
 pub use sweep::{run_cache_sweep, SweepCell, SweepReport};
 
@@ -63,6 +64,13 @@ pub struct ExperimentConfig {
     /// Unlike `ingest_threads` this **changes results**, so it enters
     /// ledger fingerprints: sampled and full cells never alias.
     pub sample: Option<SampleConfig>,
+    /// Fail-fast mode (`--strict`): the first failing grid cell aborts
+    /// the whole run instead of being quarantined into
+    /// [`DriverReport::failed`](crate::coordinator::DriverReport). Pure
+    /// failure *policy* — it cannot change any successful cell's metrics
+    /// — so, like `ingest_threads`, it is excluded from ledger
+    /// fingerprints.
+    pub strict: bool,
 }
 
 impl Default for ExperimentConfig {
@@ -77,6 +85,7 @@ impl Default for ExperimentConfig {
             auto_shrink: true,
             ingest_threads: 0,
             sample: None,
+            strict: false,
         }
     }
 }

@@ -29,9 +29,10 @@ use std::path::{Path, PathBuf};
 
 use super::fingerprint::Fingerprint;
 use crate::sim::{BranchStats, DramStats, Metrics, PrefetchStats};
-use crate::trace::InstructionMix;
+use crate::trace::{retry_backoff, InstructionMix, MAX_IO_RETRIES};
 use crate::util::binio::{fnv1a64, get_uvarint, put_uvarint};
 use crate::util::error::{Context, Result};
+use crate::util::fault;
 use crate::util::json::Json;
 use crate::{anyhow, bail};
 
@@ -352,17 +353,27 @@ fn decode_record(buf: &[u8]) -> Result<LedgerRecord> {
     })
 }
 
-/// Write one framed record (marker · length · checksum · payload) —
-/// the single definition of the frame layout shared by `append` and
-/// `compact`. Returns the framed byte count.
-fn write_frame<W: Write>(w: &mut W, rec: &LedgerRecord) -> Result<u64> {
+/// Build one framed record (marker · length · checksum · payload) as a
+/// contiguous byte buffer — the single definition of the frame layout
+/// shared by `append` and `compact`. Materializing the whole frame
+/// before any byte reaches the file keeps the torn-write window down to
+/// a single `write_all`, which append-time recovery can truncate away.
+fn frame_bytes(rec: &LedgerRecord) -> Vec<u8> {
     let mut payload = Vec::with_capacity(512);
     encode_record(rec, &mut payload);
-    w.write_all(&[RECORD_MARKER])?;
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
-    w.write_all(&fnv1a64(&payload).to_le_bytes())?;
-    w.write_all(&payload)?;
-    Ok(13 + payload.len() as u64)
+    let mut frame = Vec::with_capacity(13 + payload.len());
+    frame.push(RECORD_MARKER);
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+/// Write one framed record. Returns the framed byte count.
+fn write_frame<W: Write>(w: &mut W, rec: &LedgerRecord) -> Result<u64> {
+    let frame = frame_bytes(rec);
+    w.write_all(&frame)?;
+    Ok(frame.len() as u64)
 }
 
 // ---------------------------------------------------------------------
@@ -378,6 +389,9 @@ pub struct Ledger {
     index: BTreeMap<Fingerprint, usize>,
     file_bytes: u64,
     recovered_tail_bytes: u64,
+    /// When set, every append is `fsync`ed before returning (see
+    /// [`Ledger::set_durable`]).
+    durable: bool,
 }
 
 impl Ledger {
@@ -403,6 +417,7 @@ impl Ledger {
                 index: BTreeMap::new(),
                 file_bytes: HEADER_LEN,
                 recovered_tail_bytes: 0,
+                durable: false,
             });
         }
 
@@ -453,7 +468,17 @@ impl Ledger {
             index,
             file_bytes: good_end as u64,
             recovered_tail_bytes: recovered,
+            durable: false,
         })
+    }
+
+    /// Toggle durable appends: when on, [`Ledger::append`] calls
+    /// `fsync` (`sync_data`) after the flush, so a completed append
+    /// survives power loss, not just process death. Off by default —
+    /// results are cheap to regenerate, and per-record fsync costs
+    /// milliseconds on spinning media.
+    pub fn set_durable(&mut self, durable: bool) {
+        self.durable = durable;
     }
 
     /// Parse one record starting at `pos`; `None` on any corruption
@@ -482,13 +507,85 @@ impl Ledger {
     }
 
     /// Append a record and flush it to disk.
+    ///
+    /// Transient (EINTR-class) write failures are retried up to
+    /// [`MAX_IO_RETRIES`] times with [`retry_backoff`] between attempts,
+    /// truncating back to the last record boundary first so a partial
+    /// write never survives into the retry. A permanent failure is also
+    /// self-healed the same way before the error is returned: the file
+    /// and the in-memory index stay consistent — only the one record is
+    /// lost. With [`Ledger::set_durable`] the frame is `fsync`ed before
+    /// the append is reported complete.
     pub fn append(&mut self, rec: LedgerRecord) -> Result<()> {
-        let written = write_frame(&mut self.file, &rec)
-            .with_context(|| format!("appending to ledger {}", self.path.display()))?;
-        self.file.flush()?;
-        self.file_bytes += written;
+        let frame = frame_bytes(&rec);
+
+        // fault site `ledger-append-kill`: simulate a crash mid-append —
+        // leave a torn half-frame on disk, flushed, and fail *without*
+        // healing; the crash-consistency suite asserts that reopening
+        // truncates it away.
+        if fault::fired(fault::Site::LedgerAppendKill).is_some() {
+            self.file.write_all(&frame[..frame.len() / 2])?;
+            self.file.flush()?;
+            bail!(
+                "injected crash mid-append to ledger {} (torn frame left on disk)",
+                self.path.display()
+            );
+        }
+
+        let mut attempt = 0u32;
+        loop {
+            // fault site `ledger-io`: an EINTR-class transient error,
+            // handled by the same retry path a real one would take.
+            let res = if fault::fired(fault::Site::LedgerIo).is_some() {
+                Err(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "injected transient ledger I/O error",
+                ))
+            } else {
+                self.file.write_all(&frame).and_then(|()| self.file.flush())
+            };
+            match res {
+                Ok(()) => break,
+                Err(e) => {
+                    // rewind to the last record boundary so neither a
+                    // partial write nor the retry's full frame can leave
+                    // the file torn or double-framed
+                    let _ = self.file.set_len(self.file_bytes);
+                    let _ = self.file.seek(SeekFrom::Start(self.file_bytes));
+                    let transient = matches!(
+                        e.kind(),
+                        std::io::ErrorKind::Interrupted
+                            | std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                    );
+                    if transient && attempt < MAX_IO_RETRIES {
+                        attempt += 1;
+                        std::thread::sleep(retry_backoff(attempt));
+                        continue;
+                    }
+                    return Err(e).with_context(|| {
+                        format!("appending to ledger {}", self.path.display())
+                    });
+                }
+            }
+        }
+        if self.durable {
+            self.file
+                .sync_data()
+                .with_context(|| format!("syncing ledger {}", self.path.display()))?;
+        }
+        self.file_bytes += frame.len() as u64;
         self.index.insert(rec.fingerprint, self.records.len());
         self.records.push(rec);
+
+        // fault site `grid-kill`: hard process death *after* a completed
+        // append — the crash/resume suite uses this to stop a grid run
+        // between cells with the ledger in a known-good state. Sync
+        // first so the just-appended record deterministically survives.
+        if fault::fired(fault::Site::GridKill).is_some() {
+            let _ = self.file.sync_data();
+            std::process::abort();
+        }
         Ok(())
     }
 
@@ -508,9 +605,11 @@ impl Ledger {
     }
 
     /// Rewrite the file keeping only the latest record per fingerprint
-    /// (append order preserved among survivors). Writes to a sibling
-    /// temp file and renames over, so a crash mid-compaction leaves the
-    /// original intact.
+    /// (append order preserved among survivors). Crash-atomic: the
+    /// replacement is fully written **and fsynced** to a sibling temp
+    /// file before being renamed over the original, and the containing
+    /// directory is fsynced after the rename — at every instant the
+    /// path names either the complete old file or the complete new one.
     pub fn compact(&mut self) -> Result<CompactionReport> {
         let before = self.stats();
         let keep: std::collections::BTreeSet<usize> = self.index.values().copied().collect();
@@ -532,9 +631,35 @@ impl Ledger {
                 write_frame(&mut f, rec)?;
             }
             f.flush()?;
+            f.sync_all()
+                .with_context(|| format!("syncing {}", tmp.display()))?;
         }
+
+        // fault site `ledger-compact-kill`: crash in the window between
+        // the temp-file write and the rename — the original ledger must
+        // be untouched and the next open must see every record.
+        if fault::fired(fault::Site::LedgerCompactKill).is_some() {
+            bail!(
+                "injected crash between compaction temp-write and rename \
+                 (original {} left intact)",
+                self.path.display()
+            );
+        }
+
         std::fs::rename(&tmp, &self.path)
             .with_context(|| format!("renaming {} into place", tmp.display()))?;
+        // fsync the directory so the rename itself is durable (a power
+        // loss after this point cannot resurrect the old file)
+        #[cfg(unix)]
+        {
+            let dir = match self.path.parent() {
+                Some(d) if !d.as_os_str().is_empty() => d,
+                _ => Path::new("."),
+            };
+            if let Ok(d) = File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
 
         // reopen the handle on the new file, positioned for appends
         self.file = OpenOptions::new().read(true).write(true).open(&self.path)?;

@@ -49,6 +49,7 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
         iterations: args.get_parsed_or("iterations", 2),
         seed: args.get_parsed_or("seed", 0xDA7Au64),
         ingest_threads: args.get_parsed_or("ingest-threads", 0usize),
+        strict: args.has("strict"),
         ..Default::default()
     };
     cfg.profile = match args.get_or("profile", "sklearn").as_str() {
@@ -94,7 +95,32 @@ fn require_profile_support(w: &dyn Workload, profile: LibraryProfile) -> Result<
     Ok(())
 }
 
+/// Parse and arm the deterministic fault-injection plan (`--chaos
+/// <spec>`, falling back to `MLPERF_CHAOS`; the flag wins). No flag and
+/// no env var means nothing is installed and every injection site stays
+/// on its zero-cost fast path.
+fn install_chaos(args: &Args) -> Result<()> {
+    let spec = match args.get("chaos") {
+        Some(s) => Some(s.to_string()),
+        None => std::env::var("MLPERF_CHAOS").ok().filter(|s| !s.trim().is_empty()),
+    };
+    let Some(spec) = spec else { return Ok(()) };
+    let plan = mlperf::util::fault::FaultPlan::parse(&spec)?;
+    if plan.is_empty() {
+        mlperf::util::fault::install(None);
+        return Ok(());
+    }
+    eprintln!(
+        "chaos: fault injection ARMED ({} rule(s), seed {}) — {plan}",
+        plan.rule_count(),
+        plan.seed()
+    );
+    mlperf::util::fault::install(Some(plan));
+    Ok(())
+}
+
 fn dispatch(args: &Args) -> Result<()> {
+    install_chaos(args)?;
     match args.subcommand.as_deref() {
         Some("list") => cmd_list(),
         Some("characterize") => cmd_characterize(args),
@@ -128,12 +154,20 @@ grid flags:   --threads <n> (0 = one per core) --full (all scenario columns) --d
               --ledger <file.mllg> (skip cells already simulated) --json <out.json> (results artifact)
               --assert-cached (fail if anything executed) --baseline <base.json> --gate --tolerance <f>
               --sample <detail>:<period> (sampled replay cells; adds a CPI +-CI column)
+              --strict (first failing cell aborts the run; default quarantines it into
+              results/failures.json and completes the rest) --durable (fsync every ledger append)
 sweep flags:  grid --sweep cache (exact-LRU miss curves for every geometry from ONE trace pass per
               workload) [--workload <name>] [--ledger <file.mllg>] [--json <out.json>] [--assert-cached]
 report flags: --baseline <base.json> (re-run its cells and diff) --gate (non-zero exit on drift)
               --tolerance <f> (relative band, default 0.01) --ledger <file.mllg>
               --bless (overwrite <base.json> with the freshly computed results — documented
               refresh flow; an empty/missing baseline is blessed from the standard grid)
+              --allow-vacuous (let --gate pass against an empty placeholder baseline; by
+              default a vacuous gate exits non-zero so CI cannot certify nothing)
+chaos flags:  --chaos <spec> (or MLPERF_CHAOS) — deterministic fault injection, e.g.
+              --chaos 'seed=7;read-transient@2' or 'frame-bitflip%0.01;decode-panic@1';
+              sites: read-transient read-short frame-bitflip torn-tail decode-panic stall
+              capture-panic cell-panic ledger-io ledger-append-kill ledger-compact-kill grid-kill
 ledger usage: mlperf ledger stats|gc|export --ledger <file.mllg> [--out <file.json>]";
 
 fn cmd_list() -> Result<()> {
@@ -590,6 +624,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
                 );
             }
             let mut ledger = Ledger::open(std::path::Path::new(lp))?;
+            ledger.set_durable(args.has("durable"));
             run_jobs_ledgered(&cfg, &jobs, threads, &mut ledger)?
         }
         None if direct => run_jobs(&cfg, &jobs, threads),
@@ -643,6 +678,41 @@ fn cmd_grid(args: &Args) -> Result<()> {
     }
     t.emit();
 
+    // quarantine report: human-readable lines plus the machine-readable
+    // `results/failures.json` artifact (written even when empty, so CI
+    // can assert the exact quarantined set of a chaos run)
+    for f in &report.failed {
+        eprintln!(
+            "quarantined: {} / {} [{}] {} (fingerprint {})",
+            f.job.workload, f.job.scenario, f.kind, f.error, f.fingerprint
+        );
+    }
+    let failures_path = std::path::Path::new("results").join("failures.json");
+    match std::fs::create_dir_all("results")
+        .and_then(|()| std::fs::write(&failures_path, failures_json(&report.failed)))
+    {
+        Ok(()) if report.failed.is_empty() => {}
+        Ok(()) => println!(
+            "wrote {} failed cell(s) to {}",
+            report.failed.len(),
+            failures_path.display()
+        ),
+        Err(e) => eprintln!(
+            "warning: failures not persisted to {}: {e}",
+            failures_path.display()
+        ),
+    }
+    if cfg.strict && !report.failed.is_empty() {
+        let f = &report.failed[0];
+        bail!(
+            "--strict: {} grid cell(s) failed; first: {} / {}: {}",
+            report.failed.len(),
+            f.job.workload,
+            f.job.scenario,
+            f.error
+        );
+    }
+
     let current = GridResults::from_outputs(&cfg, &report.outputs);
     if let Some(jp) = args.get("json") {
         current.save(std::path::Path::new(jp))?;
@@ -658,7 +728,13 @@ fn cmd_grid(args: &Args) -> Result<()> {
         );
     }
     if let Some(bp) = args.get("baseline") {
-        gate_against_baseline(&current, bp, tolerance_from(args), args.has("gate"))?;
+        gate_against_baseline(
+            &current,
+            bp,
+            tolerance_from(args),
+            args.has("gate"),
+            args.has("allow-vacuous"),
+        )?;
     }
     Ok(())
 }
@@ -775,17 +851,46 @@ fn sweep_json(cfg: &ExperimentConfig, report: &SweepReport) -> String {
     .render()
 }
 
+/// The `mlperf-failures/v1` artifact: one record per quarantined grid
+/// cell, keyed the same way as the results JSON so the two can be
+/// joined (a cell appears in exactly one of them).
+fn failures_json(failed: &[FailedCell]) -> String {
+    let cells: Vec<Json> = failed
+        .iter()
+        .map(|f| {
+            Json::Obj(vec![
+                ("workload".to_string(), Json::Str(f.job.workload.clone())),
+                ("scenario".to_string(), Json::Str(f.job.scenario.to_string())),
+                ("fingerprint".to_string(), Json::Str(f.fingerprint.to_string())),
+                ("kind".to_string(), Json::Str(f.kind.clone())),
+                ("error".to_string(), Json::Str(f.error.clone())),
+                ("retries".to_string(), Json::num(f.retries as f64)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("schema".to_string(), Json::Str("mlperf-failures/v1".to_string())),
+        ("failed".to_string(), Json::num(failed.len() as f64)),
+        ("cells".to_string(), Json::Arr(cells)),
+    ])
+    .render()
+}
+
 fn tolerance_from(args: &Args) -> f64 {
     args.get_parsed_or("tolerance", DEFAULT_TOLERANCE)
 }
 
 /// Diff `current` against the baseline file, emit the delta table and
-/// the machine-readable verdict, and (when `gate`) fail on drift.
+/// the machine-readable verdict, and (when `gate`) fail on drift. A
+/// gate against an empty placeholder baseline compares nothing — that
+/// is an error by default (a passing exit must certify something);
+/// `allow_vacuous` downgrades it to the historical warning.
 fn gate_against_baseline(
     current: &GridResults,
     baseline_path: &str,
     tolerance: f64,
     gate: bool,
+    allow_vacuous: bool,
 ) -> Result<()> {
     let baseline = GridResults::load(std::path::Path::new(baseline_path))?;
     if baseline.cells.is_empty() {
@@ -794,11 +899,20 @@ fn gate_against_baseline(
              regenerate it with `mlperf grid --json {baseline_path}`"
         );
         if gate {
-            eprintln!(
-                "warning: --gate against the empty baseline is VACUOUS — zero metrics were \
-                 compared, so this exit code certifies nothing; populate {baseline_path} to arm \
-                 the gate"
-            );
+            if allow_vacuous {
+                eprintln!(
+                    "warning: --gate against the empty baseline is VACUOUS — zero metrics were \
+                     compared, so this exit code certifies nothing (--allow-vacuous accepted it); \
+                     populate {baseline_path} to arm the gate"
+                );
+            } else {
+                bail!(
+                    "--gate against empty baseline {baseline_path} is vacuous: zero metrics were \
+                     compared, so a passing exit would certify nothing; populate the baseline \
+                     (`mlperf grid --json {baseline_path}`) or pass --allow-vacuous to accept a \
+                     no-op gate"
+                );
+            }
         }
         return Ok(());
     }
@@ -944,11 +1058,20 @@ fn cmd_report_baseline(args: &Args, cfg: &mut ExperimentConfig, baseline_path: &
              regenerate it with `mlperf report --baseline {baseline_path} --bless`"
         );
         if args.has("gate") {
-            eprintln!(
-                "warning: --gate against the empty baseline is VACUOUS — no cell was re-run or \
-                 compared, so this exit code certifies nothing; bless {baseline_path} to arm \
-                 the gate"
-            );
+            if args.has("allow-vacuous") {
+                eprintln!(
+                    "warning: --gate against the empty baseline is VACUOUS — no cell was re-run \
+                     or compared, so this exit code certifies nothing (--allow-vacuous accepted \
+                     it); bless {baseline_path} to arm the gate"
+                );
+            } else {
+                bail!(
+                    "--gate against empty baseline {baseline_path} is vacuous: no cell was re-run \
+                     or compared, so a passing exit would certify nothing; bless the baseline \
+                     (`mlperf report --baseline {baseline_path} --bless`) or pass --allow-vacuous \
+                     to accept a no-op gate"
+                );
+            }
         }
         return Ok(());
     }
@@ -1012,6 +1135,7 @@ fn cmd_report_baseline(args: &Args, cfg: &mut ExperimentConfig, baseline_path: &
     let report = match args.get("ledger") {
         Some(lp) => {
             let mut ledger = Ledger::open(std::path::Path::new(lp))?;
+            ledger.set_durable(args.has("durable"));
             run_jobs_ledgered(cfg, &jobs, threads, &mut ledger)?
         }
         None => run_jobs_replayed(cfg, &jobs, threads),
@@ -1020,6 +1144,19 @@ fn cmd_report_baseline(args: &Args, cfg: &mut ExperimentConfig, baseline_path: &
         "{} executed, {} cached, {:.1}s wall",
         report.workload_executions, report.cached_cells, report.wall_seconds
     );
+    if !report.failed.is_empty() {
+        // a gate or bless over a partial grid would silently shrink the
+        // baseline — always fail loudly here, strict or not
+        let f = &report.failed[0];
+        bail!(
+            "{} cell(s) failed during the baseline {}; first: {} / {}: {}",
+            report.failed.len(),
+            if bless { "bless" } else { "re-run" },
+            f.job.workload,
+            f.job.scenario,
+            f.error
+        );
+    }
     let current = GridResults::from_outputs(cfg, &report.outputs);
     if bless {
         current.save(std::path::Path::new(baseline_path))?;
@@ -1032,5 +1169,11 @@ fn cmd_report_baseline(args: &Args, cfg: &mut ExperimentConfig, baseline_path: &
         );
         return Ok(());
     }
-    gate_against_baseline(&current, baseline_path, tolerance_from(args), args.has("gate"))
+    gate_against_baseline(
+        &current,
+        baseline_path,
+        tolerance_from(args),
+        args.has("gate"),
+        args.has("allow-vacuous"),
+    )
 }

@@ -1,0 +1,203 @@
+//! Typed error taxonomy for the trace layer.
+//!
+//! The store and pipelined-ingest paths classify every failure into a
+//! [`TraceErrorKind`] so callers can *recover* instead of aborting: the
+//! reader retries transient I/O errors with bounded backoff
+//! ([`MAX_IO_RETRIES`], [`retry_backoff`]), the grid driver quarantines
+//! cells whose captures fail permanently, and the CLI renders a one-line
+//! message instead of a panic backtrace. [`TraceError`] implements
+//! `std::error::Error`, so `?` still converts it into the crate-wide
+//! [`Error`](crate::util::error::Error) at the boundaries that don't
+//! care about the kind.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Bounded retry budget for transient I/O errors: a frame read is
+/// retried at most this many times (with [`retry_backoff`] between
+/// attempts) before the error is surfaced as permanent.
+pub const MAX_IO_RETRIES: u32 = 3;
+
+/// Backoff before retry `attempt` (1-based): 100µs doubling per
+/// attempt — long enough to let an EINTR-class hiccup clear, short
+/// enough that a full budget costs under a millisecond.
+pub fn retry_backoff(attempt: u32) -> Duration {
+    Duration::from_micros(100u64 << attempt.saturating_sub(1).min(10))
+}
+
+/// What class of failure a [`TraceError`] is — the axis recovery
+/// policy dispatches on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceErrorKind {
+    /// Data failed validation (checksum mismatch, bad marker, undecodable
+    /// payload) at a known block index. Permanent: the artifact is bad.
+    Corrupt {
+        /// Index of the block being read when corruption surfaced.
+        block: u64,
+    },
+    /// The stream ended before its trailer (torn tail, partial file).
+    /// Permanent, but the prefix up to the tear was validated.
+    Truncated,
+    /// The file is a trace of a format version this build does not read.
+    VersionMismatch {
+        /// Version the file claims.
+        found: u32,
+    },
+    /// An I/O error. `transient: true` marks EINTR-class errors
+    /// (interrupted, would-block, timed out) that a bounded retry may
+    /// clear; everything else is permanent.
+    Io {
+        /// Whether a retry may succeed.
+        transient: bool,
+    },
+    /// Malformed header or metadata (bad magic, bad profile byte, …).
+    Format,
+    /// A worker thread (pipelined-ingest decoder) panicked; converted
+    /// to an error instead of tearing down the process.
+    WorkerPanic,
+}
+
+/// A classified trace-layer failure: a [`TraceErrorKind`] plus a
+/// human-readable, single-line message.
+#[derive(Debug, Clone)]
+pub struct TraceError {
+    kind: TraceErrorKind,
+    msg: String,
+}
+
+impl TraceError {
+    /// Corrupt data at `block`.
+    pub fn corrupt(block: u64, msg: impl Into<String>) -> Self {
+        TraceError { kind: TraceErrorKind::Corrupt { block }, msg: msg.into() }
+    }
+
+    /// Stream ended early.
+    pub fn truncated(msg: impl Into<String>) -> Self {
+        TraceError { kind: TraceErrorKind::Truncated, msg: msg.into() }
+    }
+
+    /// Unreadable format version.
+    pub fn version(found: u32, msg: impl Into<String>) -> Self {
+        TraceError { kind: TraceErrorKind::VersionMismatch { found }, msg: msg.into() }
+    }
+
+    /// I/O failure, transient or permanent.
+    pub fn io(transient: bool, msg: impl Into<String>) -> Self {
+        TraceError { kind: TraceErrorKind::Io { transient }, msg: msg.into() }
+    }
+
+    /// Malformed header/metadata.
+    pub fn format(msg: impl Into<String>) -> Self {
+        TraceError { kind: TraceErrorKind::Format, msg: msg.into() }
+    }
+
+    /// A caught worker-thread panic.
+    pub fn worker_panic(msg: impl Into<String>) -> Self {
+        TraceError { kind: TraceErrorKind::WorkerPanic, msg: msg.into() }
+    }
+
+    /// Classify a `std::io::Error`: EINTR-class kinds are transient,
+    /// unexpected EOF is a truncation, the rest are permanent I/O.
+    pub fn from_io(e: std::io::Error, what: &str) -> Self {
+        use std::io::ErrorKind as K;
+        match e.kind() {
+            K::Interrupted | K::WouldBlock | K::TimedOut => {
+                TraceError::io(true, format!("{what}: {e}"))
+            }
+            K::UnexpectedEof => TraceError::truncated(format!("{what}: {e}")),
+            _ => TraceError::io(false, format!("{what}: {e}")),
+        }
+    }
+
+    /// The failure class.
+    pub fn kind(&self) -> TraceErrorKind {
+        self.kind
+    }
+
+    /// True for errors a bounded retry may clear.
+    pub fn is_transient(&self) -> bool {
+        matches!(self.kind, TraceErrorKind::Io { transient: true })
+    }
+
+    /// Stable lowercase tag for reports (`failures.json`).
+    pub fn kind_str(&self) -> &'static str {
+        match self.kind {
+            TraceErrorKind::Corrupt { .. } => "corrupt",
+            TraceErrorKind::Truncated => "truncated",
+            TraceErrorKind::VersionMismatch { .. } => "version-mismatch",
+            TraceErrorKind::Io { transient: true } => "io-transient",
+            TraceErrorKind::Io { transient: false } => "io",
+            TraceErrorKind::Format => "format",
+            TraceErrorKind::WorkerPanic => "worker-panic",
+        }
+    }
+
+    /// Prepend an outer context frame (`"{ctx}: {msg}"`), keeping the kind.
+    pub fn ctx(mut self, ctx: impl fmt::Display) -> Self {
+        self.msg = format!("{ctx}: {}", self.msg);
+        self
+    }
+}
+
+impl fmt::Display for TraceError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+impl From<std::io::Error> for TraceError {
+    fn from(e: std::io::Error) -> Self {
+        TraceError::from_io(e, "trace I/O")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn io_errors_classify_by_kind() {
+        use std::io::{Error as IoError, ErrorKind as K};
+        let t = TraceError::from_io(IoError::new(K::Interrupted, "eintr"), "read");
+        assert!(t.is_transient());
+        assert_eq!(t.kind_str(), "io-transient");
+
+        let eof = TraceError::from_io(IoError::new(K::UnexpectedEof, "eof"), "read");
+        assert_eq!(eof.kind(), TraceErrorKind::Truncated);
+        assert!(!eof.is_transient());
+
+        let perm = TraceError::from_io(IoError::new(K::PermissionDenied, "no"), "open");
+        assert_eq!(perm.kind(), TraceErrorKind::Io { transient: false });
+        assert_eq!(perm.kind_str(), "io");
+    }
+
+    #[test]
+    fn context_preserves_kind_and_chains_message() {
+        let e = TraceError::corrupt(7, "checksum mismatch").ctx("reading x.mlt");
+        assert_eq!(e.kind(), TraceErrorKind::Corrupt { block: 7 });
+        assert_eq!(e.to_string(), "reading x.mlt: checksum mismatch");
+    }
+
+    #[test]
+    fn converts_into_the_crate_error_via_question_mark() {
+        fn inner() -> Result<(), TraceError> {
+            Err(TraceError::version(9, "trace format version 9 unsupported"))
+        }
+        fn outer() -> crate::util::error::Result<()> {
+            inner()?;
+            Ok(())
+        }
+        let msg = outer().unwrap_err().to_string();
+        assert!(msg.contains("version 9"), "{msg}");
+    }
+
+    #[test]
+    fn backoff_is_bounded_and_monotone() {
+        assert!(retry_backoff(1) < retry_backoff(2));
+        assert!(retry_backoff(MAX_IO_RETRIES) < Duration::from_millis(5));
+        // saturates rather than overflowing for absurd attempts
+        assert!(retry_backoff(u32::MAX) <= Duration::from_millis(200));
+    }
+}

@@ -24,6 +24,7 @@
 pub mod addr;
 pub mod block;
 pub mod broadcast;
+pub mod error;
 pub mod event;
 pub mod mix;
 pub mod pipeline;
@@ -36,6 +37,7 @@ pub use block::{
     StoreRec, BLOCK_EVENTS,
 };
 pub use broadcast::Broadcast;
+pub use error::{retry_backoff, TraceError, TraceErrorKind, MAX_IO_RETRIES};
 pub use event::{Event, NullSink, Sink, Tee, VecSink};
 pub use mix::InstructionMix;
 pub use pipeline::{resolve_ingest_threads, BlockPool, PipelinedIngest};

@@ -41,10 +41,12 @@
 //! [`decode_block`](super::store::decode_block)).
 
 use super::block::{BlockSink, EventBlock};
+use super::error::TraceError;
 use super::store::{decode_block, Frame, ReplayStats, TraceMeta, TraceReader};
-use crate::bail;
-use crate::util::error::{Error, Result};
+use crate::util::error::panic_message;
+use crate::util::fault;
 use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, TryRecvError};
@@ -120,7 +122,7 @@ pub fn resolve_ingest_threads(requested: usize) -> usize {
 
 /// Record the first failure and raise the abort flag; later failures are
 /// dropped (the first is the root cause, the rest are fallout).
-fn set_fail(fail: &Mutex<Option<Error>>, failed: &AtomicBool, e: Error) {
+fn set_fail(fail: &Mutex<Option<TraceError>>, failed: &AtomicBool, e: TraceError) {
     let mut slot = fail.lock().unwrap();
     if slot.is_none() {
         *slot = Some(e);
@@ -141,7 +143,7 @@ impl PipelinedIngest {
     /// threads (`0` = auto). Callers wanting the synchronous path for
     /// `threads == 1` should branch before constructing this —
     /// constructing it with 1 thread still pipelines with one decoder.
-    pub fn open(path: &Path, threads: usize) -> Result<PipelinedIngest> {
+    pub fn open(path: &Path, threads: usize) -> Result<PipelinedIngest, TraceError> {
         let reader = TraceReader::open(path)?;
         let decoders = resolve_ingest_threads(threads).saturating_sub(1).max(1);
         Ok(PipelinedIngest { reader, decoders })
@@ -161,7 +163,16 @@ impl PipelinedIngest {
     /// end-of-trace) and report how much was replayed. The sink runs on
     /// the calling thread; I/O and decode overlap with it on `decoders`+1
     /// background threads.
-    pub fn replay_into<S: BlockSink + ?Sized>(self, sink: &mut S) -> Result<ReplayStats> {
+    ///
+    /// Delivery is Result-based end to end: decode failures *and decoder
+    /// panics* are caught, classified as [`TraceError`]s, and returned —
+    /// a bad block or a dying worker never takes the process down. (The
+    /// drop-guard drain below only covers the one case that must unwind:
+    /// the caller's own sink panicking on the consuming thread.)
+    pub fn replay_into<S: BlockSink + ?Sized>(
+        self,
+        sink: &mut S,
+    ) -> Result<ReplayStats, TraceError> {
         let PipelinedIngest { mut reader, decoders } = self;
         let pool = BlockPool::new();
         let depth = decoders * 2;
@@ -172,13 +183,13 @@ impl PipelinedIngest {
         let (work_tx, work_rx) = sync_channel::<(u64, Vec<u8>)>(depth);
         let work_rx: Mutex<Receiver<(u64, Vec<u8>)>> = Mutex::new(work_rx);
         let (out_tx, out_rx) = sync_channel::<(u64, EventBlock)>(depth);
-        let fail: Mutex<Option<Error>> = Mutex::new(None);
+        let fail: Mutex<Option<TraceError>> = Mutex::new(None);
         let failed = AtomicBool::new(false);
         // blocks delivered in order so far (consumer-written)
         let delivered = AtomicU64::new(0);
         let totals: Mutex<Option<(u64, u64)>> = Mutex::new(None);
 
-        std::thread::scope(|scope| -> Result<ReplayStats> {
+        std::thread::scope(|scope| -> Result<ReplayStats, TraceError> {
             // --- stage 1: I/O thread — read + checksum framed payloads ---
             let (pool_r, fail_r, failed_r, totals_r) = (&pool, &fail, &failed, &totals);
             let delivered_r = &delivered;
@@ -239,20 +250,46 @@ impl PipelinedIngest {
                         continue; // drain so the I/O thread never wedges
                     }
                     let mut block = pool_r.get_block();
-                    match decode_block(&buf, &mut block) {
-                        Ok(()) => {
+                    if let Some(ms) = fault::fired(fault::Site::Stall) {
+                        // slow-stage straggler: the reorder window must
+                        // absorb it without changing delivery order
+                        std::thread::sleep(std::time::Duration::from_millis(ms));
+                    }
+                    // a panicking decoder is converted to a typed error
+                    // here rather than unwinding through the scope and
+                    // tearing down the whole process
+                    let decoded = catch_unwind(AssertUnwindSafe(|| {
+                        if fault::fired(fault::Site::DecodePanic).is_some() {
+                            panic!("injected decoder panic at block {seq}");
+                        }
+                        decode_block(&buf, &mut block)
+                    }));
+                    match decoded {
+                        Ok(Ok(())) => {
                             pool_r.put_buf(buf);
                             if out_tx.send((seq, block)).is_err() {
                                 break;
                             }
                         }
-                        Err(e) => {
+                        Ok(Err(e)) => {
                             pool_r.put_buf(buf);
                             pool_r.put_block(block);
                             set_fail(
                                 fail_r,
                                 failed_r,
-                                e.context(format!("decoding block {seq}")),
+                                TraceError::corrupt(seq, format!("decoding block {seq}: {e}")),
+                            );
+                        }
+                        Err(payload) => {
+                            pool_r.put_buf(buf);
+                            pool_r.put_block(block);
+                            set_fail(
+                                fail_r,
+                                failed_r,
+                                TraceError::worker_panic(format!(
+                                    "decoder thread panicked at block {seq}: {}",
+                                    panic_message(payload.as_ref())
+                                )),
                             );
                         }
                     }
@@ -316,13 +353,16 @@ impl PipelinedIngest {
             }
             debug_assert!(pending.is_empty(), "gap in sequence without a recorded failure");
             let Some((t_events, t_blocks)) = *totals.lock().unwrap() else {
-                bail!("trace ended without a trailer");
+                return Err(TraceError::truncated("trace ended without a trailer"));
             };
             if blocks != t_blocks || events != t_events {
-                bail!(
-                    "trace trailer mismatch: trailer says {t_blocks} blocks / {t_events} \
-                     events, pipeline delivered {blocks} / {events}"
-                );
+                return Err(TraceError::corrupt(
+                    blocks,
+                    format!(
+                        "trace trailer mismatch: trailer says {t_blocks} blocks / {t_events} \
+                         events, pipeline delivered {blocks} / {events}"
+                    ),
+                ));
             }
             sink.finalize();
             Ok(ReplayStats { blocks, events })

@@ -58,15 +58,16 @@
 //! verbatim in the tag lane.
 
 use super::block::{BlockSink, BranchRec, EventBlock, EventKind, LoadRec, StoreRec, BLOCK_EVENTS};
+use super::error::{retry_backoff, TraceError, MAX_IO_RETRIES};
 use crate::util::binio::{
-    fnv1a64, put_ivarint, put_uvarint, read_u16, read_u32, read_u64, read_u8, write_u64,
-    ByteCursor,
+    fnv1a64, put_ivarint, put_uvarint, read_u16, read_u64, read_u8, write_u64, ByteCursor,
 };
 use crate::util::error::{Context, Result};
+use crate::util::fault;
 use crate::workloads::LibraryProfile;
 use crate::{anyhow, bail};
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 /// File magic for the columnar trace container.
@@ -382,6 +383,15 @@ impl TraceWriter {
         head[0] = BLOCK_MARKER;
         head[1..5].copy_from_slice(&(self.scratch.len() as u32).to_le_bytes());
         head[5..13].copy_from_slice(&fnv1a64(&self.scratch).to_le_bytes());
+        if fault::fired(fault::Site::TornTail).is_some() {
+            // model a crash mid-frame: emit the header plus a prefix of
+            // the payload, then report the write as failed so the torn
+            // tail stays on disk for the reader to recover from
+            self.out.write_all(&head)?;
+            self.out.write_all(&self.scratch[..self.scratch.len() / 2])?;
+            self.out.flush()?;
+            bail!("injected torn tail write at block {}", self.blocks);
+        }
         self.out.write_all(&head)?;
         self.out.write_all(&self.scratch)?;
         self.blocks += 1;
@@ -438,42 +448,90 @@ impl BlockSink for TraceWriter {
     }
 }
 
+/// Read exactly `N` bytes, classifying failures via [`TraceError::from_io`].
+fn read_arr<const N: usize>(inp: &mut BufReader<File>, what: &str) -> Result<[u8; N], TraceError> {
+    let mut b = [0u8; N];
+    inp.read_exact(&mut b).map_err(|e| TraceError::from_io(e, what))?;
+    Ok(b)
+}
+
 /// Streaming reader over a recorded trace file.
+///
+/// Frame reads are retried on transient I/O errors (EINTR-class, as
+/// classified by [`TraceError::from_io`] or injected through
+/// [`fault::Site::ReadTransient`] / [`fault::Site::ReadShort`]): the
+/// reader remembers each frame's start offset, rewinds, backs off
+/// ([`retry_backoff`]) and re-reads, up to [`MAX_IO_RETRIES`] attempts.
+/// Permanent failures ([`TraceError::is_transient`] false) surface
+/// immediately with their [`TraceErrorKind`](super::TraceErrorKind).
 pub struct TraceReader {
     inp: BufReader<File>,
     meta: TraceMeta,
     payload: Vec<u8>,
     blocks_read: u64,
     events_read: u64,
+    /// Logical offset of the next unread byte — maintained without
+    /// syscalls so a transient failure can rewind to the frame start.
+    pos: u64,
+    transient_retries: u32,
     done: bool,
 }
 
 impl TraceReader {
-    /// Open `path`, validating magic, version, and header.
-    pub fn open(path: &Path) -> Result<TraceReader> {
-        let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
-        let mut inp = BufReader::new(f);
-        let mut magic = [0u8; 8];
-        inp.read_exact(&mut magic)
-            .with_context(|| format!("reading header of {}", path.display()))?;
-        if &magic != TRACE_MAGIC {
-            bail!("{}: bad magic (not an mlperf trace file)", path.display());
-        }
-        let version = read_u32(&mut inp)?;
-        if version != TRACE_VERSION {
-            bail!(
-                "{}: trace format version {version} unsupported (this build reads version \
-                 {TRACE_VERSION}); re-record the trace",
+    /// Open `path`, validating magic, version, and header. Missing and
+    /// zero-length files get dedicated one-line diagnoses (the latter is
+    /// what a crash before the first flush leaves behind).
+    pub fn open(path: &Path) -> Result<TraceReader, TraceError> {
+        let f = File::open(path).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::NotFound {
+                TraceError::io(false, format!("trace file not found: {}", path.display()))
+            } else {
+                TraceError::from_io(e, &format!("open {}", path.display()))
+            }
+        })?;
+        let file_len = f
+            .metadata()
+            .map_err(|e| TraceError::from_io(e, &format!("stat {}", path.display())))?
+            .len();
+        if file_len == 0 {
+            return Err(TraceError::truncated(format!(
+                "{}: empty trace file (0 bytes) — not a recorded trace; re-record it",
                 path.display()
-            );
+            )));
         }
-        let meta = read_meta(&mut inp)?;
+        let mut inp = BufReader::new(f);
+        let magic: [u8; 8] = read_arr(&mut inp, &format!("reading header of {}", path.display()))?;
+        if &magic != TRACE_MAGIC {
+            return Err(TraceError::format(format!(
+                "{}: bad magic (not an mlperf trace file)",
+                path.display()
+            )));
+        }
+        let version =
+            u32::from_le_bytes(read_arr(&mut inp, "reading trace format version")?);
+        if version != TRACE_VERSION {
+            return Err(TraceError::version(
+                version,
+                format!(
+                    "{}: trace format version {version} unsupported (this build reads version \
+                     {TRACE_VERSION}); re-record the trace",
+                    path.display()
+                ),
+            ));
+        }
+        let meta = read_meta(&mut inp)
+            .map_err(|e| TraceError::format(format!("{}: {e}", path.display())))?;
+        let pos = inp
+            .stream_position()
+            .map_err(|e| TraceError::from_io(e, "locating first frame"))?;
         Ok(TraceReader {
             inp,
             meta,
             payload: Vec::new(),
             blocks_read: 0,
             events_read: 0,
+            pos,
+            transient_retries: 0,
             done: false,
         })
     }
@@ -493,54 +551,135 @@ impl TraceReader {
         self.events_read
     }
 
+    /// Transient I/O errors absorbed by the retry loop so far.
+    pub fn transient_retries(&self) -> u32 {
+        self.transient_retries
+    }
+
     /// Read the next frame into `payload` (replacing its contents),
     /// verifying the per-block checksum but **not** decoding — the split
     /// that lets the pipelined ingest's I/O thread read and checksum
     /// while a decoder pool does the columnar work
     /// ([`super::pipeline::PipelinedIngest`]). Validates the trailer's
     /// block count; the caller owns checking the trailer's event total
-    /// against what it decodes.
-    pub(crate) fn next_frame_into(&mut self, payload: &mut Vec<u8>) -> Result<Frame> {
-        let marker = read_u8(&mut self.inp).context("reading block marker")?;
+    /// against what it decodes. Transient I/O errors are rewound and
+    /// retried with backoff, up to [`MAX_IO_RETRIES`] times per frame.
+    pub(crate) fn next_frame_into(
+        &mut self,
+        payload: &mut Vec<u8>,
+    ) -> Result<Frame, TraceError> {
+        let mut attempt = 0u32;
+        loop {
+            let frame_start = self.pos;
+            match self.read_frame_once(payload) {
+                Ok(frame) => return Ok(frame),
+                Err(e) if e.is_transient() && attempt < MAX_IO_RETRIES => {
+                    attempt += 1;
+                    self.transient_retries += 1;
+                    std::thread::sleep(retry_backoff(attempt));
+                    self.inp.seek(SeekFrom::Start(frame_start)).map_err(|se| {
+                        TraceError::from_io(se, "rewinding after transient I/O error")
+                    })?;
+                    self.pos = frame_start;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// One read attempt of the next frame. `self.pos` only advances on
+    /// success, so the retry loop can always rewind to the frame start
+    /// no matter how many bytes a failed attempt consumed.
+    fn read_frame_once(&mut self, payload: &mut Vec<u8>) -> Result<Frame, TraceError> {
+        if fault::fired(fault::Site::ReadTransient).is_some() {
+            return Err(TraceError::io(
+                true,
+                "injected transient I/O error (EINTR) reading trace frame",
+            ));
+        }
+        let marker = read_arr::<1>(&mut self.inp, "reading block marker")?[0];
         match marker {
             BLOCK_MARKER => {
-                let len = read_u32(&mut self.inp)? as usize;
+                let len =
+                    u32::from_le_bytes(read_arr(&mut self.inp, "reading block length")?) as usize;
                 if len > MAX_PAYLOAD {
-                    bail!("block {}: payload length {len} exceeds format cap", self.blocks_read);
+                    return Err(TraceError::corrupt(
+                        self.blocks_read,
+                        format!(
+                            "block {}: payload length {len} exceeds format cap",
+                            self.blocks_read
+                        ),
+                    ));
                 }
-                let checksum = read_u64(&mut self.inp)?;
+                let checksum =
+                    u64::from_le_bytes(read_arr(&mut self.inp, "reading block checksum")?);
                 // reuse the buffer's capacity: resize only zero-fills a
                 // grown region, and read_exact overwrites it anyway
                 payload.resize(len, 0);
-                self.inp
-                    .read_exact(payload)
-                    .with_context(|| format!("block {}: truncated payload", self.blocks_read))?;
+                if fault::fired(fault::Site::ReadShort).is_some() {
+                    // consume part of the payload, then report the read
+                    // as interrupted — the retry path must rewind past
+                    // these bytes for the re-read to line up
+                    let half = len / 2;
+                    self.inp
+                        .read_exact(&mut payload[..half])
+                        .map_err(|e| TraceError::from_io(e, "short-read prefix"))?;
+                    return Err(TraceError::io(
+                        true,
+                        "injected short read of trace frame payload",
+                    ));
+                }
+                self.inp.read_exact(payload).map_err(|e| {
+                    TraceError::from_io(
+                        e,
+                        &format!("block {}: truncated payload", self.blocks_read),
+                    )
+                })?;
+                if fault::fired(fault::Site::FrameBitflip).is_some() {
+                    if let Some(byte) = payload.get_mut(len / 2) {
+                        *byte ^= 0x20;
+                    }
+                }
                 if fnv1a64(payload) != checksum {
-                    bail!("block {}: checksum mismatch (corrupted trace)", self.blocks_read);
+                    return Err(TraceError::corrupt(
+                        self.blocks_read,
+                        format!(
+                            "block {}: checksum mismatch (corrupted trace)",
+                            self.blocks_read
+                        ),
+                    ));
                 }
                 self.blocks_read += 1;
+                self.pos += 13 + len as u64;
                 Ok(Frame::Block)
             }
             END_MARKER => {
-                let events = read_u64(&mut self.inp)?;
-                let blocks = read_u64(&mut self.inp)?;
+                let events = u64::from_le_bytes(read_arr(&mut self.inp, "reading trailer")?);
+                let blocks = u64::from_le_bytes(read_arr(&mut self.inp, "reading trailer")?);
                 if blocks != self.blocks_read {
-                    bail!(
-                        "trace trailer mismatch: trailer says {blocks} blocks, stream held {}",
-                        self.blocks_read
-                    );
+                    return Err(TraceError::corrupt(
+                        self.blocks_read,
+                        format!(
+                            "trace trailer mismatch: trailer says {blocks} blocks, stream held {}",
+                            self.blocks_read
+                        ),
+                    ));
                 }
                 self.done = true;
+                self.pos += 17;
                 Ok(Frame::End { events, blocks })
             }
-            other => bail!("corrupt trace: unexpected marker byte {other:#04x}"),
+            other => Err(TraceError::corrupt(
+                self.blocks_read,
+                format!("corrupt trace: unexpected marker byte {other:#04x}"),
+            )),
         }
     }
 
     /// Decode the next block into `block` (replacing its contents).
     /// Returns `Ok(false)` once the validated end-of-trace trailer has
     /// been consumed; every error path names what was inconsistent.
-    pub fn next_block(&mut self, block: &mut EventBlock) -> Result<bool> {
+    pub fn next_block(&mut self, block: &mut EventBlock) -> Result<bool, TraceError> {
         if self.done {
             return Ok(false);
         }
@@ -549,17 +688,24 @@ impl TraceReader {
         self.payload = payload;
         match frame? {
             Frame::Block => {
-                decode_block(&self.payload, block)
-                    .with_context(|| format!("decoding block {}", self.blocks_read - 1))?;
+                decode_block(&self.payload, block).map_err(|e| {
+                    TraceError::corrupt(
+                        self.blocks_read - 1,
+                        format!("decoding block {}: {e}", self.blocks_read - 1),
+                    )
+                })?;
                 self.events_read += block.len() as u64;
                 Ok(true)
             }
             Frame::End { events, .. } => {
                 if events != self.events_read {
-                    bail!(
-                        "trace trailer mismatch: trailer says {events} events, stream held {}",
-                        self.events_read
-                    );
+                    return Err(TraceError::corrupt(
+                        self.blocks_read,
+                        format!(
+                            "trace trailer mismatch: trailer says {events} events, stream held {}",
+                            self.events_read
+                        ),
+                    ));
                 }
                 Ok(false)
             }
@@ -594,7 +740,7 @@ pub struct ReplaySource {
 
 impl ReplaySource {
     /// Open a trace file for replay.
-    pub fn open(path: &Path) -> Result<ReplaySource> {
+    pub fn open(path: &Path) -> Result<ReplaySource, TraceError> {
         Ok(ReplaySource { reader: TraceReader::open(path)? })
     }
 
@@ -605,7 +751,10 @@ impl ReplaySource {
 
     /// Stream every block into `sink` (finalizing it at end-of-trace) and
     /// report how much was replayed.
-    pub fn replay_into<S: BlockSink + ?Sized>(mut self, sink: &mut S) -> Result<ReplayStats> {
+    pub fn replay_into<S: BlockSink + ?Sized>(
+        mut self,
+        sink: &mut S,
+    ) -> Result<ReplayStats, TraceError> {
         let mut block = EventBlock::with_capacity();
         while self.reader.next_block(&mut block)? {
             sink.consume(&block);

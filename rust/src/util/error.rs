@@ -55,6 +55,21 @@ impl<E: std::error::Error> From<E> for Error {
 /// Crate-wide result alias (mirrors `anyhow::Result`).
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
+/// Extract the human-readable message from a caught panic payload (as
+/// returned by `std::panic::catch_unwind`): panics raised with a string
+/// literal or a formatted message yield that text, anything else a
+/// placeholder. Used by the typed-recovery paths that convert worker
+/// panics into errors instead of tearing the process down.
+pub fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "opaque panic payload"
+    }
+}
+
 /// Extension trait adding `.context(..)` / `.with_context(..)` to any
 /// result whose error converts into [`Error`].
 pub trait Context<T> {

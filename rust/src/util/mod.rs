@@ -5,6 +5,7 @@
 pub mod binio;
 pub mod cli;
 pub mod error;
+pub mod fault;
 pub mod json;
 pub mod matrix;
 pub mod rng;

@@ -1,0 +1,462 @@
+//! Chaos-hardening integration tests: deterministic fault injection
+//! (`util::fault`) driven through every layer it hooks — trace reads and
+//! writes, the pipelined decoder pool, the grid drivers, and the ledger
+//! store. The contracts under test: an empty plan changes nothing,
+//! transient faults below the retry budget are invisible, permanent
+//! faults quarantine exactly their own cells while the rest of the grid
+//! stays bit-identical, crashes leave recoverable files behind, and a
+//! killed ledgered run resumes by re-executing only the missing cells.
+//!
+//! The fault plan is process-global, so every test that installs one (or
+//! that measures a clean reference) serializes through [`chaos_lock`]
+//! and disarms via the panic-safe [`Armed`] guard.
+
+use std::process::Command;
+use std::sync::{Mutex, MutexGuard};
+
+use mlperf::coordinator::{record_characterize, replay_file, ExperimentConfig, Job, Scenario};
+use mlperf::coordinator::{run_jobs_ledgered, run_jobs_replayed};
+use mlperf::ledger::{GridResults, Ledger};
+use mlperf::util::fault::{self, FaultPlan, Site};
+
+mod common;
+
+fn tiny() -> ExperimentConfig {
+    common::tiny()
+}
+
+fn tmpfile(name: &str) -> std::path::PathBuf {
+    common::tmpfile("chaos", name)
+}
+
+fn bin() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_mlperf"));
+    // the spawned CLI must only see the chaos spec the test passes
+    c.env_remove("MLPERF_CHAOS");
+    c
+}
+
+/// Serialize tests that touch the process-global fault plan (or that
+/// need a fault-free reference run). `unwrap_or_else` recovers a lock
+/// poisoned by an earlier failing test so one failure does not cascade.
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arms the given chaos spec for one scope and disarms on drop — even
+/// when an assertion panics mid-test, the next test starts clean.
+struct Armed;
+
+impl Armed {
+    fn new(spec: &str) -> Armed {
+        let plan = FaultPlan::parse(spec).expect("chaos spec must parse");
+        fault::install(Some(plan));
+        Armed
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::install(None);
+    }
+}
+
+/// Two cells sharing one KMeans capture — the smallest replayable grid.
+fn kmeans_pair() -> Vec<Job> {
+    vec![
+        Job::new("KMeans", Scenario::Baseline),
+        Job::new("KMeans", Scenario::PerfectL2),
+    ]
+}
+
+#[test]
+fn chaos_specs_parse_and_roundtrip() {
+    let plan = FaultPlan::parse("seed=7; read-transient@2; stall%0.25=10").unwrap();
+    assert_eq!(plan.seed(), 7);
+    assert_eq!(plan.rule_count(), 2);
+    assert!(!plan.is_empty());
+    let rendered = plan.to_string();
+    let reparsed = FaultPlan::parse(&rendered).unwrap().to_string();
+    assert_eq!(reparsed, rendered, "Display must round-trip through parse");
+
+    assert!(FaultPlan::parse("").unwrap().is_empty());
+    let seeded = FaultPlan::parse("seed=3").unwrap();
+    assert!(seeded.is_empty(), "a seed alone schedules nothing");
+    assert!(FaultPlan::parse("flux-capacitor@1").is_err());
+    assert!(FaultPlan::parse("read-transient").is_err());
+    assert!(FaultPlan::parse("read-transient@0").is_err());
+    assert!(FaultPlan::parse("stall%1.5").is_err());
+    assert!(FaultPlan::parse("seed=x").is_err());
+}
+
+#[test]
+fn empty_plan_is_never_armed_and_changes_nothing() {
+    let _lock = chaos_lock();
+    let cfg = tiny();
+    let jobs = common::scenario_jobs();
+    fault::install(None);
+    let clean = run_jobs_replayed(&cfg, &jobs, 1);
+
+    // a rules-free plan (even a seeded one) must not arm the hooks
+    fault::install(Some(FaultPlan::parse("seed=42").unwrap()));
+    assert!(!fault::armed(), "empty plan must stay disarmed");
+    let under = run_jobs_replayed(&cfg, &jobs, 1);
+    fault::install(None);
+
+    assert!(clean.failed.is_empty());
+    assert!(under.failed.is_empty());
+    assert_eq!(clean.outputs.len(), jobs.len());
+    assert_eq!(under.outputs.len(), jobs.len());
+    for (a, b) in clean.outputs.iter().zip(&under.outputs) {
+        assert_eq!(a.job, b.job);
+        common::assert_metrics_eq(&a.metrics, &b.metrics, "empty plan perturbed the grid");
+        assert_eq!(a.quality, b.quality);
+    }
+}
+
+#[test]
+fn transient_read_faults_are_retried_to_identical_results() {
+    let _lock = chaos_lock();
+    let cfg = tiny();
+    let w = common::workload("KMeans");
+    let path = tmpfile("kmeans_transient.mlt");
+    record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
+    let (_, clean, _) = replay_file(&path, &cfg, |_| {}).unwrap();
+
+    let _armed = Armed::new("read-transient@2;read-short@1");
+    let (_, faulted, _) = replay_file(&path, &cfg, |_| {}).unwrap();
+    assert_eq!(fault::fires_at(Site::ReadTransient), 1);
+    assert_eq!(fault::fires_at(Site::ReadShort), 1);
+    common::assert_metrics_eq(&faulted, &clean, "retried replay diverged");
+}
+
+#[test]
+fn frame_bitflip_surfaces_a_corrupt_trace_error() {
+    let _lock = chaos_lock();
+    let cfg = tiny();
+    let w = common::workload("KNN");
+    let path = tmpfile("knn_bitflip.mlt");
+    record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
+
+    let _armed = Armed::new("frame-bitflip@1");
+    let err = replay_file(&path, &cfg, |_| {}).unwrap_err().to_string();
+    assert!(err.contains("checksum mismatch"), "{err}");
+}
+
+#[test]
+fn decoder_panic_becomes_a_typed_error_not_a_crash() {
+    let _lock = chaos_lock();
+    let mut cfg = tiny();
+    cfg.ingest_threads = 3; // force the pipelined ingest (decoder pool)
+    let w = common::workload("KMeans");
+    let path = tmpfile("kmeans_decode_panic.mlt");
+    record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
+
+    let _armed = Armed::new("decode-panic@1");
+    let err = replay_file(&path, &cfg, |_| {}).unwrap_err().to_string();
+    assert!(err.contains("decoder thread panicked"), "{err}");
+    assert!(err.contains("injected decoder panic"), "{err}");
+}
+
+#[test]
+fn decoder_stall_does_not_perturb_results() {
+    let _lock = chaos_lock();
+    let mut cfg = tiny();
+    cfg.ingest_threads = 3;
+    let w = common::workload("KMeans");
+    let path = tmpfile("kmeans_stall.mlt");
+    record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
+    let (_, clean, _) = replay_file(&path, &cfg, |_| {}).unwrap();
+
+    let _armed = Armed::new("stall@1=5");
+    let (_, stalled, _) = replay_file(&path, &cfg, |_| {}).unwrap();
+    assert_eq!(fault::fires_at(Site::Stall), 1);
+    common::assert_metrics_eq(&stalled, &clean, "stalled replay diverged");
+}
+
+#[test]
+fn torn_tail_write_fails_the_recording_and_reads_back_truncated() {
+    let _lock = chaos_lock();
+    let cfg = tiny();
+    let w = common::workload("KNN");
+    let path = tmpfile("knn_torn.mlt");
+    {
+        let _armed = Armed::new("torn-tail@1");
+        let res = record_characterize(w.as_ref(), &cfg, false, &path);
+        let err = res.map(|_| ()).unwrap_err();
+        assert!(err.to_string().contains("injected torn tail write"), "{err:?}");
+    }
+    // the half-written frame stays on disk; reading it back must be a
+    // clean truncation diagnosis, not a panic or a silent short trace
+    let err = replay_file(&path, &cfg, |_| {}).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "{err}");
+}
+
+#[test]
+fn capture_panic_quarantines_its_group_and_spares_the_rest() {
+    let _lock = chaos_lock();
+    let cfg = tiny();
+    // KMeans ×4 rides one capture; KNN and GMM run as direct cells
+    let jobs = common::scenario_jobs();
+    fault::install(None);
+    let clean = run_jobs_replayed(&cfg, &jobs, 1);
+    assert!(clean.failed.is_empty());
+
+    let _armed = Armed::new("capture-panic@1");
+    let report = run_jobs_replayed(&cfg, &jobs, 1);
+    assert_eq!(report.failed.len(), 4, "whole KMeans group quarantined");
+    for (k, f) in report.failed.iter().enumerate() {
+        assert_eq!(f.index, k, "failures sorted by grid position");
+        assert_eq!(f.job.workload, "KMeans");
+        assert_eq!(f.kind, "panic");
+        assert!(f.error.contains("capture failed"), "{}", f.error);
+        assert!(f.error.contains("injected capture panic"), "{}", f.error);
+        assert_eq!(f.retries, 0);
+    }
+    // degrade, don't die: the independent cells complete bit-identically
+    assert_eq!(report.outputs.len(), 2);
+    assert_eq!(report.workload_executions, 2, "only direct cells ran");
+    for out in &report.outputs {
+        let same = clean.outputs.iter().find(|o| o.job == out.job);
+        let reference = same.expect("healthy cell missing from clean run");
+        common::assert_metrics_eq(&out.metrics, &reference.metrics, "healthy cell drifted");
+        assert_eq!(out.quality, reference.quality);
+    }
+}
+
+#[test]
+fn cell_panic_quarantines_batch_and_direct_cells() {
+    let _lock = chaos_lock();
+    let cfg = tiny();
+    let jobs = common::scenario_jobs();
+    fault::install(None);
+    let clean = run_jobs_replayed(&cfg, &jobs, 1);
+
+    // occurrence 1 with one worker is the KMeans broadcast batch: the
+    // capture survives but its four replay cells are quarantined
+    {
+        let _armed = Armed::new("cell-panic@1");
+        let report = run_jobs_replayed(&cfg, &jobs, 1);
+        assert_eq!(report.failed.len(), 4);
+        for f in &report.failed {
+            assert_eq!(f.job.workload, "KMeans");
+            assert!(f.error.contains("replay failed"), "{}", f.error);
+        }
+        assert_eq!(report.outputs.len(), 2);
+        assert_eq!(report.workload_executions, 3, "capture + 2 direct");
+    }
+
+    // occurrence 2 is the first direct cell (KNN sw-prefetch): exactly
+    // one cell fails and every other cell matches the clean run
+    let _armed = Armed::new("cell-panic@2");
+    let report = run_jobs_replayed(&cfg, &jobs, 1);
+    assert_eq!(report.failed.len(), 1);
+    let f = &report.failed[0];
+    assert_eq!(f.index, 4);
+    assert_eq!(f.job.workload, "KNN");
+    assert_eq!(f.job.scenario, Scenario::SwPrefetch);
+    assert!(f.error.contains("injected cell panic"), "{}", f.error);
+    assert_eq!(report.outputs.len(), jobs.len() - 1);
+    for out in &report.outputs {
+        let same = clean.outputs.iter().find(|o| o.job == out.job);
+        let reference = same.expect("healthy cell missing from clean run");
+        common::assert_metrics_eq(&out.metrics, &reference.metrics, "healthy cell drifted");
+    }
+}
+
+#[test]
+fn strict_mode_fails_fast_on_the_first_failure() {
+    let _lock = chaos_lock();
+    let mut cfg = tiny();
+    cfg.strict = true;
+    let jobs = common::scenario_jobs();
+
+    let _armed = Armed::new("capture-panic@1");
+    let report = run_jobs_replayed(&cfg, &jobs, 1);
+    assert_eq!(report.failed.len(), 4, "failing group still reported");
+    assert!(report.outputs.is_empty(), "--strict must abort remaining cells");
+}
+
+#[test]
+fn transient_ledger_io_is_retried_below_budget() {
+    let _lock = chaos_lock();
+    let cfg = tiny();
+    let jobs = kmeans_pair();
+    let path = tmpfile("ledger_transient.mllg");
+    {
+        let _armed = Armed::new("ledger-io@1");
+        let mut ledger = Ledger::open(&path).unwrap();
+        let report = run_jobs_ledgered(&cfg, &jobs, 1, &mut ledger).unwrap();
+        assert!(report.failed.is_empty(), "transient I/O must not quarantine");
+        assert_eq!(report.outputs.len(), 2);
+        assert_eq!(fault::fires_at(Site::LedgerIo), 1, "fault never injected");
+    }
+    // both appends landed despite the injected EINTR
+    let ledger = Ledger::open(&path).unwrap();
+    assert_eq!(ledger.stats().records, 2);
+    assert_eq!(ledger.stats().recovered_tail_bytes, 0);
+}
+
+#[test]
+fn ledger_append_kill_leaves_a_recoverable_torn_frame() {
+    let _lock = chaos_lock();
+    let cfg = tiny();
+    let jobs = kmeans_pair();
+    let path = tmpfile("ledger_torn.mllg");
+    {
+        let _armed = Armed::new("ledger-append-kill@2");
+        let mut ledger = Ledger::open(&path).unwrap();
+        let err = run_jobs_ledgered(&cfg, &jobs, 1, &mut ledger).unwrap_err();
+        assert!(err.to_string().contains("injected crash mid-append"), "{err:?}");
+    }
+    // reopen: the torn second frame is truncated away, the first record
+    // survives, and a resume re-executes only the lost cell
+    let mut ledger = Ledger::open(&path).unwrap();
+    let stats = ledger.stats();
+    assert_eq!(stats.records, 1, "first append survives the crash");
+    assert!(stats.recovered_tail_bytes > 0, "torn frame undetected");
+
+    let report = run_jobs_ledgered(&cfg, &jobs, 1, &mut ledger).unwrap();
+    assert!(report.failed.is_empty());
+    assert_eq!(report.cached_cells, 1, "surviving record serves its cell");
+    assert_eq!(report.workload_executions, 1, "only the lost cell re-runs");
+    assert_eq!(report.outputs.len(), 2);
+    assert_eq!(ledger.stats().records, 2);
+}
+
+#[test]
+fn compaction_kill_is_crash_atomic() {
+    let _lock = chaos_lock();
+    let cfg = tiny();
+    let jobs = kmeans_pair();
+    let path = tmpfile("ledger_compact_kill.mllg");
+    fault::install(None);
+    let mut ledger = Ledger::open(&path).unwrap();
+    run_jobs_ledgered(&cfg, &jobs, 1, &mut ledger).unwrap();
+    // a superseding duplicate gives the compaction something to drop
+    let dup = ledger.records()[0].clone();
+    ledger.append(dup).unwrap();
+    assert_eq!(ledger.stats().records, 3);
+    assert_eq!(ledger.stats().unique, 2);
+
+    {
+        let _armed = Armed::new("ledger-compact-kill@1");
+        let err = ledger.compact().unwrap_err().to_string();
+        assert!(err.contains("injected crash"), "{err}");
+    }
+    drop(ledger);
+
+    // the kill hit between temp-file write and rename: the original
+    // ledger is byte-intact (all three records, no torn tail)
+    let mut ledger = Ledger::open(&path).unwrap();
+    let stats = ledger.stats();
+    assert_eq!(stats.records, 3, "original ledger must be untouched");
+    assert_eq!(stats.unique, 2);
+    assert_eq!(stats.recovered_tail_bytes, 0);
+
+    // a clean retry compacts, and zero cells are lost: a warm run
+    // still answers the whole grid from the ledger
+    let report = ledger.compact().unwrap();
+    assert_eq!(report.records_before, 3);
+    assert_eq!(report.records_after, 2);
+    let mut ledger = Ledger::open(&path).unwrap();
+    assert_eq!(ledger.stats().records, 2);
+    let warm = run_jobs_ledgered(&cfg, &jobs, 1, &mut ledger).unwrap();
+    assert_eq!(warm.cached_cells, 2, "compaction lost a cell");
+    assert_eq!(warm.workload_executions, 0);
+}
+
+/// `grid --sweep cache` against `path`: one KMeans execution prices all
+/// 40 geometries, each ledgered — the cheapest real CLI crash/resume.
+fn sweep_cmd(path: &std::path::Path) -> Command {
+    let mut c = bin();
+    c.args(["grid", "--sweep", "cache", "--workload", "KMeans"]);
+    c.args(["--scale", "0.02", "--iterations", "1"]);
+    c.args(["--threads", "1", "--ledger"]);
+    c.arg(path);
+    c
+}
+
+#[test]
+fn cli_grid_kill_and_resume_serves_completed_cells() {
+    let _lock = chaos_lock();
+    let path = tmpfile("sweep_kill.mllg");
+
+    // run 1: hard-killed (process abort) after the second ledger append
+    let killed = sweep_cmd(&path).args(["--chaos", "grid-kill@2"]).output().unwrap();
+    assert!(!killed.status.success(), "grid-kill must abort the run");
+    let survivors = Ledger::open(&path).unwrap().stats().records;
+    assert_eq!(survivors, 2, "exactly the pre-kill appends survive");
+
+    // run 2: resume — the killed run's cells come from the ledger and
+    // the workload re-executes once for the missing geometries
+    let resumed = sweep_cmd(&path).output().unwrap();
+    let stdout = String::from_utf8_lossy(&resumed.stdout);
+    assert!(resumed.status.success(), "resume failed: {stdout}");
+    assert!(stdout.contains("2 cached"), "survivors not cached: {stdout}");
+
+    // run 3: fully warmed — nothing executes, and the CLI certifies it
+    let third = sweep_cmd(&path).arg("--assert-cached").output().unwrap();
+    let stdout = String::from_utf8_lossy(&third.stdout);
+    assert!(third.status.success(), "warm sweep not all-cached: {stdout}");
+    assert!(stdout.contains("0 workload executions"), "{stdout}");
+}
+
+fn replay_out(trace: &std::path::Path) -> std::process::Output {
+    let mut c = bin();
+    c.args(["replay", "--trace"]).arg(trace);
+    c.output().unwrap()
+}
+
+#[test]
+fn cli_missing_and_empty_traces_fail_with_typed_errors() {
+    let missing = tmpfile("definitely-missing.mlt");
+    let out = replay_out(&missing);
+    assert_eq!(out.status.code(), Some(2), "missing trace must error out");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("error:"), "{stderr}");
+    assert!(stderr.contains("trace file not found"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+    assert!(!stderr.contains("RUST_BACKTRACE"), "{stderr}");
+
+    let empty = tmpfile("empty.mlt");
+    std::fs::write(&empty, b"").unwrap();
+    let out = replay_out(&empty);
+    assert_eq!(out.status.code(), Some(2), "empty trace must error out");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("empty trace file"), "{stderr}");
+    assert!(!stderr.contains("panicked"), "{stderr}");
+}
+
+#[test]
+fn cli_vacuous_gate_is_rejected_by_default() {
+    let baseline = tmpfile("empty_baseline.json");
+    let placeholder = GridResults::from_outputs(&tiny(), &[]);
+    placeholder.save(&baseline).unwrap();
+
+    let mut cmd = bin();
+    cmd.args(["report", "--baseline"]).arg(&baseline);
+    cmd.arg("--gate");
+    let out = cmd.output().unwrap();
+    assert_eq!(out.status.code(), Some(2), "vacuous gate must not pass");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("vacuous"), "{stderr}");
+
+    let mut cmd = bin();
+    cmd.args(["report", "--baseline"]).arg(&baseline);
+    cmd.args(["--gate", "--allow-vacuous"]);
+    let out = cmd.output().unwrap();
+    assert!(out.status.success(), "--allow-vacuous must accept the no-op");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("VACUOUS"), "still loudly flagged: {stderr}");
+}
+
+#[test]
+fn cli_rejects_malformed_chaos_specs() {
+    let out = bin().args(["list", "--chaos", "flux@1"]).output().unwrap();
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("chaos spec"), "{stderr}");
+    assert!(stderr.contains("unknown site"), "{stderr}");
+}
