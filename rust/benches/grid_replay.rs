@@ -28,7 +28,11 @@
 //! CI uploads both as artifacts and gates on `--assert-speedup` (fan-out
 //! grid must beat the grouped grid by the given factor) and
 //! `--assert-sweep-speedup` (single-pass sweep must beat per-geometry
-//! replay by the given factor).
+//! replay by the given factor). `--assert-telemetry-overhead <pct>` adds
+//! the telemetry spine's inertness gate: two telemetry-off grid batches
+//! must agree within `pct` percent of wall (the off path *is* the only
+//! cost an untelemetered run can pay), and an armed run must keep the
+//! parity checksum bit-identical.
 
 #[path = "common.rs"]
 mod common;
@@ -395,6 +399,7 @@ fn write_json(path: &str, cfg: &ExperimentConfig, grid: &GridResult, rows: &[Ing
     let field = |k: &str, v: Json| (k.to_string(), v);
     let doc = Json::Obj(vec![
         field("bench", Json::Str("replay_ingest".into())),
+        field("provenance", mlperf::obs::provenance_json()),
         field("scale", Json::num(cfg.scale)),
         field(
             "ingest_threads_auto",
@@ -444,6 +449,7 @@ fn write_sweep_json(path: &str, cfg: &ExperimentConfig, sweep: &SweepResult) {
     let field = |k: &str, v: Json| (k.to_string(), v);
     let doc = Json::Obj(vec![
         field("bench", Json::Str("cache_sweep".into())),
+        field("provenance", mlperf::obs::provenance_json()),
         field("scale", Json::num(cfg.scale)),
         field("workload", Json::Str(sweep.workload.into())),
         field("geometries", Json::num(sweep.geometries as f64)),
@@ -455,6 +461,68 @@ fn write_sweep_json(path: &str, cfg: &ExperimentConfig, sweep: &SweepResult) {
     std::fs::write(path, doc.render())
         .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
     println!("wrote {path}");
+}
+
+/// `--assert-telemetry-overhead <pct>`: prove the telemetry spine's
+/// off path is harness noise, not a tax. A single binary cannot diff
+/// itself against a telemetry-free build, but it can prove the two
+/// things that matter:
+///
+/// 1. **Off-mode wall reproducibility.** Two best-of-2 batches of the
+///    same fan-out grid — both running the disarmed probes, which is
+///    the entire cost an untelemetered user can ever pay — must agree
+///    within `pct` percent (differences under 50 ms pass regardless:
+///    below timer/scheduler noise on shared runners).
+/// 2. **Arming is observational.** A run with the collector installed
+///    must reproduce the off-mode parity checksum bit-identically.
+///
+/// The armed/off wall ratio is reported informationally (the armed
+/// path is allowed to cost; the off path is not).
+fn telemetry_overhead_gate(cfg: &ExperimentConfig, pct: f64, cores: usize) {
+    let scenarios = [Scenario::Baseline, Scenario::PerfectL2, Scenario::PerfectLlc];
+    let jobs: Vec<Job> = ["KMeans", "KNN"]
+        .iter()
+        .flat_map(|w| scenarios.iter().map(move |s| Job::new(*w, *s)))
+        .collect();
+    let run = || run_jobs_replayed(cfg, &jobs, 0);
+
+    assert!(!mlperf::util::telemetry::armed(), "telemetry unexpectedly armed in bench");
+    let best2 = |label: &str| {
+        let a = run();
+        let b = run();
+        assert_eq!(checksum(&a), checksum(&b), "{label}: nondeterministic grid");
+        (checksum(&a), a.wall_seconds.min(b.wall_seconds))
+    };
+    let (check_off, wall_a) = best2("telemetry-off batch A");
+    let (_, wall_b) = best2("telemetry-off batch B");
+    let drift_s = (wall_a - wall_b).abs();
+    let drift_pct = drift_s / wall_a.max(wall_b).max(1e-9) * 100.0;
+
+    // armed run: collector live, but nothing exported (the bench never
+    // calls obs::export_all) — results must not move either way
+    mlperf::util::telemetry::install(Some(std::env::temp_dir().join("mlperf-bench-telemetry")));
+    let armed_report = run();
+    mlperf::util::telemetry::install(None);
+    assert_eq!(check_off, checksum(&armed_report), "arming telemetry changed grid results");
+
+    println!(
+        "telemetry off-mode walls: {wall_a:.3}s / {wall_b:.3}s best-of-2 \
+         (drift {drift_pct:.2}%), armed wall {:.3}s ({:.2}x off)",
+        armed_report.wall_seconds,
+        armed_report.wall_seconds / wall_a.min(wall_b).max(1e-9)
+    );
+    if cores < 4 {
+        println!(
+            "telemetry overhead gate skipped on {cores} core(s) \
+             (drift {drift_pct:.2}%, cap {pct}%)"
+        );
+    } else {
+        assert!(
+            drift_pct <= pct || drift_s <= 0.05,
+            "off-mode wall drift {drift_pct:.2}% ({drift_s:.3}s) exceeds the {pct}% cap"
+        );
+        println!("telemetry overhead gate passed: {drift_pct:.2}% <= {pct}% (or < 50 ms)");
+    }
 }
 
 fn main() {
@@ -528,5 +596,11 @@ fn main() {
             );
             println!("sweep speedup gate passed: {:.2}x >= {min}x", sweep.speedup());
         }
+    }
+
+    if let Some(pct) = args.get("assert-telemetry-overhead") {
+        let pct: f64 =
+            pct.parse().expect("--assert-telemetry-overhead expects a percentage");
+        telemetry_overhead_gate(&cfg, pct, cores);
     }
 }

@@ -148,6 +148,8 @@ fn write_json(path: &str, elems: usize, modes: &[(&str, f64)], rows: &[WorkloadR
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str("  \"bench\": \"sim_throughput\",\n");
+    // host/toolchain provenance so blessed numbers stay attributable
+    s.push_str(&format!("  \"provenance\": {},\n", mlperf::obs::provenance_json().render()));
     s.push_str(&format!("  \"elements\": {elems},\n"));
     s.push_str("  \"events_per_sec\": {\n");
     for (i, (k, v)) in modes.iter().enumerate() {

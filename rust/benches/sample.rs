@@ -127,6 +127,7 @@ fn write_json(path: &str, cfg: &ExperimentConfig, sample: SampleConfig, cells: &
     let min_speedup = cells.iter().map(CellResult::speedup).fold(f64::INFINITY, f64::min);
     let doc = Json::Obj(vec![
         field("bench", Json::Str("sample".into())),
+        field("provenance", mlperf::obs::provenance_json()),
         field("scale", Json::num(cfg.scale)),
         field("sample", Json::Str(sample.to_string())),
         field("detailed_fraction", Json::num(sample.detailed_fraction())),

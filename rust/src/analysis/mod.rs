@@ -122,8 +122,24 @@ impl Table {
     /// the table already reached stdout.
     pub fn emit(&self) {
         println!("{}", self.render());
+        self.persist();
+    }
+
+    /// [`Table::emit`] with the rendered table on **stderr** instead of
+    /// stdout — for commands whose stdout carries a machine-readable
+    /// artifact (`mlperf grid --json -`) that must pipe clean through a
+    /// JSON parser. Artifacts persist exactly as with `emit`.
+    pub fn emit_stderr(&self) {
+        eprintln!("{}", self.render());
+        self.persist();
+    }
+
+    fn persist(&self) {
         if let Err(e) = self.save_artifacts(std::path::Path::new("results")) {
-            eprintln!("warning: table {:?} artifacts not persisted: {e:#}", self.id);
+            crate::util::diag::warn(format!(
+                "table {:?} artifacts not persisted: {e:#}",
+                self.id
+            ));
         }
     }
 }

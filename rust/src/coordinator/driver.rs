@@ -53,10 +53,12 @@ use super::{
     replay_characterize_many, replay_characterize_many_sampled, ExperimentConfig, RecordedRun,
 };
 use crate::ledger::{cell_fingerprint, Fingerprint, Ledger, LedgerRecord, Provenance};
+use crate::obs::progress;
 use crate::reorder::ReorderKind;
 use crate::sim::{CpuConfig, Metrics, SampleReport};
 use crate::util::error::{panic_message, Result};
 use crate::util::fault;
+use crate::util::telemetry::{self, Counter, Stage};
 use crate::workloads::{by_name, multicore_names, registry};
 
 /// One experiment scenario — the column dimension of the job grid.
@@ -231,6 +233,13 @@ pub struct FailedCell {
     /// Transient-I/O retries spent before the failure was declared
     /// permanent (0 when the failure was not retryable I/O).
     pub retries: u32,
+    /// Time-to-failure: wall-clock nanoseconds from when the cell (or
+    /// the capture/batch serving it) started executing until the
+    /// failure was declared permanent.
+    pub wall_nanos: u64,
+    /// Nanoseconds spent sleeping in retry backoff before giving up
+    /// (0 when no retryable I/O was involved).
+    pub backoff_nanos: u64,
 }
 
 /// What [`run_jobs`] / [`run_jobs_replayed`] hand back.
@@ -344,6 +353,8 @@ pub fn run_job(cfg: &ExperimentConfig, job: &Job) -> JobOutput {
 struct CellFailure {
     kind: &'static str,
     error: String,
+    /// Wall nanoseconds the cell burned before the failure surfaced.
+    wall_nanos: u64,
 }
 
 impl CellFailure {
@@ -355,6 +366,8 @@ impl CellFailure {
             kind: self.kind.into(),
             error: self.error,
             retries: 0,
+            wall_nanos: self.wall_nanos,
+            backoff_nanos: 0,
         }
     }
 }
@@ -365,13 +378,45 @@ impl CellFailure {
 /// decision (evaluated at claim time so the nth occurrence is
 /// deterministic under any thread count).
 fn run_cell(cfg: &ExperimentConfig, job: &Job, sabotage: bool) -> Result<JobOutput, CellFailure> {
+    let _sp = telemetry::span_labeled(Stage::CellRun, &job.workload);
+    let t0 = std::time::Instant::now();
     catch_unwind(AssertUnwindSafe(|| {
         if sabotage {
             panic!("injected cell panic: {} / {}", job.workload, job.scenario);
         }
         run_job(cfg, job)
     }))
-    .map_err(|p| CellFailure { kind: "panic", error: panic_message(p.as_ref()).to_string() })
+    .map_err(|p| CellFailure {
+        kind: "panic",
+        error: panic_message(p.as_ref()).to_string(),
+        wall_nanos: t0.elapsed().as_nanos() as u64,
+    })
+}
+
+/// Report one settled cell to the live progress line and, when a
+/// telemetry collector is installed, append its per-cell summary row.
+/// The fingerprint is only computed on the armed path — with telemetry
+/// off this costs two relaxed atomic loads and nothing else.
+fn note_cell(
+    cfg: &ExperimentConfig,
+    job: &Job,
+    status: &str,
+    wall_nanos: u64,
+    blocks: u64,
+    retries: u32,
+) {
+    progress::cell_done(status == "cached", status == "failed");
+    if telemetry::armed() {
+        telemetry::cell(telemetry::CellRow {
+            fingerprint: cell_fingerprint(cfg, job).to_string(),
+            workload: job.workload.clone(),
+            scenario: job.scenario.to_string(),
+            status: status.into(),
+            wall_nanos,
+            blocks,
+            retries,
+        });
+    }
 }
 
 /// Shared worker-pool skeleton of both driver modes (and the cache-sweep
@@ -427,9 +472,14 @@ pub fn run_jobs(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -> DriverR
             return;
         }
         let sabotage = fault::fired(fault::Site::CellPanic).is_some();
+        let t0 = std::time::Instant::now();
         match run_cell(cfg, &jobs[i], sabotage) {
-            Ok(out) => *slots[i].lock().unwrap() = Some(out),
+            Ok(out) => {
+                note_cell(cfg, &jobs[i], "run", t0.elapsed().as_nanos() as u64, 0, 0);
+                *slots[i].lock().unwrap() = Some(out);
+            }
             Err(f) => {
+                note_cell(cfg, &jobs[i], "failed", t0.elapsed().as_nanos() as u64, 0, 0);
                 failures.lock().unwrap().push(f.at(cfg, i, &jobs[i]));
                 if cfg.strict {
                     abort.store(true, Ordering::Relaxed);
@@ -534,6 +584,18 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
         /// process wedging on a `Condvar` that will never be notified.
         aborted: bool,
     }
+    /// Scheduler-lock acquisition with the wait charged to the
+    /// `sched_lock_nanos` contention counter; a plain `lock()` when
+    /// telemetry is off.
+    fn lock_sched(state: &Mutex<Sched>) -> std::sync::MutexGuard<'_, Sched> {
+        if !telemetry::armed() {
+            return state.lock().unwrap();
+        }
+        let t0 = std::time::Instant::now();
+        let guard = state.lock().unwrap();
+        telemetry::add(Counter::SchedLockNanos, t0.elapsed().as_nanos() as u64);
+        guard
+    }
     let state = Mutex::new(Sched {
         next_capture: 0,
         next_direct: 0,
@@ -572,7 +634,7 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
         for _ in 0..threads_used {
             scope.spawn(|| {
                 let mut guard = AbortOnPanic { state: &state, cv: &cv, armed: true };
-                let mut st = state.lock().unwrap();
+                let mut st = lock_sched(&state);
                 loop {
                     if st.aborted {
                         break;
@@ -610,6 +672,12 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                         // deterministic under any thread interleaving
                         let sabotage = fault::fired(fault::Site::CellPanic).is_some();
                         drop(st);
+                        telemetry::add(Counter::BatchWidthSum, batch.len() as u64);
+                        telemetry::maximize(Counter::BatchWidthMax, batch.len() as u64);
+                        telemetry::add(Counter::Batches, 1);
+                        let batch_span =
+                            telemetry::span_labeled(Stage::CellRun, &jobs[batch[0]].workload);
+                        let t_batch = std::time::Instant::now();
                         let scenarios: Vec<Scenario> =
                             batch.iter().map(|&i| jobs[i].scenario).collect();
                         // sampled replay swaps the estimator in per-cell;
@@ -639,10 +707,23 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                             };
                             out
                         }));
+                        drop(batch_span);
+                        // the batch pays one wall; amortize it per cell
+                        // so the per-cell rows stay order-of-magnitude
+                        // honest (same convention as ledger provenance)
+                        let cell_wall = t_batch.elapsed().as_nanos() as u64 / batch.len() as u64;
                         let mut batch_failed = false;
                         match cells {
                             Ok(cells) => {
                                 for (&i, (m, stat)) in batch.iter().zip(cells) {
+                                    note_cell(
+                                        cfg,
+                                        &jobs[i],
+                                        "run",
+                                        cell_wall,
+                                        rec.trace.blocks() as u64,
+                                        0,
+                                    );
                                     *slots[i].lock().unwrap() = Some(JobOutput {
                                         job: jobs[i].clone(),
                                         metrics: m,
@@ -659,6 +740,7 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                                 let msg = panic_message(p.as_ref());
                                 let mut fl = failures.lock().unwrap();
                                 for &i in &batch {
+                                    note_cell(cfg, &jobs[i], "failed", cell_wall, 0, 0);
                                     fl.push(FailedCell {
                                         index: i,
                                         job: jobs[i].clone(),
@@ -666,12 +748,14 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                                         kind: "panic".into(),
                                         error: format!("replay failed: {msg}"),
                                         retries: 0,
+                                        wall_nanos: cell_wall,
+                                        backoff_nanos: 0,
                                     });
                                 }
                             }
                         }
                         drop(rec);
-                        st = state.lock().unwrap();
+                        st = lock_sched(&state);
                         if batch_failed && cfg.strict {
                             st.aborted = true;
                             cv.notify_all();
@@ -699,6 +783,8 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                         let sabotage = fault::fired(fault::Site::CapturePanic).is_some();
                         drop(st);
                         let (name, sw_prefetch) = plan.captures[g].0;
+                        let cap_span = telemetry::span_labeled(Stage::Capture, name);
+                        let t_cap = std::time::Instant::now();
                         let captured = catch_unwind(AssertUnwindSafe(|| {
                             if sabotage {
                                 panic!("injected capture panic: {name}");
@@ -707,7 +793,9 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                                 .unwrap_or_else(|| panic!("driver: unknown workload {name:?}"));
                             Arc::new(capture_trace(w.as_ref(), cfg, sw_prefetch))
                         }));
-                        st = state.lock().unwrap();
+                        drop(cap_span);
+                        let cap_wall = t_cap.elapsed().as_nanos() as u64;
+                        st = lock_sched(&state);
                         match captured {
                             Ok(rec) => {
                                 executions.fetch_add(1, Ordering::Relaxed);
@@ -724,6 +812,9 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                                 let msg = panic_message(p.as_ref());
                                 let mut fl = failures.lock().unwrap();
                                 for &i in &plan.captures[g].1 {
+                                    // every cell of the group waited the
+                                    // full capture wall for its failure
+                                    note_cell(cfg, &jobs[i], "failed", cap_wall, 0, 0);
                                     fl.push(FailedCell {
                                         index: i,
                                         job: jobs[i].clone(),
@@ -731,6 +822,8 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                                         kind: "panic".into(),
                                         error: format!("capture failed: {msg}"),
                                         retries: 0,
+                                        wall_nanos: cap_wall,
+                                        backoff_nanos: 0,
                                     });
                                 }
                                 drop(fl);
@@ -751,16 +844,22 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                         st.next_direct += 1;
                         let sabotage = fault::fired(fault::Site::CellPanic).is_some();
                         drop(st);
+                        let t_cell = std::time::Instant::now();
                         let result = run_cell(cfg, &jobs[i], sabotage);
+                        let cell_wall = t_cell.elapsed().as_nanos() as u64;
                         let cell_failed = result.is_err();
                         match result {
                             Ok(out) => {
+                                note_cell(cfg, &jobs[i], "run", cell_wall, 0, 0);
                                 executions.fetch_add(1, Ordering::Relaxed);
                                 *slots[i].lock().unwrap() = Some(out);
                             }
-                            Err(f) => failures.lock().unwrap().push(f.at(cfg, i, &jobs[i])),
+                            Err(f) => {
+                                note_cell(cfg, &jobs[i], "failed", cell_wall, 0, 0);
+                                failures.lock().unwrap().push(f.at(cfg, i, &jobs[i]));
+                            }
                         }
-                        st = state.lock().unwrap();
+                        st = lock_sched(&state);
                         if cell_failed && cfg.strict {
                             st.aborted = true;
                             cv.notify_all();
@@ -776,7 +875,16 @@ pub fn run_jobs_replayed(cfg: &ExperimentConfig, jobs: &[Job], threads: usize) -
                     }
                     // captures pending behind the residency cap, or
                     // in-flight work that will enqueue more cells
-                    st = cv.wait(st).unwrap();
+                    if telemetry::armed() {
+                        let t_wait = std::time::Instant::now();
+                        st = cv.wait(st).unwrap();
+                        telemetry::add(
+                            Counter::QueueWaitNanos,
+                            t_wait.elapsed().as_nanos() as u64,
+                        );
+                    } else {
+                        st = cv.wait(st).unwrap();
+                    }
                 }
                 drop(st);
                 guard.armed = false;
@@ -820,6 +928,7 @@ pub fn run_jobs_replayed_grouped(
             let (name, sw_prefetch) = *key;
             // the whole group shares one panic boundary: a capture or
             // replay panic quarantines every cell the recording serves
+            let t_group = std::time::Instant::now();
             let group = catch_unwind(AssertUnwindSafe(|| {
                 let w =
                     by_name(name).unwrap_or_else(|| panic!("driver: unknown workload {name:?}"));
@@ -862,6 +971,8 @@ pub fn run_jobs_replayed_grouped(
                         kind: "panic".into(),
                         error: format!("capture group failed: {msg}"),
                         retries: 0,
+                        wall_nanos: t_group.elapsed().as_nanos() as u64,
+                        backoff_nanos: 0,
                     });
                 }
             }
@@ -909,6 +1020,26 @@ pub fn run_jobs_ledgered(
     for (i, job) in jobs.iter().enumerate() {
         match ledger.get(fps[i]) {
             Some(rec) => {
+                // the cell is settled without touching a workload or
+                // simulator: count the hit where it becomes a cached
+                // output (Counter::LedgerHit == cached_cells by
+                // construction) and reuse the already-computed
+                // fingerprint for the per-cell telemetry row
+                telemetry::add(Counter::LedgerHit, 1);
+                progress::cell_done(true, false);
+                if telemetry::armed() {
+                    telemetry::cell(telemetry::CellRow {
+                        fingerprint: fps[i].to_string(),
+                        workload: job.workload.clone(),
+                        scenario: job.scenario.to_string(),
+                        status: "cached".into(),
+                        // the wall the original (recorded) run paid, not
+                        // this run's lookup time
+                        wall_nanos: rec.provenance.wall_nanos,
+                        blocks: 0,
+                        retries: 0,
+                    });
+                }
                 outputs[i] = Some(JobOutput {
                     job: job.clone(),
                     metrics: rec.metrics.clone(),

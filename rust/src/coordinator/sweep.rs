@@ -28,6 +28,7 @@ use crate::ledger::{sweep_cell_fingerprint, Fingerprint, Ledger, LedgerRecord, P
 use crate::sim::{Metrics, StackProfiler, SweepCurve, SweepGeometry};
 use crate::trace::{InstructionMix, Recorder};
 use crate::util::error::Result;
+use crate::util::telemetry::{self, Stage};
 use crate::workloads::by_name;
 
 /// One (workload × geometry) point of the sweep grid.
@@ -124,6 +125,9 @@ pub fn run_cache_sweep(
     } else {
         fan_out(need_run.len(), threads, |u| {
             let name = &workloads[need_run[u]];
+            // one span per executed workload: the single profiler pass
+            // prices every geometry, so there is no per-geometry wall
+            let _sp = telemetry::span_labeled(Stage::SweepCell, name);
             let w = by_name(name)
                 .unwrap_or_else(|| panic!("sweep: unknown workload {name:?}"));
             let w = w.as_ref();

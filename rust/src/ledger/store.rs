@@ -34,6 +34,7 @@ use crate::util::binio::{fnv1a64, get_uvarint, put_uvarint};
 use crate::util::error::{Context, Result};
 use crate::util::fault;
 use crate::util::json::Json;
+use crate::util::telemetry::{self, Counter, Stage};
 use crate::{anyhow, bail};
 
 const MAGIC: &[u8; 4] = b"MLLG";
@@ -400,6 +401,7 @@ impl Ledger {
     /// survives; a wrong magic/version is a hard error (not silently
     /// clobbered: the file is not ours to rewrite).
     pub fn open(path: &Path) -> Result<Ledger> {
+        let _sp = telemetry::span(Stage::LedgerOpen);
         let mut file = OpenOptions::new()
             .read(true)
             .write(true)
@@ -517,6 +519,7 @@ impl Ledger {
     /// lost. With [`Ledger::set_durable`] the frame is `fsync`ed before
     /// the append is reported complete.
     pub fn append(&mut self, rec: LedgerRecord) -> Result<()> {
+        let _sp = telemetry::span(Stage::LedgerAppend);
         let frame = frame_bytes(&rec);
 
         // fault site `ledger-append-kill`: simulate a crash mid-append —
@@ -560,7 +563,10 @@ impl Ledger {
                     );
                     if transient && attempt < MAX_IO_RETRIES {
                         attempt += 1;
-                        std::thread::sleep(retry_backoff(attempt));
+                        let backoff = retry_backoff(attempt);
+                        telemetry::add(Counter::LedgerRetry, 1);
+                        telemetry::add(Counter::BackoffNanos, backoff.as_nanos() as u64);
+                        std::thread::sleep(backoff);
                         continue;
                     }
                     return Err(e).with_context(|| {
@@ -611,6 +617,7 @@ impl Ledger {
     /// directory is fsynced after the rename — at every instant the
     /// path names either the complete old file or the complete new one.
     pub fn compact(&mut self) -> Result<CompactionReport> {
+        let _sp = telemetry::span(Stage::LedgerCompact);
         let before = self.stats();
         let keep: std::collections::BTreeSet<usize> = self.index.values().copied().collect();
         let survivors: Vec<LedgerRecord> = self

@@ -30,6 +30,10 @@
 //!   numeric kernels (`artifacts/*.hlo.txt`) and runs them from Rust;
 //!   stubbed out unless built with `--features pjrt` (needs `xla`
 //!   bindings the offline image lacks).
+//! - [`obs`] — observability: exporters for the zero-cost-when-off
+//!   telemetry spine ([`util::telemetry`]) — Chrome-trace timelines,
+//!   the `mlperf-telemetry/v1` summary, host provenance — plus the
+//!   live grid progress line.
 //!
 //! See `rust/examples/quickstart.rs` for the five-minute tour, DESIGN.md
 //! (repo root) for the substitution table and pipeline architecture.
@@ -38,6 +42,7 @@ pub mod analysis;
 pub mod coordinator;
 pub mod data;
 pub mod ledger;
+pub mod obs;
 pub mod runtime;
 pub mod reorder;
 pub mod workloads;

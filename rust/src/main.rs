@@ -22,8 +22,10 @@
 
 use mlperf::analysis::{pct, r2, r3, Table};
 use mlperf::ledger::{diff, GridResults, Ledger, DEFAULT_TOLERANCE};
+use mlperf::obs::progress;
 use mlperf::sim::{default_sweep, Metrics, SampleConfig};
 use mlperf::util::Json;
+use mlperf::util::diag;
 use mlperf::util::error::Result;
 use mlperf::{anyhow, bail};
 use mlperf::coordinator::*;
@@ -110,17 +112,50 @@ fn install_chaos(args: &Args) -> Result<()> {
         mlperf::util::fault::install(None);
         return Ok(());
     }
-    eprintln!(
+    diag::note(format!(
         "chaos: fault injection ARMED ({} rule(s), seed {}) — {plan}",
         plan.rule_count(),
         plan.seed()
-    );
+    ));
     mlperf::util::fault::install(Some(plan));
     Ok(())
 }
 
+/// Install the telemetry collector (`--telemetry [<dir>]`, falling back
+/// to `MLPERF_TELEMETRY`; the flag wins, and the bare switch defaults
+/// the output directory to `results/`). Nothing installed means every
+/// instrumentation site stays on its relaxed-atomic-load fast path —
+/// and telemetry never enters experiment configs or fingerprints, so
+/// arming it cannot change any result.
+fn install_telemetry(args: &Args) {
+    let dir = match args.get("telemetry") {
+        Some(d) => Some(d.to_string()),
+        None if args.has("telemetry") => Some("results".to_string()),
+        None => std::env::var("MLPERF_TELEMETRY").ok().filter(|s| !s.trim().is_empty()),
+    };
+    let Some(dir) = dir else { return };
+    mlperf::util::telemetry::install(Some(std::path::PathBuf::from(dir)));
+}
+
 fn dispatch(args: &Args) -> Result<()> {
     install_chaos(args)?;
+    install_telemetry(args);
+    let result = run_command(args);
+    // export even when the command failed — a failing run's timeline is
+    // exactly the one worth looking at
+    match mlperf::obs::export_all() {
+        Ok(Some((summary, trace))) => diag::note(format!(
+            "telemetry: wrote {} and {}",
+            summary.display(),
+            trace.display()
+        )),
+        Ok(None) => {}
+        Err(e) => diag::warn(format!("telemetry artifacts not persisted: {e:#}")),
+    }
+    result
+}
+
+fn run_command(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("list") => cmd_list(),
         Some("characterize") => cmd_characterize(args),
@@ -168,6 +203,12 @@ chaos flags:  --chaos <spec> (or MLPERF_CHAOS) — deterministic fault injection
               --chaos 'seed=7;read-transient@2' or 'frame-bitflip%0.01;decode-panic@1';
               sites: read-transient read-short frame-bitflip torn-tail decode-panic stall
               capture-panic cell-panic ledger-io ledger-append-kill ledger-compact-kill grid-kill
+telemetry:    --telemetry [<dir>] (or MLPERF_TELEMETRY=<dir>) — scoped spans + counters on every
+              stage; writes <dir>/telemetry.json (mlperf-telemetry/v1 summary) and
+              <dir>/telemetry_trace.json (Chrome trace-event JSON, load in Perfetto / about:tracing);
+              dir defaults to results/. Provably inert: results and fingerprints are unchanged.
+              grid also shows a live progress line on a TTY (cells done/cached/failed + ETA)
+              and `--json -` streams the results artifact to stdout (tables move to stderr)
 ledger usage: mlperf ledger stats|gc|export --ledger <file.mllg> [--out <file.json>]";
 
 fn cmd_list() -> Result<()> {
@@ -583,10 +624,10 @@ fn cmd_grid(args: &Args) -> Result<()> {
     // streams workloads straight into the profiler) — nothing is decoded
     // from disk, so silently accepting the ingest knob would be a lie
     if args.get("ingest-threads").is_some() {
-        eprintln!(
-            "warning: --ingest-threads has no effect on `mlperf grid` — grid replay broadcasts \
+        diag::warn(
+            "--ingest-threads has no effect on `mlperf grid` — grid replay broadcasts \
              in-memory captures and decodes nothing from disk; the knob staged-ingests file \
-             traces (`mlperf replay --trace`)"
+             traces (`mlperf replay --trace`)",
         );
     }
     if let Some(kind) = args.get("sweep") {
@@ -596,16 +637,21 @@ fn cmd_grid(args: &Args) -> Result<()> {
     let threads: usize = args.get_parsed_or("threads", 0usize);
     let direct = args.has("direct");
     if direct && cfg.sample.is_some() {
-        eprintln!(
-            "warning: --sample has no effect on `mlperf grid --direct` — direct cells re-execute \
+        diag::warn(
+            "--sample has no effect on `mlperf grid --direct` — direct cells re-execute \
              the workload through the full simulator; dropping the sampling request so the \
-             results artifact does not claim estimates it did not make"
+             results artifact does not claim estimates it did not make",
         );
         cfg.sample = None;
     }
+    // `--json -` streams the results artifact to stdout, so every
+    // human-facing line (status, tables, progress) moves to stderr and
+    // `mlperf grid --json - | python3 -m json.tool` just works
+    let json_out = args.get("json");
+    let json_to_stdout = json_out == Some("-");
     let ledger_path = args.get("ledger");
     let jobs = if args.has("full") { full_grid(&cfg) } else { standard_grid(&cfg) };
-    println!(
+    diag::note(format!(
         "running {} jobs at scale {} in {} mode …",
         jobs.len(),
         cfg.scale,
@@ -614,13 +660,14 @@ fn cmd_grid(args: &Args) -> Result<()> {
             (None, true) => "direct",
             (None, false) => "record-once/replay-many",
         }
-    );
+    ));
+    progress::start(jobs.len());
     let report = match ledger_path {
         Some(lp) => {
             if direct {
-                eprintln!(
-                    "warning: --direct is ignored with --ledger (misses run in replay mode); \
-                     drop --ledger to force per-cell re-execution"
+                diag::warn(
+                    "--direct is ignored with --ledger (misses run in replay mode); \
+                     drop --ledger to force per-cell re-execution",
                 );
             }
             let mut ledger = Ledger::open(std::path::Path::new(lp))?;
@@ -630,6 +677,7 @@ fn cmd_grid(args: &Args) -> Result<()> {
         None if direct => run_jobs(&cfg, &jobs, threads),
         None => run_jobs_replayed(&cfg, &jobs, threads),
     };
+    progress::finish();
     let sampled = cfg.sample.is_some();
     let mut headers = vec!["workload", "scenario", "CPI"];
     if sampled {
@@ -676,31 +724,35 @@ fn cmd_grid(args: &Args) -> Result<()> {
         ]);
         t.row(cells);
     }
-    t.emit();
+    if json_to_stdout {
+        t.emit_stderr();
+    } else {
+        t.emit();
+    }
 
     // quarantine report: human-readable lines plus the machine-readable
     // `results/failures.json` artifact (written even when empty, so CI
     // can assert the exact quarantined set of a chaos run)
     for f in &report.failed {
-        eprintln!(
+        diag::note(format!(
             "quarantined: {} / {} [{}] {} (fingerprint {})",
             f.job.workload, f.job.scenario, f.kind, f.error, f.fingerprint
-        );
+        ));
     }
     let failures_path = std::path::Path::new("results").join("failures.json");
     match std::fs::create_dir_all("results")
         .and_then(|()| std::fs::write(&failures_path, failures_json(&report.failed)))
     {
         Ok(()) if report.failed.is_empty() => {}
-        Ok(()) => println!(
+        Ok(()) => diag::note(format!(
             "wrote {} failed cell(s) to {}",
             report.failed.len(),
             failures_path.display()
-        ),
-        Err(e) => eprintln!(
-            "warning: failures not persisted to {}: {e}",
+        )),
+        Err(e) => diag::warn(format!(
+            "failures not persisted to {}: {e}",
             failures_path.display()
-        ),
+        )),
     }
     if cfg.strict && !report.failed.is_empty() {
         let f = &report.failed[0];
@@ -714,9 +766,13 @@ fn cmd_grid(args: &Args) -> Result<()> {
     }
 
     let current = GridResults::from_outputs(&cfg, &report.outputs);
-    if let Some(jp) = args.get("json") {
-        current.save(std::path::Path::new(jp))?;
-        println!("wrote grid results JSON to {jp}");
+    if let Some(jp) = json_out {
+        if json_to_stdout {
+            println!("{}", current.to_json());
+        } else {
+            current.save(std::path::Path::new(jp))?;
+            diag::note(format!("wrote grid results JSON to {jp}"));
+        }
     }
     if args.has("assert-cached") && report.workload_executions > 0 {
         bail!(
@@ -764,11 +820,13 @@ fn cmd_grid_sweep(args: &Args, kind: &str) -> Result<()> {
             .collect(),
     };
     let geometries = default_sweep();
-    println!(
+    let json_out = args.get("json");
+    let json_to_stdout = json_out == Some("-");
+    diag::note(format!(
         "sweeping {} workload(s) × {} cache geometries (one trace pass per workload) …",
         workloads.len(),
         geometries.len()
-    );
+    ));
     let mut ledger = match args.get("ledger") {
         Some(lp) => Some(Ledger::open(std::path::Path::new(lp))?),
         None => None,
@@ -797,10 +855,19 @@ fn cmd_grid_sweep(args: &Args, kind: &str) -> Result<()> {
             if c.cached { "yes" } else { "no" }.into(),
         ]);
     }
-    t.emit();
-    if let Some(jp) = args.get("json") {
-        std::fs::write(jp, sweep_json(&cfg, &report)).map_err(|e| anyhow!("writing {jp}: {e}"))?;
-        println!("wrote cache sweep JSON to {jp}");
+    if json_to_stdout {
+        t.emit_stderr();
+    } else {
+        t.emit();
+    }
+    if let Some(jp) = json_out {
+        if json_to_stdout {
+            println!("{}", sweep_json(&cfg, &report));
+        } else {
+            std::fs::write(jp, sweep_json(&cfg, &report))
+                .map_err(|e| anyhow!("writing {jp}: {e}"))?;
+            diag::note(format!("wrote cache sweep JSON to {jp}"));
+        }
     }
     if args.has("assert-cached") && report.workload_executions > 0 {
         bail!(
@@ -851,9 +918,11 @@ fn sweep_json(cfg: &ExperimentConfig, report: &SweepReport) -> String {
     .render()
 }
 
-/// The `mlperf-failures/v1` artifact: one record per quarantined grid
+/// The `mlperf-failures/v2` artifact: one record per quarantined grid
 /// cell, keyed the same way as the results JSON so the two can be
-/// joined (a cell appears in exactly one of them).
+/// joined (a cell appears in exactly one of them). v2 adds per-failure
+/// timing telemetry: `wall_nanos` (time-to-failure) and `backoff_nanos`
+/// (retry sleep spent before giving up).
 fn failures_json(failed: &[FailedCell]) -> String {
     let cells: Vec<Json> = failed
         .iter()
@@ -865,11 +934,13 @@ fn failures_json(failed: &[FailedCell]) -> String {
                 ("kind".to_string(), Json::Str(f.kind.clone())),
                 ("error".to_string(), Json::Str(f.error.clone())),
                 ("retries".to_string(), Json::num(f.retries as f64)),
+                ("wall_nanos".to_string(), Json::num(f.wall_nanos as f64)),
+                ("backoff_nanos".to_string(), Json::num(f.backoff_nanos as f64)),
             ])
         })
         .collect();
     Json::Obj(vec![
-        ("schema".to_string(), Json::Str("mlperf-failures/v1".to_string())),
+        ("schema".to_string(), Json::Str("mlperf-failures/v2".to_string())),
         ("failed".to_string(), Json::num(failed.len() as f64)),
         ("cells".to_string(), Json::Arr(cells)),
     ])

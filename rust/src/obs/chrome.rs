@@ -1,0 +1,177 @@
+//! Chrome trace-event exporter: renders a
+//! [`Snapshot`](crate::util::telemetry::Snapshot) as the JSON Array
+//! Format understood by Perfetto and `chrome://tracing`.
+//!
+//! Each telemetry lane becomes one timeline row (`tid`), named via an
+//! `"M"` (metadata) `thread_name` event. Every recorded span becomes a
+//! balanced `"B"`/`"E"` pair. Correct nesting is *not* reconstructed
+//! from timestamps — independent clock reads can tie or jitter by
+//! nanoseconds — but from the collector's shared open/close sequence
+//! ([`SpanRec::open_seq`](crate::util::telemetry::SpanRec::open_seq)):
+//! sorting a lane's B/E events by sequence reproduces the exact stack
+//! discipline the RAII guards enforced, so every `E` closes the
+//! innermost open `B` by construction. Timestamps are then repaired to
+//! be non-decreasing along each lane's event stream (clamping the odd
+//! nanosecond of cross-clock jitter), which guarantees non-negative
+//! durations. The trace-event format does not require globally sorted
+//! events, so lanes are emitted one after another.
+//!
+//! Timestamps are microseconds (fractional), the unit the trace-event
+//! spec mandates.
+
+use crate::util::json::Json;
+use crate::util::telemetry::Snapshot;
+
+/// The `pid` all events share: one process, many lanes.
+const PID: f64 = 1.0;
+
+fn event(ph: &str, name: &str, cat: &str, ts_ns: u64, tid: u32) -> Json {
+    Json::Obj(vec![
+        ("name".to_string(), Json::Str(name.to_string())),
+        ("cat".to_string(), Json::Str(cat.to_string())),
+        ("ph".to_string(), Json::Str(ph.to_string())),
+        ("ts".to_string(), Json::num(ts_ns as f64 / 1000.0)),
+        ("pid".to_string(), Json::num(PID)),
+        ("tid".to_string(), Json::num(tid as f64)),
+    ])
+}
+
+/// Build the trace-event JSON document (`{"traceEvents": [...]}`).
+pub fn chrome_trace(snap: &Snapshot) -> Json {
+    let mut events: Vec<Json> = Vec::with_capacity(snap.lanes.len() + 2 * snap.spans.len());
+
+    // one metadata event per lane names its timeline row
+    for (i, name) in snap.lanes.iter().enumerate() {
+        events.push(Json::Obj(vec![
+            ("name".to_string(), Json::Str("thread_name".to_string())),
+            ("ph".to_string(), Json::Str("M".to_string())),
+            ("pid".to_string(), Json::num(PID)),
+            ("tid".to_string(), Json::num(i as f64)),
+            ("args".to_string(), Json::Obj(vec![("name".to_string(), Json::Str(name.clone()))])),
+        ]));
+    }
+
+    // per lane: (seq, is_end, span index), sorted by the shared sequence
+    let lane_count = snap.lanes.len().max(
+        snap.spans.iter().map(|s| s.lane as usize + 1).max().unwrap_or(0),
+    );
+    let mut per_lane: Vec<Vec<(u64, bool, usize)>> = vec![Vec::new(); lane_count];
+    for (i, s) in snap.spans.iter().enumerate() {
+        per_lane[s.lane as usize].push((s.open_seq, false, i));
+        per_lane[s.lane as usize].push((s.close_seq, true, i));
+    }
+    for lane_events in &mut per_lane {
+        lane_events.sort_unstable_by_key(|&(seq, _, _)| seq);
+        let mut last_ts = 0u64;
+        for &(_, is_end, i) in lane_events.iter() {
+            let s = &snap.spans[i];
+            let name = if s.label.is_empty() { s.stage.name() } else { s.label.as_str() };
+            let raw_ts =
+                if is_end { s.start_ns.saturating_add(s.dur_ns) } else { s.start_ns };
+            let ts = raw_ts.max(last_ts);
+            last_ts = ts;
+            events.push(event(if is_end { "E" } else { "B" }, name, s.stage.name(), ts, s.lane));
+        }
+    }
+
+    Json::Obj(vec![
+        ("traceEvents".to_string(), Json::Arr(events)),
+        ("displayTimeUnit".to_string(), Json::Str("ms".to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::telemetry::{SpanRec, Stage};
+    use std::path::PathBuf;
+
+    fn snap_with(spans: Vec<SpanRec>, lanes: Vec<String>) -> Snapshot {
+        Snapshot {
+            wall_nanos: 1_000_000,
+            out_dir: PathBuf::from("results"),
+            lanes,
+            spans,
+            counters: Vec::new(),
+            stages: Vec::new(),
+            cells: Vec::new(),
+        }
+    }
+
+    fn sp(
+        lane: u32,
+        stage: Stage,
+        start_ns: u64,
+        dur_ns: u64,
+        open_seq: u64,
+        close_seq: u64,
+    ) -> SpanRec {
+        SpanRec { lane, stage, label: String::new(), start_ns, dur_ns, open_seq, close_seq }
+    }
+
+    /// Walk the rendered events and assert per-lane stack discipline:
+    /// every E closes the most recent open B on its lane, nothing is
+    /// left open, timestamps never run backwards along a lane, and no
+    /// duration is negative.
+    #[test]
+    fn events_form_balanced_nested_stacks() {
+        // completion (drop) order with a shared seq counter; includes a
+        // zero-width span at the outer span's end timestamp and an
+        // inner span whose measured end jitters 2 ns past its parent's
+        let spans = vec![
+            sp(0, Stage::Decode, 100, 200, 1, 2),   // nested, closed first
+            sp(0, Stage::Decode, 400, 602, 3, 4),   // sibling, end jitters past outer
+            sp(1, Stage::IoRead, 50, 500, 5, 6),    // other lane overlaps freely
+            sp(0, Stage::CellRun, 0, 1000, 0, 7),   // outer
+            sp(0, Stage::Consume, 1000, 0, 8, 9),   // zero-width after outer
+        ];
+        let doc = chrome_trace(&snap_with(spans, vec!["worker".into(), "io".into()]));
+        let events = match doc.get("traceEvents") {
+            Some(Json::Arr(a)) => a,
+            _ => panic!("traceEvents array"),
+        };
+        let mut stacks: std::collections::BTreeMap<u64, Vec<String>> = Default::default();
+        let mut last_ts: std::collections::BTreeMap<u64, f64> = Default::default();
+        let mut b = 0;
+        let mut e = 0;
+        for ev in events {
+            let ph = ev.get("ph").and_then(Json::as_str).unwrap();
+            if ph == "M" {
+                continue;
+            }
+            let ts = ev.get("ts").and_then(Json::as_f64).unwrap();
+            let tid = ev.get("tid").and_then(Json::as_f64).unwrap() as u64;
+            let prev = last_ts.entry(tid).or_insert(f64::MIN);
+            assert!(ts >= *prev, "lane {tid}: timestamps must be non-decreasing");
+            *prev = ts;
+            let name = ev.get("name").and_then(Json::as_str).unwrap().to_string();
+            let stack = stacks.entry(tid).or_default();
+            match ph {
+                "B" => {
+                    stack.push(name);
+                    b += 1;
+                }
+                "E" => {
+                    let open = stack.pop().expect("E with no open B");
+                    assert_eq!(open, name, "E must close the innermost B");
+                    e += 1;
+                }
+                other => panic!("unexpected phase {other}"),
+            }
+        }
+        assert_eq!(b, 5);
+        assert_eq!(e, 5, "every B has an E");
+        assert!(stacks.values().all(Vec::is_empty), "no span left open");
+    }
+
+    #[test]
+    fn lane_metadata_and_units() {
+        let doc =
+            chrome_trace(&snap_with(vec![sp(0, Stage::IoRead, 1500, 500, 0, 1)], vec!["io".into()]));
+        let rendered = doc.render();
+        assert!(rendered.contains("\"thread_name\""));
+        assert!(rendered.contains("\"io\""));
+        // 1500 ns -> 1.5 µs
+        assert!(rendered.contains("\"ts\":1.5"), "{rendered}");
+    }
+}

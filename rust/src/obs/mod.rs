@@ -1,0 +1,63 @@
+//! Observability exporters and live progress for the telemetry spine.
+//!
+//! [`crate::util::telemetry`] collects; this module renders. Three
+//! consumers, all driven from one [`telemetry::Snapshot`]:
+//!
+//! - [`chrome`] — Chrome trace-event JSON (`telemetry_trace.json`),
+//!   loadable in Perfetto or `chrome://tracing`: one lane per thread,
+//!   spans nested, balanced B/E pairs.
+//! - [`summary`] — the `mlperf-telemetry/v1` summary
+//!   (`telemetry.json`): per-stage totals, counters, per-cell rows,
+//!   host provenance, and chaos fault-fire counts when armed.
+//! - [`progress`] — a TTY-gated live progress line for `grid` plus a
+//!   final one-line summary on stderr (always printed), independent of
+//!   whether `--telemetry` is set.
+//!
+//! The shared [`provenance_json`] block (core count, rustc, git rev)
+//! is also embedded by every `BENCH_*.json` emitter so blessed numbers
+//! are attributable to the machine and toolchain that produced them.
+
+pub mod chrome;
+pub mod progress;
+pub mod summary;
+
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::telemetry;
+use std::path::PathBuf;
+
+/// Host/toolchain provenance block: who produced this artifact.
+/// `rustc` and `git_rev` come from `build.rs` probes at compile time
+/// and degrade to `"unknown"` when the probe tool is unavailable.
+pub fn provenance_json() -> Json {
+    let cores = std::thread::available_parallelism().map_or(0, |n| n.get());
+    Json::Obj(vec![
+        ("crate_version".to_string(), Json::Str(env!("CARGO_PKG_VERSION").to_string())),
+        ("rustc".to_string(), Json::Str(env!("MLPERF_RUSTC_VERSION").to_string())),
+        ("git_rev".to_string(), Json::Str(env!("MLPERF_GIT_REV").to_string())),
+        ("cores".to_string(), Json::num(cores as f64)),
+        (
+            "host".to_string(),
+            Json::Str(format!("{}-{}", std::env::consts::OS, std::env::consts::ARCH)),
+        ),
+    ])
+}
+
+/// Snapshot the installed collector and write both artifacts into its
+/// output directory: `telemetry.json` (summary) and
+/// `telemetry_trace.json` (Chrome trace). Returns the two paths, or
+/// `None` when telemetry is off.
+pub fn export_all() -> Result<Option<(PathBuf, PathBuf)>> {
+    let Some(snap) = telemetry::snapshot() else {
+        return Ok(None);
+    };
+    std::fs::create_dir_all(&snap.out_dir)
+        .with_context(|| format!("creating {}", snap.out_dir.display()))?;
+    let summary_path = snap.out_dir.join("telemetry.json");
+    std::fs::write(&summary_path, summary::summary_json(&snap).render())
+        .with_context(|| format!("writing {}", summary_path.display()))?;
+    let trace_path = snap.out_dir.join("telemetry_trace.json");
+    std::fs::write(&trace_path, chrome::chrome_trace(&snap).render())
+        .with_context(|| format!("writing {}", trace_path.display()))?;
+    Ok(Some((summary_path, trace_path)))
+}

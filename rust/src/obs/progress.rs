@@ -1,0 +1,134 @@
+//! Live grid progress: a `\r`-rewritten status line on stderr while a
+//! grid runs on a TTY, and a final one-line summary that is always
+//! printed (TTY or not), so even a redirected CI log records how the
+//! run went.
+//!
+//! Progress is independent of `--telemetry`: it is pure presentation,
+//! costs one relaxed atomic load per completed cell when inactive, and
+//! writes only to **stderr** — stdout stays reserved for
+//! machine-readable tables and JSON (see [`crate::util::diag`]).
+//!
+//! The ETA extrapolates from completed-cell walls: `elapsed / done *
+//! remaining`. Cached cells complete in microseconds, so a mostly
+//! cached rerun converges to a near-zero ETA immediately — exactly the
+//! behaviour a ledgered grid should show.
+
+use std::io::IsTerminal;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+static ACTIVE: AtomicBool = AtomicBool::new(false);
+static TTY: AtomicBool = AtomicBool::new(false);
+static TOTAL: AtomicU64 = AtomicU64::new(0);
+static DONE: AtomicU64 = AtomicU64::new(0);
+static CACHED: AtomicU64 = AtomicU64::new(0);
+static FAILED: AtomicU64 = AtomicU64::new(0);
+static STARTED: Mutex<Option<Instant>> = Mutex::new(None);
+
+/// Begin tracking a grid of `total` cells. Called by the `grid`
+/// command only — library callers (benches, tests) never activate
+/// progress, so their stderr stays quiet.
+pub fn start(total: usize) {
+    TOTAL.store(total as u64, Ordering::Relaxed);
+    DONE.store(0, Ordering::Relaxed);
+    CACHED.store(0, Ordering::Relaxed);
+    FAILED.store(0, Ordering::Relaxed);
+    *STARTED.lock().unwrap_or_else(|e| e.into_inner()) = Some(Instant::now());
+    TTY.store(std::io::stderr().is_terminal(), Ordering::Relaxed);
+    ACTIVE.store(true, Ordering::SeqCst);
+}
+
+/// Record one completed cell. Inactive path: one relaxed load.
+#[inline]
+pub fn cell_done(cached: bool, failed: bool) {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return;
+    }
+    cell_done_slow(cached, failed);
+}
+
+#[cold]
+fn cell_done_slow(cached: bool, failed: bool) {
+    let done = DONE.fetch_add(1, Ordering::Relaxed) + 1;
+    if cached {
+        CACHED.fetch_add(1, Ordering::Relaxed);
+    }
+    if failed {
+        FAILED.fetch_add(1, Ordering::Relaxed);
+    }
+    if TTY.load(Ordering::Relaxed) {
+        redraw(done);
+    }
+}
+
+fn elapsed_secs() -> f64 {
+    STARTED
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .map_or(0.0, |t| t.elapsed().as_secs_f64())
+}
+
+fn redraw(done: u64) {
+    let total = TOTAL.load(Ordering::Relaxed);
+    let cached = CACHED.load(Ordering::Relaxed);
+    let failed = FAILED.load(Ordering::Relaxed);
+    let elapsed = elapsed_secs();
+    let eta = if done > 0 && total > done {
+        elapsed / done as f64 * (total - done) as f64
+    } else {
+        0.0
+    };
+    // \x1b[K clears to end of line so a shrinking line leaves no tail
+    eprint!(
+        "\r[grid] {done}/{total} cells \u{b7} {cached} cached \u{b7} {failed} failed \u{b7} ETA {eta:.0}s\x1b[K"
+    );
+}
+
+/// Stop tracking and print the always-on one-line summary to stderr.
+/// A no-op unless [`start`] activated progress.
+pub fn finish() {
+    if !ACTIVE.swap(false, Ordering::SeqCst) {
+        return;
+    }
+    let done = DONE.load(Ordering::Relaxed);
+    let total = TOTAL.load(Ordering::Relaxed);
+    let cached = CACHED.load(Ordering::Relaxed);
+    let failed = FAILED.load(Ordering::Relaxed);
+    let elapsed = elapsed_secs();
+    if TTY.load(Ordering::Relaxed) {
+        eprint!("\r\x1b[K"); // clear the live line before the summary
+    }
+    eprintln!(
+        "[grid] {done}/{total} cells in {elapsed:.1}s \u{b7} {cached} cached \u{b7} {failed} failed"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Single combined test: the globals are process-wide, so one test
+    /// owns the activate/count/finish cycle.
+    #[test]
+    fn lifecycle_counts() {
+        // inactive: a no-op, no counters move
+        cell_done(true, false);
+        assert_eq!(DONE.load(Ordering::Relaxed), 0);
+
+        start(4);
+        cell_done(false, false);
+        cell_done(true, false);
+        cell_done(false, true);
+        assert_eq!(DONE.load(Ordering::Relaxed), 3);
+        assert_eq!(CACHED.load(Ordering::Relaxed), 1);
+        assert_eq!(FAILED.load(Ordering::Relaxed), 1);
+        finish();
+        assert!(!ACTIVE.load(Ordering::Relaxed));
+        // after finish, counting stops again
+        cell_done(false, false);
+        assert_eq!(DONE.load(Ordering::Relaxed), 3);
+        // double-finish is harmless
+        finish();
+    }
+}

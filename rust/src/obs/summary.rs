@@ -1,0 +1,127 @@
+//! `mlperf-telemetry/v1` summary exporter: the machine-readable
+//! companion to the Chrome trace, written to `telemetry.json`.
+//!
+//! One document answers "where did the run's wall clock go, and what
+//! happened to each cell" from artifacts alone:
+//!
+//! - `stages` — per-stage total nanoseconds and span counts (the
+//!   [`STAGES`](crate::util::telemetry::STAGES) taxonomy). Totals are
+//!   summed across threads, so on an `N`-worker grid they reconcile
+//!   with `wall_nanos` scaled by the active thread count.
+//! - `counters` — every named counter, including the deterministic
+//!   ones (`blocks_decoded`, `ledger_hit`) that `tests/telemetry.rs`
+//!   cross-checks against simulator ground truth.
+//! - `cells` — per-cell rows: fingerprint, wall, blocks,
+//!   cached/run/failed status, retries.
+//! - `provenance` — host/toolchain attribution ([`provenance_json`]).
+//! - `faults` — chaos fault-injection fire counts per site (empty
+//!   object when chaos is unarmed), so a chaos run's telemetry records
+//!   what was injected alongside what it cost.
+
+use crate::obs::provenance_json;
+use crate::util::fault;
+use crate::util::json::Json;
+use crate::util::telemetry::Snapshot;
+
+/// Schema identifier of the summary document.
+pub const SCHEMA: &str = "mlperf-telemetry/v1";
+
+/// Build the summary document for one snapshot.
+pub fn summary_json(snap: &Snapshot) -> Json {
+    let stages = snap
+        .stages
+        .iter()
+        .map(|&(name, nanos, count)| {
+            Json::Obj(vec![
+                ("stage".to_string(), Json::Str(name.to_string())),
+                ("total_nanos".to_string(), Json::num(nanos as f64)),
+                ("count".to_string(), Json::num(count as f64)),
+            ])
+        })
+        .collect();
+
+    let counters =
+        snap.counters.iter().map(|&(n, v)| (n.to_string(), Json::num(v as f64))).collect();
+
+    let cells = snap
+        .cells
+        .iter()
+        .map(|c| {
+            Json::Obj(vec![
+                ("fingerprint".to_string(), Json::Str(c.fingerprint.clone())),
+                ("workload".to_string(), Json::Str(c.workload.clone())),
+                ("scenario".to_string(), Json::Str(c.scenario.clone())),
+                ("status".to_string(), Json::Str(c.status.clone())),
+                ("wall_nanos".to_string(), Json::num(c.wall_nanos as f64)),
+                ("blocks".to_string(), Json::num(c.blocks as f64)),
+                ("retries".to_string(), Json::num(c.retries as f64)),
+            ])
+        })
+        .collect();
+
+    // chaos integration: record which injected faults actually fired
+    let faults: Vec<(String, Json)> = fault::SITES
+        .iter()
+        .filter_map(|&(site, name)| {
+            let fires = fault::fires_at(site);
+            (fires > 0).then(|| (name.to_string(), Json::num(fires as f64)))
+        })
+        .collect();
+
+    Json::Obj(vec![
+        ("schema".to_string(), Json::Str(SCHEMA.to_string())),
+        ("wall_nanos".to_string(), Json::num(snap.wall_nanos as f64)),
+        ("provenance".to_string(), provenance_json()),
+        ("stages".to_string(), Json::Arr(stages)),
+        ("counters".to_string(), Json::Obj(counters)),
+        ("cells".to_string(), Json::Arr(cells)),
+        ("faults".to_string(), Json::Obj(faults)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::telemetry::CellRow;
+    use std::path::PathBuf;
+
+    #[test]
+    fn summary_shape_and_roundtrip() {
+        let snap = Snapshot {
+            wall_nanos: 123,
+            out_dir: PathBuf::from("results"),
+            lanes: vec!["main".into()],
+            spans: Vec::new(),
+            counters: vec![("blocks_decoded", 7)],
+            stages: vec![("decode", 55, 7)],
+            cells: vec![CellRow {
+                fingerprint: "v1:00000000000000aa".into(),
+                workload: "KMeans".into(),
+                scenario: "baseline".into(),
+                status: "run".into(),
+                wall_nanos: 99,
+                blocks: 7,
+                retries: 0,
+            }],
+        };
+        let doc = summary_json(&snap);
+        let parsed = Json::parse(&doc.render()).expect("self-parse");
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some(SCHEMA));
+        assert_eq!(parsed.get("wall_nanos").and_then(Json::as_f64), Some(123.0));
+        let counters = parsed.get("counters").expect("counters");
+        assert_eq!(counters.get("blocks_decoded").and_then(Json::as_f64), Some(7.0));
+        let stages = parsed.get("stages").and_then(Json::as_arr).expect("stages");
+        assert_eq!(stages[0].get("stage").and_then(Json::as_str), Some("decode"));
+        assert_eq!(stages[0].get("total_nanos").and_then(Json::as_f64), Some(55.0));
+        let cells = parsed.get("cells").and_then(Json::as_arr).expect("cells");
+        assert_eq!(cells[0].get("status").and_then(Json::as_str), Some("run"));
+        assert_eq!(cells[0].get("blocks").and_then(Json::as_f64), Some(7.0));
+        // provenance is always attributable, even if only as "unknown"
+        let prov = parsed.get("provenance").expect("provenance");
+        assert!(prov.get("rustc").and_then(Json::as_str).is_some());
+        assert!(prov.get("git_rev").and_then(Json::as_str).is_some());
+        assert!(prov.get("cores").and_then(Json::as_f64).is_some());
+        // chaos unarmed in this test: faults object present and empty
+        assert!(matches!(parsed.get("faults"), Some(Json::Obj(v)) if v.is_empty()));
+    }
+}

@@ -40,6 +40,7 @@ use super::cpu::{Metrics, PipelineSim, TimelineSnapshot};
 use super::dram::DramStats;
 use crate::trace::{BlockSink, EventBlock};
 use crate::util::stats::{sample_stddev, t95};
+use crate::util::telemetry;
 use std::fmt;
 
 /// Sampling schedule: out of every `period` event blocks, the first
@@ -165,6 +166,9 @@ pub struct SampledSim<C: CacheModel = Cache> {
     /// replaced before the first warmed block on any nonempty stream.
     warm_rate: f64,
     report: Option<SampleReport>,
+    /// Telemetry span covering the open detailed window (inactive when
+    /// telemetry is off — purely observational, never touches state).
+    window_span: telemetry::Span,
 }
 
 impl SampledSim<Cache> {
@@ -186,6 +190,7 @@ impl<C: CacheModel> SampledSim<C> {
             windows: Vec::new(),
             warm_rate: 0.3,
             report: None,
+            window_span: telemetry::Span::inactive(),
         }
     }
 
@@ -211,6 +216,8 @@ impl<C: CacheModel> SampledSim<C> {
     }
 
     fn close_window(&mut self) {
+        // dropping the span records the window's wall time
+        self.window_span = telemetry::Span::inactive();
         let open = self.window_open.take().expect("no open window to close");
         let now = self.sim.timeline();
         let instructions = now.instructions - open.instructions;
@@ -389,6 +396,7 @@ impl<C: CacheModel> BlockSink for SampledSim<C> {
         if pos < self.cfg.detail {
             if self.window_open.is_none() {
                 self.window_open = Some(self.sim.timeline());
+                self.window_span = telemetry::span(telemetry::Stage::Window);
             }
             self.sim.consume(block);
             self.blocks_detailed += 1;

@@ -45,6 +45,7 @@ use super::error::TraceError;
 use super::store::{decode_block, Frame, ReplayStats, TraceMeta, TraceReader};
 use crate::util::error::panic_message;
 use crate::util::fault;
+use crate::util::telemetry::{self, Counter, Stage};
 use std::collections::BTreeMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
@@ -70,7 +71,16 @@ impl BlockPool {
 
     /// An empty block, recycled if one is pooled.
     pub fn get_block(&self) -> EventBlock {
-        self.blocks.lock().unwrap().pop().unwrap_or_else(EventBlock::with_capacity)
+        match self.blocks.lock().unwrap().pop() {
+            Some(b) => {
+                telemetry::add(Counter::PoolHit, 1);
+                b
+            }
+            None => {
+                telemetry::add(Counter::PoolMiss, 1);
+                EventBlock::with_capacity()
+            }
+        }
     }
 
     /// Return a block for reuse; it is cleared here so every `get_block`
@@ -195,22 +205,29 @@ impl PipelinedIngest {
             let delivered_r = &delivered;
             let io_reader = &mut reader;
             scope.spawn(move || {
+                telemetry::lane("io");
                 let mut seq = 0u64;
                 loop {
                     if failed_r.load(Ordering::Relaxed) {
                         break;
                     }
                     let mut buf = pool_r.get_buf();
-                    match io_reader.next_frame_into(&mut buf) {
+                    let read = telemetry::span(Stage::IoRead);
+                    let frame = io_reader.next_frame_into(&mut buf);
+                    drop(read);
+                    match frame {
                         Ok(Frame::Block) => {
                             // hold at the reorder window (rare: only a
                             // stalled decoder or a consumer far behind
                             // opens this gap); sleep, don't spin — a
                             // block takes ~ms downstream
-                            while delivered_r.load(Ordering::Relaxed) + window <= seq
-                                && !failed_r.load(Ordering::Relaxed)
-                            {
-                                std::thread::sleep(std::time::Duration::from_micros(100));
+                            if delivered_r.load(Ordering::Relaxed) + window <= seq {
+                                let _bp = telemetry::span(Stage::Backpressure);
+                                while delivered_r.load(Ordering::Relaxed) + window <= seq
+                                    && !failed_r.load(Ordering::Relaxed)
+                                {
+                                    std::thread::sleep(std::time::Duration::from_micros(100));
+                                }
                             }
                             // send fails only when the pipeline is being
                             // torn down after a failure
@@ -236,61 +253,70 @@ impl PipelinedIngest {
             });
 
             // --- stage 2: decoder pool — payload bytes → EventBlocks ---
-            for _ in 0..decoders {
+            for d in 0..decoders {
                 let out_tx = out_tx.clone();
                 let (work_rx, pool_r, fail_r, failed_r) = (&work_rx, &pool, &fail, &failed);
-                scope.spawn(move || loop {
-                    // holding the lock across the blocking recv is fine:
-                    // a parked holder only blocks peers that would also
-                    // have nothing to do
-                    let item = work_rx.lock().unwrap().recv();
-                    let Ok((seq, buf)) = item else { break };
-                    if failed_r.load(Ordering::Relaxed) {
-                        pool_r.put_buf(buf);
-                        continue; // drain so the I/O thread never wedges
-                    }
-                    let mut block = pool_r.get_block();
-                    if let Some(ms) = fault::fired(fault::Site::Stall) {
-                        // slow-stage straggler: the reorder window must
-                        // absorb it without changing delivery order
-                        std::thread::sleep(std::time::Duration::from_millis(ms));
-                    }
-                    // a panicking decoder is converted to a typed error
-                    // here rather than unwinding through the scope and
-                    // tearing down the whole process
-                    let decoded = catch_unwind(AssertUnwindSafe(|| {
-                        if fault::fired(fault::Site::DecodePanic).is_some() {
-                            panic!("injected decoder panic at block {seq}");
-                        }
-                        decode_block(&buf, &mut block)
-                    }));
-                    match decoded {
-                        Ok(Ok(())) => {
+                scope.spawn(move || {
+                    telemetry::lane_with(|| format!("decode-{d}"));
+                    loop {
+                        // holding the lock across the blocking recv is
+                        // fine: a parked holder only blocks peers that
+                        // would also have nothing to do
+                        let item = work_rx.lock().unwrap().recv();
+                        let Ok((seq, buf)) = item else { break };
+                        if failed_r.load(Ordering::Relaxed) {
                             pool_r.put_buf(buf);
-                            if out_tx.send((seq, block)).is_err() {
-                                break;
+                            continue; // drain so the I/O thread never wedges
+                        }
+                        let mut block = pool_r.get_block();
+                        if let Some(ms) = fault::fired(fault::Site::Stall) {
+                            // slow-stage straggler: the reorder window
+                            // must absorb it without changing delivery
+                            // order
+                            std::thread::sleep(std::time::Duration::from_millis(ms));
+                        }
+                        // a panicking decoder is converted to a typed
+                        // error here rather than unwinding through the
+                        // scope and tearing down the whole process
+                        let dec_span = telemetry::span(Stage::Decode);
+                        let decoded = catch_unwind(AssertUnwindSafe(|| {
+                            if fault::fired(fault::Site::DecodePanic).is_some() {
+                                panic!("injected decoder panic at block {seq}");
                             }
-                        }
-                        Ok(Err(e)) => {
-                            pool_r.put_buf(buf);
-                            pool_r.put_block(block);
-                            set_fail(
-                                fail_r,
-                                failed_r,
-                                TraceError::corrupt(seq, format!("decoding block {seq}: {e}")),
-                            );
-                        }
-                        Err(payload) => {
-                            pool_r.put_buf(buf);
-                            pool_r.put_block(block);
-                            set_fail(
-                                fail_r,
-                                failed_r,
-                                TraceError::worker_panic(format!(
-                                    "decoder thread panicked at block {seq}: {}",
-                                    panic_message(payload.as_ref())
-                                )),
-                            );
+                            decode_block(&buf, &mut block)
+                        }));
+                        drop(dec_span);
+                        match decoded {
+                            Ok(Ok(())) => {
+                                pool_r.put_buf(buf);
+                                if out_tx.send((seq, block)).is_err() {
+                                    break;
+                                }
+                            }
+                            Ok(Err(e)) => {
+                                pool_r.put_buf(buf);
+                                pool_r.put_block(block);
+                                set_fail(
+                                    fail_r,
+                                    failed_r,
+                                    TraceError::corrupt(
+                                        seq,
+                                        format!("decoding block {seq}: {e}"),
+                                    ),
+                                );
+                            }
+                            Err(payload) => {
+                                pool_r.put_buf(buf);
+                                pool_r.put_block(block);
+                                set_fail(
+                                    fail_r,
+                                    failed_r,
+                                    TraceError::worker_panic(format!(
+                                        "decoder thread panicked at block {seq}: {}",
+                                        panic_message(payload.as_ref())
+                                    )),
+                                );
+                            }
                         }
                     }
                 });
@@ -336,7 +362,10 @@ impl PipelinedIngest {
             while let Ok((seq, block)) = out_rx.recv() {
                 pending.insert(seq, block);
                 while let Some(block) = pending.remove(&next_seq) {
+                    let consume = telemetry::span(Stage::Consume);
                     sink.consume(&block);
+                    drop(consume);
+                    telemetry::add(Counter::BlocksDecoded, 1);
                     events += block.len() as u64;
                     blocks += 1;
                     next_seq += 1;

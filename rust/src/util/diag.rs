@@ -1,0 +1,38 @@
+//! Diagnostics discipline: every warning, notice, and status line goes
+//! through here, and everything here writes to **stderr**.
+//!
+//! The CLI's stdout is a machine-readable surface — result tables,
+//! `--json -` grid output, gate verdicts — and CI byte-compares it
+//! (`cmp` in the chaos job, `python3 -m json.tool` in the telemetry
+//! job). A stray `println!` warning interleaved with that stream is a
+//! parser-breaking bug, so call sites use [`warn`]/[`note`] instead of
+//! choosing a stream ad hoc. `tests/telemetry.rs` smokes the contract:
+//! `grid --json -` must pipe clean through a JSON parser.
+
+use std::fmt::Display;
+
+/// A warning: something the user should act on (inert flag, vacuous
+/// gate, quarantined cells). Prefixed `warning:`, written to stderr.
+pub fn warn(msg: impl Display) {
+    eprintln!("warning: {msg}");
+}
+
+/// A status notice: progress/context a human wants but a parser must
+/// never see ("running 64 jobs...", "wrote results to ..."). Written
+/// to stderr, unprefixed.
+pub fn note(msg: impl Display) {
+    eprintln!("{msg}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accepts_display_types() {
+        // compile-shape test: &str, String, and format_args all work
+        warn("plain");
+        note(format!("formatted {}", 42));
+        note(std::path::Path::new("/tmp/x").display());
+    }
+}

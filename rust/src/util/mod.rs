@@ -4,12 +4,14 @@
 
 pub mod binio;
 pub mod cli;
+pub mod diag;
 pub mod error;
 pub mod fault;
 pub mod json;
 pub mod matrix;
 pub mod rng;
 pub mod stats;
+pub mod telemetry;
 
 pub use cli::Args;
 pub use error::{Context, Error, Result};

@@ -1,0 +1,637 @@
+//! Zero-cost-when-off telemetry: scoped spans, named counters, and
+//! per-cell rows for the replay stack.
+//!
+//! The harness characterizes workloads but was itself a black box: a
+//! grid run emitted final metrics with no account of where its wall
+//! clock went (decode vs simulate vs reorder-buffer waits vs ledger
+//! I/O). This module is the process-global spine that fixes that,
+//! built on the same arming discipline as [`crate::util::fault`]:
+//!
+//! - **Off by default, off means off.** Nothing is recorded unless
+//!   [`install`] was called with an output directory (the CLI's
+//!   `--telemetry [<dir>]` / `MLPERF_TELEMETRY`). Every probe —
+//!   [`span`], [`add`], [`cell`] — short-circuits on a single relaxed
+//!   atomic load and allocates nothing. The off path is therefore
+//!   provably inert: it cannot perturb metrics, fingerprints, or the
+//!   byte-exact grid results JSON (`tests/telemetry.rs` gates all
+//!   three, and the `grid_replay` bench gates the off-mode overhead).
+//! - **Spans are RAII.** [`span`] returns a guard that records
+//!   `(lane, stage, start, duration)` on drop. Guards live on the
+//!   stack, so per-thread span streams are properly nested by
+//!   construction — which is what lets the Chrome-trace exporter
+//!   ([`crate::obs::chrome`]) emit balanced B/E event pairs.
+//! - **Counters are fixed-slot atomics.** Like `fault::Site`, the
+//!   [`Counter`] set is a closed enum with a name table ([`COUNTERS`])
+//!   backed by one `AtomicU64` per slot: bumping is lock-free and
+//!   allocation-free even when armed.
+//! - **Determinism.** Telemetry is observational only. Counters that
+//!   mirror simulation structure (blocks decoded, ledger hits) are
+//!   seed-deterministic; timing values naturally vary run to run, but
+//!   nothing here feeds back into simulation or fingerprints.
+//!
+//! Exporters live in [`crate::obs`]; this module only collects.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Span taxonomy: one variant per instrumented stage of the stack.
+/// The closed set keeps per-stage totals in fixed atomic slots (no
+/// hashing, no allocation on the hot path) and gives the exporters a
+/// stable vocabulary (see the DESIGN.md span taxonomy table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Pipelined ingest I/O thread: one frame read from disk.
+    IoRead,
+    /// Pipelined ingest I/O thread: blocked on the reorder window
+    /// (decoders/consumer behind; only recorded when a wait happened).
+    Backpressure,
+    /// Decoder pool: one columnar block decode.
+    Decode,
+    /// Ingest consumer: one in-order `sink.consume` delivery.
+    Consume,
+    /// Driver: one workload execution captured as a replayable trace.
+    Capture,
+    /// Driver: one replay unit — a broadcast batch or a direct cell.
+    CellRun,
+    /// Ledger: open (including torn-tail scan/recovery).
+    LedgerOpen,
+    /// Ledger: one record append (including any I/O retries).
+    LedgerAppend,
+    /// Ledger: one compaction (rewrite + rename + reopen).
+    LedgerCompact,
+    /// Sampled simulation: one detailed window, open to close.
+    Window,
+    /// Cache-geometry sweep: one workload's single-pass stack profile.
+    SweepCell,
+}
+
+/// Name table for [`Stage`] (exporter vocabulary), index-aligned with
+/// the per-stage atomic slots.
+pub const STAGES: &[(Stage, &str)] = &[
+    (Stage::IoRead, "io-read"),
+    (Stage::Backpressure, "backpressure"),
+    (Stage::Decode, "decode"),
+    (Stage::Consume, "consume"),
+    (Stage::Capture, "capture"),
+    (Stage::CellRun, "cell-run"),
+    (Stage::LedgerOpen, "ledger-open"),
+    (Stage::LedgerAppend, "ledger-append"),
+    (Stage::LedgerCompact, "ledger-compact"),
+    (Stage::Window, "sample-window"),
+    (Stage::SweepCell, "sweep-cell"),
+];
+
+const STAGE_COUNT: usize = 11;
+
+impl Stage {
+    /// Stable exporter name (see [`STAGES`]).
+    pub fn name(self) -> &'static str {
+        STAGES[self as usize].1
+    }
+}
+
+/// Named counters: fixed slots, relaxed atomic bumps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Counter {
+    /// Blocks delivered in order to the sink by pipelined ingest.
+    /// Deterministic: equals the trace's block count on success.
+    BlocksDecoded,
+    /// `BlockPool::get_block` served from the pool.
+    PoolHit,
+    /// `BlockPool::get_block` fell through to a fresh allocation.
+    PoolMiss,
+    /// Total nanoseconds replay workers spent waiting for a runnable
+    /// unit (scheduler queue-wait, aggregated across workers).
+    QueueWaitNanos,
+    /// Total nanoseconds spent acquiring the scheduler lock
+    /// (contention indicator, aggregated across workers).
+    SchedLockNanos,
+    /// Sum of broadcast batch widths (cells per shared replay pass).
+    BatchWidthSum,
+    /// Widest broadcast batch observed.
+    BatchWidthMax,
+    /// Number of broadcast batch replays.
+    Batches,
+    /// Ledgered grid cells satisfied from the ledger without running.
+    /// Deterministic: equals `DriverReport::cached_cells`.
+    LedgerHit,
+    /// Ledger append I/O retries (transient error, will back off).
+    LedgerRetry,
+    /// Total nanoseconds slept in ledger append backoff.
+    BackoffNanos,
+    /// Spans discarded because the buffer hit its cap (`MAX_SPANS`);
+    /// per-stage totals still include them.
+    SpansDropped,
+}
+
+/// Name table for [`Counter`], index-aligned with the atomic slots.
+pub const COUNTERS: &[(Counter, &str)] = &[
+    (Counter::BlocksDecoded, "blocks_decoded"),
+    (Counter::PoolHit, "pool_hit"),
+    (Counter::PoolMiss, "pool_miss"),
+    (Counter::QueueWaitNanos, "queue_wait_nanos"),
+    (Counter::SchedLockNanos, "sched_lock_nanos"),
+    (Counter::BatchWidthSum, "batch_width_sum"),
+    (Counter::BatchWidthMax, "batch_width_max"),
+    (Counter::Batches, "batches"),
+    (Counter::LedgerHit, "ledger_hit"),
+    (Counter::LedgerRetry, "ledger_retry"),
+    (Counter::BackoffNanos, "backoff_nanos"),
+    (Counter::SpansDropped, "spans_dropped"),
+];
+
+const COUNTER_COUNT: usize = 12;
+
+impl Counter {
+    /// Stable exporter name (see [`COUNTERS`]).
+    pub fn name(self) -> &'static str {
+        COUNTERS[self as usize].1
+    }
+}
+
+/// One closed span, as recorded for the Chrome-trace exporter.
+#[derive(Debug, Clone)]
+pub struct SpanRec {
+    /// Timeline lane (one per participating thread; see [`lane`]).
+    pub lane: u32,
+    /// Which stage of the stack this span covers.
+    pub stage: Stage,
+    /// Free-form label (workload name, batch description); empty means
+    /// the exporter falls back to the stage name.
+    pub label: String,
+    /// Start, nanoseconds since [`install`].
+    pub start_ns: u64,
+    /// Duration in nanoseconds (never negative by construction).
+    pub dur_ns: u64,
+    /// Position of the span's *open* in the collector-wide event
+    /// sequence. One shared counter serves opens and closes, so
+    /// sorting a lane's B/E events by sequence reproduces the exact
+    /// real-time stack discipline the RAII guards enforced — the
+    /// timestamps alone cannot (independent clock reads can tie or
+    /// jitter by nanoseconds).
+    pub open_seq: u64,
+    /// Position of the span's *close* in the same sequence.
+    pub close_seq: u64,
+}
+
+/// One grid cell's outcome row for the `telemetry.json` summary.
+#[derive(Debug, Clone)]
+pub struct CellRow {
+    /// Ledger fingerprint (`v1:...`), or empty when not computed.
+    pub fingerprint: String,
+    /// Workload name.
+    pub workload: String,
+    /// Scenario name.
+    pub scenario: String,
+    /// `"run"`, `"cached"`, or `"failed"`.
+    pub status: String,
+    /// Wall nanoseconds attributed to the cell (amortized over its
+    /// broadcast batch for shared-pass replays).
+    pub wall_nanos: u64,
+    /// Trace blocks replayed for the cell (0 when unknown/cached).
+    pub blocks: u64,
+    /// Retries consumed before the recorded outcome.
+    pub retries: u32,
+}
+
+/// Span-buffer cap: a grid run records thousands of coarse spans and
+/// (at small scales) tens of thousands of per-block spans; the cap
+/// bounds memory and trace size on pathological runs. Overflow is
+/// counted in [`Counter::SpansDropped`], never silent.
+const MAX_SPANS: usize = 1 << 20;
+
+struct Telemetry {
+    epoch: Instant,
+    gen: u64,
+    out_dir: PathBuf,
+    /// Shared open/close event sequence (see [`SpanRec::open_seq`]).
+    seq: AtomicU64,
+    counters: [AtomicU64; COUNTER_COUNT],
+    stage_nanos: [AtomicU64; STAGE_COUNT],
+    stage_counts: [AtomicU64; STAGE_COUNT],
+    spans: Mutex<Vec<SpanRec>>,
+    lanes: Mutex<Vec<String>>,
+    cells: Mutex<Vec<CellRow>>,
+}
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static CURRENT: RwLock<Option<Arc<Telemetry>>> = RwLock::new(None);
+/// Bumped on every install so stale thread-local lane assignments from
+/// a previous collector are detected and reallocated.
+static GEN: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    static LANE: std::cell::Cell<(u64, u32)> = const { std::cell::Cell::new((0, 0)) };
+}
+
+/// Install (or clear, with `None`) the process-global collector.
+/// Mirrors [`crate::util::fault::install`]: last call wins, and the
+/// armed flag plus collector swap atomically under one lock so probes
+/// never observe a half-installed state.
+pub fn install(out_dir: Option<PathBuf>) {
+    let t = out_dir.map(|d| {
+        Arc::new(Telemetry {
+            epoch: Instant::now(),
+            gen: GEN.fetch_add(1, Ordering::SeqCst) + 1,
+            out_dir: d,
+            seq: AtomicU64::new(0),
+            counters: std::array::from_fn(|_| AtomicU64::new(0)),
+            stage_nanos: std::array::from_fn(|_| AtomicU64::new(0)),
+            stage_counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            spans: Mutex::new(Vec::new()),
+            lanes: Mutex::new(Vec::new()),
+            cells: Mutex::new(Vec::new()),
+        })
+    });
+    let mut guard = CURRENT.write().unwrap_or_else(|e| e.into_inner());
+    ARMED.store(t.is_some(), Ordering::SeqCst);
+    *guard = t;
+}
+
+/// Is a collector installed? Single relaxed load — this is the entire
+/// cost of every probe on an untelemetered run.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+fn current() -> Option<Arc<Telemetry>> {
+    CURRENT.read().unwrap_or_else(|e| e.into_inner()).clone()
+}
+
+fn lock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn lane_of(t: &Arc<Telemetry>) -> u32 {
+    LANE.with(|c| {
+        let (gen, lane) = c.get();
+        if gen == t.gen {
+            return lane;
+        }
+        let mut lanes = lock(&t.lanes);
+        let idx = lanes.len() as u32;
+        lanes.push(format!("thread-{idx}"));
+        c.set((t.gen, idx));
+        idx
+    })
+}
+
+/// Name the calling thread's timeline lane (e.g. `"io"`,
+/// `"decode-0"`); a no-op when telemetry is off. Unnamed lanes render
+/// as `thread-N`.
+pub fn lane(name: &str) {
+    if !armed() {
+        return;
+    }
+    if let Some(t) = current() {
+        let idx = lane_of(&t) as usize;
+        lock(&t.lanes)[idx] = name.to_string();
+    }
+}
+
+/// [`lane`] with a lazily built name: the closure (and its allocation)
+/// only runs when telemetry is armed.
+pub fn lane_with(f: impl FnOnce() -> String) {
+    if !armed() {
+        return;
+    }
+    if let Some(t) = current() {
+        let idx = lane_of(&t) as usize;
+        lock(&t.lanes)[idx] = f();
+    }
+}
+
+/// RAII span guard: records its stage's duration (and a [`SpanRec`]
+/// for the timeline) when dropped. Inactive guards — the off path, or
+/// a placeholder from [`Span::inactive`] — carry no data and do
+/// nothing on drop.
+#[derive(Default)]
+pub struct Span {
+    data: Option<SpanData>,
+}
+
+struct SpanData {
+    t: Arc<Telemetry>,
+    stage: Stage,
+    label: String,
+    lane: u32,
+    start: Instant,
+    start_ns: u64,
+    open_seq: u64,
+}
+
+impl Span {
+    /// A guard that records nothing; useful as a field placeholder
+    /// (e.g. the sampled simulator's open-window span).
+    pub const fn inactive() -> Self {
+        Span { data: None }
+    }
+
+    /// Is this guard actually recording?
+    pub fn active(&self) -> bool {
+        self.data.is_some()
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(d) = self.data.take() {
+            let dur = d.start.elapsed().as_nanos() as u64;
+            let close_seq = d.t.seq.fetch_add(1, Ordering::Relaxed);
+            let si = d.stage as usize;
+            d.t.stage_nanos[si].fetch_add(dur, Ordering::Relaxed);
+            d.t.stage_counts[si].fetch_add(1, Ordering::Relaxed);
+            let mut spans = lock(&d.t.spans);
+            if spans.len() < MAX_SPANS {
+                spans.push(SpanRec {
+                    lane: d.lane,
+                    stage: d.stage,
+                    label: d.label,
+                    start_ns: d.start_ns,
+                    dur_ns: dur,
+                    open_seq: d.open_seq,
+                    close_seq,
+                });
+            } else {
+                drop(spans);
+                d.t.counters[Counter::SpansDropped as usize].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Open a scoped span for `stage` on the calling thread. Off path:
+/// one relaxed load, returns an inactive guard, no allocation.
+#[inline]
+pub fn span(stage: Stage) -> Span {
+    if !armed() {
+        return Span::inactive();
+    }
+    span_slow(stage, "")
+}
+
+/// [`span`] with a free-form label (workload name, batch description).
+/// The label is only materialized when telemetry is armed.
+#[inline]
+pub fn span_labeled(stage: Stage, label: &str) -> Span {
+    if !armed() {
+        return Span::inactive();
+    }
+    span_slow(stage, label)
+}
+
+#[cold]
+fn span_slow(stage: Stage, label: &str) -> Span {
+    match current() {
+        None => Span::inactive(),
+        Some(t) => {
+            let lane = lane_of(&t);
+            let open_seq = t.seq.fetch_add(1, Ordering::Relaxed);
+            let start_ns = t.epoch.elapsed().as_nanos() as u64;
+            Span {
+                data: Some(SpanData {
+                    stage,
+                    label: label.to_string(),
+                    lane,
+                    start: Instant::now(),
+                    start_ns,
+                    open_seq,
+                    t,
+                }),
+            }
+        }
+    }
+}
+
+/// Bump a counter by `v`. Off path: one relaxed load.
+#[inline]
+pub fn add(c: Counter, v: u64) {
+    if !armed() {
+        return;
+    }
+    add_slow(c, v);
+}
+
+#[cold]
+fn add_slow(c: Counter, v: u64) {
+    if let Some(t) = current() {
+        t.counters[c as usize].fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+/// Raise a counter to at least `v` (monotonic max, e.g. widest batch).
+#[inline]
+pub fn maximize(c: Counter, v: u64) {
+    if !armed() {
+        return;
+    }
+    maximize_slow(c, v);
+}
+
+#[cold]
+fn maximize_slow(c: Counter, v: u64) {
+    if let Some(t) = current() {
+        t.counters[c as usize].fetch_max(v, Ordering::Relaxed);
+    }
+}
+
+/// Current value of a counter (0 when telemetry is off). Reads the
+/// live collector; exporters should prefer one [`snapshot`].
+pub fn counter(c: Counter) -> u64 {
+    current().map_or(0, |t| t.counters[c as usize].load(Ordering::Relaxed))
+}
+
+/// Append a per-cell outcome row for the summary exporter. Off path:
+/// one relaxed load; the row is only constructed by armed callers
+/// (guard call sites with [`armed`] to avoid building strings for
+/// nothing).
+pub fn cell(row: CellRow) {
+    if !armed() {
+        return;
+    }
+    if let Some(t) = current() {
+        lock(&t.cells).push(row);
+    }
+}
+
+/// The output directory the collector was installed with, if armed.
+pub fn out_dir() -> Option<PathBuf> {
+    current().map(|t| t.out_dir.clone())
+}
+
+/// Point-in-time copy of everything collected, for the exporters.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// Nanoseconds since [`install`] — the run's telemetry wall clock.
+    pub wall_nanos: u64,
+    /// Where the exporters should write.
+    pub out_dir: PathBuf,
+    /// Lane names, index-aligned with [`SpanRec::lane`].
+    pub lanes: Vec<String>,
+    /// All recorded spans, in completion order.
+    pub spans: Vec<SpanRec>,
+    /// `(name, value)` for every counter, in [`COUNTERS`] order.
+    pub counters: Vec<(&'static str, u64)>,
+    /// `(name, total_nanos, count)` per stage, in [`STAGES`] order.
+    pub stages: Vec<(&'static str, u64, u64)>,
+    /// Per-cell outcome rows, in completion order.
+    pub cells: Vec<CellRow>,
+}
+
+impl Snapshot {
+    /// Value of a counter by its [`COUNTERS`] name (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.iter().find(|(n, _)| *n == name).map_or(0, |&(_, v)| v)
+    }
+}
+
+/// Snapshot the installed collector, or `None` when telemetry is off.
+pub fn snapshot() -> Option<Snapshot> {
+    let t = current()?;
+    Some(Snapshot {
+        wall_nanos: t.epoch.elapsed().as_nanos() as u64,
+        out_dir: t.out_dir.clone(),
+        lanes: lock(&t.lanes).clone(),
+        spans: lock(&t.spans).clone(),
+        counters: COUNTERS
+            .iter()
+            .map(|&(c, n)| (n, t.counters[c as usize].load(Ordering::Relaxed)))
+            .collect(),
+        stages: STAGES
+            .iter()
+            .map(|&(s, n)| {
+                (
+                    n,
+                    t.stage_nanos[s as usize].load(Ordering::Relaxed),
+                    t.stage_counts[s as usize].load(Ordering::Relaxed),
+                )
+            })
+            .collect(),
+        cells: lock(&t.cells).clone(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_tables_are_aligned_and_unique() {
+        assert_eq!(STAGES.len(), STAGE_COUNT);
+        assert_eq!(COUNTERS.len(), COUNTER_COUNT);
+        for (i, &(s, n)) in STAGES.iter().enumerate() {
+            assert_eq!(s as usize, i, "stage slot misaligned: {n}");
+            assert_eq!(s.name(), n);
+        }
+        for (i, &(c, n)) in COUNTERS.iter().enumerate() {
+            assert_eq!(c as usize, i, "counter slot misaligned: {n}");
+            assert_eq!(c.name(), n);
+        }
+        let mut names: Vec<&str> = STAGES.iter().map(|&(_, n)| n).collect();
+        names.extend(COUNTERS.iter().map(|&(_, n)| n));
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "duplicate telemetry name");
+    }
+
+    /// One combined lifecycle test: cargo runs unit tests in threads
+    /// within a single process, so a single test owns the global
+    /// collector end to end (the CLI-level behaviour is exercised in
+    /// `tests/telemetry.rs`, which serializes via its own lock).
+    #[test]
+    fn collector_lifecycle() {
+        // off: probes are inert and cheap
+        assert!(!armed());
+        add(Counter::PoolHit, 5);
+        let g = span(Stage::Decode);
+        assert!(!g.active());
+        drop(g);
+        assert!(snapshot().is_none());
+
+        install(Some(PathBuf::from("target/tmp-telemetry-test")));
+        assert!(armed());
+        lane("unit-test");
+        add(Counter::PoolHit, 2);
+        add(Counter::PoolHit, 3);
+        maximize(Counter::BatchWidthMax, 4);
+        maximize(Counter::BatchWidthMax, 2);
+        {
+            let _outer = span_labeled(Stage::CellRun, "outer");
+            let inner = span(Stage::Decode);
+            assert!(inner.active());
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let snap = snapshot().expect("armed");
+        assert_eq!(snap.counter("pool_hit"), 5);
+        assert_eq!(snap.counter("batch_width_max"), 4);
+        assert_eq!(counter(Counter::PoolHit), 5);
+        assert_eq!(snap.spans.len(), 2);
+        // inner span closed first; both nonzero duration, same lane
+        assert_eq!(snap.spans[0].stage, Stage::Decode);
+        assert_eq!(snap.spans[1].stage, Stage::CellRun);
+        assert_eq!(snap.spans[1].label, "outer");
+        assert_eq!(snap.spans[0].lane, snap.spans[1].lane);
+        assert!(snap.spans[0].start_ns >= snap.spans[1].start_ns);
+        assert!(snap.spans[1].dur_ns >= snap.spans[0].dur_ns);
+        // open/close sequencing reflects the nesting exactly
+        assert!(snap.spans[0].open_seq > snap.spans[1].open_seq);
+        assert!(snap.spans[0].close_seq < snap.spans[1].close_seq);
+        assert!(snap.spans[0].open_seq < snap.spans[0].close_seq);
+        assert_eq!(snap.lanes[snap.spans[0].lane as usize], "unit-test");
+        let cell_total =
+            snap.stages.iter().find(|&&(n, _, _)| n == "cell-run").map(|&(_, t, _)| t).unwrap();
+        assert!(cell_total > 0);
+
+        // spans from another thread land in their own lane
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _g = span(Stage::IoRead);
+            });
+        });
+        let snap2 = snapshot().unwrap();
+        assert_eq!(snap2.spans.len(), 3);
+        assert_ne!(snap2.spans[2].lane, snap2.spans[0].lane);
+
+        // cell rows accumulate only while armed
+        cell(CellRow {
+            fingerprint: "v1:dead".into(),
+            workload: "KMeans".into(),
+            scenario: "baseline".into(),
+            status: "run".into(),
+            wall_nanos: 10,
+            blocks: 3,
+            retries: 0,
+        });
+        assert_eq!(snapshot().unwrap().cells.len(), 1);
+
+        install(None);
+        assert!(!armed());
+        assert!(snapshot().is_none());
+        add(Counter::PoolHit, 9);
+        cell(CellRow {
+            fingerprint: String::new(),
+            workload: String::new(),
+            scenario: String::new(),
+            status: "run".into(),
+            wall_nanos: 0,
+            blocks: 0,
+            retries: 0,
+        });
+        assert!(snapshot().is_none());
+
+        // a fresh install starts from zero (new generation, new lanes)
+        install(Some(PathBuf::from("target/tmp-telemetry-test2")));
+        let snap3 = snapshot().unwrap();
+        assert_eq!(snap3.counter("pool_hit"), 0);
+        assert!(snap3.spans.is_empty());
+        assert!(snap3.cells.is_empty());
+        let _g = span(Stage::Decode);
+        drop(_g);
+        assert_eq!(snapshot().unwrap().spans[0].lane, 0, "lanes restart per install");
+        install(None);
+    }
+}

@@ -1,0 +1,381 @@
+//! Telemetry-spine integration tests: the process-global collector
+//! (`util::telemetry`) driven through the real replay stack, and the
+//! CLI surface that installs it. The contracts under test:
+//!
+//! - **Inertness** — arming telemetry changes nothing: grid `Metrics`
+//!   stay bit-identical, the results JSON stays byte-identical, and
+//!   cell fingerprints never see the telemetry state.
+//! - **Exporter well-formedness** — the Chrome trace built from a real
+//!   multi-threaded grid snapshot parses and keeps per-lane stack
+//!   discipline (balanced B/E, non-decreasing timestamps).
+//! - **Counter exactness** — the deterministic counters reconcile with
+//!   simulator ground truth: `blocks_decoded` equals the trace's block
+//!   count, `ledger_hit` equals `cached_cells`.
+//! - **Chaos composition** — fault injection and telemetry arm
+//!   together; the summary records which faults fired while metrics
+//!   stay bit-identical under a retried transient.
+//!
+//! The collector is process-global, so every test that installs one
+//! (or that needs a telemetry-off reference) serializes through
+//! [`telemetry_lock`] and disarms via the panic-safe [`Collector`]
+//! guard — the same discipline `tests/chaos.rs` uses for fault plans.
+
+use std::process::Command;
+use std::sync::{Mutex, MutexGuard};
+
+use mlperf::coordinator::{record_characterize, replay_file, run_jobs_ledgered, run_jobs_replayed};
+use mlperf::coordinator::{Job, Scenario};
+use mlperf::ledger::{cell_fingerprint, GridResults, Ledger};
+use mlperf::obs::{chrome, summary};
+use mlperf::util::fault::{self, FaultPlan};
+use mlperf::util::json::Json;
+use mlperf::util::telemetry::{self, Counter};
+
+mod common;
+
+/// Serialize tests that touch the process-global collector (or that
+/// need a telemetry-off reference run).
+fn telemetry_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Installs a collector for one scope and uninstalls on drop — even
+/// when an assertion panics mid-test, the next test starts disarmed.
+struct Collector;
+
+impl Collector {
+    fn new(tag: &str) -> Collector {
+        telemetry::install(Some(std::env::temp_dir().join("mlperf-telemetry-tests").join(tag)));
+        Collector
+    }
+}
+
+impl Drop for Collector {
+    fn drop(&mut self) {
+        telemetry::install(None);
+    }
+}
+
+/// Arms a chaos plan for one scope (see `tests/chaos.rs`).
+struct Chaos;
+
+impl Chaos {
+    fn new(spec: &str) -> Chaos {
+        fault::install(Some(FaultPlan::parse(spec).expect("chaos spec must parse")));
+        Chaos
+    }
+}
+
+impl Drop for Chaos {
+    fn drop(&mut self) {
+        fault::install(None);
+    }
+}
+
+fn bin() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_mlperf"));
+    // the spawned CLI must only see what the test passes explicitly
+    c.env_remove("MLPERF_CHAOS");
+    c.env_remove("MLPERF_TELEMETRY");
+    c
+}
+
+/// `grid --sweep cache` on one workload: the cheapest real CLI grid.
+fn sweep_cmd() -> Command {
+    let mut c = bin();
+    c.args(["grid", "--sweep", "cache", "--workload", "KMeans"]);
+    c.args(["--scale", "0.02", "--iterations", "1", "--threads", "1"]);
+    c
+}
+
+/// Walk a Chrome trace document and assert per-lane stack discipline:
+/// every `E` closes the innermost open `B` on its lane, nothing stays
+/// open, and timestamps never run backwards along a lane. Returns the
+/// number of B/E pairs walked.
+fn assert_wellformed_chrome(doc: &Json) -> usize {
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    let mut stacks: std::collections::BTreeMap<u64, Vec<String>> = Default::default();
+    let mut last_ts: std::collections::BTreeMap<u64, f64> = Default::default();
+    let mut begins = 0usize;
+    let mut ends = 0usize;
+    for ev in events {
+        let ph = ev.get("ph").and_then(Json::as_str).expect("event phase");
+        if ph == "M" {
+            continue;
+        }
+        let tid = ev.get("tid").and_then(Json::as_f64).expect("event tid") as u64;
+        let ts = ev.get("ts").and_then(Json::as_f64).expect("event ts");
+        let prev = last_ts.entry(tid).or_insert(f64::MIN);
+        assert!(ts >= *prev, "lane {tid}: timestamps ran backwards");
+        *prev = ts;
+        let name = ev.get("name").and_then(Json::as_str).expect("event name").to_string();
+        let stack = stacks.entry(tid).or_default();
+        match ph {
+            "B" => {
+                stack.push(name);
+                begins += 1;
+            }
+            "E" => {
+                assert_eq!(
+                    stack.pop().as_deref(),
+                    Some(name.as_str()),
+                    "E must close the innermost open B"
+                );
+                ends += 1;
+            }
+            other => panic!("unexpected phase {other:?}"),
+        }
+    }
+    assert_eq!(begins, ends, "unbalanced B/E");
+    assert!(stacks.values().all(Vec::is_empty), "span left open at end of trace");
+    begins
+}
+
+/// Arming the collector must change nothing observable: `Metrics`
+/// bit-identical, results JSON byte-identical, fingerprints untouched.
+#[test]
+fn armed_grid_is_bit_identical_to_off() {
+    let _lock = telemetry_lock();
+    let cfg = common::tiny();
+    let jobs = common::scenario_jobs();
+    telemetry::install(None);
+    let fp_off: Vec<String> =
+        jobs.iter().map(|j| cell_fingerprint(&cfg, j).to_string()).collect();
+    let clean = run_jobs_replayed(&cfg, &jobs, 1);
+    assert!(clean.failed.is_empty());
+    let clean_json = GridResults::from_outputs(&cfg, &clean.outputs).to_json();
+
+    let collector = Collector::new("parity");
+    let fp_on: Vec<String> =
+        jobs.iter().map(|j| cell_fingerprint(&cfg, j).to_string()).collect();
+    let armed = run_jobs_replayed(&cfg, &jobs, 1);
+    let armed_json = GridResults::from_outputs(&cfg, &armed.outputs).to_json();
+    drop(collector);
+
+    assert_eq!(fp_off, fp_on, "telemetry state leaked into fingerprints");
+    assert!(armed.failed.is_empty());
+    assert_eq!(clean.outputs.len(), armed.outputs.len());
+    for (a, b) in clean.outputs.iter().zip(&armed.outputs) {
+        assert_eq!(a.job, b.job);
+        common::assert_metrics_eq(&a.metrics, &b.metrics, "arming telemetry perturbed the grid");
+        assert_eq!(a.quality, b.quality);
+    }
+    assert_eq!(clean_json, armed_json, "results JSON must be byte-identical");
+}
+
+/// A real multi-threaded grid snapshot renders to a parseable Chrome
+/// trace with exact stack discipline, and the summary accounts for
+/// every cell.
+#[test]
+fn grid_snapshot_exports_wellformed_trace_and_summary() {
+    let _lock = telemetry_lock();
+    let cfg = common::tiny();
+    let jobs = common::scenario_jobs();
+    let collector = Collector::new("chrome");
+    let report = run_jobs_replayed(&cfg, &jobs, 2);
+    let snap = telemetry::snapshot().expect("collector armed");
+    drop(collector);
+    assert!(report.failed.is_empty());
+
+    // every grid cell left exactly one outcome row, all healthy
+    assert_eq!(snap.cells.len(), jobs.len());
+    assert!(snap.cells.iter().all(|c| c.status == "run"));
+    assert!(
+        snap.cells.iter().all(|c| c.fingerprint.starts_with('v')),
+        "cell rows must carry ledger fingerprints"
+    );
+    // the four KMeans scenario cells ride broadcast batches
+    assert_eq!(snap.counter("batch_width_sum"), 4);
+    assert!(snap.counter("batches") >= 1);
+    assert!(snap.counter("batch_width_max") <= 4);
+    assert_eq!(snap.counter("spans_dropped"), 0);
+
+    let doc = chrome::chrome_trace(&snap);
+    let parsed = Json::parse(&doc.render()).expect("chrome trace must self-parse");
+    let pairs = assert_wellformed_chrome(&parsed);
+    assert_eq!(pairs, snap.spans.len(), "one B/E pair per recorded span");
+    assert!(pairs > 0, "a grid run must record spans");
+
+    let sum = Json::parse(&summary::summary_json(&snap).render()).expect("summary must parse");
+    assert_eq!(sum.get("schema").and_then(Json::as_str), Some("mlperf-telemetry/v1"));
+    let cells = sum.get("cells").and_then(Json::as_arr).expect("cells array");
+    assert_eq!(cells.len(), jobs.len());
+    let stages = sum.get("stages").and_then(Json::as_arr).expect("stages array");
+    let stage_count = |name: &str| {
+        stages
+            .iter()
+            .find(|s| s.get("stage").and_then(Json::as_str) == Some(name))
+            .and_then(|s| s.get("count").and_then(Json::as_f64))
+            .unwrap_or(0.0)
+    };
+    assert!(stage_count("capture") >= 1.0, "KMeans capture span missing");
+    assert!(stage_count("cell-run") >= 3.0, "batch + direct cell spans missing");
+}
+
+/// `blocks_decoded` counts each pipelined-ingest block exactly once:
+/// it must equal the replay's own block count.
+#[test]
+fn pipelined_ingest_counts_blocks_exactly() {
+    let _lock = telemetry_lock();
+    let mut cfg = common::tiny();
+    cfg.ingest_threads = 3; // force the staged I/O -> decode pool path
+    let w = common::workload("KMeans");
+    let path = common::tmpfile("telemetry", "kmeans_blocks.mlt");
+    record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
+
+    let collector = Collector::new("blocks");
+    let (_, _, stats) = replay_file(&path, &cfg, |_| {}).unwrap();
+    let decoded = telemetry::counter(Counter::BlocksDecoded);
+    let snap = telemetry::snapshot().expect("collector armed");
+    drop(collector);
+
+    assert!(stats.blocks > 0, "trivial trace");
+    assert_eq!(decoded, stats.blocks, "blocks_decoded must equal the trace's block count");
+    assert_eq!(snap.counter("blocks_decoded"), stats.blocks);
+    // every block ran through the decoder pool and the in-order consumer
+    assert_eq!(snap.counter("pool_hit") + snap.counter("pool_miss"), stats.blocks);
+    let decode_spans = snap
+        .stages
+        .iter()
+        .find(|&&(n, _, _)| n == "decode")
+        .map(|&(_, _, c)| c)
+        .unwrap_or(0);
+    assert_eq!(decode_spans, stats.blocks, "one decode span per block");
+}
+
+/// `ledger_hit` equals `cached_cells` by construction, and the cached
+/// cells' telemetry rows carry the exact ledger fingerprints.
+#[test]
+fn ledger_hits_match_cached_cells() {
+    let _lock = telemetry_lock();
+    let cfg = common::tiny();
+    let jobs =
+        vec![Job::new("KMeans", Scenario::Baseline), Job::new("KMeans", Scenario::PerfectL2)];
+    let path = common::tmpfile("telemetry", "ledger_hits.mllg");
+    telemetry::install(None);
+    {
+        let mut ledger = Ledger::open(&path).unwrap();
+        let cold = run_jobs_ledgered(&cfg, &jobs, 1, &mut ledger).unwrap();
+        assert_eq!(cold.cached_cells, 0);
+        assert!(cold.failed.is_empty());
+    }
+
+    let collector = Collector::new("ledger");
+    let mut ledger = Ledger::open(&path).unwrap();
+    let warm = run_jobs_ledgered(&cfg, &jobs, 1, &mut ledger).unwrap();
+    let hits = telemetry::counter(Counter::LedgerHit);
+    let snap = telemetry::snapshot().expect("collector armed");
+    drop(collector);
+
+    assert_eq!(warm.cached_cells, jobs.len(), "warm ledger must serve every cell");
+    assert_eq!(warm.workload_executions, 0);
+    assert_eq!(hits as usize, warm.cached_cells, "ledger_hit must equal cached_cells");
+
+    let cached: Vec<_> = snap.cells.iter().filter(|c| c.status == "cached").collect();
+    assert_eq!(cached.len(), jobs.len());
+    for (row, job) in cached.iter().zip(&jobs) {
+        assert_eq!(row.fingerprint, cell_fingerprint(&cfg, job).to_string());
+        assert_eq!(row.workload, job.workload);
+    }
+    // ledger open + per-cell lookups leave ledger-open spans behind
+    let ledger_opens = snap
+        .stages
+        .iter()
+        .find(|&&(n, _, _)| n == "ledger-open")
+        .map(|&(_, _, c)| c)
+        .unwrap_or(0);
+    assert!(ledger_opens >= 1, "ledger open span missing");
+}
+
+/// Chaos and telemetry arm together: a retried transient stall leaves
+/// metrics bit-identical while the summary records the fired fault.
+#[test]
+fn chaos_and_telemetry_compose() {
+    let _lock = telemetry_lock();
+    let mut cfg = common::tiny();
+    cfg.ingest_threads = 3;
+    let w = common::workload("KMeans");
+    let path = common::tmpfile("telemetry", "kmeans_chaos.mlt");
+    record_characterize(w.as_ref(), &cfg, false, &path).unwrap();
+    telemetry::install(None);
+    fault::install(None);
+    let (_, clean, _) = replay_file(&path, &cfg, |_| {}).unwrap();
+
+    let chaos = Chaos::new("stall@1=5");
+    let collector = Collector::new("chaos");
+    let (_, stalled, _) = replay_file(&path, &cfg, |_| {}).unwrap();
+    let snap = telemetry::snapshot().expect("collector armed");
+    // the summary reads live fault fire counts — build it while armed
+    let sum = Json::parse(&summary::summary_json(&snap).render()).expect("summary must parse");
+    drop(collector);
+    drop(chaos);
+
+    common::assert_metrics_eq(&stalled, &clean, "stalled telemetered replay diverged");
+    let faults = sum.get("faults").expect("faults object");
+    assert_eq!(
+        faults.get("stall").and_then(Json::as_f64),
+        Some(1.0),
+        "fired fault missing from telemetry summary"
+    );
+}
+
+/// `grid --sweep cache --json -` must pipe clean through a JSON
+/// parser: the results artifact owns stdout, tables move to stderr.
+#[test]
+fn cli_grid_json_stdout_is_machine_readable() {
+    let out = sweep_cmd().args(["--json", "-"]).output().unwrap();
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "sweep failed: {stderr}");
+    let parsed = Json::parse(&stdout)
+        .unwrap_or_else(|e| panic!("stdout is not pure JSON ({e:?}): {stdout}"));
+    assert_eq!(parsed.get("schema").and_then(Json::as_str), Some("mlperf-cache-sweep/v1"));
+    assert!(!stdout.contains("=="), "table leaked onto stdout: {stdout}");
+    assert!(stderr.contains("cache_sweep"), "table missing from stderr: {stderr}");
+}
+
+/// `--telemetry <dir>` (and the `MLPERF_TELEMETRY` env var) write a
+/// parseable summary + Chrome trace next to the run.
+#[test]
+fn cli_telemetry_writes_parseable_artifacts() {
+    let dir = std::env::temp_dir().join("mlperf-telemetry-tests").join("cli-artifacts");
+    let _ = std::fs::remove_dir_all(&dir);
+    let ledger = common::tmpfile("telemetry", "cli_artifacts.mllg");
+    let mut cmd = sweep_cmd();
+    cmd.args(["--ledger"]).arg(&ledger);
+    cmd.arg("--telemetry").arg(&dir);
+    let out = cmd.output().unwrap();
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(out.status.success(), "telemetered sweep failed: {stderr}");
+    assert!(stderr.contains("telemetry: wrote"), "artifact note missing: {stderr}");
+
+    let sum_txt = std::fs::read_to_string(dir.join("telemetry.json")).unwrap();
+    let sum = Json::parse(&sum_txt).expect("telemetry.json must parse");
+    assert_eq!(sum.get("schema").and_then(Json::as_str), Some("mlperf-telemetry/v1"));
+    assert!(sum.get("wall_nanos").and_then(Json::as_f64).unwrap_or(0.0) > 0.0);
+    let stages = sum.get("stages").and_then(Json::as_arr).expect("stages array");
+    let stage_count = |name: &str| {
+        stages
+            .iter()
+            .find(|s| s.get("stage").and_then(Json::as_str) == Some(name))
+            .and_then(|s| s.get("count").and_then(Json::as_f64))
+            .unwrap_or(0.0)
+    };
+    assert_eq!(stage_count("sweep-cell"), 1.0, "one sweep span per workload");
+    assert!(stage_count("ledger-append") >= 1.0, "ledgered cells must append");
+    let prov = sum.get("provenance").expect("provenance block");
+    assert!(prov.get("rustc").and_then(Json::as_str).is_some());
+
+    let trace_txt = std::fs::read_to_string(dir.join("telemetry_trace.json")).unwrap();
+    let trace = Json::parse(&trace_txt).expect("telemetry_trace.json must parse");
+    assert!(assert_wellformed_chrome(&trace) > 0, "trace must contain spans");
+
+    // same artifacts via the environment variable, no flag
+    let dir2 = std::env::temp_dir().join("mlperf-telemetry-tests").join("cli-artifacts-env");
+    let _ = std::fs::remove_dir_all(&dir2);
+    let out = sweep_cmd().env("MLPERF_TELEMETRY", &dir2).output().unwrap();
+    assert!(out.status.success());
+    assert!(dir2.join("telemetry.json").exists(), "env-var install missing summary");
+    assert!(dir2.join("telemetry_trace.json").exists(), "env-var install missing trace");
+}
