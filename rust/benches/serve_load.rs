@@ -1,0 +1,256 @@
+//! Serve-daemon load generator: queries/sec and latency percentiles
+//! against an in-process `mlperf serve` daemon, in three phases:
+//!
+//! 1. **cold** — every cell queried once, serially: miss latency (each
+//!    query pays its simulation).
+//! 2. **warm** — concurrent client threads re-query the same cells for
+//!    several rounds: hit latency, p50/p99, and queries/sec, with a
+//!    zero-re-simulation assertion (the daemon's execution counter must
+//!    not move).
+//! 3. **overload** — 2× `queue_depth` clients fire cold queries through
+//!    one barrier: measures the shed rate, proving saturation degrades
+//!    into typed `overloaded` rejections while every admitted query
+//!    still completes.
+//!
+//! ```bash
+//! cargo bench --bench serve_load                 # tables only
+//! cargo bench --bench serve_load -- --json       # + BENCH_serve.json
+//! ```
+//!
+//! `--json` writes `BENCH_serve.json` at the repository root (override
+//! with `--json-out`); CI uploads it as an artifact.
+
+#[path = "common.rs"]
+mod common;
+
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use mlperf::analysis::Table;
+use mlperf::serve::{Client, ServeOptions, Server};
+use mlperf::util::json::Json;
+
+/// Deadline used by every bench query: long enough that only the
+/// overload phase (which wants admission rejections, not deadline
+/// rejections) ever races the clock.
+const DEADLINE_MS: u64 = 120_000;
+
+const QUEUE_DEPTH: usize = 4;
+
+fn pctl(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx]
+}
+
+fn query_ok(client: &mut Client, workload: &str, scenario: &str) -> f64 {
+    let t0 = Instant::now();
+    let resp = client.query(workload, scenario, Some(DEADLINE_MS)).expect("query");
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(
+        resp.get("ok").and_then(Json::as_bool),
+        Some(true),
+        "query {workload}/{scenario} failed: {}",
+        resp.render()
+    );
+    ms
+}
+
+fn executions(client: &mut Client) -> f64 {
+    let stats = client.op("stats").expect("stats");
+    stats.get("workload_executions").and_then(Json::as_f64).expect("stats field")
+}
+
+struct Phase {
+    queries: usize,
+    wall_s: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+impl Phase {
+    fn from_latencies(mut lat: Vec<f64>, wall_s: f64) -> Phase {
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("finite latency"));
+        Phase {
+            queries: lat.len(),
+            wall_s,
+            p50_ms: pctl(&lat, 0.50),
+            p99_ms: pctl(&lat, 0.99),
+        }
+    }
+
+    fn qps(&self) -> f64 {
+        self.queries as f64 / self.wall_s.max(1e-9)
+    }
+}
+
+fn main() {
+    common::banner("serve load: cold/warm latency, throughput, and overload shedding");
+    let cfg = common::config();
+    let args = common::args();
+
+    let dir = std::env::temp_dir().join(format!("mlperf-serve-bench-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let opts = ServeOptions {
+        dir: dir.clone(),
+        queue_depth: QUEUE_DEPTH,
+        default_deadline_ms: DEADLINE_MS,
+        cfg: cfg.clone(),
+        ..ServeOptions::default()
+    };
+    let server = Server::bind(opts).expect("bind serve daemon");
+    let addr = server.addr().to_string();
+    let daemon = std::thread::spawn(move || server.run().expect("daemon run"));
+
+    let workloads = ["KMeans", "KNN", "DBSCAN", "Decision Tree"];
+    let warm_cells: Vec<(String, String)> = workloads
+        .iter()
+        .flat_map(|w| {
+            ["baseline", "ideal-rows"].iter().map(move |s| (w.to_string(), s.to_string()))
+        })
+        .collect();
+
+    // phase 1: cold — every cell is a miss, queried serially
+    let mut probe = Client::connect(&addr).expect("connect");
+    let t0 = Instant::now();
+    let cold_lat: Vec<f64> =
+        warm_cells.iter().map(|(w, s)| query_ok(&mut probe, w, s)).collect();
+    let cold = Phase::from_latencies(cold_lat, t0.elapsed().as_secs_f64());
+    let executed_cold = executions(&mut probe);
+    assert!(executed_cold > 0.0, "cold phase must simulate");
+
+    // phase 2: warm — concurrent clients, several rounds, zero sims
+    let threads = 4;
+    let rounds = 25;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..threads)
+        .map(|_| {
+            let addr = addr.clone();
+            let cells = warm_cells.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut lat = Vec::new();
+                for _ in 0..rounds {
+                    for (w, s) in &cells {
+                        lat.push(query_ok(&mut client, w, s));
+                    }
+                }
+                lat
+            })
+        })
+        .collect();
+    let warm_lat: Vec<f64> =
+        handles.into_iter().flat_map(|h| h.join().expect("warm client")).collect();
+    let warm = Phase::from_latencies(warm_lat, t0.elapsed().as_secs_f64());
+    assert_eq!(
+        executions(&mut probe),
+        executed_cold,
+        "warm queries must be served from the shards with zero re-simulation"
+    );
+
+    // phase 3: overload — 2x queue_depth cold queries through a barrier
+    let offered = 2 * QUEUE_DEPTH;
+    let overload_cells: Vec<(String, String)> = workloads
+        .iter()
+        .flat_map(|w| {
+            ["perfect-l2", "perfect-llc"].iter().map(move |s| (w.to_string(), s.to_string()))
+        })
+        .collect();
+    assert_eq!(overload_cells.len(), offered);
+    let barrier = Arc::new(Barrier::new(offered));
+    let handles: Vec<_> = overload_cells
+        .into_iter()
+        .map(|(w, s)| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                barrier.wait();
+                let resp = client.query(&w, &s, Some(DEADLINE_MS)).expect("overload query");
+                if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+                    "ok"
+                } else {
+                    match resp.get("kind").and_then(Json::as_str) {
+                        Some("overloaded") => "shed",
+                        _ => "other",
+                    }
+                }
+            })
+        })
+        .collect();
+    let outcomes: Vec<&str> = handles.into_iter().map(|h| h.join().expect("client")).collect();
+    let completed = outcomes.iter().filter(|o| **o == "ok").count();
+    let shed = outcomes.iter().filter(|o| **o == "shed").count();
+    let other = outcomes.iter().filter(|o| **o == "other").count();
+    assert_eq!(other, 0, "overload produced a non-overloaded failure: {outcomes:?}");
+    assert!(completed > 0, "saturation must not starve every query");
+    assert!(shed > 0, "offering 2x queue_depth concurrently should shed something");
+
+    let mut client = Client::connect(&addr).expect("connect");
+    client.op("shutdown").expect("drain");
+    daemon.join().expect("daemon thread");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let mut t = Table::new(
+        "serve_load",
+        &format!(
+            "serve daemon over {} warm cells, queue_depth {QUEUE_DEPTH}, {threads} clients x {rounds} rounds",
+            warm_cells.len()
+        ),
+        &["phase", "queries", "p50 (ms)", "p99 (ms)", "queries/s"],
+    );
+    for (name, p) in [("cold (miss)", &cold), ("warm (hit)", &warm)] {
+        t.row(vec![
+            name.into(),
+            format!("{}", p.queries),
+            format!("{:.3}", p.p50_ms),
+            format!("{:.3}", p.p99_ms),
+            format!("{:.0}", p.qps()),
+        ]);
+    }
+    t.emit();
+    println!(
+        "cold/warm p50 ratio: {:.1}x; overload at {offered} concurrent cold queries \
+         (capacity {QUEUE_DEPTH}): {completed} completed, {shed} shed ({:.0}% shed rate)",
+        cold.p50_ms / warm.p50_ms.max(1e-9),
+        shed as f64 / offered as f64 * 100.0
+    );
+
+    if args.has("json") {
+        let field = |k: &str, v: Json| (k.to_string(), v);
+        let phase_json = |p: &Phase| {
+            Json::Obj(vec![
+                field("queries", Json::num(p.queries as f64)),
+                field("wall_s", Json::num(p.wall_s)),
+                field("p50_ms", Json::num(p.p50_ms)),
+                field("p99_ms", Json::num(p.p99_ms)),
+                field("qps", Json::num(p.qps())),
+            ])
+        };
+        let doc = Json::Obj(vec![
+            field("bench", Json::Str("serve_load".into())),
+            field("provenance", mlperf::obs::provenance_json()),
+            field("scale", Json::num(cfg.scale)),
+            field("queue_depth", Json::num(QUEUE_DEPTH as f64)),
+            field("client_threads", Json::num(threads as f64)),
+            field("cold", phase_json(&cold)),
+            field("warm", phase_json(&warm)),
+            field(
+                "overload",
+                Json::Obj(vec![
+                    field("offered", Json::num(offered as f64)),
+                    field("completed", Json::num(completed as f64)),
+                    field("shed", Json::num(shed as f64)),
+                    field("shed_rate", Json::num(shed as f64 / offered as f64)),
+                ]),
+            ),
+        ]);
+        let default_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+        let path = args.get_or("json-out", default_path);
+        std::fs::write(&path, doc.render())
+            .unwrap_or_else(|e| panic!("cannot write {path}: {e}"));
+        println!("wrote {path}");
+    }
+}

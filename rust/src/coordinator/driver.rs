@@ -1127,8 +1127,9 @@ pub fn run_jobs_ledgered(
     })
 }
 
-/// Provenance block for a freshly executed cell.
-fn cell_provenance(
+/// Provenance block for a freshly executed cell (shared with the serve
+/// daemon's miss path, which appends to its sharded ledger).
+pub(crate) fn cell_provenance(
     cfg: &ExperimentConfig,
     job: &Job,
     wall_nanos: u64,

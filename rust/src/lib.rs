@@ -34,6 +34,10 @@
 //!   telemetry spine ([`util::telemetry`]) — Chrome-trace timelines,
 //!   the `mlperf-telemetry/v1` summary, host provenance — plus the
 //!   live grid progress line.
+//! - [`serve`] — grid-as-a-service: the crash-safe `mlperf serve`
+//!   daemon answering grid queries over a versioned TCP protocol from
+//!   a fingerprint-sharded ledger, with admission control, deadlines,
+//!   miss coalescing, and degrade-not-die overload behavior.
 //!
 //! See `rust/examples/quickstart.rs` for the five-minute tour, DESIGN.md
 //! (repo root) for the substitution table and pipeline architecture.
@@ -45,6 +49,7 @@ pub mod ledger;
 pub mod obs;
 pub mod runtime;
 pub mod reorder;
+pub mod serve;
 pub mod workloads;
 pub mod sim;
 pub mod trace;

@@ -18,6 +18,10 @@
 //! mlperf grid        [--threads 0] [--direct] [--ledger grid.mllg] [--json out.json]
 //! mlperf grid        --sweep cache [--workload knn] [--ledger grid.mllg] [--json sweep.json]
 //! mlperf ledger      stats|gc|export --ledger grid.mllg [--out export.json]
+//! mlperf serve       [--listen 127.0.0.1:0] [--dir results/serve] [--queue-depth 64]
+//!                    [--default-deadline 5000] [--shards 4] [--durable]
+//! mlperf query       --workload kmeans [--scenario baseline] [--deadline-ms 500]
+//!                    [--addr host:port | --dir results/serve] [--op query|stats|compact|ping|shutdown]
 //! ```
 
 use mlperf::analysis::{pct, r2, r3, Table};
@@ -169,6 +173,8 @@ fn run_command(args: &Args) -> Result<()> {
         Some("report") => cmd_report(args),
         Some("grid") => cmd_grid(args),
         Some("ledger") => cmd_ledger(args),
+        Some("serve") => cmd_serve(args),
+        Some("query") => cmd_query(args),
         Some(other) => bail!("unknown subcommand {other:?}"),
         None => {
             println!("{}", HELP);
@@ -178,7 +184,7 @@ fn run_command(args: &Args) -> Result<()> {
 }
 
 const HELP: &str = "mlperf — Performance Characterization of Traditional ML (repro)
-subcommands: list, characterize, prefetch, reorder, multicore, gen-data, record, replay, runtime, report, grid, ledger
+subcommands: list, characterize, prefetch, reorder, multicore, gen-data, record, replay, runtime, report, grid, ledger, serve, query
 common flags: --workload <name> --scale <f> --iterations <n> --profile sklearn|mlpack --seed <n>
 record flags: --out <file.mlt> --sw-prefetch       (execute once, persist the columnar trace)
 replay flags: --trace <file.mlt> [--perfect-l2 --perfect-llc --no-hw-prefetch --ideal-rows]
@@ -199,10 +205,21 @@ report flags: --baseline <base.json> (re-run its cells and diff) --gate (non-zer
               refresh flow; an empty/missing baseline is blessed from the standard grid)
               --allow-vacuous (let --gate pass against an empty placeholder baseline; by
               default a vacuous gate exits non-zero so CI cannot certify nothing)
+serve flags:  --listen <addr> (default 127.0.0.1:0; bound address is written to <dir>/serve.addr)
+              --dir <d> (shards + lock files, default results/serve) --shards <n> (fresh dirs only)
+              --queue-depth <n> (admission bound, default 64; beyond it queries are shed with a
+              typed 'overloaded' rejection) --default-deadline <ms> (default 5000) --threads <n>
+              (miss-batch sim threads) --durable (fsync every shard append); SIGTERM drains:
+              stop admitting, finish in-flight, flush shards, exit 0
+query flags:  --workload <name> [--scenario <s>] [--deadline-ms <ms>] — one grid cell over TCP,
+              bit-identical to `mlperf grid`; --addr <host:port> or --dir <d> (reads serve.addr)
+              --op query|stats|compact|ping|shutdown (default query) --timeout <ms> (client side)
 chaos flags:  --chaos <spec> (or MLPERF_CHAOS) — deterministic fault injection, e.g.
               --chaos 'seed=7;read-transient@2' or 'frame-bitflip%0.01;decode-panic@1';
               sites: read-transient read-short frame-bitflip torn-tail decode-panic stall
               capture-panic cell-panic ledger-io ledger-append-kill ledger-compact-kill grid-kill
+              conn-drop slow-client serve-kill (serve path: drop a connection unanswered, hold an
+              admission slot <param> ms, abort after the nth answered query)
 telemetry:    --telemetry [<dir>] (or MLPERF_TELEMETRY=<dir>) — scoped spans + counters on every
               stage; writes <dir>/telemetry.json (mlperf-telemetry/v1 summary) and
               <dir>/telemetry_trace.json (Chrome trace-event JSON, load in Perfetto / about:tracing);
@@ -319,6 +336,36 @@ fn cmd_list() -> Result<()> {
             format!("{}KiB", bytes / 1024)
         };
         t.row(vec![cap, ways.join(", "), sets.join(", ")]);
+    }
+    println!("{}", t.render());
+
+    let mut t = Table::new(
+        "serve_protocol",
+        &format!(
+            "serve protocol v{} (`mlperf serve` daemon / `mlperf query --op <op>` client)",
+            mlperf::serve::PROTOCOL_VERSION
+        ),
+        &["op", "what it does"],
+    );
+    for (op, what) in mlperf::serve::OPS {
+        t.row(vec![(*op).into(), (*what).into()]);
+    }
+    println!("{}", t.render());
+
+    let mut t = Table::new(
+        "chaos_sites",
+        "deterministic fault-injection sites (`--chaos 'seed=N;<site>@n[=param]'`)",
+        &["site", "path"],
+    );
+    for &(site, name) in mlperf::util::fault::SITES {
+        use mlperf::util::fault::Site;
+        let path = match site {
+            Site::ConnDrop | Site::SlowClient | Site::ServeKill => "serve",
+            Site::LedgerIo | Site::LedgerAppendKill | Site::LedgerCompactKill => "ledger",
+            Site::GridKill | Site::CapturePanic | Site::CellPanic | Site::Stall => "grid",
+            _ => "trace",
+        };
+        t.row(vec![name.into(), path.into()]);
     }
     println!("{}", t.render());
     Ok(())
@@ -1247,4 +1294,74 @@ fn cmd_report_baseline(args: &Args, cfg: &mut ExperimentConfig, baseline_path: &
         args.has("gate"),
         args.has("allow-vacuous"),
     )
+}
+
+/// `mlperf serve`: bring up the grid-as-a-service daemon and block
+/// until SIGTERM/SIGINT or a protocol `shutdown` drains it (exit 0).
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let opts = mlperf::serve::ServeOptions {
+        listen: args.get_or("listen", "127.0.0.1:0"),
+        dir: std::path::PathBuf::from(args.get_or("dir", "results/serve")),
+        shards: args.get_parsed_or("shards", mlperf::serve::DEFAULT_SHARDS),
+        queue_depth: args.get_parsed_or("queue-depth", 64usize),
+        default_deadline_ms: args.get_parsed_or("default-deadline", 5000u64),
+        sim_threads: args.get_parsed_or("threads", 0usize),
+        durable: args.has("durable"),
+        cfg,
+    };
+    let dir = opts.dir.clone();
+    let server = mlperf::serve::Server::bind(opts)?;
+    diag::note(format!(
+        "serve: listening on {} (protocol v{}, pid {}, addr file {}/serve.addr) — \
+         drain with SIGTERM or `mlperf query --dir {} --op shutdown`",
+        server.addr(),
+        mlperf::serve::PROTOCOL_VERSION,
+        std::process::id(),
+        dir.display(),
+        dir.display(),
+    ));
+    server.run()
+}
+
+/// `mlperf query`: one request against a running serve daemon. Prints
+/// the response document; a typed rejection (`overloaded`,
+/// `deadline-exceeded`, …) also becomes a non-zero exit so scripts can
+/// branch on it.
+fn cmd_query(args: &Args) -> Result<()> {
+    let addr = match args.get("addr") {
+        Some(a) => a.to_string(),
+        None => {
+            let dir = args.get_or("dir", "results/serve");
+            mlperf::serve::discover_addr(std::path::Path::new(&dir))?
+        }
+    };
+    let mut client = mlperf::serve::Client::connect(&addr)?;
+    client.set_timeout(Some(std::time::Duration::from_millis(
+        args.get_parsed_or("timeout", 30_000u64),
+    )))?;
+    let op = args.get_or("op", "query");
+    let resp = if op == "query" {
+        let workload = args.get("workload").ok_or_else(|| {
+            anyhow!("--workload <name> required for --op query (see `mlperf list`)")
+        })?;
+        let scenario = args.get_or("scenario", "baseline");
+        let deadline_ms = match args.get("deadline-ms") {
+            Some(s) => Some(
+                s.parse::<u64>()
+                    .map_err(|_| anyhow!("malformed --deadline-ms {s:?} (milliseconds)"))?,
+            ),
+            None => None,
+        };
+        client.query(workload, &scenario, deadline_ms)?
+    } else {
+        client.op(&op)?
+    };
+    println!("{}", resp.render());
+    if resp.get("ok").and_then(Json::as_bool) == Some(false) {
+        let kind = resp.get("kind").and_then(Json::as_str).unwrap_or("error");
+        let msg = resp.get("error").and_then(Json::as_str).unwrap_or("request failed");
+        bail!("{kind}: {msg}");
+    }
+    Ok(())
 }

@@ -1,0 +1,78 @@
+//! Client side of the serve protocol: connect, frame a request, read
+//! the response. Used by the `mlperf query` subcommand, the soak tests,
+//! and the load-generator bench — all three speak exactly the wire
+//! format in [`crate::serve::protocol`], nothing more.
+
+use std::net::TcpStream;
+use std::path::Path;
+use std::time::Duration;
+
+use crate::serve::daemon::ADDRFILE;
+use crate::serve::protocol;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+
+/// One connection to a serve daemon. Requests are strictly
+/// call-and-response on this connection; open several clients for
+/// concurrency.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    /// Connect to a daemon at `addr` (e.g. `127.0.0.1:7070`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to serve daemon at {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream })
+    }
+
+    /// Bound how long [`Client::call`] waits for a response frame.
+    pub fn set_timeout(&self, timeout: Option<Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Send one request document and read the daemon's response frame.
+    /// A connection the daemon dropped without answering (chaos
+    /// `conn-drop`, or a hard kill) surfaces as a typed error here.
+    pub fn call(&mut self, doc: &Json) -> Result<Json> {
+        protocol::write_frame(&mut self.stream, doc)?;
+        match protocol::read_frame(&mut self.stream)? {
+            Some(resp) => Ok(resp),
+            None => crate::bail!("serve daemon closed the connection without answering"),
+        }
+    }
+
+    /// Build and send a `query` request for one grid cell.
+    pub fn query(
+        &mut self,
+        workload: &str,
+        scenario: &str,
+        deadline_ms: Option<u64>,
+    ) -> Result<Json> {
+        let mut fields = protocol::message("query");
+        fields.push(("workload".to_string(), Json::Str(workload.to_string())));
+        fields.push(("scenario".to_string(), Json::Str(scenario.to_string())));
+        if let Some(ms) = deadline_ms {
+            fields.push(("deadline_ms".to_string(), Json::num(ms as f64)));
+        }
+        self.call(&Json::Obj(fields))
+    }
+
+    /// Send a bare request (`ping`, `stats`, `compact`, `shutdown`).
+    pub fn op(&mut self, op: &str) -> Result<Json> {
+        self.call(&Json::Obj(protocol::message(op)))
+    }
+}
+
+/// Read a daemon's bound address back from its `serve.addr` discovery
+/// file (written at bind, removed on drain) — the handshake that lets
+/// scripts use `--listen 127.0.0.1:0` without parsing daemon stdout.
+pub fn discover_addr(dir: &Path) -> Result<String> {
+    let path = dir.join(ADDRFILE);
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {} (is the daemon running?)", path.display()))?;
+    Ok(text.trim().to_string())
+}

@@ -1,0 +1,851 @@
+//! The `mlperf serve` daemon: grid-as-a-service over the sharded ledger.
+//!
+//! A long-running process that answers `(workload, scenario)` queries
+//! from the [`ShardedLedger`], simulating **only on miss** — and then
+//! only once per fingerprint, no matter how many clients ask
+//! concurrently. The design goal is *degrade, not die*:
+//!
+//! - **Admission control** — at most `queue_depth` queries are in
+//!   flight; everything beyond is shed immediately with a typed
+//!   [`TraceError::overloaded`] rejection instead of queueing
+//!   unboundedly until memory or latency collapses.
+//! - **Deadlines** — every query carries a `deadline_ms` budget
+//!   (defaulting to `--default-deadline`); a query whose budget expires
+//!   gets a typed [`TraceError::deadline`] rejection. A coalesced miss
+//!   keeps simulating even when a waiter times out: the *leader* always
+//!   finishes and appends, so the work is never wasted — the next query
+//!   for that fingerprint is a hit.
+//! - **Request coalescing** — N concurrent misses on one fingerprint
+//!   join a single in-flight [`Flight`]; the batch runner drains every
+//!   pending miss into **one** [`run_jobs_replayed`] call, so distinct
+//!   scenarios of the same workload share a capture via the driver's
+//!   residency-capped fan-out pool.
+//! - **Crash safety** — results live in checksummed ledger shards with
+//!   torn-tail recovery ([`ShardedLedger`]); a `kill -9` mid-serve
+//!   loses at most the record being appended, and a restart answers
+//!   every previously served fingerprint with zero re-simulation. A
+//!   pidfile (`serve.pid`) refuses double-starts; stale locks from a
+//!   crashed daemon are detected and taken over.
+//! - **Graceful drain** — SIGTERM/SIGINT (or a protocol `shutdown`
+//!   request) stops admission, finishes in-flight connections, removes
+//!   the lock files, and exits 0.
+//!
+//! Chaos sites `conn-drop`, `slow-client`, and `serve-kill`
+//! ([`crate::util::fault`]) exercise the recovery paths; serve-stage
+//! spans and counters ([`crate::util::telemetry`]) expose queue depth,
+//! sheds, deadline hits, and coalescing.
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant, SystemTime};
+
+use crate::coordinator::driver::cell_provenance;
+use crate::coordinator::{run_jobs_replayed, ExperimentConfig, Job, Scenario};
+use crate::ledger::{cell_fingerprint, Fingerprint, LedgerRecord, TRACKED};
+use crate::serve::protocol;
+use crate::serve::shard::{ShardedLedger, DEFAULT_SHARDS};
+use crate::trace::TraceError;
+use crate::util::error::{Context, Result};
+use crate::util::fault::{self, Site};
+use crate::util::json::Json;
+use crate::util::telemetry::{self, Counter, Stage};
+use crate::workloads::by_name;
+
+/// Name of the double-start lock file inside the serve directory.
+pub const PIDFILE: &str = "serve.pid";
+
+/// Name of the discovery file holding the daemon's bound address
+/// (written after bind, removed on drain), so scripts and CI can find a
+/// daemon started with `--listen 127.0.0.1:0`.
+pub const ADDRFILE: &str = "serve.addr";
+
+/// Everything `mlperf serve` needs to come up.
+pub struct ServeOptions {
+    /// Bind address; port 0 picks a free port (read it back from
+    /// [`Server::addr`] or the `serve.addr` file).
+    pub listen: String,
+    /// Directory holding the ledger shards and lock files.
+    pub dir: PathBuf,
+    /// Shard count for a fresh directory (existing shards win; see
+    /// [`ShardedLedger::open`]).
+    pub shards: usize,
+    /// Admission bound: queries in flight beyond this are shed.
+    pub queue_depth: usize,
+    /// Deadline applied to queries that do not carry `deadline_ms`.
+    pub default_deadline_ms: u64,
+    /// Threads per miss batch handed to [`run_jobs_replayed`] (0 = auto).
+    pub sim_threads: usize,
+    /// fsync every shard append.
+    pub durable: bool,
+    /// Experiment configuration the daemon simulates under; part of
+    /// every fingerprint, so one daemon serves exactly one config.
+    pub cfg: ExperimentConfig,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            listen: "127.0.0.1:0".to_string(),
+            dir: PathBuf::from("results/serve"),
+            shards: DEFAULT_SHARDS,
+            queue_depth: 64,
+            default_deadline_ms: 5000,
+            sim_threads: 0,
+            durable: false,
+            cfg: ExperimentConfig::default(),
+        }
+    }
+}
+
+/// Outcome of one in-flight miss: the appended record, or a
+/// `(kind, message)` pair mirroring [`TraceError::kind_str`] tags.
+type FlightResult = std::result::Result<LedgerRecord, (String, String)>;
+
+/// One in-flight miss simulation. Concurrent queries for the same
+/// fingerprint share a `Flight` and block on its condvar; the batch
+/// runner publishes exactly once.
+#[derive(Default)]
+struct Flight {
+    slot: Mutex<Option<FlightResult>>,
+    cv: Condvar,
+}
+
+impl Flight {
+    fn publish(&self, result: FlightResult) {
+        let mut slot = lock(&self.slot);
+        *slot = Some(result);
+        self.cv.notify_all();
+    }
+
+    /// Block until the result is published or `deadline` passes
+    /// (`None` = deadline expired; the simulation keeps running).
+    fn wait_until(&self, deadline: Instant) -> Option<FlightResult> {
+        let mut slot = lock(&self.slot);
+        loop {
+            if let Some(result) = slot.as_ref() {
+                return Some(result.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self
+                .cv
+                .wait_timeout(slot, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            slot = guard;
+        }
+    }
+}
+
+/// Pending misses awaiting the batch runner. `runner_active` makes the
+/// first enqueuer the runner; it loops until the queue drains empty
+/// (checked under the same lock, so no miss is ever stranded).
+#[derive(Default)]
+struct MissQueue {
+    queued: Vec<(Fingerprint, Job)>,
+    runner_active: bool,
+}
+
+/// Shared daemon state: config, shards, admission counter, coalescing
+/// map, miss queue, and lifetime counters (the counters mirror the
+/// telemetry ones but are always on, so `stats` works untraced).
+struct ServerState {
+    cfg: ExperimentConfig,
+    ledger: ShardedLedger,
+    dir: PathBuf,
+    queue_depth: usize,
+    default_deadline_ms: u64,
+    sim_threads: usize,
+    draining: AtomicBool,
+    conns: AtomicUsize,
+    admitted: AtomicUsize,
+    flights: Mutex<HashMap<Fingerprint, Arc<Flight>>>,
+    misses: Mutex<MissQueue>,
+    stat_admitted: AtomicU64,
+    stat_shed: AtomicU64,
+    stat_deadline: AtomicU64,
+    stat_hits: AtomicU64,
+    stat_misses: AtomicU64,
+    stat_coalesced: AtomicU64,
+    executions: AtomicU64,
+}
+
+impl ServerState {
+    fn new(opts: ServeOptions, ledger: ShardedLedger) -> ServerState {
+        ServerState {
+            cfg: opts.cfg,
+            ledger,
+            dir: opts.dir,
+            queue_depth: opts.queue_depth.max(1),
+            default_deadline_ms: opts.default_deadline_ms,
+            sim_threads: opts.sim_threads,
+            draining: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            admitted: AtomicUsize::new(0),
+            flights: Mutex::new(HashMap::new()),
+            misses: Mutex::new(MissQueue::default()),
+            stat_admitted: AtomicU64::new(0),
+            stat_shed: AtomicU64::new(0),
+            stat_deadline: AtomicU64::new(0),
+            stat_hits: AtomicU64::new(0),
+            stat_misses: AtomicU64::new(0),
+            stat_coalesced: AtomicU64::new(0),
+            executions: AtomicU64::new(0),
+        }
+    }
+
+    /// Claim an admission slot, or `None` when the queue is full. The
+    /// returned guard releases the slot on drop.
+    fn try_admit(&self) -> Option<Admission<'_>> {
+        let mut cur = self.admitted.load(Ordering::SeqCst);
+        loop {
+            if cur >= self.queue_depth {
+                return None;
+            }
+            match self.admitted.compare_exchange(
+                cur,
+                cur + 1,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            ) {
+                Ok(_) => {
+                    telemetry::maximize(Counter::ServeQueueMax, (cur + 1) as u64);
+                    return Some(Admission { state: self });
+                }
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+}
+
+/// RAII admission slot (see [`ServerState::try_admit`]).
+struct Admission<'a> {
+    state: &'a ServerState,
+}
+
+impl Drop for Admission<'_> {
+    fn drop(&mut self) {
+        self.state.admitted.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// Decrements the live-connection count when a handler thread exits —
+/// by any path, including a panic — so drain can never hang on a
+/// leaked count.
+struct ConnGuard(Arc<ServerState>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.conns.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A bound (but not yet running) serve daemon.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    state: Arc<ServerState>,
+    pidfile: PathBuf,
+}
+
+impl Server {
+    /// Acquire the pidfile lock, open the shards, and bind the listener.
+    /// Fails fast — with the lock released — if another daemon holds the
+    /// directory or the address is taken.
+    pub fn bind(opts: ServeOptions) -> Result<Server> {
+        std::fs::create_dir_all(&opts.dir)
+            .with_context(|| format!("creating serve directory {}", opts.dir.display()))?;
+        let pidfile = acquire_pidfile(&opts.dir)?;
+        match Server::bind_locked(opts, pidfile.clone()) {
+            Ok(server) => Ok(server),
+            Err(e) => {
+                let _ = std::fs::remove_file(&pidfile);
+                Err(e)
+            }
+        }
+    }
+
+    fn bind_locked(opts: ServeOptions, pidfile: PathBuf) -> Result<Server> {
+        let ledger = ShardedLedger::open(&opts.dir, opts.shards)?;
+        ledger.set_durable(opts.durable);
+        let listener = TcpListener::bind(&opts.listen)
+            .with_context(|| format!("binding serve listener on {}", opts.listen))?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        std::fs::write(opts.dir.join(ADDRFILE), format!("{addr}\n"))
+            .context("writing serve.addr discovery file")?;
+        let state = Arc::new(ServerState::new(opts, ledger));
+        Ok(Server { listener, addr, state, pidfile })
+    }
+
+    /// The bound address (useful with `--listen 127.0.0.1:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Accept and serve connections until SIGTERM/SIGINT or a protocol
+    /// `shutdown` request, then drain: stop admitting, let in-flight
+    /// connections finish, remove the lock files, and return `Ok(())`
+    /// (the CLI maps that to exit 0).
+    pub fn run(self) -> Result<()> {
+        install_term_handler();
+        let state = self.state;
+        loop {
+            if term_requested() {
+                state.draining.store(true, Ordering::SeqCst);
+            }
+            if state.draining.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    let _ = stream.set_nodelay(true);
+                    // the read timeout doubles as the drain poll tick:
+                    // idle connections notice `draining` within ~50ms
+                    let _ = stream.set_read_timeout(Some(Duration::from_millis(50)));
+                    state.conns.fetch_add(1, Ordering::SeqCst);
+                    let guard = ConnGuard(Arc::clone(&state));
+                    std::thread::spawn(move || {
+                        telemetry::lane("serve-conn");
+                        let _sp = telemetry::span(Stage::ServeConn);
+                        handle_conn(&guard.0, stream);
+                        drop(guard);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    let _ = std::fs::remove_file(state.dir.join(ADDRFILE));
+                    let _ = std::fs::remove_file(&self.pidfile);
+                    return Err(crate::anyhow!("serve accept failed: {e}"));
+                }
+            }
+        }
+        while state.conns.load(Ordering::SeqCst) > 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let _ = std::fs::remove_file(state.dir.join(ADDRFILE));
+        let _ = std::fs::remove_file(&self.pidfile);
+        Ok(())
+    }
+}
+
+/// Per-connection loop: read a frame, answer it, repeat until the peer
+/// closes, the daemon drains, or a protocol error desyncs the stream.
+fn handle_conn(state: &ServerState, mut stream: TcpStream) {
+    loop {
+        let req = match read_request(state, &mut stream) {
+            Ok(Some(doc)) => doc,
+            Ok(None) | Err(_) => return,
+        };
+        // chaos: drop the connection after reading, before answering —
+        // the client sees EOF, the daemon stays healthy
+        if fault::fired(Site::ConnDrop).is_some() {
+            return;
+        }
+        let op = req.get("op").and_then(Json::as_str).unwrap_or("").to_string();
+        let resp = dispatch(state, &op, &req);
+        if protocol::write_frame(&mut stream, &resp).is_err() {
+            return;
+        }
+        // chaos: hard-kill after fully answering the nth query; the
+        // restart must serve every already-appended fingerprint warm
+        if op == "query" && fault::fired(Site::ServeKill).is_some() {
+            std::process::abort();
+        }
+    }
+}
+
+/// Read one request frame, tolerating read-timeout ticks so an idle
+/// connection notices a drain. `Ok(None)` = peer closed or draining.
+fn read_request(state: &ServerState, stream: &mut TcpStream) -> Result<Option<Json>> {
+    let mut marker = [0u8; 1];
+    loop {
+        match stream.read(&mut marker) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if state.draining.load(Ordering::SeqCst) || term_requested() {
+                    return Ok(None);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    if marker[0] != protocol::FRAME_MARKER {
+        crate::bail!("protocol desync: got 0x{:02X} where a frame marker belonged", marker[0]);
+    }
+    protocol::read_frame_body(stream).map(Some)
+}
+
+fn dispatch(state: &ServerState, op: &str, req: &Json) -> Json {
+    match op {
+        "ping" => ok_response("ping", Vec::new()),
+        "stats" => stats_response(state),
+        "compact" => compact_response(state),
+        "shutdown" => {
+            state.draining.store(true, Ordering::SeqCst);
+            ok_response("shutdown", vec![("draining".to_string(), Json::Bool(true))])
+        }
+        "query" => handle_query(state, req),
+        other => error_response(
+            other,
+            "format",
+            &format!("unknown op {other:?} (see `mlperf list` for the protocol)"),
+        ),
+    }
+}
+
+/// The query path: admit → deadline-check → ledger hit → coalesced
+/// miss. Rejections are typed (`overloaded` / `deadline-exceeded`),
+/// mirroring [`TraceError::kind_str`] on the wire.
+fn handle_query(state: &ServerState, req: &Json) -> Json {
+    let started = Instant::now();
+    let deadline_ms = req
+        .get("deadline_ms")
+        .and_then(Json::as_f64)
+        .map(|v| v.max(0.0) as u64)
+        .unwrap_or(state.default_deadline_ms);
+    let deadline = started + Duration::from_millis(deadline_ms);
+
+    if state.draining.load(Ordering::SeqCst) {
+        return shed_response(state, "daemon is draining; no new queries admitted");
+    }
+    let Some(_slot) = state.try_admit() else {
+        return shed_response(
+            state,
+            &format!("admission queue full ({} queries in flight)", state.queue_depth),
+        );
+    };
+    state.stat_admitted.fetch_add(1, Ordering::SeqCst);
+    telemetry::add(Counter::ServeAdmitted, 1);
+    let _sp = telemetry::span(Stage::ServeRequest);
+
+    // chaos: a client that trickles its request in, holding its
+    // admission slot while doing nothing useful
+    if let Some(ms) = fault::fired(Site::SlowClient) {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+
+    let Some(workload) = req.get("workload").and_then(Json::as_str) else {
+        return error_response("query", "format", "query is missing its \"workload\" field");
+    };
+    let Some(wl) = by_name(workload) else {
+        return error_response(
+            "query",
+            "format",
+            &format!("unknown workload {workload:?} (see `mlperf list`)"),
+        );
+    };
+    let scenario_str = req.get("scenario").and_then(Json::as_str).unwrap_or("baseline");
+    let Some(scenario) = Scenario::parse(scenario_str) else {
+        return error_response(
+            "query",
+            "format",
+            &format!("unknown scenario {scenario_str:?} (see `mlperf list`)"),
+        );
+    };
+    let job = Job::new(wl.name(), scenario);
+    if Instant::now() >= deadline {
+        return deadline_response(state, &job, deadline_ms);
+    }
+
+    let fp = cell_fingerprint(&state.cfg, &job);
+    if let Some(rec) = state.ledger.get(&fp) {
+        state.stat_hits.fetch_add(1, Ordering::SeqCst);
+        telemetry::add(Counter::ServeHit, 1);
+        return record_response(&rec, true, false);
+    }
+
+    // miss: join the in-flight simulation for this fingerprint, or open
+    // one and enqueue the job for the batch runner
+    let (flight, coalesced) = {
+        let mut flights = lock(&state.flights);
+        if let Some(f) = flights.get(&fp) {
+            (Arc::clone(f), true)
+        } else if let Some(rec) = state.ledger.get(&fp) {
+            // a batch runner appends before removing its flight, so a
+            // fingerprint absent from both maps really is a fresh miss;
+            // this re-check under the flights lock closes the race where
+            // the runner finished between our two lookups (without it,
+            // that window would open a second flight and re-simulate)
+            state.stat_hits.fetch_add(1, Ordering::SeqCst);
+            telemetry::add(Counter::ServeHit, 1);
+            return record_response(&rec, true, false);
+        } else {
+            let f = Arc::new(Flight::default());
+            flights.insert(fp, Arc::clone(&f));
+            (f, false)
+        }
+    };
+    let run_now = if coalesced {
+        state.stat_coalesced.fetch_add(1, Ordering::SeqCst);
+        telemetry::add(Counter::ServeCoalesced, 1);
+        false
+    } else {
+        state.stat_misses.fetch_add(1, Ordering::SeqCst);
+        telemetry::add(Counter::ServeMiss, 1);
+        let mut q = lock(&state.misses);
+        q.queued.push((fp, job.clone()));
+        if q.runner_active {
+            false
+        } else {
+            q.runner_active = true;
+            true
+        }
+    };
+    if run_now {
+        run_misses(state);
+    }
+    match flight.wait_until(deadline) {
+        Some(Ok(rec)) => record_response(&rec, false, coalesced),
+        Some(Err((kind, msg))) => error_response("query", &kind, &msg),
+        // the runner keeps simulating and will append the result; only
+        // this waiter's response times out
+        None => deadline_response(state, &job, deadline_ms),
+    }
+}
+
+/// Drain the miss queue in batches: each pass hands **every** pending
+/// miss to one [`run_jobs_replayed`] call, so concurrent misses —
+/// including distinct scenarios of one workload — share captures via
+/// the driver's residency-capped pool. Loops until the queue is empty
+/// (checked under the queue lock, so no enqueuer is stranded).
+fn run_misses(state: &ServerState) {
+    loop {
+        let batch = {
+            let mut q = lock(&state.misses);
+            if q.queued.is_empty() {
+                q.runner_active = false;
+                return;
+            }
+            std::mem::take(&mut q.queued)
+        };
+        let _sp = telemetry::span_labeled(Stage::ServeSim, &format!("{} cell(s)", batch.len()));
+        let jobs: Vec<Job> = batch.iter().map(|(_, job)| job.clone()).collect();
+        let report = run_jobs_replayed(&state.cfg, &jobs, state.sim_threads);
+        state.executions.fetch_add(report.workload_executions as u64, Ordering::SeqCst);
+        let wall_nanos = (report.wall_seconds * 1e9) as u64 / batch.len().max(1) as u64;
+        let unix_secs = SystemTime::now()
+            .duration_since(SystemTime::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        let mut failed: HashMap<usize, (String, String)> =
+            report.failed.into_iter().map(|f| (f.index, (f.kind, f.error))).collect();
+        let mut outputs = report.outputs.into_iter();
+        for (i, (fp, _)) in batch.iter().enumerate() {
+            let result: FlightResult = if let Some((kind, msg)) = failed.remove(&i) {
+                Err((kind, msg))
+            } else {
+                match outputs.next() {
+                    Some(out) => {
+                        let rec = LedgerRecord {
+                            fingerprint: *fp,
+                            provenance: cell_provenance(&state.cfg, &out.job, wall_nanos, unix_secs),
+                            metrics: out.metrics,
+                            quality: out.quality,
+                        };
+                        // append BEFORE removing the flight, so a racing
+                        // query either hits the ledger or finds the flight
+                        match state.ledger.append(rec.clone()) {
+                            Ok(()) => Ok(rec),
+                            Err(e) => Err(("io".to_string(), format!("ledger append failed: {e}"))),
+                        }
+                    }
+                    None => Err((
+                        "panic".to_string(),
+                        "driver returned no output for a non-failed cell".to_string(),
+                    )),
+                }
+            };
+            let flight = lock(&state.flights).remove(fp);
+            if let Some(f) = flight {
+                f.publish(result);
+            }
+        }
+    }
+}
+
+fn shed_response(state: &ServerState, why: &str) -> Json {
+    state.stat_shed.fetch_add(1, Ordering::SeqCst);
+    telemetry::add(Counter::ServeShed, 1);
+    let err = TraceError::overloaded(why);
+    error_response("query", err.kind_str(), &err.to_string())
+}
+
+fn deadline_response(state: &ServerState, job: &Job, deadline_ms: u64) -> Json {
+    state.stat_deadline.fetch_add(1, Ordering::SeqCst);
+    telemetry::add(Counter::ServeDeadline, 1);
+    let err = TraceError::deadline(format!(
+        "deadline of {deadline_ms}ms expired before {} × {} could be answered",
+        job.workload, job.scenario
+    ));
+    error_response("query", err.kind_str(), &err.to_string())
+}
+
+/// A successful query response: provenance identity plus every
+/// [`TRACKED`] metric, rendered with the crate's shortest-roundtrip
+/// float writer — bit-identical to what `mlperf grid` would report.
+fn record_response(rec: &LedgerRecord, cached: bool, coalesced: bool) -> Json {
+    let metrics: Vec<(String, Json)> = TRACKED
+        .iter()
+        .map(|(name, get)| ((*name).to_string(), Json::num(get(&rec.metrics))))
+        .collect();
+    let mut fields = protocol::message("query");
+    fields.push(("ok".to_string(), Json::Bool(true)));
+    fields.push(("cached".to_string(), Json::Bool(cached)));
+    fields.push(("coalesced".to_string(), Json::Bool(coalesced)));
+    fields.push(("workload".to_string(), Json::Str(rec.provenance.workload.clone())));
+    fields.push(("scenario".to_string(), Json::Str(rec.provenance.scenario.clone())));
+    fields.push(("fingerprint".to_string(), Json::Str(rec.fingerprint.to_string())));
+    fields.push(("quality".to_string(), rec.quality.map_or(Json::Null, Json::num)));
+    fields.push(("metrics".to_string(), Json::Obj(metrics)));
+    Json::Obj(fields)
+}
+
+fn ok_response(op: &str, extra: Vec<(String, Json)>) -> Json {
+    let mut fields = protocol::message(op);
+    fields.push(("ok".to_string(), Json::Bool(true)));
+    fields.extend(extra);
+    Json::Obj(fields)
+}
+
+fn error_response(op: &str, kind: &str, msg: &str) -> Json {
+    let mut fields = protocol::message(op);
+    fields.push(("ok".to_string(), Json::Bool(false)));
+    fields.push(("kind".to_string(), Json::Str(kind.to_string())));
+    fields.push(("error".to_string(), Json::Str(msg.to_string())));
+    Json::Obj(fields)
+}
+
+fn stats_response(state: &ServerState) -> Json {
+    let shards: Vec<Json> = state
+        .ledger
+        .stats()
+        .iter()
+        .map(|s| {
+            Json::Obj(vec![
+                ("records".to_string(), Json::num(s.records as f64)),
+                ("unique".to_string(), Json::num(s.unique as f64)),
+                ("superseded".to_string(), Json::num(s.superseded as f64)),
+                ("file_bytes".to_string(), Json::num(s.file_bytes as f64)),
+                ("recovered_tail_bytes".to_string(), Json::num(s.recovered_tail_bytes as f64)),
+            ])
+        })
+        .collect();
+    let c = |a: &AtomicU64| Json::num(a.load(Ordering::SeqCst) as f64);
+    ok_response(
+        "stats",
+        vec![
+            ("draining".to_string(), Json::Bool(state.draining.load(Ordering::SeqCst))),
+            ("queue_depth".to_string(), Json::num(state.admitted.load(Ordering::SeqCst) as f64)),
+            ("queue_cap".to_string(), Json::num(state.queue_depth as f64)),
+            ("default_deadline_ms".to_string(), Json::num(state.default_deadline_ms as f64)),
+            ("admitted".to_string(), c(&state.stat_admitted)),
+            ("shed".to_string(), c(&state.stat_shed)),
+            ("deadline_misses".to_string(), c(&state.stat_deadline)),
+            ("hits".to_string(), c(&state.stat_hits)),
+            ("misses".to_string(), c(&state.stat_misses)),
+            ("coalesced".to_string(), c(&state.stat_coalesced)),
+            ("workload_executions".to_string(), c(&state.executions)),
+            ("unique_cells".to_string(), Json::num(state.ledger.total_unique() as f64)),
+            ("total_records".to_string(), Json::num(state.ledger.total_records() as f64)),
+            ("shards".to_string(), Json::Arr(shards)),
+        ],
+    )
+}
+
+fn compact_response(state: &ServerState) -> Json {
+    match state.ledger.compact_all() {
+        Ok(reports) => {
+            let arr: Vec<Json> = reports
+                .iter()
+                .map(|r| {
+                    Json::Obj(vec![
+                        ("records_before".to_string(), Json::num(r.records_before as f64)),
+                        ("records_after".to_string(), Json::num(r.records_after as f64)),
+                        ("bytes_before".to_string(), Json::num(r.bytes_before as f64)),
+                        ("bytes_after".to_string(), Json::num(r.bytes_after as f64)),
+                    ])
+                })
+                .collect();
+            ok_response("compact", vec![("shards".to_string(), Json::Arr(arr))])
+        }
+        Err(e) => error_response("compact", "io", &e.to_string()),
+    }
+}
+
+/// Create `serve.pid` exclusively. An existing file whose recorded pid
+/// is still alive refuses the start; a stale lock (crashed daemon) is
+/// removed and taken over.
+fn acquire_pidfile(dir: &Path) -> Result<PathBuf> {
+    let path = dir.join(PIDFILE);
+    loop {
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&path) {
+            Ok(mut f) => {
+                use std::io::Write as _;
+                writeln!(f, "{}", std::process::id())?;
+                return Ok(path);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                let holder = std::fs::read_to_string(&path)
+                    .unwrap_or_default()
+                    .trim()
+                    .parse::<u32>()
+                    .ok();
+                if let Some(pid) = holder {
+                    if pid_alive(pid) {
+                        crate::bail!(
+                            "serve daemon already running (pid {pid} holds {})",
+                            path.display()
+                        );
+                    }
+                }
+                // unreadable or dead holder: a crashed daemon left the
+                // lock behind — take it over
+                std::fs::remove_file(&path)
+                    .with_context(|| format!("removing stale pidfile {}", path.display()))?;
+            }
+            Err(e) => {
+                return Err(crate::anyhow!("creating pidfile {}: {e}", path.display()));
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn pid_alive(pid: u32) -> bool {
+    Path::new(&format!("/proc/{pid}")).exists()
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pid_alive(_pid: u32) -> bool {
+    // no cheap liveness probe: be conservative and never steal the lock
+    true
+}
+
+static TERM: AtomicBool = AtomicBool::new(false);
+
+fn term_requested() -> bool {
+    TERM.load(Ordering::SeqCst)
+}
+
+/// Route SIGTERM/SIGINT to a flag the accept loop polls (the listener
+/// is non-blocking, so no syscall restarts to worry about). The handler
+/// body is a single atomic store — async-signal-safe by construction.
+#[cfg(unix)]
+fn install_term_handler() {
+    extern "C" fn on_term(_sig: i32) {
+        TERM.store(true, Ordering::SeqCst);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    // SIGTERM = 15, SIGINT = 2 on every unix this crate targets
+    unsafe {
+        signal(15, on_term);
+        signal(2, on_term);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_term_handler() {}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("mlperf-serve-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn test_state(dir: &Path, queue_depth: usize) -> ServerState {
+        let ledger = ShardedLedger::open(dir, 2).unwrap();
+        let opts = ServeOptions {
+            dir: dir.to_path_buf(),
+            queue_depth,
+            ..ServeOptions::default()
+        };
+        ServerState::new(opts, ledger)
+    }
+
+    #[test]
+    fn admission_is_bounded_and_slots_release_on_drop() {
+        let dir = tmpdir("admit");
+        let state = test_state(&dir, 2);
+        let a = state.try_admit().expect("slot 1");
+        let _b = state.try_admit().expect("slot 2");
+        assert!(state.try_admit().is_none(), "third query must be shed");
+        drop(a);
+        assert!(state.try_admit().is_some(), "released slot must be reusable");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pidfile_blocks_double_start_and_recovers_stale_locks() {
+        let dir = tmpdir("pidfile");
+        let lock = acquire_pidfile(&dir).expect("first acquire");
+        let err = acquire_pidfile(&dir).unwrap_err().to_string();
+        assert!(err.contains("already running"), "{err}");
+        std::fs::remove_file(&lock).unwrap();
+
+        // a lock held by a long-dead pid is stale: takeover succeeds
+        std::fs::write(dir.join(PIDFILE), "4000000000\n").unwrap();
+        let lock = acquire_pidfile(&dir).expect("stale lock takeover");
+        let holder: u32 =
+            std::fs::read_to_string(&lock).unwrap().trim().parse().unwrap();
+        assert_eq!(holder, std::process::id());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn flight_waiters_see_published_results_and_deadlines_expire() {
+        let flight = Arc::new(Flight::default());
+        // an already-expired deadline returns None without blocking
+        assert!(flight.wait_until(Instant::now()).is_none());
+
+        let waiter = {
+            let flight = Arc::clone(&flight);
+            std::thread::spawn(move || {
+                flight.wait_until(Instant::now() + Duration::from_secs(30))
+            })
+        };
+        flight.publish(Err(("io".to_string(), "boom".to_string())));
+        let got = waiter.join().unwrap().expect("published before deadline");
+        assert_eq!(got.unwrap_err().0, "io");
+    }
+
+    #[test]
+    fn typed_rejections_carry_trace_error_tags() {
+        let dir = tmpdir("reject");
+        let state = test_state(&dir, 1);
+        let shed = shed_response(&state, "queue full");
+        assert_eq!(shed.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(shed.get("kind").and_then(Json::as_str), Some("overloaded"));
+        let job = Job::new("KMeans", Scenario::Baseline);
+        let dl = deadline_response(&state, &job, 0);
+        assert_eq!(dl.get("kind").and_then(Json::as_str), Some("deadline-exceeded"));
+        assert_eq!(state.stat_shed.load(Ordering::SeqCst), 1);
+        assert_eq!(state.stat_deadline.load(Ordering::SeqCst), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,31 @@
+//! Grid-as-a-service: the `mlperf serve` daemon, its wire protocol,
+//! and the sharded ledger it serves from.
+//!
+//! `mlperf grid` re-derives its world on every invocation; `serve`
+//! keeps the world resident and answers `(workload, scenario)` queries
+//! over TCP, simulating only on ledger miss and never twice for one
+//! fingerprint. The layer decomposes as:
+//!
+//! - [`protocol`] — length-prefixed, checksummed, versioned JSON frames
+//!   (marker `0xE5`, mirroring the ledger's on-disk discipline).
+//! - [`shard`] — the [`ShardedLedger`]: N independently locked,
+//!   independently crash-recoverable `.mllg` shards keyed by
+//!   fingerprint hash.
+//! - [`daemon`] — admission control, per-query deadlines, miss
+//!   coalescing onto the replay fan-out pool, SIGTERM drain, pidfile.
+//! - [`client`] — the `mlperf query` side: connect, frame, parse.
+//!
+//! Overload and faults degrade service (typed `overloaded` /
+//! `deadline-exceeded` rejections, dropped connections) instead of
+//! killing it; a `kill -9` costs at most one in-flight append, and a
+//! restart serves every prior query warm from the shards.
+
+pub mod client;
+pub mod daemon;
+pub mod protocol;
+pub mod shard;
+
+pub use client::{discover_addr, Client};
+pub use daemon::{ServeOptions, Server, ADDRFILE, PIDFILE};
+pub use protocol::{FRAME_MARKER, MAX_FRAME, OPS, PROTOCOL_VERSION};
+pub use shard::{ShardedLedger, DEFAULT_SHARDS};

@@ -1,0 +1,208 @@
+//! Wire protocol for the serve daemon: length-prefixed, checksummed
+//! JSON frames over a byte stream.
+//!
+//! Every message — request or response, either direction — is one
+//! frame:
+//!
+//! ```text
+//! 0xE5 · payload_len u32 LE · fnv1a64(payload) u64 LE · payload
+//! ```
+//!
+//! built from the same primitives as the crate's on-disk containers
+//! ([`crate::util::binio`]); the payload is a single JSON document
+//! ([`crate::util::json`]) whose top-level object always carries a
+//! `"v"` field equal to [`PROTOCOL_VERSION`]. [`read_frame`] verifies
+//! marker, bound, checksum, and version before handing the document to
+//! the caller, so a corrupt or cross-version peer surfaces as one typed
+//! error instead of undefined downstream parsing.
+
+use std::io::{Read, Write};
+
+use crate::bail;
+use crate::util::binio::{fnv1a64, read_u32, read_u64};
+use crate::util::error::Result;
+use crate::util::json::Json;
+
+/// Version tag every frame payload carries; bump on any incompatible
+/// change to the frame format or the request/response vocabulary.
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Leading marker byte of every frame (mirrors the ledger's `0xE1`
+/// record marker discipline: a desynced stream fails fast).
+pub const FRAME_MARKER: u8 = 0xE5;
+
+/// Upper bound on a frame payload — a query or response is a few KiB;
+/// anything near this bound is a desynced or malicious peer.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// The request operations the daemon understands, paired with a short
+/// description (rendered by `mlperf list`).
+pub const OPS: &[(&str, &str)] = &[
+    ("query", "answer one (workload, scenario) cell from the sharded ledger, simulating on miss"),
+    ("stats", "daemon counters, shard stats, and the serving configuration"),
+    ("compact", "compact every ledger shard in parallel"),
+    ("ping", "liveness probe"),
+    ("shutdown", "stop admitting, drain in-flight work, exit 0"),
+];
+
+/// Build a request/response skeleton: the version field plus `op`.
+pub fn message(op: &str) -> Vec<(String, Json)> {
+    vec![
+        ("v".to_string(), Json::Num(f64::from(PROTOCOL_VERSION))),
+        ("op".to_string(), Json::Str(op.to_string())),
+    ]
+}
+
+/// Serialize `doc` as one frame onto `w` (single `write_all`, then
+/// flush, so a frame is never interleaved with another writer's bytes).
+pub fn write_frame<W: Write>(w: &mut W, doc: &Json) -> Result<()> {
+    let payload = doc.render().into_bytes();
+    if payload.len() > MAX_FRAME {
+        bail!("protocol frame too large ({} bytes > {MAX_FRAME})", payload.len());
+    }
+    let mut frame = Vec::with_capacity(13 + payload.len());
+    frame.push(FRAME_MARKER);
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&fnv1a64(&payload).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    w.write_all(&frame)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame from `r`. Returns `Ok(None)` on a clean end of
+/// stream (the peer closed between frames); any partial frame, bad
+/// marker, oversized length, checksum mismatch, or version mismatch is
+/// an error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Json>> {
+    // distinguish clean EOF (no marker byte at all) from a torn frame
+    let mut marker = [0u8; 1];
+    loop {
+        match r.read(&mut marker) {
+            Ok(0) => return Ok(None),
+            Ok(_) => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    if marker[0] != FRAME_MARKER {
+        bail!("protocol desync: expected frame marker 0x{FRAME_MARKER:02X}, got 0x{:02X}", marker[0]);
+    }
+    read_frame_body(r).map(Some)
+}
+
+/// Read the remainder of a frame once the caller has already consumed
+/// (and verified) the marker byte. The daemon's connection loop reads
+/// the marker itself — with a read timeout, so idle connections can
+/// notice a drain — and hands the stream here.
+pub fn read_frame_body<R: Read>(r: &mut R) -> Result<Json> {
+    let len = read_u32(r)? as usize;
+    if len > MAX_FRAME {
+        bail!("protocol frame length {len} exceeds the {MAX_FRAME}-byte bound");
+    }
+    let sum = read_u64(r)?;
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    if fnv1a64(&payload) != sum {
+        bail!("protocol frame checksum mismatch ({len}-byte payload)");
+    }
+    let text = std::str::from_utf8(&payload)
+        .map_err(|_| crate::anyhow!("protocol frame payload is not UTF-8"))?;
+    let doc = Json::parse(text)
+        .map_err(|e| crate::anyhow!("protocol frame payload is not valid JSON: {e}"))?;
+    match doc.get("v").and_then(Json::as_f64) {
+        Some(v) if v == f64::from(PROTOCOL_VERSION) => Ok(doc),
+        Some(v) => bail!(
+            "protocol version mismatch: peer speaks v{v}, this build speaks v{PROTOCOL_VERSION}"
+        ),
+        None => bail!("protocol frame is missing its \"v\" version field"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(doc: &Json) -> Json {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, doc).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        read_frame(&mut cur).unwrap().expect("one frame present")
+    }
+
+    #[test]
+    fn frames_roundtrip_bit_exactly() {
+        let mut fields = message("query");
+        fields.push(("workload".into(), Json::Str("KMeans".into())));
+        fields.push(("cpi".into(), Json::Num(1.0 / 3.0)));
+        let doc = Json::Obj(fields);
+        let back = roundtrip(&doc);
+        assert_eq!(back, doc);
+        let cpi = back.get("cpi").unwrap().as_f64().unwrap();
+        assert_eq!(cpi.to_bits(), (1.0f64 / 3.0).to_bits(), "f64 must survive the wire exactly");
+    }
+
+    #[test]
+    fn clean_eof_is_none_torn_frame_is_error() {
+        let mut empty = std::io::Cursor::new(Vec::new());
+        assert!(read_frame(&mut empty).unwrap().is_none());
+
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::Obj(message("ping"))).unwrap();
+        buf.truncate(buf.len() - 3);
+        let mut cur = std::io::Cursor::new(buf);
+        assert!(read_frame(&mut cur).is_err(), "torn frame must not read as EOF");
+    }
+
+    #[test]
+    fn corruption_and_desync_are_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Json::Obj(message("ping"))).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0x40;
+        let mut cur = std::io::Cursor::new(buf.clone());
+        let err = read_frame(&mut cur).unwrap_err().to_string();
+        assert!(err.contains("checksum mismatch"), "{err}");
+
+        buf[0] = 0x00;
+        let mut cur = std::io::Cursor::new(buf);
+        let err = read_frame(&mut cur).unwrap_err().to_string();
+        assert!(err.contains("desync"), "{err}");
+    }
+
+    #[test]
+    fn version_mismatch_is_a_typed_refusal() {
+        let doc = Json::Obj(vec![
+            ("v".to_string(), Json::Num(99.0)),
+            ("op".to_string(), Json::Str("ping".to_string())),
+        ]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &doc).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        let err = read_frame(&mut cur).unwrap_err().to_string();
+        assert!(err.contains("version mismatch"), "{err}");
+        assert!(err.contains("v99"), "{err}");
+
+        let unversioned = Json::Obj(vec![("op".to_string(), Json::Str("ping".to_string()))]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &unversioned).unwrap();
+        let mut cur = std::io::Cursor::new(buf);
+        let err = read_frame(&mut cur).unwrap_err().to_string();
+        assert!(err.contains("version field"), "{err}");
+    }
+
+    #[test]
+    fn oversized_frames_are_refused_on_both_sides() {
+        let big = Json::Str("x".repeat(MAX_FRAME + 1));
+        let mut buf = Vec::new();
+        assert!(write_frame(&mut buf, &big).is_err());
+
+        // hand-build a header claiming an absurd length
+        let mut forged = vec![FRAME_MARKER];
+        forged.extend_from_slice(&(u32::MAX).to_le_bytes());
+        forged.extend_from_slice(&0u64.to_le_bytes());
+        let mut cur = std::io::Cursor::new(forged);
+        let err = read_frame(&mut cur).unwrap_err().to_string();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+}

@@ -1,0 +1,262 @@
+//! Fingerprint-sharded ledger directory for the serve daemon.
+//!
+//! One monolithic `.mllg` file serializes every append behind a single
+//! lock and makes compaction a stop-the-world rewrite. The daemon
+//! instead keeps `N` independent [`Ledger`] shards in one directory
+//! (`shard-00.mllg` … `shard-NN.mllg`), routing each record by
+//! `fingerprint.hash % N`:
+//!
+//! - **Concurrency** — appends to different shards proceed in parallel
+//!   (one mutex per shard, not per store).
+//! - **Crash safety for free** — every shard is a full PR 4/8 ledger:
+//!   checksummed frames, torn-tail truncation on open, temp+fsync+rename
+//!   compaction. A kill mid-append tears at most one shard's tail; every
+//!   other shard recovers untouched.
+//! - **Parallel compaction** — shards compact independently, one thread
+//!   per shard.
+//!
+//! The shard count is fixed at directory creation: on reopen the files
+//! on disk win over the requested count (a restart with a different
+//! `--shards` flag must not orphan records by re-routing fingerprints).
+
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+
+use crate::ledger::{CompactionReport, Fingerprint, Ledger, LedgerRecord, LedgerStats};
+use crate::util::error::{Context, Result};
+
+/// Default shard count for a fresh serve directory: enough to keep a
+/// handful of concurrent appenders out of each other's way without
+/// scattering a small grid across dozens of files.
+pub const DEFAULT_SHARDS: usize = 4;
+
+/// A directory of independently locked, independently recoverable
+/// ledger shards.
+pub struct ShardedLedger {
+    dir: PathBuf,
+    shards: Vec<Mutex<Ledger>>,
+}
+
+impl ShardedLedger {
+    /// Open (or create) the shard directory. `requested` is honored only
+    /// when the directory holds no shards yet; existing shard files fix
+    /// the count permanently (see the module docs).
+    pub fn open(dir: &Path, requested: usize) -> Result<ShardedLedger> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating serve ledger directory {}", dir.display()))?;
+        let existing = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| {
+                let name = e.file_name();
+                let name = name.to_string_lossy();
+                name.starts_with("shard-") && name.ends_with(".mllg")
+            })
+            .count();
+        let n = if existing > 0 { existing } else { requested.max(1) };
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let path = dir.join(format!("shard-{i:02}.mllg"));
+            let ledger = Ledger::open(&path)
+                .with_context(|| format!("opening ledger shard {}", path.display()))?;
+            shards.push(Mutex::new(ledger));
+        }
+        Ok(ShardedLedger { dir: dir.to_path_buf(), shards })
+    }
+
+    /// The directory holding the shards.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Number of shards (fixed for the directory's lifetime).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// fsync every shard append when `durable` is set.
+    pub fn set_durable(&self, durable: bool) {
+        for shard in &self.shards {
+            lock(shard).set_durable(durable);
+        }
+    }
+
+    fn shard_of(&self, fp: &Fingerprint) -> usize {
+        (fp.hash % self.shards.len() as u64) as usize
+    }
+
+    /// Latest record for `fp`, if any shard holds one.
+    pub fn get(&self, fp: &Fingerprint) -> Option<LedgerRecord> {
+        lock(&self.shards[self.shard_of(fp)]).get(fp).cloned()
+    }
+
+    /// Append `rec` to its fingerprint's shard.
+    pub fn append(&self, rec: LedgerRecord) -> Result<()> {
+        lock(&self.shards[self.shard_of(&rec.fingerprint)]).append(rec)
+    }
+
+    /// Per-shard stats, in shard order.
+    pub fn stats(&self) -> Vec<LedgerStats> {
+        self.shards.iter().map(|s| lock(s).stats()).collect()
+    }
+
+    /// Unique fingerprints across all shards (shards never overlap, so
+    /// the per-shard uniques simply add up).
+    pub fn total_unique(&self) -> usize {
+        self.stats().iter().map(|s| s.unique).sum()
+    }
+
+    /// Total records (including superseded duplicates) across shards.
+    pub fn total_records(&self) -> usize {
+        self.stats().iter().map(|s| s.records).sum()
+    }
+
+    /// Compact every shard, one thread per shard. Each compaction is
+    /// individually crash-atomic (temp + fsync + rename), so a kill mid
+    /// way leaves every shard either compacted or byte-intact.
+    pub fn compact_all(&self) -> Result<Vec<CompactionReport>> {
+        let results: Vec<Result<CompactionReport>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .shards
+                .iter()
+                .map(|shard| scope.spawn(move || lock(shard).compact()))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("compaction thread panicked")).collect()
+        });
+        let mut reports = Vec::with_capacity(results.len());
+        for (i, r) in results.into_iter().enumerate() {
+            reports.push(r.with_context(|| format!("compacting shard {i:02}"))?);
+        }
+        Ok(reports)
+    }
+}
+
+fn lock(m: &Mutex<Ledger>) -> MutexGuard<'_, Ledger> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ledger::Provenance;
+    use crate::sim::Metrics;
+
+    fn record(tag: u64) -> LedgerRecord {
+        let metrics = Metrics {
+            cpi: 1.0 + tag as f64 * 0.25,
+            instructions: tag * 1000,
+            ..Metrics::default()
+        };
+        LedgerRecord {
+            fingerprint: Fingerprint { version: 1, hash: tag.wrapping_mul(0x9E37_79B9_7F4A_7C15) },
+            provenance: Provenance {
+                workload: format!("W{tag}"),
+                scenario: "baseline".into(),
+                profile: "Sklearn".into(),
+                rows: 64,
+                features: 4,
+                iterations: 1,
+                seed: tag,
+                dataset_bytes: 2048,
+                wall_nanos: 10,
+                unix_secs: 0,
+            },
+            metrics,
+            quality: Some(tag as f64),
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mlperf-shard-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn records_route_by_fingerprint_and_read_back_bit_exactly() {
+        let dir = tmpdir("route");
+        let store = ShardedLedger::open(&dir, 4).unwrap();
+        assert_eq!(store.shard_count(), 4);
+        let records: Vec<LedgerRecord> = (0..16).map(record).collect();
+        for r in &records {
+            store.append(r.clone()).unwrap();
+        }
+        assert_eq!(store.total_unique(), 16);
+        // every shard holds exactly the fingerprints that hash to it
+        for r in &records {
+            let got = store.get(&r.fingerprint).expect("record present");
+            assert_eq!(got.fingerprint, r.fingerprint);
+            assert_eq!(got.metrics.cpi.to_bits(), r.metrics.cpi.to_bits());
+            assert_eq!(got.quality, r.quality);
+        }
+        // 16 mixed hashes should touch more than one shard
+        let populated = store.stats().iter().filter(|s| s.records > 0).count();
+        assert!(populated > 1, "all records landed in one shard");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_preserves_shard_count_over_requested() {
+        let dir = tmpdir("reopen");
+        {
+            let store = ShardedLedger::open(&dir, 3).unwrap();
+            for i in 0..8 {
+                store.append(record(i)).unwrap();
+            }
+        }
+        // a restart asking for a different count must keep the 3 on disk
+        let store = ShardedLedger::open(&dir, 8).unwrap();
+        assert_eq!(store.shard_count(), 3, "files on disk fix the shard count");
+        assert_eq!(store.total_unique(), 8, "every record survives the reopen");
+        for i in 0..8 {
+            assert!(store.get(&record(i).fingerprint).is_some());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn parallel_compaction_drops_superseded_records_in_every_shard() {
+        let dir = tmpdir("compact");
+        let store = ShardedLedger::open(&dir, 2).unwrap();
+        for i in 0..6 {
+            store.append(record(i)).unwrap();
+            store.append(record(i)).unwrap(); // superseding duplicate
+        }
+        assert_eq!(store.total_records(), 12);
+        assert_eq!(store.total_unique(), 6);
+        let reports = store.compact_all().unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports.iter().map(|r| r.records_before).sum::<usize>(), 12);
+        assert_eq!(reports.iter().map(|r| r.records_after).sum::<usize>(), 6);
+        // compacted shards still answer every fingerprint
+        for i in 0..6 {
+            assert!(store.get(&record(i).fingerprint).is_some(), "record {i} lost");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_shard_tail_recovers_without_touching_peers() {
+        let dir = tmpdir("torn");
+        let (damaged_path, survivors) = {
+            let store = ShardedLedger::open(&dir, 2).unwrap();
+            let records: Vec<LedgerRecord> = (0..8).map(record).collect();
+            for r in &records {
+                store.append(r.clone()).unwrap();
+            }
+            let idx = store.shard_of(&records[0].fingerprint);
+            (dir.join(format!("shard-{idx:02}.mllg")), records)
+        };
+        // tear the tail of one shard
+        let bytes = std::fs::read(&damaged_path).unwrap();
+        std::fs::write(&damaged_path, &bytes[..bytes.len() - 5]).unwrap();
+
+        let store = ShardedLedger::open(&dir, 2).unwrap();
+        let stats = store.stats();
+        assert_eq!(stats.iter().filter(|s| s.recovered_tail_bytes > 0).count(), 1);
+        // exactly one record (the torn tail) is gone; the rest answer
+        let answered =
+            survivors.iter().filter(|r| store.get(&r.fingerprint).is_some()).count();
+        assert_eq!(answered, survivors.len() - 1, "only the torn record may be lost");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -55,6 +55,13 @@ pub enum TraceErrorKind {
     /// A worker thread (pipelined-ingest decoder) panicked; converted
     /// to an error instead of tearing down the process.
     WorkerPanic,
+    /// The serve daemon's admission queue was full: the request was shed
+    /// immediately instead of queueing unboundedly. Permanent for this
+    /// request — the client may retry against a less-loaded daemon.
+    Overloaded,
+    /// The request's deadline expired before (or while) the daemon could
+    /// answer it. Permanent for this request.
+    DeadlineExceeded,
 }
 
 /// A classified trace-layer failure: a [`TraceErrorKind`] plus a
@@ -96,6 +103,16 @@ impl TraceError {
         TraceError { kind: TraceErrorKind::WorkerPanic, msg: msg.into() }
     }
 
+    /// Admission queue full — the daemon shed this request.
+    pub fn overloaded(msg: impl Into<String>) -> Self {
+        TraceError { kind: TraceErrorKind::Overloaded, msg: msg.into() }
+    }
+
+    /// The request's deadline expired before an answer was produced.
+    pub fn deadline(msg: impl Into<String>) -> Self {
+        TraceError { kind: TraceErrorKind::DeadlineExceeded, msg: msg.into() }
+    }
+
     /// Classify a `std::io::Error`: EINTR-class kinds are transient,
     /// unexpected EOF is a truncation, the rest are permanent I/O.
     pub fn from_io(e: std::io::Error, what: &str) -> Self {
@@ -129,6 +146,8 @@ impl TraceError {
             TraceErrorKind::Io { transient: false } => "io",
             TraceErrorKind::Format => "format",
             TraceErrorKind::WorkerPanic => "worker-panic",
+            TraceErrorKind::Overloaded => "overloaded",
+            TraceErrorKind::DeadlineExceeded => "deadline-exceeded",
         }
     }
 
@@ -191,6 +210,20 @@ mod tests {
         }
         let msg = outer().unwrap_err().to_string();
         assert!(msg.contains("version 9"), "{msg}");
+    }
+
+    #[test]
+    fn serve_rejections_are_typed_and_permanent() {
+        let shed = TraceError::overloaded("queue full (depth 64)");
+        assert_eq!(shed.kind(), TraceErrorKind::Overloaded);
+        assert_eq!(shed.kind_str(), "overloaded");
+        assert!(!shed.is_transient(), "a shed request must not be auto-retried");
+
+        let late = TraceError::deadline("deadline 50ms exceeded").ctx("query KMeans/baseline");
+        assert_eq!(late.kind(), TraceErrorKind::DeadlineExceeded);
+        assert_eq!(late.kind_str(), "deadline-exceeded");
+        assert!(!late.is_transient());
+        assert_eq!(late.to_string(), "query KMeans/baseline: deadline 50ms exceeded");
     }
 
     #[test]

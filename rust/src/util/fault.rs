@@ -76,6 +76,18 @@ pub enum Site {
     /// nth successful ledger append — a real mid-run kill for the
     /// crash/resume story (only reachable through the CLI).
     GridKill,
+    /// The serve daemon drops a client connection without replying,
+    /// modelling a client that vanished (or a network partition) mid
+    /// request. The daemon must survive and keep serving its peers.
+    ConnDrop,
+    /// The serve daemon's connection handler sleeps `param` milliseconds
+    /// before answering, modelling a slow client holding its admission
+    /// slot — a straggler, not an error.
+    SlowClient,
+    /// The serve daemon calls `std::process::abort()` immediately after
+    /// answering the nth request — a real mid-serve kill for the
+    /// crash/restart-from-shards story.
+    ServeKill,
 }
 
 /// Every site paired with its spec-grammar name, in parse priority order.
@@ -92,9 +104,12 @@ pub const SITES: &[(Site, &str)] = &[
     (Site::LedgerAppendKill, "ledger-append-kill"),
     (Site::LedgerCompactKill, "ledger-compact-kill"),
     (Site::GridKill, "grid-kill"),
+    (Site::ConnDrop, "conn-drop"),
+    (Site::SlowClient, "slow-client"),
+    (Site::ServeKill, "serve-kill"),
 ];
 
-const SITE_COUNT: usize = 12;
+const SITE_COUNT: usize = 15;
 
 impl Site {
     fn index(self) -> usize {
@@ -295,8 +310,9 @@ impl fmt::Display for FaultPlan {
 
 fn default_param(site: Site) -> u64 {
     match site {
-        // stall duration in milliseconds
+        // stall / slow-client duration in milliseconds
         Site::Stall => 25,
+        Site::SlowClient => 25,
         _ => 0,
     }
 }
@@ -389,6 +405,19 @@ mod tests {
         // stall default param is 25ms when '=' is omitted
         let q = FaultPlan::parse("stall@1").unwrap();
         assert_eq!(q.check(Site::Stall), Some(25));
+    }
+
+    #[test]
+    fn serve_sites_parse_and_roundtrip() {
+        let spec = "seed=9;conn-drop@1;slow-client@2=100;serve-kill@3";
+        let p = FaultPlan::parse(spec).unwrap();
+        assert_eq!(p.rule_count(), 3);
+        assert_eq!(p.to_string(), spec);
+        // slow-client shares the stall default (25ms) when '=' is omitted
+        let q = FaultPlan::parse("slow-client@1").unwrap();
+        assert_eq!(q.check(Site::SlowClient), Some(25));
+        assert_eq!(Site::ServeKill.name(), "serve-kill");
+        assert_eq!(Site::by_name("conn-drop"), Some(Site::ConnDrop));
     }
 
     #[test]

@@ -65,6 +65,12 @@ pub enum Stage {
     Window,
     /// Cache-geometry sweep: one workload's single-pass stack profile.
     SweepCell,
+    /// Serve daemon: one client connection, accept to close.
+    ServeConn,
+    /// Serve daemon: one admitted request, admission to reply.
+    ServeRequest,
+    /// Serve daemon: one coalesced miss simulation (leader only).
+    ServeSim,
 }
 
 /// Name table for [`Stage`] (exporter vocabulary), index-aligned with
@@ -81,9 +87,12 @@ pub const STAGES: &[(Stage, &str)] = &[
     (Stage::LedgerCompact, "ledger-compact"),
     (Stage::Window, "sample-window"),
     (Stage::SweepCell, "sweep-cell"),
+    (Stage::ServeConn, "serve-conn"),
+    (Stage::ServeRequest, "serve-request"),
+    (Stage::ServeSim, "serve-sim"),
 ];
 
-const STAGE_COUNT: usize = 11;
+const STAGE_COUNT: usize = 14;
 
 impl Stage {
     /// Stable exporter name (see [`STAGES`]).
@@ -124,6 +133,21 @@ pub enum Counter {
     /// Spans discarded because the buffer hit its cap (`MAX_SPANS`);
     /// per-stage totals still include them.
     SpansDropped,
+    /// Serve: requests admitted past admission control.
+    ServeAdmitted,
+    /// Serve: requests shed with a typed `Overloaded` rejection.
+    ServeShed,
+    /// Serve: requests rejected (or abandoned) on an expired deadline.
+    ServeDeadline,
+    /// Serve: queries answered from the sharded ledger without running.
+    ServeHit,
+    /// Serve: queries that required a simulation (coalition leaders).
+    ServeMiss,
+    /// Serve: queries that rode another in-flight simulation of the
+    /// same fingerprint instead of starting their own.
+    ServeCoalesced,
+    /// Serve: deepest concurrent admission depth observed (maximize).
+    ServeQueueMax,
 }
 
 /// Name table for [`Counter`], index-aligned with the atomic slots.
@@ -140,9 +164,16 @@ pub const COUNTERS: &[(Counter, &str)] = &[
     (Counter::LedgerRetry, "ledger_retry"),
     (Counter::BackoffNanos, "backoff_nanos"),
     (Counter::SpansDropped, "spans_dropped"),
+    (Counter::ServeAdmitted, "serve_admitted"),
+    (Counter::ServeShed, "serve_shed"),
+    (Counter::ServeDeadline, "serve_deadline"),
+    (Counter::ServeHit, "serve_hit"),
+    (Counter::ServeMiss, "serve_miss"),
+    (Counter::ServeCoalesced, "serve_coalesced"),
+    (Counter::ServeQueueMax, "serve_queue_max"),
 ];
 
-const COUNTER_COUNT: usize = 12;
+const COUNTER_COUNT: usize = 19;
 
 impl Counter {
     /// Stable exporter name (see [`COUNTERS`]).

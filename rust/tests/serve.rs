@@ -1,0 +1,433 @@
+//! Serving-layer integration tests: the `mlperf serve` daemon answering
+//! grid queries from its sharded ledger. The contracts under test:
+//!
+//! - answers are **bit-identical** to a direct `run_jobs_replayed` grid,
+//!   cold and warm, and a drained daemon exits cleanly releasing its
+//!   lock files;
+//! - N concurrent misses on one fingerprint **coalesce** into exactly
+//!   one simulation;
+//! - rejections are **typed and deterministic** (`deadline-exceeded`,
+//!   `overloaded`), and serve-path chaos (`conn-drop`, `slow-client`)
+//!   degrades single connections without harming the daemon;
+//! - a `serve-kill` hard crash mid-soak loses nothing that was already
+//!   answered: a warm restart serves every prior query from the shards
+//!   with zero re-simulation and byte-identical metrics;
+//! - the pidfile refuses double-starts and is released on drain.
+//!
+//! The fault plan is process-global and the in-process daemons consult
+//! it, so every test serializes through [`serve_lock`].
+
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::sync::{Arc, Barrier, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use mlperf::coordinator::{run_jobs_replayed, Job, Scenario};
+use mlperf::ledger::TRACKED;
+use mlperf::serve::{discover_addr, Client, ServeOptions, Server, ADDRFILE, PIDFILE};
+use mlperf::util::fault::{self, FaultPlan};
+use mlperf::util::json::Json;
+
+mod common;
+
+/// Serialize the suite: daemons poll the process-global fault plan, and
+/// several tests install one.
+fn serve_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arms a chaos spec for one scope and disarms on drop (panic-safe).
+struct Armed;
+
+impl Armed {
+    fn new(spec: &str) -> Armed {
+        fault::install(Some(FaultPlan::parse(spec).expect("chaos spec must parse")));
+        Armed
+    }
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        fault::install(None);
+    }
+}
+
+/// A fresh serve directory under the per-suite temp root.
+fn serve_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mlperf-serve-tests-{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Bind and run an in-process daemon over the [`common::tiny`] config.
+fn start(
+    dir: &Path,
+    queue_depth: usize,
+) -> (String, std::thread::JoinHandle<mlperf::util::error::Result<()>>) {
+    let opts = ServeOptions {
+        dir: dir.to_path_buf(),
+        queue_depth,
+        default_deadline_ms: 120_000,
+        sim_threads: 1,
+        cfg: common::tiny(),
+        ..ServeOptions::default()
+    };
+    let server = Server::bind(opts).expect("bind serve daemon");
+    let addr = server.addr().to_string();
+    (addr, std::thread::spawn(move || server.run()))
+}
+
+/// Drain via the protocol `shutdown` op and join the daemon thread.
+fn stop(addr: &str, daemon: std::thread::JoinHandle<mlperf::util::error::Result<()>>) {
+    let mut client = Client::connect(addr).expect("connect for shutdown");
+    let resp = client.op("shutdown").expect("shutdown request");
+    assert_eq!(resp.get("draining").and_then(Json::as_bool), Some(true));
+    daemon.join().expect("daemon thread").expect("drain must exit cleanly");
+}
+
+fn is_ok(resp: &Json) -> bool {
+    resp.get("ok").and_then(Json::as_bool) == Some(true)
+}
+
+fn cached(resp: &Json) -> Option<bool> {
+    resp.get("cached").and_then(Json::as_bool)
+}
+
+fn kind(resp: &Json) -> Option<&str> {
+    resp.get("kind").and_then(Json::as_str)
+}
+
+fn stat(stats: &Json, field: &str) -> u64 {
+    stats
+        .get(field)
+        .and_then(Json::as_f64)
+        .unwrap_or_else(|| panic!("stats response missing {field:?}: {}", stats.render()))
+        as u64
+}
+
+#[test]
+fn queries_match_direct_grid_bit_for_bit_and_drain_cleanly() {
+    let _lock = serve_lock();
+    let cfg = common::tiny();
+    let jobs =
+        vec![Job::new("KMeans", Scenario::Baseline), Job::new("KMeans", Scenario::PerfectL2)];
+    let direct = run_jobs_replayed(&cfg, &jobs, 1);
+    assert!(direct.failed.is_empty());
+
+    let dir = serve_dir("parity");
+    let (addr, daemon) = start(&dir, 8);
+    let mut client = Client::connect(&addr).unwrap();
+
+    for (out, scenario) in [(&direct.outputs[0], "baseline"), (&direct.outputs[1], "perfect-l2")]
+    {
+        let cold = client.query("KMeans", scenario, None).unwrap();
+        assert!(is_ok(&cold), "cold {scenario}: {}", cold.render());
+        assert_eq!(cached(&cold), Some(false), "first query must simulate");
+        let warm = client.query("KMeans", scenario, None).unwrap();
+        assert!(is_ok(&warm));
+        assert_eq!(cached(&warm), Some(true), "second query must hit the shards");
+
+        // every tracked metric matches the direct grid to the bit, on
+        // both the freshly simulated and the shard-served answer
+        for (name, get) in TRACKED {
+            let reference = get(&out.metrics);
+            for (label, resp) in [("cold", &cold), ("warm", &warm)] {
+                let got = resp
+                    .get("metrics")
+                    .and_then(|m| m.get(name))
+                    .and_then(Json::as_f64)
+                    .unwrap_or_else(|| panic!("{label} response missing metric {name}"));
+                assert_eq!(
+                    got.to_bits(),
+                    reference.to_bits(),
+                    "{scenario}/{name} ({label}): {got} != {reference}"
+                );
+            }
+        }
+        assert_eq!(cold.get("quality").and_then(Json::as_f64), out.quality);
+    }
+
+    // workload names canonicalize before fingerprinting: an alias
+    // spelling is the same cell, served warm
+    let alias = client.query("k-means", "baseline", None).unwrap();
+    assert!(is_ok(&alias));
+    assert_eq!(cached(&alias), Some(true), "alias spelling must hit the same fingerprint");
+
+    let stats = client.op("stats").unwrap();
+    assert_eq!(stat(&stats, "admitted"), 5);
+    assert_eq!(stat(&stats, "misses"), 2);
+    assert_eq!(stat(&stats, "hits"), 3);
+    assert_eq!(stat(&stats, "shed"), 0);
+    assert_eq!(stat(&stats, "unique_cells"), 2);
+
+    stop(&addr, daemon);
+    assert!(!dir.join(ADDRFILE).exists(), "drain must remove the discovery file");
+    assert!(!dir.join(PIDFILE).exists(), "drain must release the lock");
+}
+
+#[test]
+fn concurrent_misses_on_one_fingerprint_simulate_once() {
+    let _lock = serve_lock();
+    let dir = serve_dir("coalesce");
+    let (addr, daemon) = start(&dir, 8);
+
+    let clients = 4;
+    let barrier = Arc::new(Barrier::new(clients));
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let addr = addr.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                barrier.wait();
+                client.query("KNN", "baseline", Some(120_000)).unwrap()
+            })
+        })
+        .collect();
+    let responses: Vec<Json> =
+        handles.into_iter().map(|h| h.join().expect("client thread")).collect();
+
+    let first = responses[0].get("metrics").expect("metrics").render();
+    for resp in &responses {
+        assert!(is_ok(resp), "{}", resp.render());
+        assert_eq!(
+            resp.get("metrics").expect("metrics").render(),
+            first,
+            "coalesced answers diverged"
+        );
+    }
+
+    let mut probe = Client::connect(&addr).unwrap();
+    let stats = probe.op("stats").unwrap();
+    assert_eq!(
+        stat(&stats, "workload_executions"),
+        1,
+        "{clients} concurrent misses must simulate exactly once"
+    );
+    assert_eq!(stat(&stats, "misses"), 1, "exactly one query leads the flight");
+    assert_eq!(stat(&stats, "unique_cells"), 1);
+    assert_eq!(
+        stat(&stats, "misses") + stat(&stats, "coalesced") + stat(&stats, "hits"),
+        clients as u64,
+        "every query is a miss, a coalesced waiter, or a post-append hit"
+    );
+
+    stop(&addr, daemon);
+}
+
+#[test]
+fn rejections_are_typed_and_serve_chaos_degrades_not_dies() {
+    let _lock = serve_lock();
+    let dir = serve_dir("reject");
+    let (addr, daemon) = start(&dir, 1);
+    let mut client = Client::connect(&addr).unwrap();
+
+    // warm one cell so the overload phase below is pure admission
+    let warm = client.query("KMeans", "baseline", None).unwrap();
+    assert!(is_ok(&warm), "{}", warm.render());
+
+    // an already-expired deadline is a deterministic typed rejection —
+    // and must not have simulated anything
+    let dl = client.query("DBSCAN", "baseline", Some(0)).unwrap();
+    assert!(!is_ok(&dl));
+    assert_eq!(kind(&dl), Some("deadline-exceeded"), "{}", dl.render());
+    let msg = dl.get("error").and_then(Json::as_str).unwrap_or_default();
+    assert!(msg.contains("deadline"), "{msg}");
+
+    // conn-drop: the daemon hangs up on one connection unanswered; the
+    // client gets a typed error and the daemon keeps serving others
+    {
+        let _armed = Armed::new("conn-drop@1");
+        let mut doomed = Client::connect(&addr).unwrap();
+        let err = doomed.query("KMeans", "baseline", None).unwrap_err().to_string();
+        assert!(err.contains("without answering"), "{err}");
+    }
+    let after = client.query("KMeans", "baseline", None).unwrap();
+    assert!(is_ok(&after), "daemon must survive the dropped connection");
+    assert_eq!(cached(&after), Some(true));
+
+    // slow-client parks the only admission slot for 1.5s; once stats
+    // confirms the slot is held, the next query is shed with a typed
+    // overloaded rejection — while the slot holder still completes
+    let _armed = Armed::new("slow-client@1=1500");
+    let slow = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            c.query("KMeans", "baseline", None).unwrap()
+        })
+    };
+    let t0 = Instant::now();
+    loop {
+        let stats = client.op("stats").unwrap();
+        if stat(&stats, "queue_depth") == 1 {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(10), "slow query never took the slot");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let shed = client.query("KNN", "baseline", Some(120_000)).unwrap();
+    assert!(!is_ok(&shed));
+    assert_eq!(kind(&shed), Some("overloaded"), "{}", shed.render());
+    let msg = shed.get("error").and_then(Json::as_str).unwrap_or_default();
+    assert!(msg.contains("admission queue full"), "{msg}");
+    let slow_resp = slow.join().expect("slow client thread");
+    assert!(is_ok(&slow_resp), "the admitted slow query must still complete");
+    assert_eq!(cached(&slow_resp), Some(true));
+
+    let stats = client.op("stats").unwrap();
+    assert!(stat(&stats, "shed") >= 1);
+    assert!(stat(&stats, "deadline_misses") >= 1);
+
+    stop(&addr, daemon);
+}
+
+#[test]
+fn double_start_is_refused_and_the_lock_releases_on_drain() {
+    let _lock = serve_lock();
+    let dir = serve_dir("dstart");
+    let (addr, daemon) = start(&dir, 2);
+
+    let opts = ServeOptions { dir: dir.clone(), cfg: common::tiny(), ..ServeOptions::default() };
+    let err = Server::bind(opts).unwrap_err().to_string();
+    assert!(err.contains("already running"), "{err}");
+
+    stop(&addr, daemon);
+    assert!(!dir.join(PIDFILE).exists());
+
+    // the drain released the lock: a fresh daemon binds the same dir
+    let (addr2, daemon2) = start(&dir, 2);
+    stop(&addr2, daemon2);
+}
+
+fn bin() -> Command {
+    let mut c = Command::new(env!("CARGO_BIN_EXE_mlperf"));
+    // the spawned daemon must only see the chaos spec the test passes
+    c.env_remove("MLPERF_CHAOS");
+    c.env_remove("MLPERF_TELEMETRY");
+    c
+}
+
+fn spawn_daemon(dir: &Path, chaos: Option<&str>) -> Child {
+    let mut c = bin();
+    c.args(["serve", "--listen", "127.0.0.1:0", "--dir"]).arg(dir);
+    c.args(["--scale", "0.02", "--iterations", "1", "--threads", "1"]);
+    c.args(["--queue-depth", "8", "--default-deadline", "120000"]);
+    if let Some(spec) = chaos {
+        c.args(["--chaos", spec]);
+    }
+    c.stdout(Stdio::null()).stderr(Stdio::null());
+    c.spawn().expect("spawn serve daemon")
+}
+
+/// Poll the `serve.addr` discovery file until the daemon is reachable,
+/// failing fast if the child dies first.
+fn wait_addr(dir: &Path, child: &mut Child) -> String {
+    let t0 = Instant::now();
+    loop {
+        if let Ok(addr) = discover_addr(dir) {
+            if Client::connect(&addr).is_ok() {
+                return addr;
+            }
+        }
+        if let Some(status) = child.try_wait().expect("poll daemon") {
+            panic!("serve daemon died before serving: {status}");
+        }
+        assert!(t0.elapsed() < Duration::from_secs(60), "daemon never became reachable");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+}
+
+#[test]
+fn serve_kill_mid_soak_then_restart_answers_everything_from_shards() {
+    let _lock = serve_lock();
+    let dir = serve_dir("soak");
+    let mut child = spawn_daemon(&dir, Some("serve-kill@6"));
+    let addr = wait_addr(&dir, &mut child);
+
+    // two client threads, mixed hits and misses; the 6th answered query
+    // aborts the daemon mid-soak (after its response is flushed)
+    let plans: Vec<Vec<(&str, &str)>> = vec![
+        vec![
+            ("KMeans", "baseline"),
+            ("KMeans", "baseline"),
+            ("KMeans", "perfect-l2"),
+            ("KMeans", "perfect-llc"),
+        ],
+        vec![
+            ("KNN", "baseline"),
+            ("KNN", "baseline"),
+            ("KNN", "sw-prefetch"),
+            ("DBSCAN", "baseline"),
+        ],
+    ];
+    let handles: Vec<_> = plans
+        .into_iter()
+        .map(|plan| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut served = Vec::new();
+                let Ok(mut client) = Client::connect(&addr) else { return served };
+                for (w, s) in plan {
+                    match client.query(w, s, Some(120_000)) {
+                        Ok(resp) if is_ok(&resp) => served.push((
+                            w.to_string(),
+                            s.to_string(),
+                            resp.get("metrics").expect("metrics").render(),
+                        )),
+                        // the kill hit: this connection is gone
+                        _ => break,
+                    }
+                }
+                served
+            })
+        })
+        .collect();
+    let mut served: Vec<(String, String, String)> =
+        handles.into_iter().flat_map(|h| h.join().expect("soak client")).collect();
+    let status = child.wait().expect("wait for killed daemon");
+    assert!(!status.success(), "serve-kill must hard-kill the daemon");
+    assert!(!served.is_empty(), "queries answered before the kill");
+
+    // repeats of one cell must have carried identical bytes; after
+    // dedup, any surviving (workload, scenario) collision is divergence
+    served.sort();
+    served.dedup();
+    for pair in served.windows(2) {
+        assert!(
+            pair[0].0 != pair[1].0 || pair[0].1 != pair[1].1,
+            "one cell was answered with two different metric sets: {pair:?}"
+        );
+    }
+
+    // warm restart over the same shards: the stale discovery file goes,
+    // the stale pidfile is taken over (its holder is dead)
+    let _ = std::fs::remove_file(dir.join(ADDRFILE));
+    assert!(dir.join(PIDFILE).exists(), "a hard kill leaves the lock behind");
+    let mut child = spawn_daemon(&dir, None);
+    let addr = wait_addr(&dir, &mut child);
+    let mut client = Client::connect(&addr).unwrap();
+    for (w, s, pre_kill) in &served {
+        let resp = client.query(w, s, Some(120_000)).unwrap();
+        assert!(is_ok(&resp), "{w}/{s}: {}", resp.render());
+        assert_eq!(cached(&resp), Some(true), "{w}/{s} must come from the shards");
+        assert_eq!(
+            resp.get("metrics").expect("metrics").render(),
+            *pre_kill,
+            "{w}/{s} drifted across the crash"
+        );
+    }
+    let stats = client.op("stats").unwrap();
+    assert_eq!(
+        stat(&stats, "workload_executions"),
+        0,
+        "warm restart must answer every prior query with zero re-simulation"
+    );
+
+    let resp = client.op("shutdown").unwrap();
+    assert_eq!(resp.get("draining").and_then(Json::as_bool), Some(true));
+    let status = child.wait().expect("wait for drained daemon");
+    assert!(status.success(), "protocol drain must exit 0");
+    assert!(!dir.join(PIDFILE).exists(), "drain must release the lock");
+}
